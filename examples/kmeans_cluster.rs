@@ -1,0 +1,132 @@
+//! END-TO-END driver: real K-Means through the full three-layer stack.
+//!
+//! Proves the layers compose: synthetic points (L3 data gen) are
+//! partitioned by the HeMT coordinator, executed as *real* Pallas-kernel
+//! compute via the AOT PJRT artifacts (L2/L1) on a heterogeneous executor
+//! pool (one worker throttled to 35%), with measured wall-clock feeding
+//! the OA-HeMT estimator. Logs the per-iteration centroid-shift curve
+//! (the workload's convergence signal) and the HeMT-vs-even comparison.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example kmeans_cluster`
+
+use std::sync::Arc;
+
+use hemt::estimator::SpeedEstimator;
+use hemt::exec::{Output, Payload, RealPool, RealTask};
+use hemt::partition::Partitioning;
+use hemt::runtime::shapes::*;
+use hemt::runtime::DEFAULT_ARTIFACTS_DIR;
+use hemt::util::Rng;
+use hemt::workloads::gen;
+
+const SPEEDS: [f64; 2] = [1.0, 0.35];
+const ITERS: usize = 10;
+
+fn lloyd(
+    pool: &RealPool,
+    points: &Arc<Vec<f32>>,
+    parts: &Partitioning,
+    centroids: &Arc<Vec<f32>>,
+) -> (f64, Vec<f32>, Vec<f64>) {
+    let tasks: Vec<RealTask> = parts
+        .ranges()
+        .iter()
+        .enumerate()
+        .map(|(i, &(start, len))| RealTask {
+            id: i,
+            bound_to: Some(i),
+            payload: Payload::KMeans {
+                points: Arc::clone(points),
+                start_point: start as usize,
+                num_points: len as usize,
+                centroids: Arc::clone(centroids),
+            },
+        })
+        .collect();
+    let results = pool.run_stage(tasks);
+    let mut busy = vec![0f64; SPEEDS.len()];
+    for r in &results {
+        busy[r.worker] += r.duration_secs;
+    }
+    let stage = busy.iter().cloned().fold(0.0, f64::max);
+    // Reduce: merge per-cluster partials.
+    let mut sums = vec![0f32; KMEANS_K * KMEANS_DIM];
+    let mut counts = vec![0f32; KMEANS_K];
+    for r in &results {
+        if let Output::SumsCounts { sums: s, counts: c } = &r.output {
+            for (a, x) in sums.iter_mut().zip(s) {
+                *a += x;
+            }
+            for (a, x) in counts.iter_mut().zip(c) {
+                *a += x;
+            }
+        }
+    }
+    let mut next = vec![0f32; KMEANS_K * KMEANS_DIM];
+    for k in 0..KMEANS_K {
+        for d in 0..KMEANS_DIM {
+            next[k * KMEANS_DIM + d] = if counts[k] > 0.0 {
+                sums[k * KMEANS_DIM + d] / counts[k]
+            } else {
+                centroids[k * KMEANS_DIM + d]
+            };
+        }
+    }
+    (stage, next, busy)
+}
+
+fn run(pool: &RealPool, points: &Arc<Vec<f32>>, parts: Partitioning, label: &str) -> f64 {
+    let mut rng = Rng::new(99);
+    let mut centroids = Arc::new(gen::gaussian_blobs(KMEANS_K, KMEANS_DIM, KMEANS_K, &mut rng));
+    let mut total = 0.0;
+    println!("-- {label}: partitions {:?}", parts.task_bytes);
+    for it in 0..ITERS {
+        let (stage, next, busy) = lloyd(pool, points, &parts, &centroids);
+        let shift: f64 = next
+            .iter()
+            .zip(centroids.iter())
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        total += stage;
+        println!(
+            "   iter {it:>2}: stage {stage:>6.2}s  busy {busy:.2?}  centroid shift {shift:>9.4}"
+        );
+        centroids = Arc::new(next);
+    }
+    println!("   total: {total:.2}s over {ITERS} iterations");
+    total
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== end-to-end K-Means: rust coordinator -> PJRT -> Pallas-kernel HLO ==");
+    let pool = RealPool::spawn(DEFAULT_ARTIFACTS_DIR, &SPEEDS)?;
+    let mut rng = Rng::new(17);
+    let n_points = 8 * KMEANS_BLOCK_POINTS; // 32k points, 32-d, 16 clusters
+    let points = Arc::new(gen::gaussian_blobs(n_points, KMEANS_DIM, KMEANS_K, &mut rng));
+
+    // Iteration 0 probe under the even split feeds the OA-HeMT estimator.
+    let even = Partitioning::even(n_points as u64, 2);
+    let even_total = run(&pool, &points, even, "even 1:1 (Spark default)");
+
+    let mut est = SpeedEstimator::new(0.0);
+    // Probe: one even iteration, observing measured busy time per worker.
+    let centroids = Arc::new(gen::gaussian_blobs(KMEANS_K, KMEANS_DIM, KMEANS_K, &mut Rng::new(5)));
+    let (_, _, busy) = lloyd(&pool, &points, &Partitioning::even(n_points as u64, 2), &centroids);
+    est.observe(0, n_points as f64 / 2.0, busy[0]);
+    est.observe(1, n_points as f64 / 2.0, busy[1]);
+    let weights = est.weights(&[0, 1]);
+    println!("OA-HeMT estimated speed weights: {weights:.3?}");
+
+    let hemt = Partitioning::hemt(n_points as u64, &weights);
+    let hemt_total = run(&pool, &points, hemt, "HeMT (OA-estimated)");
+
+    println!();
+    println!(
+        "HeMT total {hemt_total:.2}s vs even {even_total:.2}s -> {:.1}% faster",
+        100.0 * (even_total - hemt_total) / even_total
+    );
+    anyhow::ensure!(hemt_total < even_total, "HeMT must win on this heterogeneous pool");
+    Ok(())
+}

@@ -1,0 +1,62 @@
+# AOT lowering: jax -> HLO *text* artifacts for the rust PJRT runtime.
+#
+# HLO text (not HloModuleProto.serialize()) is the interchange format: jax
+# >= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+# (what the published `xla` 0.1.6 crate links) rejects with
+# `proto.id() <= INT_MAX`; the text parser reassigns ids and round-trips
+# cleanly. Lower with return_tuple=True and unwrap with to_tuple on the
+# rust side. See /opt/xla-example/README.md.
+#
+# Runs once at build time (`make artifacts`); python is never on the rust
+# request path.
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text, with a tuple return."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts",
+                        help="directory for <name>.hlo.txt artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, fn, example_args in model.lowerings():
+        lowered = fn.lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [
+                {"shape": list(a.shape), "dtype": a.dtype.name}
+                for a in example_args
+            ],
+            "chars": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

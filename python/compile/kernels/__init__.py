@@ -1,0 +1,16 @@
+# L1: Pallas kernels for the paper workloads' compute hot-spots.
+#
+# Every kernel runs with interpret=True (the CPU PJRT plugin cannot execute
+# Mosaic custom-calls); TPU-shape reasoning lives in the per-kernel headers
+# and DESIGN.md §Hardware-Adaptation.
+from .histogram import histogram_pallas
+from .kmeans import kmeans_step_pallas
+from .pagerank import pagerank_block_pallas
+from . import ref
+
+__all__ = [
+    "histogram_pallas",
+    "kmeans_step_pallas",
+    "pagerank_block_pallas",
+    "ref",
+]

@@ -1,0 +1,59 @@
+# L1 Pallas kernel: weighted token histogram (the WordCount map hot-spot).
+#
+# The scatter-add a CPU WordCount would do is re-expressed as a one-hot
+# matmul so the inner loop is MXU-shaped on TPU: for each token tile we
+# build a (TILE, BINS) one-hot matrix and reduce it (weighted) over the
+# tile axis, accumulating into the (BINS,) output across grid steps.
+#
+# TPU adaptation notes (DESIGN.md §Hardware-Adaptation):
+#   * VMEM per step = TILE*4 (tokens) + TILE*4 (weights) + TILE*BINS*4
+#     (one-hot scratch) + BINS*4 (acc). TILE=2048, BINS=1024 -> ~8.4 MB,
+#     comfortably inside 16 MB VMEM.
+#   * The one-hot reduce is `w @ onehot`, a (1,TILE)x(TILE,BINS) matmul.
+# interpret=True is mandatory here: the CPU PJRT plugin cannot run Mosaic
+# custom-calls, and interpret mode lowers to plain HLO.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _histogram_kernel(tok_ref, w_ref, o_ref, *, num_bins: int):
+    """One grid step: accumulate the weighted one-hot of a token tile."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    tok = tok_ref[...]                                    # (TILE,) int32
+    w = w_ref[...]                                        # (TILE,) f32
+    bins = jax.lax.broadcasted_iota(jnp.int32, (tok.shape[0], num_bins), 1)
+    onehot = (tok[:, None] == bins).astype(jnp.float32)   # (TILE, BINS)
+    # (1,TILE) @ (TILE,BINS) -> (1,BINS): the MXU-shaped reduction.
+    o_ref[...] += (w[None, :] @ onehot)[0]
+
+
+def histogram_pallas(tokens: jnp.ndarray, weights: jnp.ndarray, num_bins: int,
+                     tile: int = 2048) -> jnp.ndarray:
+    """Weighted histogram of int32 token ids via a Pallas one-hot-matmul.
+
+    tokens/weights are (T,) with T a multiple of `tile`. Padding tokens
+    carry weight 0.0, so callers can pad freely. Matches
+    `ref.histogram_ref` bit-for-bit shape-wise (f32 counts).
+    """
+    (t,) = tokens.shape
+    assert t % tile == 0, f"token count {t} not a multiple of tile {tile}"
+    grid = (t // tile,)
+    return pl.pallas_call(
+        functools.partial(_histogram_kernel, num_bins=num_bins),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((num_bins,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((num_bins,), jnp.float32),
+        interpret=True,
+    )(tokens, weights)

@@ -1,0 +1,71 @@
+# L1 Pallas kernel: one Lloyd (K-Means) accumulation step.
+#
+# The hot spot is the point-to-centroid distance computation. It is
+# formulated as ||x-c||^2 = ||x||^2 - 2 x.c + ||c||^2 so the dominant cost
+# is the (TILE, D) x (D, K) cross-term matmul — MXU-shaped on TPU — rather
+# than an O(N*K*D) elementwise distance loop. The per-cluster sums are a
+# second matmul (onehot.T @ X). Outputs accumulate across point tiles.
+#
+# TPU adaptation notes (DESIGN.md §Hardware-Adaptation):
+#   * VMEM per step = TILE*D*4 (points) + K*D*4 (centroids, resident) +
+#     TILE*K*4 (dist/onehot) + K*D*4 + K*4 (acc). TILE=1024, D=64, K=64
+#     -> ~0.6 MB; room to scale TILE to 8192 before VMEM pressure.
+#   * Both matmuls are bf16-able on real hardware; f32 here for exactness
+#     against the oracle.
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kmeans_kernel(x_ref, w_ref, c_ref, sums_ref, counts_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    x = x_ref[...]                                        # (TILE, D)
+    w = w_ref[...]                                        # (TILE,)
+    c = c_ref[...]                                        # (K, D)
+    cross = x @ c.T                                       # (TILE, K) — MXU
+    cnorm = jnp.sum(c * c, axis=1)                        # (K,)
+    dist = cnorm[None, :] - 2.0 * cross                   # + ||x||^2 const
+    assign = jnp.argmin(dist, axis=1)                     # (TILE,)
+    k = c.shape[0]
+    ks = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], k), 1)
+    onehot = (assign[:, None] == ks).astype(jnp.float32) * w[:, None]
+    sums_ref[...] += onehot.T @ x                         # (K, D) — MXU
+    counts_ref[...] += jnp.sum(onehot, axis=0)            # (K,)
+
+
+def kmeans_step_pallas(points: jnp.ndarray, weights: jnp.ndarray,
+                       centroids: jnp.ndarray, tile: int = 1024):
+    """Per-cluster weighted (sums, counts) for one Lloyd step.
+
+    points (N, D) with N a multiple of `tile`; weights (N,) zero on padding
+    rows; centroids (K, D). Matches `ref.kmeans_step_ref`.
+    """
+    n, d = points.shape
+    k, dc = centroids.shape
+    assert d == dc, f"point dim {d} != centroid dim {dc}"
+    assert n % tile == 0, f"point count {n} not a multiple of tile {tile}"
+    grid = (n // tile,)
+    return pl.pallas_call(
+        _kmeans_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        interpret=True,
+    )(points, weights, centroids)

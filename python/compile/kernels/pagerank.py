@@ -1,0 +1,61 @@
+# L1 Pallas kernel: one damped PageRank power-iteration step for a row
+# block — a blocked matvec with the teleport term fused in.
+#
+# Grid is (row_blocks, col_blocks); the column axis is the reduction axis,
+# accumulated into the same output block across j steps (the standard
+# Pallas revisiting pattern). Damping and the (1-d)/N teleport term are
+# applied on the final reduction step so each output row leaves the kernel
+# complete.
+#
+# TPU adaptation notes (DESIGN.md §Hardware-Adaptation):
+#   * VMEM per step = BR*BC*4 (P tile) + BC*4 (rank slice) + BR*4 (acc).
+#     BR=BC=256 -> ~260 KB; double-buffering the P tile stream is the
+#     natural BlockSpec schedule (HBM->VMEM prefetch of tile (i, j+1)).
+#   * The matvec maps to the MXU as a (BR,BC)x(BC,1) matmul.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pagerank_kernel(p_ref, r_ref, o_ref, *, damping: float, n: int,
+                     col_blocks: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    p = p_ref[...]                                        # (BR, BC)
+    r = r_ref[...]                                        # (BC,)
+    o_ref[...] += (p @ r[:, None])[:, 0]                  # (BR,) — MXU
+
+    @pl.when(j == col_blocks - 1)
+    def _finish():
+        o_ref[...] = damping * o_ref[...] + (1.0 - damping) / n
+
+
+def pagerank_block_pallas(p_block: jnp.ndarray, rank: jnp.ndarray,
+                          damping: float = 0.85, br: int = 256,
+                          bc: int = 256) -> jnp.ndarray:
+    """damping * p_block @ rank + (1-damping)/N via a blocked Pallas matvec.
+
+    p_block (B, N) with B % br == 0 and N % bc == 0; rank (N,).
+    Matches `ref.pagerank_block_ref`.
+    """
+    b, n = p_block.shape
+    assert b % br == 0 and n % bc == 0, (b, n, br, bc)
+    grid = (b // br, n // bc)
+    return pl.pallas_call(
+        functools.partial(_pagerank_kernel, damping=damping, n=n,
+                          col_blocks=n // bc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((bc,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((br,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(p_block, rank)

@@ -1,0 +1,53 @@
+# Pure-jnp correctness oracles for the Pallas kernels.
+#
+# Each oracle is the straight-line jax.numpy definition of the computation
+# the corresponding Pallas kernel implements. pytest (python/tests/) checks
+# kernel-vs-oracle with assert_allclose across hypothesis-driven shape and
+# dtype sweeps; these are the single source of numerical truth.
+import jax.numpy as jnp
+
+
+def histogram_ref(tokens: jnp.ndarray, weights: jnp.ndarray, num_bins: int) -> jnp.ndarray:
+    """Weighted histogram of integer token ids.
+
+    tokens:  (T,) int32 ids in [0, num_bins)
+    weights: (T,) float32 per-token weight (0.0 for padding)
+    returns: (num_bins,) float32 weighted counts
+    """
+    onehot = (tokens[:, None] == jnp.arange(num_bins)[None, :]).astype(jnp.float32)
+    return (weights[:, None] * onehot).sum(axis=0)
+
+
+def kmeans_step_ref(points: jnp.ndarray, weights: jnp.ndarray, centroids: jnp.ndarray):
+    """One Lloyd accumulation step.
+
+    points:    (N, D) float32
+    weights:   (N,)   float32 (0.0 for padding rows)
+    centroids: (K, D) float32
+    returns: (sums (K, D), counts (K,)) — per-cluster weighted point sums
+             and weighted member counts. New centroids are sums/counts
+             (computed by the caller so zero-count clusters can be handled
+             with the old centroid).
+    """
+    # ||x - c||^2 = ||x||^2 - 2 x.c + ||c||^2 ; ||x||^2 is constant per row,
+    # so the argmin only needs the cross term and ||c||^2.
+    cross = points @ centroids.T                        # (N, K)
+    cnorm = (centroids * centroids).sum(axis=1)          # (K,)
+    dist = cnorm[None, :] - 2.0 * cross                  # (N, K) + const
+    assign = jnp.argmin(dist, axis=1)                    # (N,)
+    onehot = (assign[:, None] == jnp.arange(centroids.shape[0])[None, :])
+    onehot = onehot.astype(jnp.float32) * weights[:, None]
+    sums = onehot.T @ points                             # (K, D)
+    counts = onehot.sum(axis=0)                          # (K,)
+    return sums, counts
+
+
+def pagerank_block_ref(p_block: jnp.ndarray, rank: jnp.ndarray, damping: float) -> jnp.ndarray:
+    """One damped power-iteration step for a row block.
+
+    p_block: (B, N) float32 — row slice of the column-stochastic matrix
+    rank:    (N,)   float32 — current rank vector
+    returns: (B,)   float32 — damping * p_block @ rank + (1-damping)/N
+    """
+    n = p_block.shape[1]
+    return damping * (p_block @ rank) + (1.0 - damping) / n

@@ -1,0 +1,83 @@
+# L2: the jitted jax compute graphs the rust coordinator executes per task,
+# each calling the L1 Pallas kernels.
+#
+# These are the *task bodies* of the paper's three workloads (WordCount,
+# K-Means, PageRank). The rust side slices a task's data into fixed-shape
+# blocks (padding with weight 0.0 / zero rows) and invokes the compiled
+# artifact once per block, so one HLO shape per workload suffices.
+#
+# Shapes are frozen here — AOT artifacts are shape-specialized — and
+# mirrored on the rust side in `rust/src/runtime/shapes.rs`.
+import jax
+import jax.numpy as jnp
+
+from .kernels import histogram_pallas, kmeans_step_pallas, pagerank_block_pallas
+
+# Frozen artifact shapes. Keep in sync with rust/src/runtime/shapes.rs.
+WORDCOUNT_BLOCK_TOKENS = 65536
+WORDCOUNT_BINS = 1024
+KMEANS_BLOCK_POINTS = 4096
+KMEANS_DIM = 32
+KMEANS_K = 16
+PAGERANK_N = 1024
+PAGERANK_ROW_BLOCK = 256
+PAGERANK_DAMPING = 0.85
+
+
+def wordcount_map(tokens: jnp.ndarray, weights: jnp.ndarray):
+    """WordCount map-task body: weighted token histogram over one block.
+
+    tokens (65536,) int32, weights (65536,) f32 -> (counts (1024,) f32,)
+    """
+    return (histogram_pallas(tokens, weights, WORDCOUNT_BINS),)
+
+
+def kmeans_step(points: jnp.ndarray, weights: jnp.ndarray,
+                centroids: jnp.ndarray):
+    """K-Means map-task body: per-cluster (sums, counts) over one block.
+
+    points (4096, 32) f32, weights (4096,) f32, centroids (16, 32) f32
+    -> (sums (16, 32) f32, counts (16,) f32)
+    """
+    return kmeans_step_pallas(points, weights, centroids)
+
+
+def pagerank_step(p_block: jnp.ndarray, rank: jnp.ndarray):
+    """PageRank task body: damped matvec for one row block.
+
+    p_block (256, 1024) f32, rank (1024,) f32 -> (rank_block (256,) f32,)
+    """
+    return (pagerank_block_pallas(p_block, rank, PAGERANK_DAMPING),)
+
+
+def lowerings():
+    """(name, jitted fn, example args) for every AOT artifact."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    return [
+        (
+            "wordcount",
+            jax.jit(wordcount_map),
+            (
+                jax.ShapeDtypeStruct((WORDCOUNT_BLOCK_TOKENS,), i32),
+                jax.ShapeDtypeStruct((WORDCOUNT_BLOCK_TOKENS,), f32),
+            ),
+        ),
+        (
+            "kmeans",
+            jax.jit(kmeans_step),
+            (
+                jax.ShapeDtypeStruct((KMEANS_BLOCK_POINTS, KMEANS_DIM), f32),
+                jax.ShapeDtypeStruct((KMEANS_BLOCK_POINTS,), f32),
+                jax.ShapeDtypeStruct((KMEANS_K, KMEANS_DIM), f32),
+            ),
+        ),
+        (
+            "pagerank",
+            jax.jit(pagerank_step),
+            (
+                jax.ShapeDtypeStruct((PAGERANK_ROW_BLOCK, PAGERANK_N), f32),
+                jax.ShapeDtypeStruct((PAGERANK_N,), f32),
+            ),
+        ),
+    ]

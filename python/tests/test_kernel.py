@@ -1,0 +1,187 @@
+# Kernel-vs-oracle correctness: the CORE numerical signal for L1.
+#
+# Every Pallas kernel is checked against its pure-jnp oracle in ref.py via
+# assert_allclose, across hypothesis-driven shape/value sweeps plus pinned
+# edge cases (all-padding, single-cluster, identity matrices).
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    histogram_pallas,
+    kmeans_step_pallas,
+    pagerank_block_pallas,
+    ref,
+)
+
+RNG = np.random.default_rng
+
+
+# ---------------------------------------------------------------- histogram
+
+@settings(max_examples=20, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=4),
+    tile=st.sampled_from([128, 256, 512]),
+    bins=st.sampled_from([16, 64, 256]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_histogram_matches_ref(tiles, tile, bins, seed):
+    rng = RNG(seed)
+    t = tiles * tile
+    tokens = jnp.asarray(rng.integers(0, bins, size=t), dtype=jnp.int32)
+    weights = jnp.asarray(rng.uniform(0.0, 2.0, size=t), dtype=jnp.float32)
+    got = histogram_pallas(tokens, weights, bins, tile=tile)
+    want = ref.histogram_ref(tokens, weights, bins)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_histogram_padding_is_ignored():
+    tokens = jnp.zeros((256,), dtype=jnp.int32)  # all id 0
+    weights = jnp.zeros((256,), dtype=jnp.float32)  # but all padding
+    got = histogram_pallas(tokens, weights, 16, tile=128)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(16))
+
+
+def test_histogram_unit_weights_count_exactly():
+    rng = RNG(7)
+    tokens_np = rng.integers(0, 32, size=512)
+    tokens = jnp.asarray(tokens_np, dtype=jnp.int32)
+    weights = jnp.ones((512,), dtype=jnp.float32)
+    got = np.asarray(histogram_pallas(tokens, weights, 32, tile=128))
+    want = np.bincount(tokens_np, minlength=32).astype(np.float32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_histogram_total_mass_conserved():
+    rng = RNG(11)
+    tokens = jnp.asarray(rng.integers(0, 64, size=1024), dtype=jnp.int32)
+    weights = jnp.asarray(rng.uniform(size=1024), dtype=jnp.float32)
+    got = histogram_pallas(tokens, weights, 64, tile=256)
+    np.testing.assert_allclose(float(got.sum()), float(weights.sum()),
+                               rtol=1e-5)
+
+
+def test_histogram_rejects_misaligned_tile():
+    tokens = jnp.zeros((100,), dtype=jnp.int32)
+    weights = jnp.ones((100,), dtype=jnp.float32)
+    with pytest.raises(AssertionError):
+        histogram_pallas(tokens, weights, 16, tile=64)
+
+
+# ------------------------------------------------------------------- kmeans
+
+@settings(max_examples=15, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=3),
+    tile=st.sampled_from([128, 256]),
+    d=st.sampled_from([4, 16, 32]),
+    k=st.sampled_from([2, 8, 16]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kmeans_matches_ref(tiles, tile, d, k, seed):
+    rng = RNG(seed)
+    n = tiles * tile
+    pts = jnp.asarray(rng.normal(size=(n, d)), dtype=jnp.float32)
+    w = jnp.asarray(rng.integers(0, 2, size=n), dtype=jnp.float32)
+    c = jnp.asarray(rng.normal(size=(k, d)), dtype=jnp.float32)
+    got_s, got_c = kmeans_step_pallas(pts, w, c, tile=tile)
+    want_s, want_c = ref.kmeans_step_ref(pts, w, c)
+    np.testing.assert_allclose(got_s, want_s, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_c, want_c, rtol=1e-5, atol=1e-5)
+
+
+def test_kmeans_counts_sum_to_weight_mass():
+    rng = RNG(3)
+    pts = jnp.asarray(rng.normal(size=(512, 8)), dtype=jnp.float32)
+    w = jnp.asarray(rng.uniform(size=512), dtype=jnp.float32)
+    c = jnp.asarray(rng.normal(size=(4, 8)), dtype=jnp.float32)
+    _, counts = kmeans_step_pallas(pts, w, c, tile=128)
+    np.testing.assert_allclose(float(counts.sum()), float(w.sum()), rtol=1e-5)
+
+
+def test_kmeans_all_padding_yields_zero():
+    pts = jnp.ones((256, 4), dtype=jnp.float32)
+    w = jnp.zeros((256,), dtype=jnp.float32)
+    c = jnp.zeros((2, 4), dtype=jnp.float32)
+    sums, counts = kmeans_step_pallas(pts, w, c, tile=128)
+    np.testing.assert_array_equal(np.asarray(sums), np.zeros((2, 4)))
+    np.testing.assert_array_equal(np.asarray(counts), np.zeros(2))
+
+
+def test_kmeans_single_cluster_takes_everything():
+    rng = RNG(5)
+    pts = jnp.asarray(rng.normal(size=(256, 4)), dtype=jnp.float32)
+    w = jnp.ones((256,), dtype=jnp.float32)
+    c = jnp.zeros((1, 4), dtype=jnp.float32)
+    sums, counts = kmeans_step_pallas(pts, w, c, tile=128)
+    np.testing.assert_allclose(np.asarray(sums)[0],
+                               np.asarray(pts).sum(axis=0), rtol=1e-4)
+    assert float(counts[0]) == 256.0
+
+
+def test_kmeans_converges_on_separated_blobs():
+    # Two well-separated blobs: one Lloyd step from rough centroids must
+    # land each centroid on its blob mean.
+    rng = RNG(13)
+    a = rng.normal(loc=-10.0, size=(128, 8))
+    b = rng.normal(loc=+10.0, size=(128, 8))
+    pts = jnp.asarray(np.concatenate([a, b]), dtype=jnp.float32)
+    w = jnp.ones((256,), dtype=jnp.float32)
+    c = jnp.asarray([[-1.0] * 8, [1.0] * 8], dtype=jnp.float32)
+    sums, counts = kmeans_step_pallas(pts, w, c, tile=128)
+    new_c = np.asarray(sums) / np.asarray(counts)[:, None]
+    np.testing.assert_allclose(new_c[0], a.mean(axis=0), atol=1e-3)
+    np.testing.assert_allclose(new_c[1], b.mean(axis=0), atol=1e-3)
+
+
+# ----------------------------------------------------------------- pagerank
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rb=st.sampled_from([64, 128]),
+    rows=st.integers(min_value=1, max_value=3),
+    cols=st.integers(min_value=1, max_value=3),
+    damping=st.floats(min_value=0.5, max_value=0.95),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_pagerank_matches_ref(rb, rows, cols, damping, seed):
+    rng = RNG(seed)
+    b, n = rows * rb, cols * rb
+    p = jnp.asarray(rng.uniform(size=(b, n)), dtype=jnp.float32)
+    r = jnp.asarray(rng.uniform(size=n), dtype=jnp.float32)
+    got = pagerank_block_pallas(p, r, damping, br=rb, bc=rb)
+    want = ref.pagerank_block_ref(p, r, damping)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_pagerank_stochastic_fixed_point():
+    # Uniform rank is the fixed point of a doubly-stochastic square P.
+    n = 256
+    p = jnp.full((n, n), 1.0 / n, dtype=jnp.float32)
+    r = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+    got = pagerank_block_pallas(p, r, 0.85, br=128, bc=128)
+    np.testing.assert_allclose(np.asarray(got), np.full(n, 1.0 / n),
+                               rtol=1e-4)
+
+
+def test_pagerank_zero_matrix_gives_teleport_only():
+    n = 128
+    p = jnp.zeros((n, n), dtype=jnp.float32)
+    r = jnp.ones((n,), dtype=jnp.float32)
+    got = pagerank_block_pallas(p, r, 0.85, br=64, bc=64)
+    np.testing.assert_allclose(np.asarray(got), np.full(n, 0.15 / n),
+                               rtol=1e-5)
+
+
+def test_pagerank_rank_mass_conserved_over_iterations():
+    # With a column-stochastic P, total rank mass stays 1 under iteration.
+    rng = RNG(17)
+    n = 256
+    raw = rng.uniform(size=(n, n)).astype(np.float32)
+    p = jnp.asarray(raw / raw.sum(axis=0, keepdims=True))
+    r = jnp.full((n,), 1.0 / n, dtype=jnp.float32)
+    for _ in range(5):
+        r = pagerank_block_pallas(p, r, 0.85, br=128, bc=128)
+    np.testing.assert_allclose(float(r.sum()), 1.0, rtol=1e-4)

@@ -1,0 +1,65 @@
+# Padding invariance: the rust runtime pads variable-length task slices
+# into the frozen artifact shapes (zero weights / zero rows). These tests
+# pin the contract: padded and unpadded inputs must agree exactly on the
+# valid prefix, across hypothesis-driven valid lengths.
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    valid=st.integers(min_value=1, max_value=model.WORDCOUNT_BLOCK_TOKENS),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_wordcount_padding_invariance(valid, seed):
+    rng = np.random.default_rng(seed)
+    t = model.WORDCOUNT_BLOCK_TOKENS
+    tokens = np.zeros(t, dtype=np.int32)
+    weights = np.zeros(t, dtype=np.float32)
+    tokens[:valid] = rng.integers(0, model.WORDCOUNT_BINS, size=valid)
+    weights[:valid] = 1.0
+    (got,) = model.wordcount_map(jnp.asarray(tokens), jnp.asarray(weights))
+    want = np.bincount(tokens[:valid], minlength=model.WORDCOUNT_BINS).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    valid=st.integers(min_value=1, max_value=model.KMEANS_BLOCK_POINTS),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kmeans_padding_invariance(valid, seed):
+    rng = np.random.default_rng(seed)
+    n, d, k = model.KMEANS_BLOCK_POINTS, model.KMEANS_DIM, model.KMEANS_K
+    pts = np.zeros((n, d), dtype=np.float32)
+    w = np.zeros(n, dtype=np.float32)
+    pts[:valid] = rng.normal(size=(valid, d)).astype(np.float32)
+    w[:valid] = 1.0
+    c = rng.normal(size=(k, d)).astype(np.float32)
+    got_s, got_c = model.kmeans_step(jnp.asarray(pts), jnp.asarray(w), jnp.asarray(c))
+    # Oracle on the unpadded prefix only.
+    want_s, want_c = ref.kmeans_step_ref(
+        jnp.asarray(pts[:valid]),
+        jnp.ones(valid, dtype=jnp.float32),
+        jnp.asarray(c),
+    )
+    np.testing.assert_allclose(got_s, want_s, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(got_c, want_c, rtol=1e-4, atol=1e-4)
+
+
+def test_pagerank_zero_rows_map_to_teleport():
+    # A padded (all-zero) row block yields exactly the teleport term for
+    # every padded row — the rust side slices those rows away.
+    n, b = model.PAGERANK_N, model.PAGERANK_ROW_BLOCK
+    p = jnp.zeros((b, n), dtype=jnp.float32)
+    r = jnp.ones((n,), dtype=jnp.float32)
+    (got,) = model.pagerank_step(p, r)
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.full(b, (1.0 - model.PAGERANK_DAMPING) / n, dtype=np.float32),
+        rtol=1e-6,
+    )

@@ -1,0 +1,8 @@
+//! Ablation bench: OA-HeMT forgetting-factor tradeoff.
+//! Run via `cargo bench --bench ablation_alpha`.
+use hemt::bench_harness::run_figure_bench;
+use hemt::experiments;
+
+fn main() {
+    run_figure_bench("ablation_alpha", 1, experiments::ablations::alpha);
+}

@@ -1,0 +1,8 @@
+//! Ablation bench: HDFS rack awareness.
+//! Run via `cargo bench --bench ablation_rack`.
+use hemt::bench_harness::run_figure_bench;
+use hemt::experiments;
+
+fn main() {
+    run_figure_bench("ablation_rack", 1, experiments::ablations::rack_awareness);
+}

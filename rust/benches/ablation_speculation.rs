@@ -1,0 +1,8 @@
+//! Ablation bench: speculative execution vs HeMT.
+//! Run via `cargo bench --bench ablation_speculation`.
+use hemt::bench_harness::run_figure_bench;
+use hemt::experiments;
+
+fn main() {
+    run_figure_bench("ablation_speculation", 1, experiments::ablations::speculation);
+}

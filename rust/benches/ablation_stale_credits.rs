@@ -1,0 +1,8 @@
+//! Ablation bench: credit-planner staleness.
+//! Run via `cargo bench --bench ablation_stale_credits`.
+use hemt::bench_harness::run_figure_bench;
+use hemt::experiments;
+
+fn main() {
+    run_figure_bench("ablation_stale_credits", 1, experiments::ablations::stale_credits);
+}

@@ -1,0 +1,8 @@
+//! Extension bench: 4-node mixed-cluster generality check.
+//! Run via `cargo bench --bench extension_four_node`.
+use hemt::bench_harness::run_figure_bench;
+use hemt::experiments;
+
+fn main() {
+    run_figure_bench("extension_four_node", 1, experiments::extension::four_node);
+}

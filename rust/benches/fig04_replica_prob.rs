@@ -1,0 +1,8 @@
+//! Bench: regenerate the paper's "Fig 4 closed forms" and time the experiment driver.
+//! Run via `cargo bench --bench fig04_replica_prob`.
+use hemt::bench_harness::run_figure_bench;
+use hemt::experiments;
+
+fn main() {
+    run_figure_bench("fig04_replica_prob", 1, experiments::fig4);
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate the paper's "Fig 5 network-bottleneck sweep" and time the experiment driver.
+//! Run via `cargo bench --bench fig05_network_bottleneck`.
+use hemt::bench_harness::run_figure_bench;
+use hemt::experiments;
+
+fn main() {
+    run_figure_bench("fig05_network_bottleneck", 1, experiments::fig5);
+}

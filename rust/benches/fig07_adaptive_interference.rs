@@ -1,0 +1,8 @@
+//! Bench: regenerate the paper's "Fig 7 OA-HeMT under interference" and time the experiment driver.
+//! Run via `cargo bench --bench fig07_adaptive_interference`.
+use hemt::bench_harness::run_figure_bench;
+use hemt::experiments;
+
+fn main() {
+    run_figure_bench("fig07_adaptive_interference", 1, experiments::fig7);
+}

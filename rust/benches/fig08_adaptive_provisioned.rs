@@ -1,0 +1,8 @@
+//! Bench: regenerate the paper's "Fig 8 OA-HeMT convergence" and time the experiment driver.
+//! Run via `cargo bench --bench fig08_adaptive_provisioned`.
+use hemt::bench_harness::run_figure_bench;
+use hemt::experiments;
+
+fn main() {
+    run_figure_bench("fig08_adaptive_provisioned", 1, experiments::fig8);
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate the paper's "Fig 9 static containers U-curve" and time the experiment driver.
+//! Run via `cargo bench --bench fig09_static_containers`.
+use hemt::bench_harness::run_figure_bench;
+use hemt::experiments;
+
+fn main() {
+    run_figure_bench("fig09_static_containers", 1, experiments::fig9);
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate the paper's "Figs 10-12 credit planner" and time the experiment driver.
+//! Run via `cargo bench --bench fig10_12_credit_planner`.
+use hemt::bench_harness::run_figure_bench;
+use hemt::experiments;
+
+fn main() {
+    run_figure_bench("fig10_12_credit_planner", 1, experiments::fig10_12);
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate the paper's "Fig 13 burstable CPU-bound" and time the experiment driver.
+//! Run via `cargo bench --bench fig13_burstable_cpu`.
+use hemt::bench_harness::run_figure_bench;
+use hemt::experiments;
+
+fn main() {
+    run_figure_bench("fig13_burstable_cpu", 1, experiments::fig13);
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate the paper's "Fig 14 burstable 480 Mbps" and time the experiment driver.
+//! Run via `cargo bench --bench fig14_burstable_480`.
+use hemt::bench_harness::run_figure_bench;
+use hemt::experiments;
+
+fn main() {
+    run_figure_bench("fig14_burstable_480", 1, experiments::fig14);
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate the paper's "Fig 15 burstable 250 Mbps" and time the experiment driver.
+//! Run via `cargo bench --bench fig15_burstable_250`.
+use hemt::bench_harness::run_figure_bench;
+use hemt::experiments;
+
+fn main() {
+    run_figure_bench("fig15_burstable_250", 1, experiments::fig15);
+}

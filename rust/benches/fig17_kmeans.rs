@@ -1,0 +1,8 @@
+//! Bench: regenerate the paper's "Fig 17 K-Means" and time the experiment driver.
+//! Run via `cargo bench --bench fig17_kmeans`.
+use hemt::bench_harness::run_figure_bench;
+use hemt::experiments;
+
+fn main() {
+    run_figure_bench("fig17_kmeans", 1, experiments::fig17);
+}

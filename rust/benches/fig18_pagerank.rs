@@ -1,0 +1,8 @@
+//! Bench: regenerate the paper's "Fig 18 PageRank" and time the experiment driver.
+//! Run via `cargo bench --bench fig18_pagerank`.
+use hemt::bench_harness::run_figure_bench;
+use hemt::experiments;
+
+fn main() {
+    run_figure_bench("fig18_pagerank", 1, experiments::fig18);
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate the paper's "Headline summary" and time the experiment driver.
+//! Run via `cargo bench --bench headline_summary`.
+use hemt::bench_harness::run_figure_bench;
+use hemt::experiments;
+
+fn main() {
+    run_figure_bench("headline_summary", 1, experiments::headline);
+}

@@ -1,0 +1,131 @@
+//! Performance microbenchmarks of the L3 hot paths — the §Perf
+//! measurement harness (see EXPERIMENTS.md §Perf).
+//!
+//! Covers: DES event throughput, max-min rate recomputation under load,
+//! partitioner cost, skewed-hash bucket assignment, and the end-to-end
+//! figure-sweep drivers that dominate `cargo bench` wall-clock.
+//! Run via `cargo bench --bench perf_microbench`.
+
+use hemt::bench_harness::time;
+use hemt::netsim::NetSim;
+use hemt::nodes::Node;
+use hemt::partition::{Partitioning, SkewedHashPartitioner};
+use hemt::sim::Engine;
+use hemt::util::Rng;
+
+fn bench_engine_event_throughput() {
+    // 512 cpu jobs + 512 timers on 8 nodes: measure drained events/sec.
+    let mk = || {
+        let mut net = NetSim::new();
+        let _ = net.add_link("l", 1e9);
+        let nodes: Vec<Node> = (0..8).map(|i| Node::fixed(&format!("n{i}"), 1.0)).collect();
+        let mut e = Engine::new(nodes, net);
+        for i in 0..512u64 {
+            e.add_cpu_job((i % 8) as usize, 1.0, 1.0 + (i % 7) as f64, i);
+            e.set_timer(i as f64 * 0.01, 10_000 + i);
+        }
+        e
+    };
+    let events = 1024.0;
+    let s = time(1, 5, || {
+        let mut e = mk();
+        let n = e.run_to_end().len();
+        assert_eq!(n, 1024);
+    });
+    println!(
+        "engine_event_throughput: {:>10.0} events/s  ({} s per drain)",
+        events / s.mean,
+        s.pm(4)
+    );
+}
+
+fn bench_netsim_recompute() {
+    // 256 flows over 16 links: one full max-min recompute.
+    let mut net = NetSim::new();
+    let links: Vec<usize> = (0..16).map(|i| net.add_link(&format!("l{i}"), 1e8)).collect();
+    let mut rng = Rng::new(1);
+    for t in 0..256u64 {
+        let a = links[rng.below(16)];
+        let b = links[rng.below(16)];
+        let route = if a == b { vec![a] } else { vec![a, b] };
+        net.add_flow(route, 1e9, t);
+    }
+    let s = time(3, 20, || {
+        // Force a fresh recompute by perturbing the flow set.
+        let id = net.add_flow(vec![links[0]], 1e9, 999);
+        net.recompute_rates();
+        net.remove_flow(id);
+    });
+    println!("netsim_recompute_256f_16l: {} s", s.pm(6));
+}
+
+fn bench_partitioners() {
+    let weights: Vec<f64> = (1..=64).map(|i| i as f64).collect();
+    let s = time(10, 50, || {
+        let p = Partitioning::hemt(2 << 30, &weights);
+        assert_eq!(p.num_tasks(), 64);
+    });
+    println!("hemt_partition_64w: {} s", s.pm(8));
+
+    let part = SkewedHashPartitioner::new(&weights, 1 << 20);
+    let mut rng = Rng::new(2);
+    let hashes: Vec<u64> = (0..100_000).map(|_| rng.next_u64()).collect();
+    let s = time(2, 10, || {
+        let mut acc = 0usize;
+        for &h in &hashes {
+            acc += part.bucket_of(h);
+        }
+        std::hint::black_box(acc);
+    });
+    println!(
+        "skewed_hash_bucket: {:>8.1} ns/record",
+        s.mean / 100_000.0 * 1e9
+    );
+}
+
+fn bench_wordcount_sweep() {
+    // The fig9-style sweep is the dominant bench cost: time one 64-task
+    // wordcount sim end to end.
+    use hemt::config::{ClusterConfig, WorkloadConfig};
+    use hemt::coordinator::driver::SimParams;
+    use hemt::coordinator::PartitionPolicy;
+    let cluster = ClusterConfig::containers_1_and_04();
+    let wl = WorkloadConfig::wordcount_2gb();
+    let s = time(1, 5, || {
+        let mut sess = cluster.build_session(SimParams::default(), 1);
+        let file = sess.hdfs.upload(wl.data_mb << 20, wl.block_mb << 20, &mut sess.rng);
+        let job = hemt::workloads::wordcount_job(
+            file,
+            PartitionPolicy::EvenTasks(64),
+            PartitionPolicy::EvenTasks(2),
+            wl.cpu_secs_per_mb,
+        );
+        std::hint::black_box(sess.run_job(&job));
+    });
+    println!("wordcount_sim_64tasks: {} s", s.pm(6));
+}
+
+fn bench_pagerank_sweep() {
+    // fig18's heaviest point: 100 iterations at 64-way.
+    use hemt::config::{ClusterConfig, PolicyConfig, WorkloadConfig};
+    let cluster = ClusterConfig::containers_1_and_04();
+    let wl = WorkloadConfig::pagerank_256mb();
+    let s = time(0, 3, || {
+        std::hint::black_box(hemt::experiments::pagerank_total_time(
+            &cluster,
+            &wl,
+            &PolicyConfig::Homt(64),
+            1,
+        ));
+    });
+    println!("pagerank_sim_100it_64tasks: {} s", s.pm(4));
+}
+
+fn main() {
+    println!("== perf_microbench (L3 hot paths) ==");
+    bench_engine_event_throughput();
+    bench_netsim_recompute();
+    bench_partitioners();
+    bench_wordcount_sweep();
+    bench_pagerank_sweep();
+}

@@ -1,0 +1,182 @@
+//! Closed-form results from the paper's analytical sections.
+//!
+//! * **Claim 1** (Sec. 3): under pull-based assignment of evenly-sized
+//!   tasks with constant node speeds, resource idling time (latest minus
+//!   earliest node finish time) is bounded by the slowest node's single
+//!   task duration. [`claim1_bound`] + the pull simulator used by the
+//!   property tests.
+//! * **Claim 2** (Sec. 3): two readers of the same HDFS block collide on a
+//!   datanode uplink with probability `p1 = 1/r`, readers of different
+//!   blocks with `p2 = sum_v P(v) v/r^2 <= p1` (Eqs. (1)–(3)). [`p1`],
+//!   [`p2`], [`pv`] regenerate Fig. 4.
+
+use crate::util::math::hypergeom_pv;
+
+/// Eq. (1): probability two readers of the *same* block pick the same
+/// datanode: `1/r`.
+pub fn p1(r: usize) -> f64 {
+    assert!(r >= 1);
+    1.0 / r as f64
+}
+
+/// Eq. (3): probability that the replica sets of two independently placed
+/// blocks overlap in exactly `v` datanodes.
+pub fn pv(n: usize, r: usize, v: usize) -> f64 {
+    assert!(r >= 1 && r <= n);
+    hypergeom_pv(n as u64, r as u64, v as u64)
+}
+
+/// Eq. (2): probability two readers of *different* blocks pick the same
+/// datanode: `sum_v P(v) * v / r^2`.
+pub fn p2(n: usize, r: usize) -> f64 {
+    assert!(r >= 1 && r <= n);
+    let lo = (2 * r).saturating_sub(n);
+    (lo..=r)
+        .map(|v| pv(n, r, v) * v as f64 / (r * r) as f64)
+        .sum()
+}
+
+/// The Fig. 4 series: `(n, p1, p2)` for `n` in `[r, n_max]`.
+pub fn fig4_series(r: usize, n_max: usize) -> Vec<(usize, f64, f64)> {
+    (r..=n_max).map(|n| (n, p1(r), p2(n, r))).collect()
+}
+
+/// Claim 1's bound: with per-node single-task durations `task_secs`, the
+/// idle-time bound is the slowest node's task duration.
+pub fn claim1_bound(task_secs: &[f64]) -> f64 {
+    task_secs.iter().cloned().fold(0.0, f64::max)
+}
+
+/// Exact pull-based schedule of `m` equal tasks over nodes with constant
+/// `speeds` (tasks/second scale): returns each node's finish time. This is
+/// the reference implementation the Claim 1 property test exercises, and
+/// the analytic counterpart of the HomT scheduler in the coordinator.
+pub fn pull_schedule_finish_times(speeds: &[f64], task_work: f64, m: usize) -> Vec<f64> {
+    assert!(!speeds.is_empty());
+    assert!(speeds.iter().all(|&s| s > 0.0));
+    // Each node pulls its next task the instant it frees up; ties broken
+    // by node index (deterministic, matches the driver's dispatch order).
+    let n = speeds.len();
+    let mut free_at = vec![0.0f64; n];
+    for _ in 0..m {
+        let i = (0..n)
+            .min_by(|&a, &b| {
+                free_at[a]
+                    .partial_cmp(&free_at[b])
+                    .unwrap()
+                    .then(a.cmp(&b))
+            })
+            .unwrap();
+        free_at[i] += task_work / speeds[i];
+    }
+    free_at
+}
+
+/// Idle time of a schedule: latest minus earliest node finish time, with
+/// nodes that never ran a task finishing at time zero.
+pub fn idle_time(finish_times: &[f64]) -> f64 {
+    let max = finish_times.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let min = finish_times.iter().cloned().fold(f64::INFINITY, f64::min);
+    max - min
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn p1_is_one_over_r() {
+        assert_eq!(p1(1), 1.0);
+        assert_eq!(p1(2), 0.5);
+        assert_eq!(p1(4), 0.25);
+    }
+
+    #[test]
+    fn p2_equals_p1_when_r_equals_n() {
+        for n in 1..=8 {
+            assert!((p2(n, n) - p1(n)).abs() < 1e-12, "n={n}");
+        }
+    }
+
+    #[test]
+    fn claim2_p1_ge_p2_everywhere() {
+        for r in 1..=6 {
+            for n in r..=40 {
+                assert!(
+                    p1(r) >= p2(n, r) - 1e-12,
+                    "claim 2 violated at n={n} r={r}: {} < {}",
+                    p1(r),
+                    p2(n, r)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn p2_decreases_with_cluster_size() {
+        // Fig. 4's visual: with r fixed, p2 falls as n grows.
+        let series = fig4_series(2, 30);
+        for w in series.windows(2) {
+            assert!(w[1].2 <= w[0].2 + 1e-12, "{w:?}");
+        }
+        // And approaches r/n^... sanity: p2(30,2) well below p1.
+        assert!(series.last().unwrap().2 < 0.1);
+    }
+
+    #[test]
+    fn p2_closed_form_spot_check() {
+        // n=4, r=2: P(0)=C(2,0)C(2,2)/C(4,2)=1/6, P(1)=C(2,1)C(2,1)/6=4/6,
+        // P(2)=1/6. p2 = (0*1 + 1*4 + 2*1)/6 / 4 = 0.25.
+        assert!((p2(4, 2) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pull_schedule_small_example() {
+        // speeds 1 and 2, four tasks of work 1. Pull order (index ties to
+        // the lower node): n0@0 -> busy to 1.0; n1@0 -> 0.5; n1@0.5 -> 1.0;
+        // tie at 1.0 -> n0 -> 2.0. Finish times [2.0, 1.0].
+        let f = pull_schedule_finish_times(&[1.0, 2.0], 1.0, 4);
+        assert!((f[0] - 2.0).abs() < 1e-12);
+        assert!((f[1] - 1.0).abs() < 1e-12);
+        assert!(idle_time(&f) <= claim1_bound(&[1.0, 0.5]) + 1e-12);
+    }
+
+    #[test]
+    fn claim1_holds_over_random_instances() {
+        // The paper's Claim 1 as a property: idle time <= slowest node's
+        // single-task duration, for any speeds and any task count.
+        prop::check("claim-1", 0x1D1E, 500, |rng: &mut Rng| {
+            let n = rng.range(1, 8);
+            let speeds: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 10.0)).collect();
+            let m = rng.range(n, 200); // at least one task per node
+            let work = rng.range_f64(0.1, 5.0);
+            let finish = pull_schedule_finish_times(&speeds, work, m);
+            let durations: Vec<f64> = speeds.iter().map(|s| work / s).collect();
+            assert!(
+                idle_time(&finish) <= claim1_bound(&durations) + 1e-9,
+                "idle {} > bound {} (speeds {speeds:?}, m={m})",
+                idle_time(&finish),
+                claim1_bound(&durations)
+            );
+        });
+    }
+
+    #[test]
+    fn more_tasks_reduce_idle_time_on_this_instance() {
+        // The HomT motivation: finer partitioning tightens the balance for
+        // this heterogeneous pair (not a theorem for all instances, hence
+        // a pinned example).
+        let speeds = [1.0, 0.4];
+        let total_work = 100.0;
+        let coarse = {
+            let f = pull_schedule_finish_times(&speeds, total_work / 2.0, 2);
+            idle_time(&f)
+        };
+        let fine = {
+            let f = pull_schedule_finish_times(&speeds, total_work / 50.0, 50);
+            idle_time(&f)
+        };
+        assert!(fine < coarse, "fine {fine} vs coarse {coarse}");
+    }
+}

@@ -1,0 +1,78 @@
+//! Minimal benchmark harness for the `harness = false` bench targets.
+//!
+//! The vendored crate set has no `criterion`, so the per-figure benches
+//! use this: warmup + timed iterations with mean/σ/min reporting, plus a
+//! standard banner for figure-reproduction targets (which both *time* the
+//! experiment driver and *print* the paper-shaped table).
+
+use std::time::Instant;
+
+use crate::metrics::Figure;
+use crate::util::Summary;
+
+/// Time `f` over `iters` iterations (after `warmup` unrecorded runs);
+/// returns per-iteration seconds.
+pub fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Summary::of(&samples)
+}
+
+/// Run one figure-reproduction bench: time the driver, print the timing
+/// line and the figure table.
+pub fn run_figure_bench(name: &str, iters: usize, mut driver: impl FnMut() -> Figure) {
+    println!("bench {name}: running {iters} iteration(s)");
+    let mut last: Option<Figure> = None;
+    let stats = time(0, iters, || {
+        last = Some(driver());
+    });
+    println!(
+        "bench {name}: {} s/iter (min {:.3} s, n={})",
+        stats.pm(3),
+        stats.min,
+        stats.n
+    );
+    println!();
+    println!("{}", last.expect("driver ran").to_table());
+}
+
+/// Format a bytes/sec figure human-readably.
+pub fn rate(bytes: f64, secs: f64) -> String {
+    let bps = bytes / secs;
+    if bps > 1e9 {
+        format!("{:.2} GB/s", bps / 1e9)
+    } else if bps > 1e6 {
+        format!("{:.2} MB/s", bps / 1e6)
+    } else {
+        format!("{:.2} kB/s", bps / 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_reports_all_iterations() {
+        let mut count = 0;
+        let s = time(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn rate_formats_scales() {
+        assert!(rate(2e9, 1.0).contains("GB/s"));
+        assert!(rate(5e6, 1.0).contains("MB/s"));
+        assert!(rate(1e3, 1.0).contains("kB/s"));
+    }
+}

@@ -1,0 +1,253 @@
+//! Mesos-like cluster manager: agents, resource offers, executor launch.
+//!
+//! Mirrors the slice of Apache Mesos the paper depends on (Sec. 2) plus
+//! the paper's two modifications (Sec. 4–6.1):
+//!
+//! * offers can carry **partial CPU cores** (CFS bandwidth-capped
+//!   containers), and the framework may accept a fraction of an offer;
+//! * offers carry the manager's **capacity information** for the node
+//!   (nominal cores, credit state) — the extra RPC fields the paper added
+//!   so Spark can seed HeMT weights without probing.
+//!
+//! The launched [`Executor`] records the *actual* allocation so the driver
+//! can rebalance its workload (the paper's modified Spark driver also lets
+//! a partial-core executor believe it owns a full core so it still
+//! requests tasks — here that corresponds to `slots >= 1` regardless of
+//! `cpu_limit`).
+
+use crate::netsim::LinkId;
+use crate::sim::NodeId;
+
+/// A resource-providing machine registered with the manager.
+#[derive(Debug, Clone)]
+pub struct AgentSpec {
+    /// Which simulated node this agent runs on.
+    pub node: NodeId,
+    /// CPUs the agent advertises (may be fractional).
+    pub cpus: f64,
+    /// The node's network downlink (for HDFS/shuffle reads).
+    pub downlink: LinkId,
+    /// Manager-side capacity hint passed to frameworks (the paper's
+    /// enhanced RPC field): nominal effective cores. `None` when the
+    /// manager has no estimate (e.g. opaque burstable instances).
+    pub capacity_hint: Option<f64>,
+}
+
+/// A resource offer extended to a framework.
+#[derive(Debug, Clone)]
+pub struct Offer {
+    pub id: usize,
+    pub agent: usize,
+    pub cpus: f64,
+    pub capacity_hint: Option<f64>,
+}
+
+/// A launched task runner bound to an agent.
+#[derive(Debug, Clone)]
+pub struct Executor {
+    pub id: usize,
+    pub agent: usize,
+    pub node: NodeId,
+    /// CFS cap actually granted (cores, possibly fractional).
+    pub cpu_limit: f64,
+    /// Concurrent task slots. Spark uses one per core; the paper's
+    /// modification keeps one slot even for partial cores.
+    pub slots: usize,
+    pub downlink: LinkId,
+    pub capacity_hint: Option<f64>,
+}
+
+/// The cluster manager: tracks agents and unallocated resources, extends
+/// offers, launches executors.
+#[derive(Debug)]
+pub struct ClusterManager {
+    agents: Vec<AgentSpec>,
+    available: Vec<f64>,
+    next_offer: usize,
+    next_executor: usize,
+    outstanding: Vec<Offer>,
+}
+
+impl ClusterManager {
+    pub fn new(agents: Vec<AgentSpec>) -> ClusterManager {
+        let available = agents.iter().map(|a| a.cpus).collect();
+        ClusterManager {
+            agents,
+            available,
+            next_offer: 0,
+            next_executor: 0,
+            outstanding: Vec::new(),
+        }
+    }
+
+    pub fn agent(&self, id: usize) -> &AgentSpec {
+        &self.agents[id]
+    }
+
+    pub fn num_agents(&self) -> usize {
+        self.agents.len()
+    }
+
+    /// Extend one offer per agent with unallocated CPU (a Mesos offer
+    /// round). Previously outstanding offers are rescinded.
+    pub fn make_offers(&mut self) -> Vec<Offer> {
+        self.outstanding.clear();
+        let mut offers = Vec::new();
+        for (agent, avail) in self.available.iter().enumerate() {
+            if *avail > 1e-9 {
+                let o = Offer {
+                    id: self.next_offer,
+                    agent,
+                    cpus: *avail,
+                    capacity_hint: self.agents[agent].capacity_hint,
+                };
+                self.next_offer += 1;
+                offers.push(o.clone());
+                self.outstanding.push(o);
+            }
+        }
+        offers
+    }
+
+    /// Accept `cpus` from an offer (partial accepts allowed — the paper's
+    /// partial-core modification) and launch an executor there.
+    pub fn launch(&mut self, offer_id: usize, cpus: f64) -> Result<Executor, String> {
+        let pos = self
+            .outstanding
+            .iter()
+            .position(|o| o.id == offer_id)
+            .ok_or_else(|| format!("offer {offer_id} not outstanding"))?;
+        let offer = self.outstanding.remove(pos);
+        if cpus > offer.cpus + 1e-9 {
+            return Err(format!(
+                "accept of {cpus} cpus exceeds offer of {} cpus",
+                offer.cpus
+            ));
+        }
+        if cpus <= 0.0 {
+            return Err("must accept positive cpus".to_string());
+        }
+        self.available[offer.agent] -= cpus;
+        let agent = &self.agents[offer.agent];
+        let exec = Executor {
+            id: self.next_executor,
+            agent: offer.agent,
+            node: agent.node,
+            cpu_limit: cpus,
+            // Partial cores still get a full task slot (Sec. 6.1: "we let
+            // Spark's executor believe that it has one full core").
+            slots: (cpus.floor() as usize).max(1),
+            downlink: agent.downlink,
+            capacity_hint: agent.capacity_hint,
+        };
+        self.next_executor += 1;
+        Ok(exec)
+    }
+
+    /// Release an executor's resources back to its agent.
+    pub fn release(&mut self, exec: &Executor) {
+        self.available[exec.agent] += exec.cpu_limit;
+    }
+}
+
+/// Convenience: launch one executor per agent, each taking the agent's
+/// full offer — the paper's standard experiment topology.
+pub fn launch_one_executor_per_agent(mgr: &mut ClusterManager) -> Vec<Executor> {
+    let offers = mgr.make_offers();
+    offers
+        .into_iter()
+        .map(|o| {
+            let cpus = o.cpus;
+            mgr.launch(o.id, cpus).expect("fresh offer accepts")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_agents() -> ClusterManager {
+        ClusterManager::new(vec![
+            AgentSpec { node: 0, cpus: 1.0, downlink: 0, capacity_hint: Some(1.0) },
+            AgentSpec { node: 1, cpus: 0.4, downlink: 1, capacity_hint: Some(0.4) },
+        ])
+    }
+
+    #[test]
+    fn offers_reflect_available_resources() {
+        let mut m = two_agents();
+        let offers = m.make_offers();
+        assert_eq!(offers.len(), 2);
+        assert_eq!(offers[0].cpus, 1.0);
+        assert_eq!(offers[1].cpus, 0.4);
+        assert_eq!(offers[1].capacity_hint, Some(0.4));
+    }
+
+    #[test]
+    fn partial_core_launch_gets_a_slot() {
+        // The paper's Sec. 6.1 modification: 0.4-core executors still pull
+        // tasks.
+        let mut m = two_agents();
+        let offers = m.make_offers();
+        let e = m.launch(offers[1].id, 0.4).unwrap();
+        assert_eq!(e.cpu_limit, 0.4);
+        assert_eq!(e.slots, 1);
+        assert_eq!(e.node, 1);
+    }
+
+    #[test]
+    fn overcommit_rejected() {
+        let mut m = two_agents();
+        let offers = m.make_offers();
+        assert!(m.launch(offers[1].id, 0.5).is_err());
+    }
+
+    #[test]
+    fn stale_offer_rejected() {
+        let mut m = two_agents();
+        let offers = m.make_offers();
+        let stale = offers[0].id;
+        let _ = m.make_offers(); // rescinds earlier round
+        assert!(m.launch(stale, 0.5).is_err());
+    }
+
+    #[test]
+    fn resources_deplete_and_release() {
+        let mut m = two_agents();
+        let offers = m.make_offers();
+        let e = m.launch(offers[0].id, 1.0).unwrap();
+        // Agent 0 now empty: next round only offers agent 1.
+        let round2 = m.make_offers();
+        assert_eq!(round2.len(), 1);
+        assert_eq!(round2[0].agent, 1);
+        m.release(&e);
+        let round3 = m.make_offers();
+        assert_eq!(round3.len(), 2);
+    }
+
+    #[test]
+    fn partial_accept_leaves_remainder() {
+        let mut m = ClusterManager::new(vec![AgentSpec {
+            node: 0,
+            cpus: 2.0,
+            downlink: 0,
+            capacity_hint: None,
+        }]);
+        let offers = m.make_offers();
+        let e = m.launch(offers[0].id, 0.5).unwrap();
+        assert_eq!(e.slots, 1);
+        let round2 = m.make_offers();
+        assert!((round2[0].cpus - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn helper_launches_everywhere() {
+        let mut m = two_agents();
+        let execs = launch_one_executor_per_agent(&mut m);
+        assert_eq!(execs.len(), 2);
+        assert_eq!(execs[0].cpu_limit, 1.0);
+        assert_eq!(execs[1].cpu_limit, 0.4);
+        assert!(m.make_offers().is_empty());
+    }
+}

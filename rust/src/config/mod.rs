@@ -1,0 +1,534 @@
+//! Experiment configuration: JSON-backed scenario descriptions for the
+//! CLI (`hemt run --config <file>`) and presets matching the paper's
+//! testbeds.
+//!
+//! A config fully determines a run: the cluster (node capacity models,
+//! network, HDFS), the workload (type, data size, compute intensity,
+//! iterations), the partition policy under test, and the trial plan
+//! (seeds). `ExperimentConfig::from_json` round-trips with `to_json`.
+
+use crate::coordinator::driver::{SessionBuilder, SimParams};
+use crate::nodes::{Burstable, Node};
+use crate::util::json::{self, Value};
+
+/// One node's capacity description.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NodeConfig {
+    Static {
+        cores: f64,
+    },
+    Burstable {
+        peak: f64,
+        baseline: f64,
+        /// Initial credit balance, core-seconds.
+        credits: f64,
+        /// Baseline multiplier modelling cache/TLB contention (Sec. 6.2).
+        contention_penalty: f64,
+    },
+}
+
+impl NodeConfig {
+    pub fn build(&self, name: &str, interference: Vec<(f64, f64)>) -> Node {
+        let node = match *self {
+            NodeConfig::Static { cores } => Node::fixed(name, cores),
+            NodeConfig::Burstable { peak, baseline, credits, contention_penalty } => {
+                Node::burstable(
+                    name,
+                    Burstable {
+                        peak,
+                        baseline,
+                        earn: baseline,
+                        credits,
+                        max_credits: 24.0 * 3600.0 * baseline,
+                        contention_penalty,
+                        depleted: credits <= 0.0,
+                        replenish_threshold: 6.0,
+                    },
+                )
+            }
+        };
+        node.with_interference(interference)
+    }
+
+    fn to_json(&self) -> Value {
+        match *self {
+            NodeConfig::Static { cores } => json::obj(vec![
+                ("kind", json::s("static")),
+                ("cores", json::num(cores)),
+            ]),
+            NodeConfig::Burstable { peak, baseline, credits, contention_penalty } => {
+                json::obj(vec![
+                    ("kind", json::s("burstable")),
+                    ("peak", json::num(peak)),
+                    ("baseline", json::num(baseline)),
+                    ("credits", json::num(credits)),
+                    ("contention_penalty", json::num(contention_penalty)),
+                ])
+            }
+        }
+    }
+
+    fn from_json(v: &Value) -> Result<NodeConfig, String> {
+        let kind = v
+            .get("kind")
+            .and_then(Value::as_str)
+            .ok_or("node.kind missing")?;
+        let f = |k: &str, default: Option<f64>| -> Result<f64, String> {
+            v.get(k)
+                .and_then(Value::as_f64)
+                .or(default)
+                .ok_or_else(|| format!("node.{k} missing"))
+        };
+        match kind {
+            "static" => Ok(NodeConfig::Static { cores: f("cores", None)? }),
+            "burstable" => Ok(NodeConfig::Burstable {
+                peak: f("peak", Some(1.0))?,
+                baseline: f("baseline", None)?,
+                credits: f("credits", None)?,
+                contention_penalty: f("contention_penalty", Some(1.0))?,
+            }),
+            other => Err(format!("unknown node kind '{other}'")),
+        }
+    }
+}
+
+/// The cluster: one executor per node plus network and HDFS shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub nodes: Vec<NodeConfig>,
+    /// Per-node executor CPU grant (cores).
+    pub exec_cpus: Vec<f64>,
+    /// Per-node interference schedules (may be empty).
+    pub interference: Vec<Vec<(f64, f64)>>,
+    pub node_uplink_mbps: f64,
+    pub node_downlink_mbps: f64,
+    pub hdfs_datanodes: usize,
+    pub hdfs_replication: usize,
+    pub hdfs_uplink_mbps: f64,
+    /// Datanode serving-efficiency loss under concurrent readers.
+    pub hdfs_serving_eta: f64,
+}
+
+impl ClusterConfig {
+    /// The paper's Sec. 6.1 testbed: 1.0-core + 0.4-core containers over a
+    /// 4-datanode HDFS with ample (~600 Mbps) bandwidth.
+    pub fn containers_1_and_04() -> ClusterConfig {
+        ClusterConfig {
+            nodes: vec![NodeConfig::Static { cores: 1.0 }, NodeConfig::Static { cores: 1.0 }],
+            exec_cpus: vec![1.0, 0.4],
+            interference: vec![vec![], vec![]],
+            node_uplink_mbps: 600.0,
+            node_downlink_mbps: 600.0,
+            hdfs_datanodes: 4,
+            hdfs_replication: 2,
+            hdfs_uplink_mbps: 600.0,
+            hdfs_serving_eta: crate::coordinator::driver::DEFAULT_HDFS_SERVING_ETA,
+        }
+    }
+
+    /// The paper's Sec. 6.2 testbed: two t2.medium-like burstables, one
+    /// with ample credits, one depleted (with the measured contention
+    /// penalty), over a 4×t2.small HDFS with `hdfs_mbps` uplinks.
+    pub fn burstable_pair(hdfs_mbps: f64) -> ClusterConfig {
+        ClusterConfig {
+            nodes: vec![
+                NodeConfig::Burstable {
+                    peak: 1.0,
+                    baseline: 0.4,
+                    credits: 1e9, // "sufficient credits throughout the job"
+                    contention_penalty: 1.0,
+                },
+                NodeConfig::Burstable {
+                    peak: 1.0,
+                    baseline: 0.4,
+                    credits: 0.0,
+                    contention_penalty: 0.8, // measured 0.32 effective
+                },
+            ],
+            exec_cpus: vec![1.0, 1.0],
+            interference: vec![vec![], vec![]],
+            node_uplink_mbps: 600.0,
+            node_downlink_mbps: 600.0,
+            hdfs_datanodes: 4,
+            hdfs_replication: 2,
+            hdfs_uplink_mbps: hdfs_mbps,
+            hdfs_serving_eta: crate::coordinator::driver::DEFAULT_HDFS_SERVING_ETA,
+        }
+    }
+
+    pub fn build_session(&self, params: SimParams, seed: u64) -> crate::coordinator::driver::Session {
+        let nodes: Vec<Node> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, nc)| nc.build(&format!("node{i}"), self.interference[i].clone()))
+            .collect();
+        SessionBuilder {
+            nodes,
+            exec_cpus: self.exec_cpus.clone(),
+            node_uplink_bps: self.node_uplink_mbps * 1e6,
+            node_downlink_bps: self.node_downlink_mbps * 1e6,
+            hdfs_datanodes: self.hdfs_datanodes,
+            hdfs_replication: self.hdfs_replication,
+            hdfs_uplink_bps: self.hdfs_uplink_mbps * 1e6,
+            hdfs_serving_eta: self.hdfs_serving_eta,
+            params,
+            seed,
+        }
+        .build()
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("nodes", json::arr(self.nodes.iter().map(NodeConfig::to_json).collect())),
+            (
+                "exec_cpus",
+                json::arr(self.exec_cpus.iter().map(|&c| json::num(c)).collect()),
+            ),
+            (
+                "interference",
+                json::arr(
+                    self.interference
+                        .iter()
+                        .map(|sched| {
+                            json::arr(
+                                sched
+                                    .iter()
+                                    .map(|&(t, m)| json::arr(vec![json::num(t), json::num(m)]))
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+            ("node_uplink_mbps", json::num(self.node_uplink_mbps)),
+            ("node_downlink_mbps", json::num(self.node_downlink_mbps)),
+            ("hdfs_datanodes", json::num(self.hdfs_datanodes as f64)),
+            ("hdfs_replication", json::num(self.hdfs_replication as f64)),
+            ("hdfs_uplink_mbps", json::num(self.hdfs_uplink_mbps)),
+            ("hdfs_serving_eta", json::num(self.hdfs_serving_eta)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<ClusterConfig, String> {
+        let nodes = v
+            .get("nodes")
+            .and_then(Value::as_arr)
+            .ok_or("cluster.nodes missing")?
+            .iter()
+            .map(NodeConfig::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let exec_cpus: Vec<f64> = v
+            .get("exec_cpus")
+            .and_then(Value::as_arr)
+            .ok_or("cluster.exec_cpus missing")?
+            .iter()
+            .map(|x| x.as_f64().ok_or("bad exec_cpus"))
+            .collect::<Result<_, _>>()?;
+        let interference = match v.get("interference").and_then(Value::as_arr) {
+            None => vec![vec![]; nodes.len()],
+            Some(arr) => arr
+                .iter()
+                .map(|sched| {
+                    sched
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|pair| {
+                            let p = pair.as_arr().ok_or("bad interference pair")?;
+                            Ok((
+                                p[0].as_f64().ok_or("bad time")?,
+                                p[1].as_f64().ok_or("bad mult")?,
+                            ))
+                        })
+                        .collect::<Result<Vec<_>, String>>()
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+        };
+        if nodes.len() != exec_cpus.len() || nodes.len() != interference.len() {
+            return Err("nodes/exec_cpus/interference length mismatch".into());
+        }
+        let f = |k: &str| v.get(k).and_then(Value::as_f64).ok_or(format!("cluster.{k} missing"));
+        let u = |k: &str| v.get(k).and_then(Value::as_usize).ok_or(format!("cluster.{k} missing"));
+        Ok(ClusterConfig {
+            nodes,
+            exec_cpus,
+            interference,
+            node_uplink_mbps: f("node_uplink_mbps")?,
+            node_downlink_mbps: f("node_downlink_mbps")?,
+            hdfs_datanodes: u("hdfs_datanodes")?,
+            hdfs_replication: u("hdfs_replication")?,
+            hdfs_uplink_mbps: f("hdfs_uplink_mbps")?,
+            hdfs_serving_eta: v
+                .get("hdfs_serving_eta")
+                .and_then(Value::as_f64)
+                .unwrap_or(crate::coordinator::driver::DEFAULT_HDFS_SERVING_ETA),
+        })
+    }
+}
+
+/// Which workload to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    WordCount,
+    KMeans,
+    PageRank,
+}
+
+impl WorkloadKind {
+    pub fn parse(s: &str) -> Result<WorkloadKind, String> {
+        match s {
+            "wordcount" => Ok(WorkloadKind::WordCount),
+            "kmeans" => Ok(WorkloadKind::KMeans),
+            "pagerank" => Ok(WorkloadKind::PageRank),
+            other => Err(format!("unknown workload '{other}'")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadKind::WordCount => "wordcount",
+            WorkloadKind::KMeans => "kmeans",
+            WorkloadKind::PageRank => "pagerank",
+        }
+    }
+}
+
+/// Workload shape parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadConfig {
+    pub kind: WorkloadKind,
+    pub data_mb: u64,
+    pub block_mb: u64,
+    /// Map-stage compute intensity, core-seconds per MB.
+    pub cpu_secs_per_mb: f64,
+    pub iterations: usize,
+}
+
+impl WorkloadConfig {
+    /// Sec. 6.1/6.2 WordCount: 2 GB input in 1 GB blocks, CPU-bound.
+    pub fn wordcount_2gb() -> WorkloadConfig {
+        WorkloadConfig {
+            kind: WorkloadKind::WordCount,
+            data_mb: 2048,
+            block_mb: 1024,
+            cpu_secs_per_mb: 42.0 / 1024.0, // ~60 s optimal on 1.4 cores
+            iterations: 1,
+        }
+    }
+
+    /// Sec. 7 K-Means: 256 MB input, 128 MB blocks, 30 iterations.
+    pub fn kmeans_256mb() -> WorkloadConfig {
+        WorkloadConfig {
+            kind: WorkloadKind::KMeans,
+            data_mb: 256,
+            block_mb: 128,
+            cpu_secs_per_mb: 42.0 / 1024.0,
+            iterations: 30,
+        }
+    }
+
+    /// Sec. 7 PageRank: 256 MB input, 100 iterations, short stages.
+    pub fn pagerank_256mb() -> WorkloadConfig {
+        WorkloadConfig {
+            kind: WorkloadKind::PageRank,
+            data_mb: 256,
+            block_mb: 128,
+            cpu_secs_per_mb: 0.031, // ~10 s per iteration at 2-way default
+            iterations: 100,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("kind", json::s(self.kind.name())),
+            ("data_mb", json::num(self.data_mb as f64)),
+            ("block_mb", json::num(self.block_mb as f64)),
+            ("cpu_secs_per_mb", json::num(self.cpu_secs_per_mb)),
+            ("iterations", json::num(self.iterations as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<WorkloadConfig, String> {
+        Ok(WorkloadConfig {
+            kind: WorkloadKind::parse(
+                v.get("kind").and_then(Value::as_str).ok_or("workload.kind missing")?,
+            )?,
+            data_mb: v.get("data_mb").and_then(Value::as_u64).ok_or("workload.data_mb")?,
+            block_mb: v.get("block_mb").and_then(Value::as_u64).ok_or("workload.block_mb")?,
+            cpu_secs_per_mb: v
+                .get("cpu_secs_per_mb")
+                .and_then(Value::as_f64)
+                .ok_or("workload.cpu_secs_per_mb")?,
+            iterations: v
+                .get("iterations")
+                .and_then(Value::as_usize)
+                .unwrap_or(1),
+        })
+    }
+}
+
+/// The partitioning policy under test.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicyConfig {
+    /// Spark default: one task per HDFS block.
+    Default,
+    /// HomT with `m` tasks.
+    Homt(usize),
+    /// HeMT with static weights.
+    HemtStatic(Vec<f64>),
+    /// HeMT with weights from capacity hints (cluster-manager RPC).
+    HemtFromHints,
+    /// OA-HeMT: adaptive weights with forgetting factor alpha.
+    HemtAdaptive { alpha: f64 },
+}
+
+impl PolicyConfig {
+    pub fn to_json(&self) -> Value {
+        match self {
+            PolicyConfig::Default => json::obj(vec![("kind", json::s("default"))]),
+            PolicyConfig::Homt(m) => json::obj(vec![
+                ("kind", json::s("homt")),
+                ("tasks", json::num(*m as f64)),
+            ]),
+            PolicyConfig::HemtStatic(w) => json::obj(vec![
+                ("kind", json::s("hemt_static")),
+                ("weights", json::arr(w.iter().map(|&x| json::num(x)).collect())),
+            ]),
+            PolicyConfig::HemtFromHints => json::obj(vec![("kind", json::s("hemt_hints"))]),
+            PolicyConfig::HemtAdaptive { alpha } => json::obj(vec![
+                ("kind", json::s("hemt_adaptive")),
+                ("alpha", json::num(*alpha)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Value) -> Result<PolicyConfig, String> {
+        match v.get("kind").and_then(Value::as_str).ok_or("policy.kind missing")? {
+            "default" => Ok(PolicyConfig::Default),
+            "homt" => Ok(PolicyConfig::Homt(
+                v.get("tasks").and_then(Value::as_usize).ok_or("policy.tasks")?,
+            )),
+            "hemt_static" => Ok(PolicyConfig::HemtStatic(
+                v.get("weights")
+                    .and_then(Value::as_arr)
+                    .ok_or("policy.weights")?
+                    .iter()
+                    .map(|x| x.as_f64().ok_or("bad weight"))
+                    .collect::<Result<_, _>>()?,
+            )),
+            "hemt_hints" => Ok(PolicyConfig::HemtFromHints),
+            "hemt_adaptive" => Ok(PolicyConfig::HemtAdaptive {
+                alpha: v.get("alpha").and_then(Value::as_f64).unwrap_or(0.0),
+            }),
+            other => Err(format!("unknown policy kind '{other}'")),
+        }
+    }
+}
+
+/// A complete experiment description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub cluster: ClusterConfig,
+    pub workload: WorkloadConfig,
+    pub policy: PolicyConfig,
+    pub trials: usize,
+    pub base_seed: u64,
+}
+
+impl ExperimentConfig {
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("cluster", self.cluster.to_json()),
+            ("workload", self.workload.to_json()),
+            ("policy", self.policy.to_json()),
+            ("trials", json::num(self.trials as f64)),
+            ("base_seed", json::num(self.base_seed as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<ExperimentConfig, String> {
+        Ok(ExperimentConfig {
+            name: v
+                .get("name")
+                .and_then(Value::as_str)
+                .unwrap_or("experiment")
+                .to_string(),
+            cluster: ClusterConfig::from_json(v.get("cluster").ok_or("cluster missing")?)?,
+            workload: WorkloadConfig::from_json(v.get("workload").ok_or("workload missing")?)?,
+            policy: PolicyConfig::from_json(v.get("policy").ok_or("policy missing")?)?,
+            trials: v.get("trials").and_then(Value::as_usize).unwrap_or(5),
+            base_seed: v.get("base_seed").and_then(Value::as_u64).unwrap_or(1),
+        })
+    }
+
+    pub fn from_str(text: &str) -> Result<ExperimentConfig, String> {
+        let v = Value::parse(text).map_err(|e| e.to_string())?;
+        Self::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ExperimentConfig {
+        ExperimentConfig {
+            name: "fig9-hemt".into(),
+            cluster: ClusterConfig::containers_1_and_04(),
+            workload: WorkloadConfig::wordcount_2gb(),
+            policy: PolicyConfig::HemtStatic(vec![1.0, 0.4]),
+            trials: 5,
+            base_seed: 7,
+        }
+    }
+
+    #[test]
+    fn config_roundtrips_through_json() {
+        let c = sample();
+        let text = c.to_json().pretty();
+        let back = ExperimentConfig::from_str(&text).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn burstable_config_roundtrips() {
+        let mut c = sample();
+        c.cluster = ClusterConfig::burstable_pair(250.0);
+        c.policy = PolicyConfig::HemtAdaptive { alpha: 0.25 };
+        c.cluster.interference[0] = vec![(10.0, 0.5), (20.0, 1.0)];
+        let back = ExperimentConfig::from_str(&c.to_json().pretty()).unwrap();
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn missing_fields_are_reported() {
+        let err = ExperimentConfig::from_str("{}").unwrap_err();
+        assert!(err.contains("cluster"), "{err}");
+        assert!(ExperimentConfig::from_str("not json").is_err());
+    }
+
+    #[test]
+    fn node_config_builds_expected_nodes() {
+        let n = NodeConfig::Burstable {
+            peak: 1.0,
+            baseline: 0.4,
+            credits: 0.0,
+            contention_penalty: 0.8,
+        }
+        .build("x", vec![]);
+        assert!((n.available_cores(0.0) - 0.32).abs() < 1e-12);
+        let s = NodeConfig::Static { cores: 0.4 }.build("y", vec![]);
+        assert_eq!(s.available_cores(0.0), 0.4);
+    }
+
+    #[test]
+    fn preset_session_builds() {
+        let c = ClusterConfig::containers_1_and_04();
+        let s = c.build_session(SimParams::default(), 1);
+        assert_eq!(s.executors.len(), 2);
+        assert!((s.executors[1].cpu_limit - 0.4).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,1068 @@
+//! The driver session: executes [`JobPlan`]s on the fluid simulation
+//! engine, producing [`JobRecord`]s.
+//!
+//! Models the paper's Spark-on-Mesos execution semantics:
+//!
+//! * **pull-based dispatch** — executors with free slots pull pending
+//!   tasks in order; HeMT tasks are bound to their executor;
+//! * **serialized driver overhead** — each dispatch occupies the driver
+//!   for `sched_overhead` seconds (the per-task scheduling cost that
+//!   penalizes microtasking);
+//! * **launch latency** — executor-side task initialization, parallel
+//!   across executors;
+//! * **I/O setup** — per-HDFS-task connection/first-buffer cost (the lost
+//!   read-process pipelining of tiny tasks, Sec. 3);
+//! * **pipelined read+compute** — a task completes when its input flows
+//!   *and* its CPU work are done (`max` coupling in the fluid limit);
+//! * **stage barriers** — a stage starts only when the previous stage has
+//!   fully completed; shuffle volumes derive from the previous stage's
+//!   per-executor outputs and the (possibly skewed) bucket fractions.
+
+use crate::cluster::{launch_one_executor_per_agent, AgentSpec, ClusterManager, Executor};
+use crate::coordinator::{plan_tasks, JobPlan, StageInput, StageTasks};
+use crate::hdfs::HdfsCluster;
+use crate::metrics::{JobRecord, StageRecord, TaskRecord};
+use crate::netsim::{LinkId, NetSim};
+use crate::nodes::Node;
+use crate::sim::{Engine, Event};
+use crate::util::Rng;
+
+/// Speculative-execution policy (the straggler mitigation the paper
+/// contrasts HeMT against, Sec. 8): once `quantile` of a stage's tasks
+/// have finished, any attempt running longer than `multiplier` × the
+/// median completed duration gets a duplicate on a free executor; the
+/// first attempt to finish wins and the loser is killed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Speculation {
+    pub quantile: f64,
+    pub multiplier: f64,
+    /// How often the driver re-scans for stragglers (Spark's
+    /// `spark.speculation.interval`, 100 ms).
+    pub check_interval: f64,
+}
+
+impl Default for Speculation {
+    fn default() -> Self {
+        // Spark's defaults: spark.speculation.{quantile=0.75,
+        // multiplier=1.5, interval=100ms}.
+        Speculation { quantile: 0.75, multiplier: 1.5, check_interval: 0.1 }
+    }
+}
+
+/// Fixed per-task overheads (seconds) and execution-model knobs. Defaults
+/// are calibrated to Spark's observed costs (10-20 ms driver-side
+/// scheduling, tens of ms task launch) and produce the paper's U-shaped
+/// HomT curves.
+#[derive(Debug, Clone, Copy)]
+pub struct SimParams {
+    /// Serialized driver occupancy per dispatch.
+    pub sched_overhead: f64,
+    /// Executor-side task initialization (parallel).
+    pub launch_latency: f64,
+    /// Per-task HDFS read setup (connection + unpipelined first buffer).
+    pub io_setup: f64,
+    /// Multiplicative lognormal noise sigma on each task's CPU work
+    /// (datasets of equal size needing unequal time — Sec. 5.1). 0 = off.
+    pub exec_noise: f64,
+    /// Speculative re-execution of stragglers (None = off, the default —
+    /// Spark ships with speculation disabled).
+    pub speculation: Option<Speculation>,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        SimParams {
+            sched_overhead: 0.015,
+            launch_latency: 0.05,
+            io_setup: 0.12,
+            exec_noise: 0.0,
+            speculation: None,
+        }
+    }
+}
+
+/// Everything needed to build a [`Session`]: compute nodes (one executor
+/// each), their network interfaces, and the HDFS cluster.
+pub struct SessionBuilder {
+    pub nodes: Vec<Node>,
+    /// Per-node executor CFS cap (cores).
+    pub exec_cpus: Vec<f64>,
+    /// Compute-node uplink/downlink capacity, bits/s.
+    pub node_uplink_bps: f64,
+    pub node_downlink_bps: f64,
+    pub hdfs_datanodes: usize,
+    pub hdfs_replication: usize,
+    pub hdfs_uplink_bps: f64,
+    /// Datanode serving-efficiency loss under concurrent readers (the
+    /// paper's Sec. 3 observation; 0 = ideal datanodes).
+    pub hdfs_serving_eta: f64,
+    pub params: SimParams,
+    pub seed: u64,
+}
+
+/// Default datanode serving-efficiency loss: calibrated so a t2.small-like
+/// datanode serving two concurrent streams loses ~20% aggregate
+/// throughput (Sec. 6.2's footnote-10 task times).
+pub const DEFAULT_HDFS_SERVING_ETA: f64 = 0.26;
+
+impl SessionBuilder {
+    /// A paper-style two-executor cluster over a 4-datanode HDFS.
+    pub fn two_node(node_a: Node, cpu_a: f64, node_b: Node, cpu_b: f64) -> SessionBuilder {
+        SessionBuilder {
+            nodes: vec![node_a, node_b],
+            exec_cpus: vec![cpu_a, cpu_b],
+            node_uplink_bps: 600e6,
+            node_downlink_bps: 600e6,
+            hdfs_datanodes: 4,
+            hdfs_replication: 2,
+            hdfs_uplink_bps: 600e6,
+            hdfs_serving_eta: DEFAULT_HDFS_SERVING_ETA,
+            params: SimParams::default(),
+            seed: 1,
+        }
+    }
+
+    pub fn with_params(mut self, params: SimParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_hdfs_uplink_bps(mut self, bps: f64) -> Self {
+        self.hdfs_uplink_bps = bps;
+        self
+    }
+
+    pub fn build(self) -> Session {
+        assert_eq!(self.nodes.len(), self.exec_cpus.len());
+        let mut net = NetSim::new();
+        let hdfs = HdfsCluster::build(
+            &mut net,
+            self.hdfs_datanodes,
+            self.hdfs_replication,
+            self.hdfs_uplink_bps,
+            self.hdfs_serving_eta,
+        );
+        let mut uplinks = Vec::new();
+        let mut downlinks = Vec::new();
+        for (i, _) in self.nodes.iter().enumerate() {
+            uplinks.push(net.add_link(&format!("node{i}-up"), self.node_uplink_bps));
+            downlinks.push(net.add_link(&format!("node{i}-down"), self.node_downlink_bps));
+        }
+        // Register the nodes with the Mesos-like manager and launch one
+        // executor per agent (the paper's standard topology), letting the
+        // manager record partial-core grants.
+        let agents: Vec<AgentSpec> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| AgentSpec {
+                node: i,
+                cpus: self.exec_cpus[i],
+                downlink: downlinks[i],
+                capacity_hint: Some(n.available_cores(0.0) * self.exec_cpus[i].min(1.0)),
+            })
+            .collect();
+        let mut mgr = ClusterManager::new(agents);
+        let executors = launch_one_executor_per_agent(&mut mgr);
+        let engine = Engine::new(self.nodes, net);
+        Session {
+            engine,
+            hdfs,
+            executors,
+            exec_uplinks: uplinks,
+            exec_downlinks: downlinks,
+            params: self.params,
+            rng: Rng::new(self.seed),
+            manager: mgr,
+        }
+    }
+}
+
+/// A live driver session: executes jobs sequentially on one cluster,
+/// carrying node state (burstable credits, interference) across jobs.
+pub struct Session {
+    pub engine: Engine,
+    pub hdfs: HdfsCluster,
+    pub executors: Vec<Executor>,
+    pub params: SimParams,
+    pub rng: Rng,
+    pub manager: ClusterManager,
+    exec_uplinks: Vec<LinkId>,
+    exec_downlinks: Vec<LinkId>,
+}
+
+// Tag encoding: kind in the top byte, task index below.
+const KIND_LAUNCH: u64 = 1 << 56;
+const KIND_FLOW: u64 = 2 << 56;
+const KIND_CPU: u64 = 3 << 56;
+const KIND_SPEC_CHECK: u64 = 4 << 56;
+const KIND_MASK: u64 = 0xFF << 56;
+// Attempt index (0 = primary, 1 = speculative copy) in bit 48.
+const ATT_SHIFT: u64 = 48;
+const ATT_BIT: u64 = 1 << ATT_SHIFT;
+
+fn tag_of(kind: u64, attempt: usize, task: usize) -> u64 {
+    kind | ((attempt as u64) << ATT_SHIFT) | task as u64
+}
+
+fn untag(tag: u64) -> (u64, usize, usize) {
+    (
+        tag & KIND_MASK,
+        ((tag & ATT_BIT) >> ATT_SHIFT) as usize,
+        (tag & !(KIND_MASK | ATT_BIT)) as usize,
+    )
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum TaskPhase {
+    Pending,
+    Dispatched,
+    Running,
+    Done,
+}
+
+/// One execution attempt of a task (primary, or a speculative copy).
+#[derive(Debug, Default)]
+struct Attempt {
+    executor: usize,
+    launched: bool,
+    outstanding: usize,
+    /// Remaining HDFS `(block, bytes)` pieces, read *sequentially* (Spark
+    /// scans a partition front to back — consecutive small tasks therefore
+    /// hit the same block, the paper's Sec. 3 observation).
+    pending_pieces: Vec<(crate::hdfs::BlockId, u64)>,
+    flow_ids: Vec<crate::netsim::FlowId>,
+    job_id: Option<crate::sim::JobId>,
+}
+
+struct TaskState {
+    bytes: u64,
+    bound_to: Option<usize>,
+    range: Option<(u64, u64)>,
+    phase: TaskPhase,
+    /// Primary attempt [0]; speculative copy [1] when straggler-relaunched.
+    attempts: [Option<Attempt>; 2],
+    /// Task-intrinsic difficulty multiplier (Sec. 5.1's "same size,
+    /// different time"): shared by both attempts.
+    work_noise: f64,
+    /// Executor of the *winning* attempt (for records/caching/shuffle).
+    executor: usize,
+    dispatched: f64,
+    started: f64,
+    finished: f64,
+}
+
+impl TaskState {
+    fn running_attempts(&self) -> usize {
+        self.attempts.iter().flatten().count()
+    }
+}
+
+impl Session {
+    /// Capacity hints the cluster manager reported at launch (the paper's
+    /// extended Mesos RPC): usable as static HeMT weights.
+    pub fn capacity_hints(&self) -> Vec<f64> {
+        self.executors
+            .iter()
+            .map(|e| e.capacity_hint.unwrap_or(1.0))
+            .collect()
+    }
+
+    /// Advance simulated time with the cluster idle (e.g. to let burstable
+    /// credits replenish between jobs).
+    pub fn idle_until(&mut self, t: f64) {
+        assert!(t >= self.engine.now);
+        self.engine.set_timer(t, u64::MAX);
+        while let Some(ev) = self.engine.step() {
+            if matches!(ev, Event::Timer { tag: u64::MAX }) {
+                break;
+            }
+        }
+    }
+
+    /// Execute a job to completion and return its record.
+    pub fn run_job(&mut self, plan: &JobPlan) -> JobRecord {
+        let job_start = self.engine.now;
+        let mut stages = Vec::new();
+        // Per-executor output bytes of the previous stage (shuffle input).
+        let mut prev_exec_output: Vec<u64> = vec![0; self.executors.len()];
+        for stage in &plan.stages {
+            let prev_total: u64 = prev_exec_output.iter().sum();
+            let tasks = plan_tasks(stage, self.executors.len(), prev_total);
+            let record = self.run_stage(stage, &tasks, &prev_exec_output);
+            // Outputs for the next stage's shuffle.
+            let mut out = vec![0u64; self.executors.len()];
+            for t in &record.tasks {
+                out[t.executor] += (t.bytes as f64 * stage.output_ratio).round() as u64;
+            }
+            prev_exec_output = out;
+            stages.push(record);
+        }
+        JobRecord { stages, start: job_start, end: self.engine.now }
+    }
+
+    /// Receiver backpressure limit for a task's input stream: a pipelined
+    /// reader pulls at most ~1.25x its compute consumption rate (the
+    /// read-process pipelining of Sec. 3 — a CPU-bound task does not blast
+    /// the network).
+    fn input_rate_limit(&self, exec: usize, cpu_secs_per_byte: f64) -> f64 {
+        if cpu_secs_per_byte <= 0.0 {
+            return f64::INFINITY;
+        }
+        let node = self.executors[exec].node;
+        let cores = self.engine.nodes[node]
+            .available_cores(self.engine.now)
+            .min(self.executors[exec].cpu_limit);
+        cores / cpu_secs_per_byte * 8.0 * 1.25
+    }
+
+    fn run_stage(
+        &mut self,
+        stage: &crate::coordinator::StagePlan,
+        tasks: &StageTasks,
+        prev_exec_output: &[u64],
+    ) -> StageRecord {
+        let stage_start = self.engine.now;
+        let n = tasks.bytes.len();
+        let noise = self.params.exec_noise;
+        let mut st: Vec<TaskState> = (0..n)
+            .map(|i| TaskState {
+                bytes: tasks.bytes[i],
+                bound_to: tasks.bound_to[i],
+                range: tasks.ranges.as_ref().map(|r| r[i]),
+                phase: TaskPhase::Pending,
+                attempts: [None, None],
+                work_noise: if noise > 0.0 {
+                    // Lognormal with unit mean.
+                    (noise * self.rng.normal() - 0.5 * noise * noise).exp()
+                } else {
+                    1.0
+                },
+                executor: usize::MAX,
+                dispatched: 0.0,
+                started: 0.0,
+                finished: 0.0,
+            })
+            .collect();
+        let mut free_slots: Vec<usize> = self.executors.iter().map(|e| e.slots).collect();
+        let mut driver_free = self.engine.now;
+        let mut done = 0usize;
+        let mut completed_durations: Vec<f64> = Vec::new();
+
+        // Initial dispatch round.
+        self.try_dispatch(stage, &mut st, &mut free_slots, &mut driver_free);
+        // Periodic straggler scan (Spark's speculation interval).
+        if let Some(spec) = self.params.speculation {
+            self.engine
+                .set_timer(self.engine.now + spec.check_interval, KIND_SPEC_CHECK);
+        }
+
+        while done < n {
+            let ev = self
+                .engine
+                .step()
+                .expect("engine drained with tasks outstanding");
+            let mut completed: Option<usize> = None;
+            match ev {
+                Event::Timer { tag } if tag & KIND_MASK == KIND_LAUNCH => {
+                    let (_, att, i) = untag(tag);
+                    if st[i].phase == TaskPhase::Done {
+                        // The task finished while this (speculative or
+                        // stale) launch was queued: release the held slot.
+                        if let Some(a) = st[i].attempts[att].take() {
+                            free_slots[a.executor] += 1;
+                        }
+                    } else {
+                        self.start_attempt(stage, &mut st, i, att, tasks, prev_exec_output);
+                        if st[i].phase == TaskPhase::Done {
+                            completed = Some(i);
+                        }
+                    }
+                }
+                Event::FlowDone { id, tag } if tag & KIND_MASK == KIND_FLOW => {
+                    let (_, att, i) = untag(tag);
+                    let Some(attempt) = st[i].attempts[att].as_mut() else {
+                        continue; // cancelled loser's residue
+                    };
+                    attempt.flow_ids.retain(|&f| f != id);
+                    // Sequential HDFS scan: chain the next block piece
+                    // before counting the input stream as finished.
+                    if !attempt.pending_pieces.is_empty() {
+                        let (block, bytes) = attempt.pending_pieces.remove(0);
+                        let exec = attempt.executor;
+                        if let StageInput::Hdfs { file } = &stage.input {
+                            let dn = self.hdfs.pick_replica(file, block, &mut self.rng);
+                            let route = vec![
+                                self.hdfs.uplink(dn),
+                                self.exec_downlinks[self.executors[exec].node],
+                            ];
+                            let limit =
+                                self.input_rate_limit(exec, stage.cpu_secs_per_byte);
+                            let fid = self.engine.add_flow_with_limit(
+                                route,
+                                bytes as f64 * 8.0,
+                                tag_of(KIND_FLOW, att, i),
+                                limit,
+                            );
+                            st[i].attempts[att].as_mut().unwrap().flow_ids.push(fid);
+                        } else {
+                            unreachable!("pieces only exist for HDFS stages");
+                        }
+                        continue;
+                    }
+                    if Self::complete_part(&mut st[i], att, self.engine.now) {
+                        completed = Some(i);
+                    }
+                }
+                Event::JobDone { tag, .. } if tag & KIND_MASK == KIND_CPU => {
+                    let (_, att, i) = untag(tag);
+                    if st[i].attempts[att].is_none() {
+                        continue; // cancelled loser's residue
+                    }
+                    st[i].attempts[att].as_mut().unwrap().job_id = None;
+                    if Self::complete_part(&mut st[i], att, self.engine.now) {
+                        completed = Some(i);
+                    }
+                }
+                Event::Timer { tag } if tag & KIND_MASK == KIND_SPEC_CHECK => {
+                    self.try_speculate(
+                        stage,
+                        &mut st,
+                        &mut free_slots,
+                        &mut driver_free,
+                        &completed_durations,
+                        n,
+                    );
+                    if done < n {
+                        let spec = self.params.speculation.expect("check implies policy");
+                        self.engine
+                            .set_timer(self.engine.now + spec.check_interval, KIND_SPEC_CHECK);
+                    }
+                }
+                other => panic!("unexpected event in stage: {other:?}"),
+            }
+
+            if let Some(i) = completed {
+                done += 1;
+                completed_durations.push(st[i].finished - st[i].started);
+                self.finish_task(&mut st[i], &mut free_slots);
+                self.try_dispatch(stage, &mut st, &mut free_slots, &mut driver_free);
+                self.try_speculate(
+                    stage,
+                    &mut st,
+                    &mut free_slots,
+                    &mut driver_free,
+                    &completed_durations,
+                    n,
+                );
+            }
+        }
+
+        // A speculation-check timer may still be pending; the next stage's
+        // event loop (or session teardown) consumes it as a no-op, so the
+        // clock is not advanced here.
+
+        StageRecord {
+            tasks: st
+                .iter()
+                .enumerate()
+                .map(|(i, t)| TaskRecord {
+                    task: i,
+                    executor: t.executor,
+                    bytes: t.bytes,
+                    dispatched: t.dispatched,
+                    started: t.started,
+                    finished: t.finished,
+                })
+                .collect(),
+            start: stage_start,
+            end: self.engine.now,
+        }
+    }
+
+    /// Task `i` completed via some attempt: kill the loser attempt (if
+    /// launched) and release the winner's slot.
+    fn finish_task(&mut self, t: &mut TaskState, free_slots: &mut [usize]) {
+        for att in 0..2 {
+            let Some(a) = t.attempts[att].as_ref() else { continue };
+            if a.launched {
+                // Cancel whatever the loser still has in flight.
+                for &f in &a.flow_ids {
+                    self.engine.cancel_flow(f);
+                }
+                if let Some(j) = a.job_id {
+                    self.engine.cancel_cpu_job(j);
+                }
+                free_slots[a.executor] += 1;
+                t.attempts[att] = None;
+            }
+            // Dispatched-but-unlaunched losers keep their slot until their
+            // LAUNCH timer fires and sees the task Done.
+        }
+    }
+
+    /// Greedy dispatch: for each executor with a free slot, pick the first
+    /// pending task it may run (its bound task, or any unbound task in
+    /// order). Each dispatch serializes through the driver.
+    fn try_dispatch(
+        &mut self,
+        stage: &crate::coordinator::StagePlan,
+        st: &mut [TaskState],
+        free_slots: &mut [usize],
+        driver_free: &mut f64,
+    ) {
+        loop {
+            let mut dispatched_any = false;
+            for exec in 0..self.executors.len() {
+                if free_slots[exec] == 0 {
+                    continue;
+                }
+                let candidate = st.iter().position(|t| {
+                    t.phase == TaskPhase::Pending
+                        && match t.bound_to {
+                            Some(b) => b == exec,
+                            None => true,
+                        }
+                });
+                let Some(i) = candidate else { continue };
+                free_slots[exec] -= 1;
+                st[i].phase = TaskPhase::Dispatched;
+                st[i].dispatched = self.engine.now;
+                st[i].attempts[0] = Some(Attempt { executor: exec, ..Default::default() });
+                self.schedule_launch(stage, driver_free, 0, i);
+                dispatched_any = true;
+            }
+            if !dispatched_any {
+                return;
+            }
+        }
+    }
+
+    /// Spark-style speculative execution (Sec. 8's opportunistic straggler
+    /// mitigation, as a comparison baseline for HeMT): once `quantile` of
+    /// the stage finished, duplicate any attempt running longer than
+    /// `multiplier` x the median completed duration onto a free executor.
+    fn try_speculate(
+        &mut self,
+        stage: &crate::coordinator::StagePlan,
+        st: &mut [TaskState],
+        free_slots: &mut [usize],
+        driver_free: &mut f64,
+        completed_durations: &[f64],
+        n: usize,
+    ) {
+        let Some(spec) = self.params.speculation else { return };
+        if (completed_durations.len() as f64) < spec.quantile * n as f64 {
+            return;
+        }
+        let median = crate::util::stats::percentile(completed_durations, 50.0);
+        let threshold = spec.multiplier * median;
+        for i in 0..st.len() {
+            if st[i].phase != TaskPhase::Running || st[i].running_attempts() != 1 {
+                continue;
+            }
+            if self.engine.now - st[i].started <= threshold {
+                continue;
+            }
+            // Prefer an executor other than the straggling one.
+            let current = st[i].attempts[0].as_ref().map(|a| a.executor);
+            let target = (0..self.executors.len())
+                .filter(|&e| free_slots[e] > 0)
+                .min_by_key(|&e| (Some(e) == current) as usize);
+            let Some(exec) = target else { return };
+            free_slots[exec] -= 1;
+            st[i].attempts[1] = Some(Attempt { executor: exec, ..Default::default() });
+            self.schedule_launch(stage, driver_free, 1, i);
+        }
+    }
+
+    /// Serialize a dispatch through the driver and set the launch timer.
+    fn schedule_launch(
+        &mut self,
+        stage: &crate::coordinator::StagePlan,
+        driver_free: &mut f64,
+        att: usize,
+        i: usize,
+    ) {
+        *driver_free = driver_free.max(self.engine.now) + self.params.sched_overhead;
+        let mut start_at = *driver_free + self.params.launch_latency;
+        if matches!(stage.input, StageInput::Hdfs { .. }) {
+            start_at += self.params.io_setup;
+        }
+        self.engine.set_timer(start_at, tag_of(KIND_LAUNCH, att, i));
+    }
+
+    /// Launch an attempt's flows and CPU work.
+    fn start_attempt(
+        &mut self,
+        stage: &crate::coordinator::StagePlan,
+        st: &mut [TaskState],
+        i: usize,
+        att: usize,
+        tasks: &StageTasks,
+        prev_exec_output: &[u64],
+    ) {
+        let exec = st[i].attempts[att].as_ref().expect("attempt dispatched").executor;
+        if att == 0 {
+            st[i].phase = TaskPhase::Running;
+            st[i].started = self.engine.now;
+        }
+        let mut outstanding = 0usize;
+        let mut flow_ids = Vec::new();
+        let mut pending_pieces = Vec::new();
+        let mut job_id = None;
+
+        // Input flows.
+        match &stage.input {
+            StageInput::Hdfs { file } => {
+                let (off, len) = st[i].range.expect("hdfs task has a range");
+                if len > 0 {
+                    // Sequential scan: start the first block piece; the
+                    // FlowDone handler chains the rest. One input stream =
+                    // one `outstanding` unit.
+                    let mut pieces = file.read_ranges(off, len);
+                    let (block, bytes) = pieces.remove(0);
+                    pending_pieces = pieces;
+                    let dn = self.hdfs.pick_replica(file, block, &mut self.rng);
+                    let route = vec![
+                        self.hdfs.uplink(dn),
+                        self.exec_downlinks[self.executors[exec].node],
+                    ];
+                    let limit = self.input_rate_limit(exec, stage.cpu_secs_per_byte);
+                    flow_ids.push(self.engine.add_flow_with_limit(
+                        route,
+                        bytes as f64 * 8.0,
+                        tag_of(KIND_FLOW, att, i),
+                        limit,
+                    ));
+                    outstanding += 1;
+                }
+            }
+            StageInput::Shuffle => {
+                let fractions = tasks.bucket_fractions.as_ref().unwrap();
+                let fraction = fractions[i.min(fractions.len() - 1)];
+                for (m, &out) in prev_exec_output.iter().enumerate() {
+                    let bytes = (out as f64 * fraction).round();
+                    if bytes < 1.0 {
+                        continue;
+                    }
+                    let src_node = self.executors[m].node;
+                    let dst_node = self.executors[exec].node;
+                    if src_node == dst_node {
+                        continue; // local fetch: no network
+                    }
+                    let route = vec![self.exec_uplinks[src_node], self.exec_downlinks[dst_node]];
+                    let limit = self.input_rate_limit(exec, stage.cpu_secs_per_byte);
+                    flow_ids.push(self.engine.add_flow_with_limit(
+                        route,
+                        bytes * 8.0,
+                        tag_of(KIND_FLOW, att, i),
+                        limit,
+                    ));
+                    outstanding += 1;
+                }
+            }
+            StageInput::Cached { .. } => {}
+        }
+
+        // CPU work (task-intrinsic noise applies to every attempt alike).
+        let work = st[i].bytes as f64 * stage.cpu_secs_per_byte * st[i].work_noise;
+        if work > 0.0 {
+            let node = self.executors[exec].node;
+            let cap = self.executors[exec].cpu_limit;
+            job_id = Some(self.engine.add_cpu_job(node, cap, work, tag_of(KIND_CPU, att, i)));
+            outstanding += 1;
+        }
+
+        {
+            let a = st[i].attempts[att].as_mut().unwrap();
+            a.launched = true;
+            a.outstanding = outstanding;
+            a.flow_ids = flow_ids;
+            a.pending_pieces = pending_pieces;
+            a.job_id = job_id;
+        }
+        if outstanding == 0 {
+            // Degenerate (zero-byte, zero-work) task: completes at launch.
+            st[i].phase = TaskPhase::Done;
+            st[i].executor = exec;
+            st[i].finished = self.engine.now;
+        }
+    }
+
+    /// One part (flow or CPU) of an attempt finished; true when the whole
+    /// task just completed (this attempt won).
+    fn complete_part(t: &mut TaskState, att: usize, now: f64) -> bool {
+        assert!(t.phase == TaskPhase::Running, "completion for non-running task");
+        let a = t.attempts[att].as_mut().expect("attempt exists");
+        a.outstanding -= 1;
+        if a.outstanding == 0 {
+            t.phase = TaskPhase::Done;
+            t.executor = a.executor;
+            t.finished = now;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{PartitionPolicy, StagePlan};
+    use crate::hdfs::HdfsFile;
+
+    const MB: u64 = 1 << 20;
+
+    fn zero_overheads() -> SimParams {
+        SimParams { sched_overhead: 0.0, launch_latency: 0.0, io_setup: 0.0, ..Default::default() }
+    }
+
+    /// 1.0-core + 0.4-core executors, effectively infinite network.
+    fn fast_slow_session(params: SimParams) -> (Session, HdfsFile) {
+        let mut s = SessionBuilder::two_node(
+            Node::fixed("fast", 1.0),
+            1.0,
+            Node::fixed("slow", 1.0),
+            0.4,
+        )
+        .with_params(params)
+        .with_hdfs_uplink_bps(1e12)
+        .build();
+        let file = s.hdfs.upload(100 * MB, 100 * MB, &mut s.rng);
+        (s, file)
+    }
+
+    fn map_only_job(file: HdfsFile, policy: PartitionPolicy, cpu_per_byte: f64) -> JobPlan {
+        JobPlan {
+            name: "map".into(),
+            stages: vec![StagePlan {
+                input: StageInput::Hdfs { file },
+                policy,
+                cpu_secs_per_byte: cpu_per_byte,
+                output_ratio: 0.0,
+            }],
+        }
+    }
+
+    // cpu_secs_per_byte such that 100 MB = 100 s of work on one core.
+    const CPB: f64 = 1.0 / (1 << 20) as f64 / 100.0 * 100.0;
+
+    #[test]
+    fn even_two_way_bound_by_slow_node() {
+        let (mut s, file) = fast_slow_session(zero_overheads());
+        let rec = s.run_job(&map_only_job(file, PartitionPolicy::EvenTasks(2), CPB));
+        // 50 MB each: fast 50 s, slow 125 s.
+        let stage = &rec.stages[0];
+        assert!((stage.completion_time() - 125.0).abs() < 0.5, "{}", stage.completion_time());
+        assert!((stage.sync_delay() - 75.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn hemt_equalizes_finish_times() {
+        let (mut s, file) = fast_slow_session(zero_overheads());
+        let rec = s.run_job(&map_only_job(
+            file,
+            PartitionPolicy::Hemt(vec![1.0, 0.4]),
+            CPB,
+        ));
+        let stage = &rec.stages[0];
+        // 100/1.4 = 71.43 s on both executors.
+        assert!((stage.completion_time() - 100.0 / 1.4).abs() < 0.5, "{}", stage.completion_time());
+        assert!(stage.sync_delay() < 0.5, "sync {}", stage.sync_delay());
+    }
+
+    #[test]
+    fn homt_beats_even_and_respects_claim1() {
+        let (mut s, file) = fast_slow_session(zero_overheads());
+        let rec = s.run_job(&map_only_job(file, PartitionPolicy::EvenTasks(20), CPB));
+        let stage = &rec.stages[0];
+        let t = stage.completion_time();
+        // Optimal is 71.43 s; slowest single task = 5 MB at 0.4 = 12.5 s.
+        assert!(t < 125.0, "worse than even 2-way: {t}");
+        assert!(t >= 100.0 / 1.4 - 0.5, "below optimal: {t}");
+        assert!(stage.sync_delay() <= 12.5 + 0.5, "claim 1: {}", stage.sync_delay());
+    }
+
+    #[test]
+    fn overheads_penalize_many_tasks() {
+        let params = SimParams { sched_overhead: 0.5, launch_latency: 0.0, io_setup: 0.5, ..Default::default() };
+        let (mut s, file) = fast_slow_session(params);
+        let many = s.run_job(&map_only_job(file.clone(), PartitionPolicy::EvenTasks(64), CPB));
+        let (mut s2, file2) = fast_slow_session(params);
+        let _ = file;
+        let few = s2.run_job(&map_only_job(file2, PartitionPolicy::EvenTasks(8), CPB));
+        assert!(
+            many.stages[0].completion_time() > few.stages[0].completion_time(),
+            "64-way {} should exceed 8-way {}",
+            many.stages[0].completion_time(),
+            few.stages[0].completion_time()
+        );
+    }
+
+    #[test]
+    fn per_block_policy_runs_one_task_per_block() {
+        let mut s = SessionBuilder::two_node(
+            Node::fixed("a", 1.0),
+            1.0,
+            Node::fixed("b", 1.0),
+            1.0,
+        )
+        .with_params(zero_overheads())
+        .with_hdfs_uplink_bps(1e12)
+        .build();
+        let file = s.hdfs.upload(300 * MB, 100 * MB, &mut s.rng);
+        let rec = s.run_job(&map_only_job(file, PartitionPolicy::PerBlock, CPB));
+        assert_eq!(rec.stages[0].tasks.len(), 3);
+    }
+
+    #[test]
+    fn network_bottleneck_dominates_when_uplinks_small() {
+        // 100 MB over a single-datanode HDFS with a 64 Mbps uplink: read
+        // takes 100*8/64 = 12.5 s/MBps... = 13.1 s; compute is tiny.
+        let mut s = SessionBuilder {
+            nodes: vec![Node::fixed("a", 1.0)],
+            exec_cpus: vec![1.0],
+            node_uplink_bps: 1e12,
+            node_downlink_bps: 1e12,
+            hdfs_datanodes: 1,
+            hdfs_replication: 1,
+            hdfs_uplink_bps: 64e6,
+            hdfs_serving_eta: 0.0,
+            params: zero_overheads(),
+            seed: 3,
+        }
+        .build();
+        let file = s.hdfs.upload(100 * MB, 100 * MB, &mut s.rng);
+        let rec = s.run_job(&map_only_job(file, PartitionPolicy::EvenTasks(1), 1e-12));
+        let expect = 100.0 * (MB as f64) * 8.0 / 64e6;
+        assert!(
+            (rec.stages[0].completion_time() - expect).abs() < 0.1,
+            "{} vs {expect}",
+            rec.stages[0].completion_time()
+        );
+    }
+
+    #[test]
+    fn two_stage_job_with_skewed_shuffle() {
+        let (mut s, file) = fast_slow_session(zero_overheads());
+        let job = JobPlan {
+            name: "wc".into(),
+            stages: vec![
+                StagePlan {
+                    input: StageInput::Hdfs { file },
+                    policy: PartitionPolicy::Hemt(vec![1.0, 0.4]),
+                    cpu_secs_per_byte: CPB,
+                    output_ratio: 0.1,
+                },
+                StagePlan {
+                    input: StageInput::Shuffle,
+                    policy: PartitionPolicy::Hemt(vec![1.0, 0.4]),
+                    cpu_secs_per_byte: CPB,
+                    output_ratio: 0.0,
+                },
+            ],
+        };
+        let rec = s.run_job(&job);
+        assert_eq!(rec.stages.len(), 2);
+        // Reduce stage moves 10 MB split 1:0.4 and costs 10 s of work
+        // spread over both executors at matched load: low sync delay.
+        let reduce = &rec.stages[1];
+        assert_eq!(reduce.tasks.len(), 2);
+        assert!(reduce.sync_delay() < 1.0, "sync {}", reduce.sync_delay());
+        // Stage boundary is a barrier.
+        assert!(reduce.start >= rec.stages[0].end - 1e-9);
+    }
+
+    #[test]
+    fn cached_stage_skips_network() {
+        let mut s = SessionBuilder::two_node(
+            Node::fixed("a", 1.0),
+            1.0,
+            Node::fixed("b", 1.0),
+            0.4,
+        )
+        .with_params(zero_overheads())
+        .with_hdfs_uplink_bps(1.0) // would take forever if read
+        .build();
+        let job = JobPlan {
+            name: "iter".into(),
+            stages: vec![StagePlan {
+                input: StageInput::Cached {
+                    partitions: vec![(71 * MB, 0), (29 * MB, 1)],
+                },
+                policy: PartitionPolicy::EvenTasks(1), // ignored for cached
+                cpu_secs_per_byte: CPB,
+                output_ratio: 0.0,
+            }],
+        };
+        let rec = s.run_job(&job);
+        // 71 s vs 72.5 s — completes at CPU speed, network untouched.
+        assert!(rec.stages[0].completion_time() < 75.0);
+    }
+
+    #[test]
+    fn scheduling_overhead_serializes_through_driver() {
+        // 8 zero-work tasks, 1 s dispatch overhead, single executor with
+        // 1 slot: dispatches serialize -> last task starts after ~8 s.
+        let mut s = SessionBuilder {
+            nodes: vec![Node::fixed("a", 1.0)],
+            exec_cpus: vec![1.0],
+            node_uplink_bps: 1e12,
+            node_downlink_bps: 1e12,
+            hdfs_datanodes: 1,
+            hdfs_replication: 1,
+            hdfs_uplink_bps: 1e12,
+            hdfs_serving_eta: 0.0,
+            params: SimParams { sched_overhead: 1.0, launch_latency: 0.0, io_setup: 0.0, ..Default::default() },
+            seed: 5,
+        }
+        .build();
+        let file = s.hdfs.upload(8 * MB, 8 * MB, &mut s.rng);
+        let rec = s.run_job(&map_only_job(file, PartitionPolicy::EvenTasks(8), 1e-9));
+        let t = rec.stages[0].completion_time();
+        assert!(t >= 8.0 - 1e-6, "dispatches must serialize: {t}");
+    }
+
+    #[test]
+    fn session_runs_jobs_back_to_back() {
+        let (mut s, file) = fast_slow_session(zero_overheads());
+        let j1 = s.run_job(&map_only_job(file.clone(), PartitionPolicy::EvenTasks(2), CPB));
+        let j2 = s.run_job(&map_only_job(file, PartitionPolicy::EvenTasks(2), CPB));
+        assert!(j2.start >= j1.end - 1e-9);
+        assert!((j1.completion_time() - j2.completion_time()).abs() < 1.0);
+    }
+
+    #[test]
+    fn idle_until_advances_clock() {
+        let (mut s, _file) = fast_slow_session(zero_overheads());
+        s.idle_until(42.0);
+        assert!((s.engine.now - 42.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exec_noise_is_deterministic_and_mean_preserving() {
+        let run = |seed: u64| -> f64 {
+            let mut s = SessionBuilder::two_node(
+                Node::fixed("a", 1.0),
+                1.0,
+                Node::fixed("b", 1.0),
+                1.0,
+            )
+            .with_params(SimParams {
+                sched_overhead: 0.0,
+                launch_latency: 0.0,
+                io_setup: 0.0,
+                exec_noise: 0.4,
+                speculation: None,
+            })
+            .with_hdfs_uplink_bps(1e12)
+            .with_seed(seed)
+            .build();
+            let file = s.hdfs.upload(100 * MB, 100 * MB, &mut s.rng);
+            let rec = s.run_job(&map_only_job(file, PartitionPolicy::EvenTasks(32), CPB));
+            rec.stages[0].completion_time()
+        };
+        assert_eq!(run(3).to_bits(), run(3).to_bits());
+        // Mean-one lognormal: total work stays near the noiseless 50 s
+        // per executor over many tasks (within a loose band).
+        let t = run(3);
+        assert!((40.0..80.0).contains(&t), "noisy stage {t}");
+    }
+
+    #[test]
+    fn speculation_duplicates_rescue_a_mid_stage_straggler() {
+        // Two equal nodes; node 1 collapses to 5% at t=10 s. HomT-8:
+        // whatever task node 1 holds crawls. With speculation the fast
+        // node re-runs it and the stage finishes far earlier.
+        let run = |spec: Option<Speculation>| -> f64 {
+            let node_b = Node::fixed("b", 1.0).with_interference(vec![(10.0, 0.05)]);
+            let mut s = SessionBuilder::two_node(Node::fixed("a", 1.0), 1.0, node_b, 1.0)
+                .with_params(SimParams {
+                    sched_overhead: 0.0,
+                    launch_latency: 0.0,
+                    io_setup: 0.0,
+                    exec_noise: 0.0,
+                    speculation: spec,
+                })
+                .with_hdfs_uplink_bps(1e12)
+                .build();
+            let file = s.hdfs.upload(100 * MB, 100 * MB, &mut s.rng);
+            let rec = s.run_job(&map_only_job(file, PartitionPolicy::EvenTasks(8), CPB));
+            rec.stages[0].completion_time()
+        };
+        let plain = run(None);
+        let spec = run(Some(Speculation { quantile: 0.5, multiplier: 1.5, check_interval: 0.1 }));
+        assert!(
+            spec < 0.7 * plain,
+            "speculation must rescue the straggler: {plain:.1} -> {spec:.1}"
+        );
+    }
+
+    #[test]
+    fn speculation_records_winner_executor_and_conserves_tasks() {
+        let node_b = Node::fixed("b", 1.0).with_interference(vec![(5.0, 0.02)]);
+        let mut s = SessionBuilder::two_node(Node::fixed("a", 1.0), 1.0, node_b, 1.0)
+            .with_params(SimParams {
+                sched_overhead: 0.0,
+                launch_latency: 0.0,
+                io_setup: 0.0,
+                exec_noise: 0.0,
+                speculation: Some(Speculation { quantile: 0.4, multiplier: 1.2, check_interval: 0.1 }),
+            })
+            .with_hdfs_uplink_bps(1e12)
+            .build();
+        let file = s.hdfs.upload(64 * MB, 64 * MB, &mut s.rng);
+        let rec = s.run_job(&map_only_job(file, PartitionPolicy::EvenTasks(8), CPB));
+        let stage = &rec.stages[0];
+        assert_eq!(stage.tasks.len(), 8);
+        // Every task completed exactly once with a valid executor and
+        // total bytes conserved (no double counting from duplicates).
+        let total: u64 = stage.tasks.iter().map(|t| t.bytes).sum();
+        assert_eq!(total, 64 * MB);
+        assert!(stage.tasks.iter().all(|t| t.executor < 2));
+        // Overwhelmingly the fast node wins the rescued tasks.
+        let fast_share = stage.tasks.iter().filter(|t| t.executor == 0).count();
+        assert!(fast_share >= 6, "fast node should win most tasks: {fast_share}");
+        // Engine fully drained: no leaked flows or jobs from losers.
+        assert_eq!(s.engine.num_cpu_jobs(), 0);
+        assert_eq!(s.engine.net.num_flows(), 0);
+    }
+
+    #[test]
+    fn speculation_off_leaves_schedule_unchanged() {
+        let run = |spec: Option<Speculation>| -> f64 {
+            let (mut s, file) = {
+                let mut s = SessionBuilder::two_node(
+                    Node::fixed("fast", 1.0),
+                    1.0,
+                    Node::fixed("slow", 1.0),
+                    0.4,
+                )
+                .with_params(SimParams {
+                    sched_overhead: 0.0,
+                    launch_latency: 0.0,
+                    io_setup: 0.0,
+                    exec_noise: 0.0,
+                    speculation: spec,
+                })
+                .with_hdfs_uplink_bps(1e12)
+                .build();
+                let f = s.hdfs.upload(100 * MB, 100 * MB, &mut s.rng);
+                (s, f)
+            };
+            s.run_job(&map_only_job(file, PartitionPolicy::Hemt(vec![1.0, 0.4]), CPB))
+                .map_stage_time()
+        };
+        // Balanced HeMT tasks never look like stragglers: identical runs.
+        let a = run(None);
+        let b = run(Some(Speculation::default()));
+        assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+    }
+}

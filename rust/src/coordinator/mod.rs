@@ -1,0 +1,256 @@
+//! The Spark-like driver: job/stage/task model, pull-based dispatch,
+//! barriers, shuffle — with HeMT as a first-class partition policy.
+//!
+//! A [`JobPlan`] is a barrier-separated sequence of [`StagePlan`]s. Each
+//! stage reads from HDFS, from the previous stage's shuffle output, or
+//! from executor-cached data, and is partitioned into tasks by a
+//! [`PartitionPolicy`]:
+//!
+//! * `EvenTasks(m)` — Spark's user-set parallelism: `m` equal tasks
+//!   consumed pull-based (HomT when `m >>` slots, the default when `m` =
+//!   slots).
+//! * `PerBlock` — Spark's HDFS default: one task per block.
+//! * `Hemt(weights)` — the paper's contribution: one task per executor,
+//!   sized by capacity weights; shuffle buckets skewed by Algorithm 1.
+//!
+//! The [`driver::Session`] executes plans on the fluid [`crate::sim`]
+//! engine, modeling the three overheads the paper attributes to
+//! microtasking: serialized driver dispatch, executor-side task launch,
+//! and per-task I/O setup (lost pipelining on small reads).
+
+pub mod driver;
+
+use crate::hdfs::HdfsFile;
+use crate::partition::{Partitioning, SkewedHashPartitioner};
+
+/// Where a stage's input bytes live.
+#[derive(Debug, Clone)]
+pub enum StageInput {
+    /// Read a byte range of an HDFS file.
+    Hdfs { file: HdfsFile },
+    /// Fetch the previous stage's shuffle output (bucket per reduce task).
+    Shuffle,
+    /// Data cached on executors by an earlier job (iteration >= 2 of
+    /// K-Means): one task per cached partition, pinned to the executor
+    /// holding it (`(bytes, executor)`), no network. The partition chosen
+    /// for the first iteration fixes this layout — the paper's reason HeMT
+    /// must size iteration 1 correctly.
+    Cached { partitions: Vec<(u64, usize)> },
+}
+
+/// How a stage's input is split into tasks.
+#[derive(Debug, Clone)]
+pub enum PartitionPolicy {
+    /// `m` equal tasks, pull-based (HomT for large `m`).
+    EvenTasks(usize),
+    /// One task per HDFS block (Spark/Hadoop default).
+    PerBlock,
+    /// HeMT: one task per executor, sized by these weights; task `i` is
+    /// bound to executor `i`.
+    Hemt(Vec<f64>),
+}
+
+/// One computation stage.
+#[derive(Debug, Clone)]
+pub struct StagePlan {
+    pub input: StageInput,
+    pub policy: PartitionPolicy,
+    /// Compute intensity: core-seconds per input byte.
+    pub cpu_secs_per_byte: f64,
+    /// Output volume produced per input byte (feeds the next shuffle).
+    pub output_ratio: f64,
+}
+
+/// A job: stages separated by barriers.
+#[derive(Debug, Clone)]
+pub struct JobPlan {
+    pub name: String,
+    pub stages: Vec<StagePlan>,
+}
+
+/// Byte sizes + executor binding for the tasks of one stage.
+#[derive(Debug, Clone)]
+pub struct StageTasks {
+    /// Input bytes per task.
+    pub bytes: Vec<u64>,
+    /// `Some(executor)` when the task is bound (HeMT / cached), `None`
+    /// for pull-based tasks.
+    pub bound_to: Vec<Option<usize>>,
+    /// For HDFS stages: each task's `(offset, len)` within the file.
+    pub ranges: Option<Vec<(u64, u64)>>,
+    /// For shuffle stages: fraction of each mapper's output fetched by
+    /// each task (the partitioner's bucket fractions).
+    pub bucket_fractions: Option<Vec<f64>>,
+}
+
+/// Materialize a stage's tasks given the executor count and (for shuffle
+/// stages) the total bytes emitted by the previous stage.
+pub fn plan_tasks(
+    stage: &StagePlan,
+    num_executors: usize,
+    prev_output_bytes: u64,
+) -> StageTasks {
+    match &stage.input {
+        StageInput::Hdfs { file } => {
+            let total = file.size_bytes;
+            let (part, bound) = match &stage.policy {
+                PartitionPolicy::EvenTasks(m) => (Partitioning::even(total, *m), false),
+                PartitionPolicy::PerBlock => {
+                    let blocks = file.num_blocks();
+                    let bytes: Vec<u64> = (0..blocks).map(|b| file.block_len(b)).collect();
+                    (Partitioning { task_bytes: bytes }, false)
+                }
+                PartitionPolicy::Hemt(w) => {
+                    assert_eq!(w.len(), num_executors, "one weight per executor");
+                    (Partitioning::hemt(total, w), true)
+                }
+            };
+            let ranges = part.ranges();
+            let bound_to = (0..part.num_tasks())
+                .map(|i| if bound { Some(i) } else { None })
+                .collect();
+            StageTasks {
+                bytes: part.task_bytes,
+                bound_to,
+                ranges: Some(ranges),
+                bucket_fractions: None,
+            }
+        }
+        StageInput::Shuffle => {
+            let (fractions, bound): (Vec<f64>, bool) = match &stage.policy {
+                PartitionPolicy::EvenTasks(m) => {
+                    (SkewedHashPartitioner::even(*m).bucket_fractions(), false)
+                }
+                PartitionPolicy::PerBlock => (
+                    SkewedHashPartitioner::even(num_executors).bucket_fractions(),
+                    false,
+                ),
+                PartitionPolicy::Hemt(w) => {
+                    assert_eq!(w.len(), num_executors, "one weight per executor");
+                    (SkewedHashPartitioner::new(w, 1 << 20).bucket_fractions(), true)
+                }
+            };
+            let bytes: Vec<u64> = fractions
+                .iter()
+                .map(|f| (prev_output_bytes as f64 * f).round() as u64)
+                .collect();
+            let bound_to = (0..bytes.len())
+                .map(|i| if bound { Some(i) } else { None })
+                .collect();
+            StageTasks {
+                bytes,
+                bound_to,
+                ranges: None,
+                bucket_fractions: Some(fractions),
+            }
+        }
+        StageInput::Cached { partitions } => {
+            // Cached partitions are executor-local by construction: one
+            // bound task per partition regardless of policy (each still
+            // pays dispatch/launch overhead — HomT's cost survives
+            // caching).
+            for &(_, e) in partitions {
+                assert!(e < num_executors, "cached partition on unknown executor");
+            }
+            StageTasks {
+                bytes: partitions.iter().map(|&(b, _)| b).collect(),
+                bound_to: partitions.iter().map(|&(_, e)| Some(e)).collect(),
+                ranges: None,
+                bucket_fractions: None,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hdfs_file(size: u64, block: u64) -> HdfsFile {
+        let blocks = size.div_ceil(block) as usize;
+        HdfsFile {
+            size_bytes: size,
+            block_size: block,
+            placement: (0..blocks).map(|b| vec![b % 4, (b + 1) % 4]).collect(),
+        }
+    }
+
+    fn hdfs_stage(policy: PartitionPolicy) -> StagePlan {
+        StagePlan {
+            input: StageInput::Hdfs { file: hdfs_file(1000, 300) },
+            policy,
+            cpu_secs_per_byte: 1e-6,
+            output_ratio: 0.1,
+        }
+    }
+
+    #[test]
+    fn even_tasks_unbound_and_exact() {
+        let t = plan_tasks(&hdfs_stage(PartitionPolicy::EvenTasks(4)), 2, 0);
+        assert_eq!(t.bytes, vec![250, 250, 250, 250]);
+        assert!(t.bound_to.iter().all(Option::is_none));
+        assert_eq!(t.ranges.as_ref().unwrap()[3], (750, 250));
+    }
+
+    #[test]
+    fn per_block_matches_block_layout() {
+        let t = plan_tasks(&hdfs_stage(PartitionPolicy::PerBlock), 2, 0);
+        assert_eq!(t.bytes, vec![300, 300, 300, 100]);
+    }
+
+    #[test]
+    fn hemt_tasks_bound_to_executors() {
+        let t = plan_tasks(&hdfs_stage(PartitionPolicy::Hemt(vec![1.0, 0.25])), 2, 0);
+        assert_eq!(t.bytes, vec![800, 200]);
+        assert_eq!(t.bound_to, vec![Some(0), Some(1)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "one weight per executor")]
+    fn hemt_weight_arity_checked() {
+        plan_tasks(&hdfs_stage(PartitionPolicy::Hemt(vec![1.0])), 2, 0);
+    }
+
+    #[test]
+    fn shuffle_buckets_follow_skew() {
+        let stage = StagePlan {
+            input: StageInput::Shuffle,
+            policy: PartitionPolicy::Hemt(vec![3.0, 1.0]),
+            cpu_secs_per_byte: 0.0,
+            output_ratio: 0.0,
+        };
+        let t = plan_tasks(&stage, 2, 4000);
+        assert_eq!(t.bytes.iter().sum::<u64>(), 4000);
+        assert!((t.bytes[0] as f64 / 4000.0 - 0.75).abs() < 0.01);
+        let fr = t.bucket_fractions.as_ref().unwrap();
+        assert!((fr.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shuffle_even_policy_is_uniform() {
+        let stage = StagePlan {
+            input: StageInput::Shuffle,
+            policy: PartitionPolicy::EvenTasks(8),
+            cpu_secs_per_byte: 0.0,
+            output_ratio: 0.0,
+        };
+        let t = plan_tasks(&stage, 2, 8000);
+        assert_eq!(t.bytes.len(), 8);
+        assert!(t.bytes.iter().all(|&b| b == 1000));
+    }
+
+    #[test]
+    fn cached_stage_is_always_executor_bound() {
+        let stage = StagePlan {
+            input: StageInput::Cached {
+                partitions: vec![(400, 0), (300, 0), (300, 1)],
+            },
+            policy: PartitionPolicy::EvenTasks(16), // ignored
+            cpu_secs_per_byte: 0.0,
+            output_ratio: 0.0,
+        };
+        let t = plan_tasks(&stage, 2, 0);
+        assert_eq!(t.bytes, vec![400, 300, 300]);
+        assert_eq!(t.bound_to, vec![Some(0), Some(0), Some(1)]);
+    }
+}

@@ -1,0 +1,232 @@
+//! Burstable-credit workload planner (Sec. 6.2, Figs. 10–12).
+//!
+//! A burstable node with credit balance `c` runs at `peak` until the
+//! bucket drains — after `c / (peak - baseline)` time units — and at
+//! `baseline` thereafter. Its time→work curve `W(t)` is therefore
+//! piecewise linear (Fig. 11). To split a job of `w0` work across nodes so
+//! they finish together, superpose the curves (Fig. 12), solve
+//! `sum_i W_i(t') = w0` on the piecewise-linear sum, and weight each node
+//! by `W_i(t')`.
+//!
+//! Units are free as long as they agree: the paper uses CPU-minutes of
+//! work and credit-minutes of balance (1 credit = 1 core-minute).
+
+/// One node's piecewise-linear work curve.
+#[derive(Debug, Clone, Copy)]
+pub struct CreditCurve {
+    /// Speed while credits last (cores).
+    pub peak: f64,
+    /// Speed once depleted (cores).
+    pub baseline: f64,
+    /// Current credit balance (core-time units).
+    pub credits: f64,
+}
+
+impl CreditCurve {
+    /// A t2.small-like core with `credits` in CPU-credit *minutes* (the
+    /// paper's Fig. 10 parameterization: peak 1, baseline 0.2).
+    pub fn t2_small(credits_minutes: f64) -> CreditCurve {
+        CreditCurve { peak: 1.0, baseline: 0.2, credits: credits_minutes }
+    }
+
+    /// Time at which the bucket drains under full-speed use; infinite if
+    /// the node never depletes (peak <= baseline or unlimited credits).
+    pub fn deplete_time(&self) -> f64 {
+        if self.peak <= self.baseline {
+            f64::INFINITY
+        } else {
+            self.credits / (self.peak - self.baseline)
+        }
+    }
+
+    /// Work completed by time `t` when running flat out: `W(t)` (Fig. 11).
+    pub fn work_by(&self, t: f64) -> f64 {
+        assert!(t >= 0.0);
+        let td = self.deplete_time();
+        if t <= td {
+            self.peak * t
+        } else {
+            self.peak * td + self.baseline * (t - td)
+        }
+    }
+
+    /// Inverse of [`CreditCurve::work_by`]: the time needed to produce
+    /// `w` work. Infinite if `w` is unreachable (zero baseline after
+    /// depletion).
+    pub fn time_for_work(&self, w: f64) -> f64 {
+        assert!(w >= 0.0);
+        let td = self.deplete_time();
+        let w_peak = if td.is_finite() { self.peak * td } else { f64::INFINITY };
+        if w <= w_peak {
+            w / self.peak
+        } else if self.baseline > 0.0 {
+            td + (w - w_peak) / self.baseline
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Result of the Sec. 6.2 planning solve.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CreditPlan {
+    /// The common finish time `t'` with `sum_i W_i(t') = w0`.
+    pub t_prime: f64,
+    /// Per-node work shares `W_i(t')`; sums to `w0`.
+    pub shares: Vec<f64>,
+}
+
+impl CreditPlan {
+    /// Shares normalized to weights (for [`crate::partition::Partitioning::hemt`]).
+    pub fn weights(&self) -> Vec<f64> {
+        self.shares.clone()
+    }
+}
+
+/// Solve the superposed piecewise-linear system `sum_i W_i(t') = w0`
+/// (Fig. 12) and return the equalizing shares. Returns `None` if `w0`
+/// cannot be met (all nodes depleted with zero baseline).
+pub fn plan(curves: &[CreditCurve], w0: f64) -> Option<CreditPlan> {
+    assert!(!curves.is_empty());
+    assert!(w0 >= 0.0);
+    if w0 == 0.0 {
+        return Some(CreditPlan { t_prime: 0.0, shares: vec![0.0; curves.len()] });
+    }
+    // Breakpoints of the superposed curve = every node's depletion time.
+    let mut breaks: Vec<f64> = curves
+        .iter()
+        .map(|c| c.deplete_time())
+        .filter(|t| t.is_finite())
+        .collect();
+    breaks.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    breaks.dedup();
+
+    let total_at = |t: f64| -> f64 { curves.iter().map(|c| c.work_by(t)).sum() };
+    let slope_at = |t: f64| -> f64 {
+        curves
+            .iter()
+            .map(|c| if t < c.deplete_time() { c.peak } else { c.baseline })
+            .sum()
+    };
+
+    // Walk segments [prev, next) accumulating work until w0 falls inside.
+    let mut prev = 0.0;
+    for &b in breaks.iter().chain(std::iter::once(&f64::INFINITY)) {
+        let w_prev = total_at(prev);
+        let slope = slope_at(prev);
+        let seg_end_work = if b.is_finite() { total_at(b) } else { f64::INFINITY };
+        if w0 <= seg_end_work + 1e-12 {
+            if slope <= 0.0 {
+                return None; // flat segment below w0: unreachable
+            }
+            let t_prime = prev + (w0 - w_prev) / slope;
+            let shares = curves.iter().map(|c| c.work_by(t_prime)).collect();
+            return Some(CreditPlan { t_prime, shares });
+        }
+        prev = b;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig10_t2small_work_in_10_minutes() {
+        // Paper: 4 credits -> depletes at 4/(1-0.2) = 5 min; W(10) =
+        // 1*5 + 0.2*5 = 6.
+        let c = CreditCurve::t2_small(4.0);
+        assert!((c.deplete_time() - 5.0).abs() < 1e-12);
+        assert!((c.work_by(10.0) - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fig11_inverse_curve() {
+        let c = CreditCurve::t2_small(4.0);
+        for w in [0.0, 2.0, 5.0, 6.0, 10.0] {
+            let t = c.time_for_work(w);
+            assert!((c.work_by(t) - w).abs() < 1e-9, "w={w}");
+        }
+    }
+
+    #[test]
+    fn fig12_worked_example() {
+        // Paper Sec. 6.2: three nodes with 4, 8, 12 credits; job needs 20
+        // CPU-minutes. t' = 80/11; shares {60/11, 80/11, 80/11} ~ {3,4,4}.
+        let curves = [
+            CreditCurve::t2_small(4.0),
+            CreditCurve::t2_small(8.0),
+            CreditCurve::t2_small(12.0),
+        ];
+        let plan = plan(&curves, 20.0).unwrap();
+        assert!((plan.t_prime - 80.0 / 11.0).abs() < 1e-9, "t' {}", plan.t_prime);
+        let want = [60.0 / 11.0, 80.0 / 11.0, 80.0 / 11.0];
+        for (got, want) in plan.shares.iter().zip(want.iter()) {
+            assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        }
+        // Ratio 3:4:4 as the paper states.
+        let k = plan.shares[0] / 3.0;
+        assert!((plan.shares[1] - 4.0 * k).abs() < 1e-9);
+        assert!((plan.shares[2] - 4.0 * k).abs() < 1e-9);
+    }
+
+    #[test]
+    fn homogeneous_nodes_split_evenly() {
+        let curves = [CreditCurve::t2_small(10.0); 4];
+        let p = plan(&curves, 8.0).unwrap();
+        for s in &p.shares {
+            assert!((s - 2.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn all_work_within_burst_needs_no_baseline() {
+        // w0 small enough that no one depletes: proportional to peak.
+        let curves = [
+            CreditCurve { peak: 1.0, baseline: 0.0, credits: 100.0 },
+            CreditCurve { peak: 0.5, baseline: 0.0, credits: 100.0 },
+        ];
+        let p = plan(&curves, 3.0).unwrap();
+        assert!((p.shares[0] - 2.0).abs() < 1e-9);
+        assert!((p.shares[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unreachable_work_returns_none() {
+        // Zero baseline, tiny credits: only 1 unit of work ever possible.
+        let curves = [CreditCurve { peak: 1.0, baseline: 0.0, credits: 1.0 }];
+        assert!(plan(&curves, 2.0).is_none());
+        assert!(plan(&curves, 0.5).is_some());
+    }
+
+    #[test]
+    fn shares_sum_to_w0_and_finish_simultaneously() {
+        use crate::util::{prop, Rng};
+        prop::check("credit-plan", 0xC4ED, 300, |rng: &mut Rng| {
+            let n = rng.range(1, 6);
+            let curves: Vec<CreditCurve> = (0..n)
+                .map(|_| CreditCurve {
+                    peak: rng.range_f64(0.5, 2.0),
+                    baseline: rng.range_f64(0.05, 0.4),
+                    credits: rng.range_f64(0.0, 20.0),
+                })
+                .collect();
+            let w0 = rng.range_f64(0.1, 50.0);
+            let p = plan(&curves, w0).expect("positive baselines: solvable");
+            let total: f64 = p.shares.iter().sum();
+            assert!((total - w0).abs() < 1e-6, "shares sum {total} != {w0}");
+            // Equal finish time: every node completes its share at t'.
+            for (c, s) in curves.iter().zip(p.shares.iter()) {
+                if *s > 1e-9 {
+                    assert!(
+                        (c.time_for_work(*s) - p.t_prime).abs() < 1e-6,
+                        "node finishes at {} != t' {}",
+                        c.time_for_work(*s),
+                        p.t_prime
+                    );
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,167 @@
+//! Supply-side characterization: the paper's executor-speed learners.
+//!
+//! * [`SpeedEstimator`] — OA-HeMT (Sec. 5.1): per-(job-type, executor)
+//!   speed estimates updated with the first-order autoregressive filter
+//!   `v_i <- (1-alpha) d_i/t_i + alpha v_i`; cold-start executors get the
+//!   mean of known speeds; the first job of a type is split evenly.
+//! * [`credits`] — the burstable-credit workload planner of Sec. 6.2
+//!   (Figs. 10–12): piecewise-linear time→work curves and their
+//!   superposition solve.
+//! * [`probe_weights`] — the Sec. 6.2 "fudge factor" learner: short trial
+//!   tasks measure effective speed directly, correcting nominal
+//!   peak/baseline ratios (1:0.4 -> 1:0.32) for cache/TLB contention.
+
+pub mod credits;
+
+use std::collections::BTreeMap;
+
+/// OA-HeMT first-order autoregressive executor-speed estimator. One
+/// instance per job type (the paper: "each application framework will
+/// need to maintain its own estimates").
+#[derive(Debug, Clone)]
+pub struct SpeedEstimator {
+    /// Forgetting factor in [0, 1): weight on the *old* estimate. 0 means
+    /// "latest observation only" (the paper's Fig. 7 setting).
+    pub alpha: f64,
+    speeds: BTreeMap<usize, f64>,
+}
+
+impl SpeedEstimator {
+    pub fn new(alpha: f64) -> SpeedEstimator {
+        assert!((0.0..1.0).contains(&alpha), "alpha must be in [0,1)");
+        SpeedEstimator { alpha, speeds: BTreeMap::new() }
+    }
+
+    /// Record an observed task: executor `id` processed `d` bytes in `t`
+    /// seconds. First observation seeds the estimate directly.
+    pub fn observe(&mut self, id: usize, d: f64, t: f64) {
+        assert!(d > 0.0 && t > 0.0, "need positive work and time");
+        let sample = d / t;
+        let v = match self.speeds.get(&id) {
+            Some(&old) => (1.0 - self.alpha) * sample + self.alpha * old,
+            None => sample,
+        };
+        self.speeds.insert(id, v);
+    }
+
+    /// Current estimate for one executor, if any.
+    pub fn speed(&self, id: usize) -> Option<f64> {
+        self.speeds.get(&id).copied()
+    }
+
+    pub fn is_cold(&self) -> bool {
+        self.speeds.is_empty()
+    }
+
+    /// Partition weights for the given executor set (Sec. 5.1): known
+    /// executors use their estimate; unseen executors get the mean of the
+    /// known ones (`v̄`); a fully cold estimator yields even weights (the
+    /// paper's k=1 bootstrap).
+    pub fn weights(&self, executors: &[usize]) -> Vec<f64> {
+        assert!(!executors.is_empty());
+        let known: Vec<f64> = executors
+            .iter()
+            .filter_map(|id| self.speeds.get(id).copied())
+            .collect();
+        if known.is_empty() {
+            return vec![1.0; executors.len()];
+        }
+        let mean = known.iter().sum::<f64>() / known.len() as f64;
+        executors
+            .iter()
+            .map(|id| self.speeds.get(id).copied().unwrap_or(mean))
+            .collect()
+    }
+}
+
+/// Probe-based weights (the Sec. 6.2 fudge-factor learner): run a short
+/// equal-sized trial task on every executor, measure `(bytes, secs)`, and
+/// return speeds normalized to the fastest executor — directly usable as
+/// HeMT weights and comparable to nominal peak/baseline ratios.
+pub fn probe_weights(observations: &[(f64, f64)]) -> Vec<f64> {
+    assert!(!observations.is_empty());
+    let rates: Vec<f64> = observations
+        .iter()
+        .map(|&(d, t)| {
+            assert!(d > 0.0 && t > 0.0);
+            d / t
+        })
+        .collect();
+    let max = rates.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    rates.iter().map(|r| r / max).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_estimator_gives_even_weights() {
+        let e = SpeedEstimator::new(0.0);
+        assert!(e.is_cold());
+        assert_eq!(e.weights(&[0, 1, 2]), vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn first_observation_seeds_directly() {
+        let mut e = SpeedEstimator::new(0.5);
+        e.observe(0, 100.0, 10.0);
+        assert_eq!(e.speed(0), Some(10.0));
+    }
+
+    #[test]
+    fn alpha_zero_tracks_latest_sample() {
+        let mut e = SpeedEstimator::new(0.0);
+        e.observe(0, 100.0, 10.0);
+        e.observe(0, 100.0, 50.0); // slowed to 2 B/s
+        assert_eq!(e.speed(0), Some(2.0));
+    }
+
+    #[test]
+    fn alpha_blends_old_and_new() {
+        let mut e = SpeedEstimator::new(0.25);
+        e.observe(0, 100.0, 10.0); // 10
+        e.observe(0, 100.0, 50.0); // 0.75*2 + 0.25*10 = 4
+        assert!((e.speed(0).unwrap() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unseen_executor_gets_mean_of_known() {
+        let mut e = SpeedEstimator::new(0.0);
+        e.observe(0, 100.0, 10.0); // 10
+        e.observe(1, 100.0, 5.0); // 20
+        let w = e.weights(&[0, 1, 2]);
+        assert_eq!(w, vec![10.0, 20.0, 15.0]);
+    }
+
+    #[test]
+    fn weights_converge_to_true_speeds_under_noise() {
+        use crate::util::Rng;
+        // Executors at true speeds 1.0 and 0.4 with 5% noise; alpha=0.5.
+        let mut rng = Rng::new(17);
+        let mut e = SpeedEstimator::new(0.5);
+        for _ in 0..50 {
+            for (id, s) in [(0usize, 1.0f64), (1, 0.4)] {
+                let t = 100.0 / (s * (1.0 + 0.05 * rng.normal()));
+                e.observe(id, 100.0, t);
+            }
+        }
+        let w = e.weights(&[0, 1]);
+        let ratio = w[1] / w[0];
+        assert!((ratio - 0.4).abs() < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn probe_weights_recover_effective_ratio() {
+        // The paper's measured 1 : 0.32 despite the nominal 1 : 0.4.
+        let w = probe_weights(&[(64.0, 10.0), (64.0, 31.25)]);
+        assert!((w[0] - 1.0).abs() < 1e-12);
+        assert!((w[1] - 0.32).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha must be in [0,1)")]
+    fn alpha_one_rejected() {
+        SpeedEstimator::new(1.0);
+    }
+}

@@ -1,0 +1,247 @@
+//! Real-execution demos: the paper's experiments at laptop scale with
+//! *actual compute* — HomT vs HeMT over the PJRT artifact pool, with
+//! OA-HeMT estimation from measured task durations.
+//!
+//! Used by `hemt real <workload>` and the `examples/` binaries; also the
+//! substance behind EXPERIMENTS.md's end-to-end section.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::estimator::SpeedEstimator;
+use crate::exec::{Output, Payload, RealPool, RealTask};
+use crate::partition::Partitioning;
+use crate::runtime::shapes::*;
+use crate::runtime::DEFAULT_ARTIFACTS_DIR;
+use crate::util::{Rng, Summary};
+use crate::workloads::gen;
+
+/// The demo cluster: one full-speed worker and one throttled to 35%
+/// (a depleted burstable instance's effective speed).
+pub const DEMO_SPEEDS: [f64; 2] = [1.0, 0.35];
+
+/// Run the named workload demo. Requires `make artifacts`.
+pub fn run_demo(workload: &str) -> Result<()> {
+    match workload {
+        "wordcount" => wordcount_demo(),
+        "kmeans" => kmeans_demo(),
+        "pagerank" => pagerank_demo(),
+        other => bail!("unknown real workload '{other}' (wordcount|kmeans|pagerank)"),
+    }
+}
+
+/// Summarize a stage: `(stage_time, per-worker busy seconds)`.
+fn stage_stats(results: &[crate::exec::RealResult], workers: usize) -> (f64, Vec<f64>) {
+    let mut busy = vec![0f64; workers];
+    for r in results {
+        busy[r.worker] += r.duration_secs;
+    }
+    let stage = busy.iter().cloned().fold(0.0, f64::max);
+    (stage, busy)
+}
+
+/// WordCount: HomT-8 vs even-2 vs HeMT(estimated) over a Zipf corpus.
+pub fn wordcount_demo() -> Result<()> {
+    println!("== real WordCount: 2 workers (speeds {DEMO_SPEEDS:?}), PJRT histogram kernel ==");
+    let pool = RealPool::spawn(DEFAULT_ARTIFACTS_DIR, &DEMO_SPEEDS)?;
+    let mut rng = Rng::new(7);
+    let total = 48 * WORDCOUNT_BLOCK_TOKENS; // ~3.1M tokens
+    let tokens = Arc::new(gen::zipf_tokens(total, WORDCOUNT_BINS, 1.0, &mut rng));
+
+    let run = |name: &str, parts: &Partitioning, bound: bool| -> Result<(f64, Vec<f64>)> {
+        let tasks: Vec<RealTask> = parts
+            .ranges()
+            .iter()
+            .enumerate()
+            .map(|(i, &(start, len))| RealTask {
+                id: i,
+                bound_to: if bound { Some(i) } else { None },
+                payload: Payload::WordCount {
+                    tokens: Arc::clone(&tokens),
+                    start: start as usize,
+                    len: len as usize,
+                },
+            })
+            .collect();
+        let results = pool.run_stage(tasks);
+        // Correctness: counts must cover every token.
+        let mass: f32 = results
+            .iter()
+            .map(|r| match &r.output {
+                Output::Counts(c) => c.iter().sum::<f32>(),
+                _ => unreachable!(),
+            })
+            .sum();
+        anyhow::ensure!(mass as usize == total, "token mass mismatch: {mass}");
+        let (stage, busy) = stage_stats(&results, 2);
+        println!("  {name:<24} stage {stage:>6.2}s  busy/worker {busy:.2?}");
+        Ok((stage, busy))
+    };
+
+    let total_u = total as u64;
+    let (even_t, busy) = run("even 2-way", &Partitioning::even(total_u, 2), false)?;
+    run("HomT 8-way (pull)", &Partitioning::homt(total_u, 8), false)?;
+    // OA-HeMT: estimate speeds from the even run, then partition.
+    let mut est = SpeedEstimator::new(0.0);
+    let half = total as f64 / 2.0;
+    est.observe(0, half, busy[0]);
+    est.observe(1, half, busy[1]);
+    let weights = est.weights(&[0, 1]);
+    println!("  estimated weights: {weights:.3?}");
+    let (hemt_t, _) = run("HeMT (estimated)", &Partitioning::hemt(total_u, &weights), true)?;
+    println!(
+        "  HeMT vs even 2-way: {:.1}% faster",
+        100.0 * (even_t - hemt_t) / even_t
+    );
+    Ok(())
+}
+
+/// K-Means: `iters` Lloyd iterations; the partition fixed after iteration
+/// 1 (like Spark's cache) — HeMT must size it correctly up front.
+pub fn kmeans_demo() -> Result<()> {
+    println!("== real K-Means: 2 workers (speeds {DEMO_SPEEDS:?}), PJRT Lloyd kernel ==");
+    let pool = RealPool::spawn(DEFAULT_ARTIFACTS_DIR, &DEMO_SPEEDS)?;
+    let mut rng = Rng::new(11);
+    let n_points = 8 * KMEANS_BLOCK_POINTS;
+    let points = Arc::new(gen::gaussian_blobs(n_points, KMEANS_DIM, KMEANS_K, &mut rng));
+    let iters = 8;
+
+    let mut run = |name: &str, weights: &[f64]| -> Result<f64> {
+        let parts = Partitioning::hemt(n_points as u64, weights);
+        let mut centroids =
+            Arc::new(gen::gaussian_blobs(KMEANS_K, KMEANS_DIM, KMEANS_K, &mut rng));
+        let mut total_time = 0.0;
+        for _ in 0..iters {
+            let tasks: Vec<RealTask> = parts
+                .ranges()
+                .iter()
+                .enumerate()
+                .map(|(i, &(start, len))| RealTask {
+                    id: i,
+                    bound_to: Some(i),
+                    payload: Payload::KMeans {
+                        points: Arc::clone(&points),
+                        start_point: start as usize,
+                        num_points: len as usize,
+                        centroids: Arc::clone(&centroids),
+                    },
+                })
+                .collect();
+            let results = pool.run_stage(tasks);
+            let (stage, _) = stage_stats(&results, 2);
+            total_time += stage;
+            // Reduce: merge partials into new centroids.
+            let mut sums = vec![0f32; KMEANS_K * KMEANS_DIM];
+            let mut counts = vec![0f32; KMEANS_K];
+            for r in &results {
+                if let Output::SumsCounts { sums: s, counts: c } = &r.output {
+                    for (a, x) in sums.iter_mut().zip(s) {
+                        *a += x;
+                    }
+                    for (a, x) in counts.iter_mut().zip(c) {
+                        *a += x;
+                    }
+                }
+            }
+            let mut next = vec![0f32; KMEANS_K * KMEANS_DIM];
+            for k in 0..KMEANS_K {
+                for d in 0..KMEANS_DIM {
+                    next[k * KMEANS_DIM + d] = if counts[k] > 0.0 {
+                        sums[k * KMEANS_DIM + d] / counts[k]
+                    } else {
+                        centroids[k * KMEANS_DIM + d]
+                    };
+                }
+            }
+            centroids = Arc::new(next);
+        }
+        println!("  {name:<24} total {total_time:>6.2}s over {iters} iterations");
+        Ok(total_time)
+    };
+
+    let even_t = run("even (1:1 cache)", &[1.0, 1.0])?;
+    let hemt_t = run("HeMT (speed-weighted)", &DEMO_SPEEDS)?;
+    println!(
+        "  HeMT vs even: {:.1}% faster",
+        100.0 * (even_t - hemt_t) / even_t
+    );
+    Ok(())
+}
+
+/// PageRank: damped power iteration over a random graph; row blocks
+/// partitioned even vs HeMT each iteration.
+pub fn pagerank_demo() -> Result<()> {
+    println!("== real PageRank: 2 workers (speeds {DEMO_SPEEDS:?}), PJRT matvec kernel ==");
+    let pool = RealPool::spawn(DEFAULT_ARTIFACTS_DIR, &DEMO_SPEEDS)?;
+    let mut rng = Rng::new(13);
+    let matrix = Arc::new(gen::transition_matrix(PAGERANK_N, 16, &mut rng));
+    let blocks = PAGERANK_N / PAGERANK_ROW_BLOCK; // 4 row blocks
+    let iters = 12;
+
+    let run = |name: &str, split: &[usize]| -> Result<(f64, Vec<f32>)> {
+        // `split[w]` = number of row blocks worker w handles per iteration.
+        assert_eq!(split.iter().sum::<usize>(), blocks);
+        let mut rank = Arc::new(vec![1.0f32 / PAGERANK_N as f32; PAGERANK_N]);
+        let mut total = 0.0;
+        for _ in 0..iters {
+            let mut next_blocks = Vec::new();
+            let mut b0 = 0;
+            for (w, &cnt) in split.iter().enumerate() {
+                next_blocks.push(RealTask {
+                    id: w,
+                    bound_to: Some(w),
+                    payload: Payload::PageRank {
+                        matrix: Arc::clone(&matrix),
+                        row_blocks: (b0..b0 + cnt).collect(),
+                        rank: Arc::clone(&rank),
+                    },
+                });
+                b0 += cnt;
+            }
+            let results = pool.run_stage(next_blocks);
+            let (stage, _) = stage_stats(&results, 2);
+            total += stage;
+            let mut next = vec![0f32; PAGERANK_N];
+            for r in &results {
+                if let Output::RankRows(rows) = &r.output {
+                    for (first, vals) in rows {
+                        next[*first..first + vals.len()].copy_from_slice(vals);
+                    }
+                }
+            }
+            rank = Arc::new(next);
+        }
+        let mass: f32 = rank.iter().sum();
+        anyhow::ensure!((mass - 1.0).abs() < 1e-2, "rank mass drifted: {mass}");
+        println!("  {name:<24} total {total:>6.2}s over {iters} iterations");
+        Ok((total, rank.to_vec()))
+    };
+
+    // 4 row blocks: even = 2+2; HeMT = 3+1 (approximates 1:0.35).
+    let (even_t, rank_even) = run("even (2+2 blocks)", &[2, 2])?;
+    let (hemt_t, rank_hemt) = run("HeMT (3+1 blocks)", &[3, 1])?;
+    // Both partitionings compute identical ranks.
+    let max_diff = rank_even
+        .iter()
+        .zip(rank_hemt.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    anyhow::ensure!(max_diff < 1e-5, "partitioning changed the answer: {max_diff}");
+    println!(
+        "  HeMT vs even: {:.1}% faster (answers identical, max |Δrank| = {max_diff:.2e})",
+        100.0 * (even_t - hemt_t) / even_t
+    );
+    Ok(())
+}
+
+/// Helper for EXPERIMENTS.md: run a named demo `n` times and summarize.
+pub fn repeat_demo(workload: &str, n: usize) -> Result<Summary> {
+    let mut times = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = std::time::Instant::now();
+        run_demo(workload)?;
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    Ok(Summary::of(&times))
+}

@@ -1,0 +1,446 @@
+//! Real-execution mode: a pull-based executor pool running the AOT PJRT
+//! artifacts on real data, with heterogeneity imposed by duty-cycle
+//! throttling.
+//!
+//! This is the end-to-end proof that the three layers compose: the same
+//! coordinator decisions (partitioning, pull dispatch, speed estimation)
+//! drive *actual compute* — the Pallas-kernel-backed HLO executables —
+//! instead of the fluid simulator. Each worker thread owns its own
+//! [`Runtime`] (PJRT objects are not shared across threads), pulls tasks
+//! from a shared queue exactly like a Spark executor, and reports measured
+//! wall-clock durations that feed the OA-HeMT [`crate::estimator::SpeedEstimator`].
+//!
+//! Throttling model: a worker with `speed s < 1` sleeps `b * (1/s - 1)`
+//! after every block that took `b` seconds of real compute — the
+//! duty-cycle equivalent of a CFS cap or a depleted burstable instance.
+
+pub mod demo;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::runtime::shapes::*;
+use crate::runtime::Runtime;
+
+/// Work shipped to an executor.
+#[derive(Clone)]
+pub enum Payload {
+    /// Histogram a token range (WordCount map task).
+    WordCount { tokens: Arc<Vec<i32>>, start: usize, len: usize },
+    /// One Lloyd accumulation over a point range (K-Means map task).
+    KMeans {
+        points: Arc<Vec<f32>>,
+        start_point: usize,
+        num_points: usize,
+        centroids: Arc<Vec<f32>>,
+    },
+    /// Damped matvec over whole row blocks (PageRank task).
+    PageRank {
+        matrix: Arc<Vec<f32>>,
+        row_blocks: Vec<usize>,
+        rank: Arc<Vec<f32>>,
+    },
+}
+
+impl Payload {
+    /// Work volume in bytes — the `d_i` the speed estimator divides by.
+    pub fn work_bytes(&self) -> u64 {
+        match self {
+            Payload::WordCount { len, .. } => (*len as u64) * 4,
+            Payload::KMeans { num_points, .. } => (*num_points as u64) * (KMEANS_DIM as u64) * 4,
+            Payload::PageRank { row_blocks, .. } => {
+                (row_blocks.len() * PAGERANK_ROW_BLOCK * PAGERANK_N * 4) as u64
+            }
+        }
+    }
+}
+
+/// A task: payload plus optional executor binding (HeMT tasks are bound).
+pub struct RealTask {
+    pub id: usize,
+    pub bound_to: Option<usize>,
+    pub payload: Payload,
+}
+
+/// Per-workload task outputs.
+#[derive(Debug, Clone)]
+pub enum Output {
+    /// WordCount: per-bin counts.
+    Counts(Vec<f32>),
+    /// K-Means: flattened (K x D) sums and (K,) counts.
+    SumsCounts { sums: Vec<f32>, counts: Vec<f32> },
+    /// PageRank: `(first_row, values)` pairs per computed block.
+    RankRows(Vec<(usize, Vec<f32>)>),
+}
+
+/// A completed task with its measured wall-clock duration.
+#[derive(Debug, Clone)]
+pub struct RealResult {
+    pub id: usize,
+    pub worker: usize,
+    pub output: Output,
+    pub duration_secs: f64,
+    pub work_bytes: u64,
+}
+
+struct StageState {
+    pending: Vec<Option<RealTask>>,
+    results: Vec<RealResult>,
+    outstanding: usize,
+}
+
+struct Shared {
+    stage: Mutex<StageState>,
+    work_ready: Condvar,
+    stage_done: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// A pool of throttled executor threads, each owning a PJRT runtime.
+pub struct RealPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    num_workers: usize,
+}
+
+impl RealPool {
+    /// Spawn one worker per entry of `speeds` (1.0 = full speed). Each
+    /// worker loads and compiles the artifact set from `artifacts_dir`.
+    pub fn spawn(artifacts_dir: &str, speeds: &[f64]) -> Result<RealPool> {
+        assert!(!speeds.is_empty());
+        assert!(speeds.iter().all(|&s| s > 0.0 && s <= 1.0), "speeds in (0,1]");
+        let shared = Arc::new(Shared {
+            stage: Mutex::new(StageState {
+                pending: Vec::new(),
+                results: Vec::new(),
+                outstanding: 0,
+            }),
+            work_ready: Condvar::new(),
+            stage_done: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        // Fail fast on a broken artifact dir before spawning threads.
+        let probe = Runtime::load(artifacts_dir)?;
+        drop(probe);
+        let mut handles = Vec::new();
+        for (w, &speed) in speeds.iter().enumerate() {
+            let shared = Arc::clone(&shared);
+            let dir = artifacts_dir.to_string();
+            handles.push(std::thread::spawn(move || {
+                let rt = Runtime::load(&dir).expect("worker artifact load");
+                worker_loop(w, speed, rt, shared);
+            }));
+        }
+        Ok(RealPool { shared, handles, num_workers: speeds.len() })
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.num_workers
+    }
+
+    /// Run a stage of tasks pull-based to completion; results are returned
+    /// sorted by task id.
+    pub fn run_stage(&self, tasks: Vec<RealTask>) -> Vec<RealResult> {
+        let n = tasks.len();
+        {
+            let mut st = self.shared.stage.lock().unwrap();
+            assert!(st.outstanding == 0, "stage already in flight");
+            st.pending = tasks.into_iter().map(Some).collect();
+            st.results.clear();
+            st.outstanding = n;
+        }
+        self.shared.work_ready.notify_all();
+        let mut st = self.shared.stage.lock().unwrap();
+        while st.outstanding > 0 {
+            st = self.shared.stage_done.wait(st).unwrap();
+        }
+        let mut out = std::mem::take(&mut st.results);
+        out.sort_by_key(|r| r.id);
+        out
+    }
+}
+
+impl Drop for RealPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.work_ready.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(worker: usize, speed: f64, rt: Runtime, shared: Arc<Shared>) {
+    loop {
+        // Claim a task this worker may run.
+        let task = {
+            let mut st = shared.stage.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                let idx = st.pending.iter().position(|slot| {
+                    slot.as_ref()
+                        .map(|t| t.bound_to.map_or(true, |b| b == worker))
+                        .unwrap_or(false)
+                });
+                match idx {
+                    Some(i) => break st.pending[i].take().unwrap(),
+                    None => st = shared.work_ready.wait(st).unwrap(),
+                }
+            }
+        };
+
+        let start = Instant::now();
+        let output = execute_payload(&rt, &task.payload, speed);
+        let duration = start.elapsed().as_secs_f64();
+
+        let mut st = shared.stage.lock().unwrap();
+        st.results.push(RealResult {
+            id: task.id,
+            worker,
+            output,
+            duration_secs: duration,
+            work_bytes: task.payload.work_bytes(),
+        });
+        st.outstanding -= 1;
+        if st.outstanding == 0 {
+            shared.stage_done.notify_all();
+        }
+    }
+}
+
+/// Sleep off the duty-cycle deficit for a block that took `busy` seconds.
+fn throttle(busy: f64, speed: f64) {
+    if speed < 1.0 {
+        let sleep = busy * (1.0 / speed - 1.0);
+        if sleep > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(sleep));
+        }
+    }
+}
+
+fn execute_payload(rt: &Runtime, payload: &Payload, speed: f64) -> Output {
+    match payload {
+        Payload::WordCount { tokens, start, len } => {
+            let mut counts = vec![0f32; WORDCOUNT_BINS];
+            let mut pos = *start;
+            let end = start + len;
+            let mut block_tok = vec![0i32; WORDCOUNT_BLOCK_TOKENS];
+            let mut block_w = vec![0f32; WORDCOUNT_BLOCK_TOKENS];
+            while pos < end {
+                let take = (end - pos).min(WORDCOUNT_BLOCK_TOKENS);
+                block_tok[..take].copy_from_slice(&tokens[pos..pos + take]);
+                for (i, w) in block_w.iter_mut().enumerate() {
+                    *w = if i < take { 1.0 } else { 0.0 };
+                }
+                let t0 = Instant::now();
+                let c = rt
+                    .wordcount_block(&block_tok, &block_w)
+                    .expect("wordcount block");
+                throttle(t0.elapsed().as_secs_f64(), speed);
+                for (acc, x) in counts.iter_mut().zip(c.iter()) {
+                    *acc += x;
+                }
+                pos += take;
+            }
+            Output::Counts(counts)
+        }
+        Payload::KMeans { points, start_point, num_points, centroids } => {
+            let mut sums = vec![0f32; KMEANS_K * KMEANS_DIM];
+            let mut counts = vec![0f32; KMEANS_K];
+            let mut pos = *start_point;
+            let end = start_point + num_points;
+            let mut block_pts = vec![0f32; KMEANS_BLOCK_POINTS * KMEANS_DIM];
+            let mut block_w = vec![0f32; KMEANS_BLOCK_POINTS];
+            while pos < end {
+                let take = (end - pos).min(KMEANS_BLOCK_POINTS);
+                block_pts[..take * KMEANS_DIM]
+                    .copy_from_slice(&points[pos * KMEANS_DIM..(pos + take) * KMEANS_DIM]);
+                for x in block_pts[take * KMEANS_DIM..].iter_mut() {
+                    *x = 0.0;
+                }
+                for (i, w) in block_w.iter_mut().enumerate() {
+                    *w = if i < take { 1.0 } else { 0.0 };
+                }
+                let t0 = Instant::now();
+                let (s, c) = rt
+                    .kmeans_block(&block_pts, &block_w, centroids)
+                    .expect("kmeans block");
+                throttle(t0.elapsed().as_secs_f64(), speed);
+                for (acc, x) in sums.iter_mut().zip(s.iter()) {
+                    *acc += x;
+                }
+                for (acc, x) in counts.iter_mut().zip(c.iter()) {
+                    *acc += x;
+                }
+                pos += take;
+            }
+            Output::SumsCounts { sums, counts }
+        }
+        Payload::PageRank { matrix, row_blocks, rank } => {
+            let mut rows = Vec::with_capacity(row_blocks.len());
+            for &b in row_blocks {
+                let lo = b * PAGERANK_ROW_BLOCK * PAGERANK_N;
+                let hi = lo + PAGERANK_ROW_BLOCK * PAGERANK_N;
+                let t0 = Instant::now();
+                let vals = rt.pagerank_block(&matrix[lo..hi], rank).expect("pagerank block");
+                throttle(t0.elapsed().as_secs_f64(), speed);
+                rows.push((b * PAGERANK_ROW_BLOCK, vals));
+            }
+            Output::RankRows(rows)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, DEFAULT_ARTIFACTS_DIR};
+    use crate::util::Rng;
+    use crate::workloads::gen;
+
+    fn pool_or_skip(speeds: &[f64]) -> Option<RealPool> {
+        if !artifacts_available(DEFAULT_ARTIFACTS_DIR) {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            return None;
+        }
+        Some(RealPool::spawn(DEFAULT_ARTIFACTS_DIR, speeds).unwrap())
+    }
+
+    #[test]
+    fn wordcount_stage_counts_all_tokens() {
+        let Some(pool) = pool_or_skip(&[1.0, 1.0]) else { return };
+        let mut rng = Rng::new(1);
+        let tokens = Arc::new(gen::zipf_tokens(100_000, WORDCOUNT_BINS, 1.0, &mut rng));
+        // 4 unbound tasks over disjoint ranges.
+        let tasks: Vec<RealTask> = (0..4)
+            .map(|i| RealTask {
+                id: i,
+                bound_to: None,
+                payload: Payload::WordCount {
+                    tokens: Arc::clone(&tokens),
+                    start: i * 25_000,
+                    len: 25_000,
+                },
+            })
+            .collect();
+        let results = pool.run_stage(tasks);
+        assert_eq!(results.len(), 4);
+        let total: f32 = results
+            .iter()
+            .map(|r| match &r.output {
+                Output::Counts(c) => c.iter().sum::<f32>(),
+                _ => panic!(),
+            })
+            .sum();
+        assert_eq!(total, 100_000.0);
+    }
+
+    #[test]
+    fn bound_tasks_run_on_their_worker() {
+        let Some(pool) = pool_or_skip(&[1.0, 1.0]) else { return };
+        let tokens = Arc::new(vec![1i32; 1000]);
+        let tasks: Vec<RealTask> = (0..2)
+            .map(|i| RealTask {
+                id: i,
+                bound_to: Some(i),
+                payload: Payload::WordCount {
+                    tokens: Arc::clone(&tokens),
+                    start: 0,
+                    len: 1000,
+                },
+            })
+            .collect();
+        let results = pool.run_stage(tasks);
+        for r in &results {
+            assert_eq!(r.worker, r.id, "bound task ran elsewhere");
+        }
+    }
+
+    #[test]
+    fn throttled_worker_is_measurably_slower() {
+        let Some(pool) = pool_or_skip(&[1.0, 0.25]) else { return };
+        let mut rng = Rng::new(2);
+        let tokens = Arc::new(gen::zipf_tokens(262_144, WORDCOUNT_BINS, 1.0, &mut rng));
+        let mk = |id: usize, worker: usize| RealTask {
+            id,
+            bound_to: Some(worker),
+            payload: Payload::WordCount {
+                tokens: Arc::clone(&tokens),
+                start: 0,
+                len: 262_144,
+            },
+        };
+        let results = pool.run_stage(vec![mk(0, 0), mk(1, 1)]);
+        let fast = results.iter().find(|r| r.worker == 0).unwrap().duration_secs;
+        let slow = results.iter().find(|r| r.worker == 1).unwrap().duration_secs;
+        assert!(
+            slow > 2.0 * fast,
+            "0.25-speed worker should be ~4x slower: fast {fast:.3}s slow {slow:.3}s"
+        );
+    }
+
+    #[test]
+    fn kmeans_stage_accumulates_partials() {
+        let Some(pool) = pool_or_skip(&[1.0]) else { return };
+        let mut rng = Rng::new(3);
+        let n = 2 * KMEANS_BLOCK_POINTS;
+        let points = Arc::new(gen::gaussian_blobs(n, KMEANS_DIM, KMEANS_K, &mut rng));
+        let centroids = Arc::new(gen::gaussian_blobs(KMEANS_K, KMEANS_DIM, KMEANS_K, &mut rng));
+        let results = pool.run_stage(vec![RealTask {
+            id: 0,
+            bound_to: None,
+            payload: Payload::KMeans {
+                points: Arc::clone(&points),
+                start_point: 0,
+                num_points: n,
+                centroids: Arc::clone(&centroids),
+            },
+        }]);
+        match &results[0].output {
+            Output::SumsCounts { counts, .. } => {
+                assert!((counts.iter().sum::<f32>() - n as f32).abs() < 1.0);
+            }
+            _ => panic!("wrong output kind"),
+        }
+    }
+
+    #[test]
+    fn pagerank_stage_produces_all_rows() {
+        let Some(pool) = pool_or_skip(&[1.0, 1.0]) else { return };
+        let mut rng = Rng::new(4);
+        let matrix = Arc::new(gen::transition_matrix(PAGERANK_N, 8, &mut rng));
+        let rank = Arc::new(vec![1.0f32 / PAGERANK_N as f32; PAGERANK_N]);
+        let blocks_per_task = PAGERANK_N / PAGERANK_ROW_BLOCK / 2;
+        let tasks: Vec<RealTask> = (0..2)
+            .map(|i| RealTask {
+                id: i,
+                bound_to: None,
+                payload: Payload::PageRank {
+                    matrix: Arc::clone(&matrix),
+                    row_blocks: (i * blocks_per_task..(i + 1) * blocks_per_task).collect(),
+                    rank: Arc::clone(&rank),
+                },
+            })
+            .collect();
+        let results = pool.run_stage(tasks);
+        let mut next = vec![0f32; PAGERANK_N];
+        for r in &results {
+            match &r.output {
+                Output::RankRows(rows) => {
+                    for (first, vals) in rows {
+                        next[*first..first + vals.len()].copy_from_slice(vals);
+                    }
+                }
+                _ => panic!(),
+            }
+        }
+        let mass: f32 = next.iter().sum();
+        assert!((mass - 1.0).abs() < 1e-3, "mass {mass}");
+    }
+}

@@ -1,0 +1,202 @@
+//! Extensions beyond the paper's plotted experiments:
+//!
+//! * [`probed_weights`] — the Sec. 6.2 probing mechanism as a first-class
+//!   policy: short trial tasks measure each executor's *effective* speed,
+//!   recovering the paper's 1:0.32 fudge factor instead of hard-coding it.
+//! * [`four_node`] — generality check on a 4-node mixed cluster (full
+//!   core, half core, depleted burstable, interfered node): the paper's
+//!   2-node conclusions carry over.
+
+use crate::config::{ClusterConfig, NodeConfig, PolicyConfig, WorkloadConfig};
+use crate::coordinator::driver::{Session, SimParams};
+use crate::coordinator::PartitionPolicy;
+use crate::experiments::{observe_map_stage, resolve_policy, MB, TRIALS};
+use crate::metrics::{Figure, Series};
+use crate::workloads;
+
+/// Run one short probe job (`probe_mb` per executor, evenly sized, bound
+/// one-per-executor) and return measured speed weights — the paper's
+/// "short/trial probing tasks" (Sec. 6.2). Burns a little simulated time
+/// and (on burstables) a few credits, exactly like the real mechanism.
+pub fn probed_weights(s: &mut Session, probe_mb: u64, cpu_secs_per_mb: f64) -> Vec<f64> {
+    let n = s.executors.len();
+    let total = probe_mb * n as u64 * MB;
+    let file = s.hdfs.upload(total, total, &mut s.rng);
+    // Equal probe per executor: HeMT with unit weights binds one equal
+    // task to each executor.
+    let job = workloads::wordcount_job(
+        file,
+        PartitionPolicy::Hemt(vec![1.0; n]),
+        PartitionPolicy::EvenTasks(n),
+        cpu_secs_per_mb,
+    );
+    let rec = s.run_job(&job);
+    let mut est = crate::estimator::SpeedEstimator::new(0.0);
+    observe_map_stage(&mut est, &rec, n);
+    est.weights(&(0..n).collect::<Vec<_>>())
+}
+
+/// Probing on the Sec. 6.2 burstable pair: the measured weight ratio
+/// (≈ 0.32) vs the nominal credit-based 0.4 — the fudge factor *learned*,
+/// not assumed.
+pub fn probe_recovers_fudge_factor() -> (f64, f64) {
+    let cluster = ClusterConfig::burstable_pair(600.0);
+    let mut s = cluster.build_session(SimParams::default(), 77);
+    let w = probed_weights(&mut s, 32, 42.0 / 1024.0);
+    (w[1] / w[0], 0.32)
+}
+
+/// A 4-node mixed cluster: full core, half core (CFS cap), depleted
+/// burstable with contention penalty, and a node under 0.6x interference.
+pub fn four_node_cluster() -> ClusterConfig {
+    ClusterConfig {
+        nodes: vec![
+            NodeConfig::Static { cores: 1.0 },
+            NodeConfig::Static { cores: 1.0 },
+            NodeConfig::Burstable {
+                peak: 1.0,
+                baseline: 0.4,
+                credits: 0.0,
+                contention_penalty: 0.8,
+            },
+            NodeConfig::Static { cores: 1.0 },
+        ],
+        exec_cpus: vec![1.0, 0.5, 1.0, 1.0],
+        interference: vec![vec![], vec![], vec![], vec![(0.0, 0.6)]],
+        node_uplink_mbps: 600.0,
+        node_downlink_mbps: 600.0,
+        hdfs_datanodes: 4,
+        hdfs_replication: 2,
+        hdfs_uplink_mbps: 600.0,
+        hdfs_serving_eta: 0.26,
+    }
+}
+
+/// Extension experiment: HomT sweep vs probed HeMT on the 4-node mixed
+/// cluster — the 2-node conclusions generalize.
+pub fn four_node() -> Figure {
+    let cluster = four_node_cluster();
+    let wl = WorkloadConfig::wordcount_2gb();
+    let mut fig = Figure::new(
+        "Extension: 4-node mixed cluster (1.0 / 0.5 / depleted-burstable / 0.6-interfered)",
+        "configuration",
+        "map stage time (s)",
+    );
+    let mut homt = Series::new("even (HomT sweep)");
+    for m in [4usize, 8, 16, 32, 64, 128] {
+        let times: Vec<f64> = (0..TRIALS)
+            .map(|t| {
+                let mut s = cluster.build_session(SimParams::default(), 400 + m as u64 + 1000 * t as u64);
+                let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
+                let map = resolve_policy(&PolicyConfig::Homt(m), &s, None);
+                let job = workloads::wordcount_job(
+                    file,
+                    map,
+                    PartitionPolicy::EvenTasks(4),
+                    wl.cpu_secs_per_mb,
+                );
+                s.run_job(&job).map_stage_time()
+            })
+            .collect();
+        homt.push(m as f64, "", &times);
+    }
+    fig.add(homt);
+
+    let mut probed = Series::new("HeMT (one probe round)");
+    let times: Vec<f64> = (0..TRIALS)
+        .map(|t| {
+            let mut s = cluster.build_session(SimParams::default(), 500 + 1000 * t as u64);
+            let w = probed_weights(&mut s, 32, wl.cpu_secs_per_mb);
+            let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
+            let job = workloads::wordcount_job(
+                file,
+                PartitionPolicy::Hemt(w.clone()),
+                PartitionPolicy::Hemt(w),
+                wl.cpu_secs_per_mb,
+            );
+            s.run_job(&job).map_stage_time()
+        })
+        .collect();
+    probed.push(4.0, "4 (probed)", &times);
+    fig.add(probed);
+
+    // Converged OA-HeMT: weights refined over full-size warmup jobs (the
+    // paper's Sec. 5 mechanism) — steady-state accuracy the probe can't
+    // reach on a bursty node.
+    let mut adaptive = Series::new("OA-HeMT (converged)");
+    let times: Vec<f64> = (0..TRIALS)
+        .map(|t| {
+            let mut s = cluster.build_session(SimParams::default(), 600 + 1000 * t as u64);
+            let mut est = crate::estimator::SpeedEstimator::new(0.25);
+            let mut last = 0.0;
+            for _ in 0..4 {
+                let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
+                let policy = resolve_policy(
+                    &PolicyConfig::HemtAdaptive { alpha: 0.25 },
+                    &s,
+                    if est.is_cold() { None } else { Some(&est) },
+                );
+                let job = workloads::wordcount_job(
+                    file,
+                    policy.clone(),
+                    policy,
+                    wl.cpu_secs_per_mb,
+                );
+                let rec = s.run_job(&job);
+                observe_map_stage(&mut est, &rec, 4);
+                last = rec.map_stage_time();
+            }
+            last
+        })
+        .collect();
+    adaptive.push(4.0, "4 (adaptive)", &times);
+    fig.add(adaptive);
+    fig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_learns_the_fudge_factor() {
+        // The paper hard-measured 1:0.32 on EC2; our probe mechanism must
+        // recover it from the simulated contention-penalized burstable.
+        let (measured, expected) = probe_recovers_fudge_factor();
+        assert!(
+            (measured - expected).abs() < 0.03,
+            "probed ratio {measured:.3} should be ~{expected}"
+        );
+    }
+
+    #[test]
+    fn probed_weights_sane_on_static_split() {
+        let cluster = ClusterConfig::containers_1_and_04();
+        let mut s = cluster.build_session(SimParams::default(), 3);
+        let w = probed_weights(&mut s, 32, 42.0 / 1024.0);
+        let ratio = w[1] / w[0];
+        assert!((ratio - 0.4).abs() < 0.03, "static probe ratio {ratio:.3}");
+    }
+
+    #[test]
+    fn four_node_converged_hemt_beats_best_homt() {
+        let fig = four_node();
+        let best_homt = fig.series[0].best().unwrap().stats.mean;
+        let probed = fig.series[1].points[0].stats.mean;
+        let adaptive = fig.series[2].points[0].stats.mean;
+        // Converged OA-HeMT wins outright; a single probe round gets
+        // within ~10% of the best (heavily-tuned) HomT — an honest
+        // depiction of when fine HomT is competitive (4 executors, cheap
+        // per-task overhead).
+        assert!(
+            adaptive < best_homt,
+            "4-node adaptive HeMT {adaptive:.1} must beat best HomT {best_homt:.1}"
+        );
+        assert!(
+            probed < best_homt * 1.1,
+            "one probe round should land near best HomT: {probed:.1} vs {best_homt:.1}"
+        );
+        // Theoretical floor sanity: ~2.42 cores over 84 core-s = ~34.7 s.
+        assert!(adaptive > 32.0 && adaptive < 50.0, "adaptive {adaptive:.1}");
+    }
+}

@@ -1,0 +1,653 @@
+//! Per-figure experiment drivers: every table and figure of the paper's
+//! evaluation, regenerated on the simulation substrate.
+//!
+//! Each `figN()` returns a [`Figure`] whose series reproduce the *shape*
+//! of the paper's plot (who wins, by what factor, where crossovers fall);
+//! the per-figure benches (`rust/benches/`) and the CLI (`hemt figure N`)
+//! print them. DESIGN.md §6 maps figures to modules; EXPERIMENTS.md
+//! records paper-vs-measured.
+
+pub mod ablations;
+pub mod extension;
+
+use crate::analysis;
+use crate::config::{ClusterConfig, NodeConfig, PolicyConfig, WorkloadConfig};
+use crate::coordinator::driver::{Session, SimParams};
+use crate::coordinator::PartitionPolicy;
+use crate::estimator::credits::CreditCurve;
+use crate::estimator::SpeedEstimator;
+use crate::metrics::{Figure, JobRecord, Series};
+use crate::workloads;
+
+pub const MB: u64 = 1 << 20;
+
+/// Default trial count behind every ±σ beam.
+pub const TRIALS: usize = 5;
+
+/// Resolve a policy description into a concrete partitioning for a
+/// session (static weights, manager hints, or estimator state).
+pub fn resolve_policy(
+    policy: &PolicyConfig,
+    session: &Session,
+    estimator: Option<&SpeedEstimator>,
+) -> PartitionPolicy {
+    let n = session.executors.len();
+    match policy {
+        PolicyConfig::Default => PartitionPolicy::PerBlock,
+        PolicyConfig::Homt(m) => PartitionPolicy::EvenTasks(*m),
+        PolicyConfig::HemtStatic(w) => PartitionPolicy::Hemt(w.clone()),
+        PolicyConfig::HemtFromHints => PartitionPolicy::Hemt(session.capacity_hints()),
+        PolicyConfig::HemtAdaptive { .. } => {
+            let weights = match estimator {
+                Some(e) => e.weights(&(0..n).collect::<Vec<_>>()),
+                None => vec![1.0; n],
+            };
+            PartitionPolicy::Hemt(weights)
+        }
+    }
+}
+
+/// Feed a finished map stage into the OA-HeMT estimator: per executor,
+/// observed `(bytes, busy seconds)`.
+pub fn observe_map_stage(est: &mut SpeedEstimator, rec: &JobRecord, num_executors: usize) {
+    let stage = &rec.stages[0];
+    let mut bytes = vec![0u64; num_executors];
+    let mut secs = vec![0f64; num_executors];
+    for t in &stage.tasks {
+        bytes[t.executor] += t.bytes;
+        secs[t.executor] += t.duration();
+    }
+    for e in 0..num_executors {
+        if bytes[e] > 0 && secs[e] > 0.0 {
+            est.observe(e, bytes[e] as f64, secs[e]);
+        }
+    }
+}
+
+/// Run one WordCount job and return the map-stage completion time.
+fn wordcount_map_time(
+    cluster: &ClusterConfig,
+    wl: &WorkloadConfig,
+    policy: &PolicyConfig,
+    seed: u64,
+) -> f64 {
+    let mut s = cluster.build_session(SimParams::default(), seed);
+    let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
+    let map = resolve_policy(policy, &s, None);
+    let reduce = match &map {
+        PartitionPolicy::Hemt(w) => PartitionPolicy::Hemt(w.clone()),
+        _ => PartitionPolicy::EvenTasks(s.executors.len()),
+    };
+    let job = workloads::wordcount_job(file, map, reduce, wl.cpu_secs_per_mb);
+    let rec = s.run_job(&job);
+    rec.map_stage_time()
+}
+
+/// Map-stage time summarized over `TRIALS` seeds.
+fn wordcount_trials(
+    cluster: &ClusterConfig,
+    wl: &WorkloadConfig,
+    policy: &PolicyConfig,
+    base_seed: u64,
+) -> Vec<f64> {
+    (0..TRIALS)
+        .map(|t| wordcount_map_time(cluster, wl, policy, base_seed + 1000 * t as u64))
+        .collect()
+}
+
+// ---------------------------------------------------------------- Fig 4
+
+/// Fig. 4: closed-form p1, p2 vs datanode count (r = 2).
+pub fn fig4() -> Figure {
+    let mut fig = Figure::new(
+        "Fig 4: same-datanode read collision probability (r=2)",
+        "n (datanodes)",
+        "probability",
+    );
+    let mut s1 = Series::new("p1 (same block)");
+    let mut s2 = Series::new("p2 (different blocks)");
+    for (n, p1, p2) in analysis::fig4_series(2, 30) {
+        s1.push(n as f64, "", &[p1]);
+        s2.push(n as f64, "", &[p2]);
+    }
+    fig.add(s1);
+    fig.add(s2);
+    fig
+}
+
+// ---------------------------------------------------------------- Fig 5
+
+/// Fig. 5: stage completion time vs partition count when datanode uplinks
+/// (64 Mbps, n=4, r=2) are the universal bottleneck — more partitions
+/// means more same-block reads colliding on uplinks (Claim 2) plus
+/// per-task overhead.
+pub fn fig5() -> Figure {
+    let cluster = ClusterConfig {
+        nodes: vec![NodeConfig::Static { cores: 1.0 }, NodeConfig::Static { cores: 1.0 }],
+        exec_cpus: vec![1.0, 1.0],
+        interference: vec![vec![], vec![]],
+        node_uplink_mbps: 1000.0,
+        node_downlink_mbps: 1000.0,
+        hdfs_datanodes: 4,
+        hdfs_replication: 2,
+        hdfs_uplink_mbps: 64.0,
+        hdfs_serving_eta: 0.26,
+    };
+    let wl = WorkloadConfig {
+        kind: crate::config::WorkloadKind::WordCount,
+        data_mb: 1024,
+        block_mb: 128,
+        cpu_secs_per_mb: 0.001, // network-bound
+        iterations: 1,
+    };
+    let mut fig = Figure::new(
+        "Fig 5: stage completion vs partitions, network-bottlenecked (64 Mbps uplinks)",
+        "partitions",
+        "stage time (s)",
+    );
+    let mut s = Series::new("HomT (even partitioning)");
+    for m in [2usize, 4, 8, 16, 32, 64] {
+        let times = wordcount_trials(&cluster, &wl, &PolicyConfig::Homt(m), 10 + m as u64);
+        s.push(m as f64, "", &times);
+    }
+    fig.add(s);
+    fig
+}
+
+// ---------------------------------------------------------------- Fig 7
+
+/// Fig. 7: OA-HeMT adapting to injected interference across a 50-job
+/// WordCount sequence (alpha = 0). Returns per-job map time and the
+/// fraction of data assigned to the interfered node.
+pub fn fig7() -> Figure {
+    let wl = WorkloadConfig {
+        kind: crate::config::WorkloadKind::WordCount,
+        data_mb: 512,
+        block_mb: 256,
+        cpu_secs_per_mb: 42.0 / 1024.0,
+        iterations: 1,
+    };
+    let cluster = ClusterConfig {
+        nodes: vec![NodeConfig::Static { cores: 1.0 }, NodeConfig::Static { cores: 1.0 }],
+        exec_cpus: vec![1.0, 1.0],
+        interference: vec![vec![], vec![]],
+        node_uplink_mbps: 600.0,
+        node_downlink_mbps: 600.0,
+        hdfs_datanodes: 4,
+        hdfs_replication: 2,
+        hdfs_uplink_mbps: 600.0,
+        hdfs_serving_eta: 0.26,
+    };
+    let mut s = cluster.build_session(SimParams::default(), 42);
+    let mut est = SpeedEstimator::new(0.0);
+    let mut times = Series::new("job map-stage time");
+    let mut share = Series::new("node-1 data share");
+    for job_idx in 0..50usize {
+        // Interference events: sysbench-like load lands on node 1 before
+        // job 15 (halving it) and intensifies before job 32.
+        if job_idx == 15 {
+            let t = s.engine.now;
+            s.engine.nodes[1] = s.engine.nodes[1].clone().with_interference(vec![(t, 0.5)]);
+        }
+        if job_idx == 32 {
+            let t = s.engine.now;
+            s.engine.nodes[1] = s.engine.nodes[1].clone().with_interference(vec![(t, 0.25)]);
+        }
+        let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
+        let policy = resolve_policy(
+            &PolicyConfig::HemtAdaptive { alpha: 0.0 },
+            &s,
+            if est.is_cold() { None } else { Some(&est) },
+        );
+        let job = workloads::wordcount_job(
+            file,
+            policy.clone(),
+            policy,
+            wl.cpu_secs_per_mb,
+        );
+        let rec = s.run_job(&job);
+        observe_map_stage(&mut est, &rec, 2);
+        times.push(job_idx as f64, "", &[rec.map_stage_time()]);
+        let by_exec = rec.stages[0].executor_bytes(2);
+        let frac = by_exec[1] as f64 / (by_exec[0] + by_exec[1]) as f64;
+        share.push(job_idx as f64, "", &[frac]);
+    }
+    let mut fig = Figure::new(
+        "Fig 7: OA-HeMT rebalancing under injected interference (alpha=0)",
+        "job index",
+        "seconds / share",
+    );
+    fig.add(times);
+    fig.add(share);
+    fig
+}
+
+// ---------------------------------------------------------------- Fig 8
+
+/// Fig. 8: OA-HeMT convergence when executors differ by initial
+/// provisioning (1.0 vs 0.4 cores): the map stage reaches the optimal
+/// ~60 s within two trials.
+pub fn fig8() -> Figure {
+    let cluster = ClusterConfig::containers_1_and_04();
+    let wl = WorkloadConfig::wordcount_2gb();
+    let mut s = cluster.build_session(SimParams::default(), 7);
+    let mut est = SpeedEstimator::new(0.0);
+    let mut times = Series::new("map-stage time (adaptive)");
+    for job_idx in 0..8usize {
+        let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
+        let policy = resolve_policy(
+            &PolicyConfig::HemtAdaptive { alpha: 0.0 },
+            &s,
+            if est.is_cold() { None } else { Some(&est) },
+        );
+        let job = workloads::wordcount_job(file, policy.clone(), policy, wl.cpu_secs_per_mb);
+        let rec = s.run_job(&job);
+        observe_map_stage(&mut est, &rec, 2);
+        times.push(job_idx as f64, "", &[rec.map_stage_time()]);
+    }
+    let mut fig = Figure::new(
+        "Fig 8: OA-HeMT convergence with 1.0 + 0.4 core executors",
+        "trial",
+        "map stage time (s)",
+    );
+    fig.add(times);
+    fig
+}
+
+// ---------------------------------------------------------------- Fig 9
+
+/// Fig. 9: static containers (1.0 + 0.4 cores), WordCount 2 GB — the
+/// HomT U-curve vs the HeMT beam from cluster-manager resource hints.
+pub fn fig9() -> Figure {
+    let cluster = ClusterConfig::containers_1_and_04();
+    let wl = WorkloadConfig::wordcount_2gb();
+    let mut fig = Figure::new(
+        "Fig 9: even partitioning vs HeMT, statically provisioned containers",
+        "partitions",
+        "map stage time (s)",
+    );
+    let mut homt = Series::new("even (HomT sweep)");
+    for m in [2usize, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64] {
+        let times = wordcount_trials(&cluster, &wl, &PolicyConfig::Homt(m), 100 + m as u64);
+        homt.push(m as f64, "", &times);
+    }
+    fig.add(homt);
+    let mut hemt = Series::new("HeMT (Mesos resource info)");
+    let times = wordcount_trials(&cluster, &wl, &PolicyConfig::HemtFromHints, 900);
+    hemt.push(2.0, "2 (1:0.4)", &times);
+    fig.add(hemt);
+    fig
+}
+
+// --------------------------------------------------------- Figs 10-12
+
+/// Figs. 10–12: the burstable-credit planner's closed forms — W(t) for a
+/// t2.small with 4 credits, the superposed curve for credits {4, 8, 12},
+/// and the t' = 80/11 solve giving the 3:4:4 split of a 20-minute job.
+pub fn fig10_12() -> Figure {
+    let mut fig = Figure::new(
+        "Figs 10-12: burstable credit planner (t2.small, credits {4,8,12}, W0=20)",
+        "t (minutes)",
+        "work (CPU-minutes)",
+    );
+    let single = CreditCurve::t2_small(4.0);
+    let mut w_single = Series::new("W(t), 4 credits (Fig 10)");
+    for t in 0..=10 {
+        w_single.push(t as f64, "", &[single.work_by(t as f64)]);
+    }
+    fig.add(w_single);
+
+    let curves = [
+        CreditCurve::t2_small(4.0),
+        CreditCurve::t2_small(8.0),
+        CreditCurve::t2_small(12.0),
+    ];
+    let mut w_sum = Series::new("superposed W_s(t) (Fig 12)");
+    for t in 0..=20 {
+        let total: f64 = curves.iter().map(|c| c.work_by(t as f64)).sum();
+        w_sum.push(t as f64, "", &[total]);
+    }
+    fig.add(w_sum);
+
+    let plan = crate::estimator::credits::plan(&curves, 20.0).expect("solvable");
+    let mut solve = Series::new("t' and shares");
+    solve.push(plan.t_prime, "t'", &[plan.t_prime]);
+    for (i, share) in plan.shares.iter().enumerate() {
+        solve.push(plan.t_prime, &format!("W_{}(t')", i + 1), &[*share]);
+    }
+    fig.add(solve);
+    fig
+}
+
+// ------------------------------------------------------- Figs 13/14/15
+
+/// Figs. 13–15: burstable pair (one credit-rich node, one depleted with
+/// the measured contention penalty), HomT sweep vs naive HeMT (1:0.4) vs
+/// fudge-adjusted HeMT (1:0.32), at the given HDFS uplink bandwidth.
+pub fn fig_burstable(hdfs_mbps: f64, fig_name: &str) -> Figure {
+    let cluster = ClusterConfig::burstable_pair(hdfs_mbps);
+    let wl = WorkloadConfig::wordcount_2gb();
+    let mut fig = Figure::new(fig_name, "partitions", "map stage time (s)");
+    let mut homt = Series::new("even (HomT sweep)");
+    for m in [2usize, 4, 8, 16, 32, 64] {
+        let times = wordcount_trials(&cluster, &wl, &PolicyConfig::Homt(m), 200 + m as u64);
+        homt.push(m as f64, "", &times);
+    }
+    fig.add(homt);
+    let mut naive = Series::new("HeMT naive (1:0.4)");
+    naive.push(
+        2.0,
+        "2 (1:0.4)",
+        &wordcount_trials(&cluster, &wl, &PolicyConfig::HemtStatic(vec![1.0, 0.4]), 300),
+    );
+    fig.add(naive);
+    let mut adjusted = Series::new("HeMT adjusted (1:0.32)");
+    adjusted.push(
+        2.0,
+        "2 (1:0.32)",
+        &wordcount_trials(&cluster, &wl, &PolicyConfig::HemtStatic(vec![1.0, 0.32]), 400),
+    );
+    fig.add(adjusted);
+    fig
+}
+
+pub fn fig13() -> Figure {
+    fig_burstable(600.0, "Fig 13: burstable pair, CPU-bound (~600 Mbps uplinks)")
+}
+
+pub fn fig14() -> Figure {
+    fig_burstable(480.0, "Fig 14: burstable pair, ~480 Mbps uplinks (still CPU-bound)")
+}
+
+pub fn fig15() -> Figure {
+    fig_burstable(250.0, "Fig 15: burstable pair, ~250 Mbps uplinks (fast node network-bound)")
+}
+
+// ---------------------------------------------------------------- Fig 17
+
+/// One full K-Means run (30 iterations): first iteration reads HDFS and
+/// fixes the cached partition; the rest compute on the cache.
+pub fn kmeans_total_time(
+    cluster: &ClusterConfig,
+    wl: &WorkloadConfig,
+    policy: &PolicyConfig,
+    seed: u64,
+) -> f64 {
+    let mut s = cluster.build_session(SimParams::default(), seed);
+    let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
+    let map = resolve_policy(policy, &s, None);
+    let start = s.engine.now;
+    let first = s.run_job(&workloads::kmeans_first_job(file, map, wl.cpu_secs_per_mb));
+    let parts = workloads::cached_partitions_of(&first.stages[0]);
+    for _ in 1..wl.iterations {
+        s.run_job(&workloads::kmeans_cached_job(parts.clone(), wl.cpu_secs_per_mb));
+    }
+    s.engine.now - start
+}
+
+/// Fig. 17: K-Means job finish time, HeMT vs default vs HomT.
+pub fn fig17() -> Figure {
+    let cluster = ClusterConfig::containers_1_and_04();
+    let wl = WorkloadConfig::kmeans_256mb();
+    let mut fig = Figure::new(
+        "Fig 17: K-Means (30 iterations, 256 MB) finish time",
+        "configuration",
+        "job finish time (s)",
+    );
+    let mut run = |name: &str, x: f64, policy: PolicyConfig, seed: u64| {
+        let times: Vec<f64> = (0..TRIALS)
+            .map(|t| kmeans_total_time(&cluster, &wl, &policy, seed + 1000 * t as u64))
+            .collect();
+        let mut s = Series::new(name);
+        s.push(x, name, &times);
+        fig.add(s);
+    };
+    run("default (2 blocks)", 2.0, PolicyConfig::Default, 500);
+    for m in [4usize, 8, 16, 32] {
+        run(&format!("HomT {m}-way"), m as f64, PolicyConfig::Homt(m), 500 + m as u64);
+    }
+    run("HeMT (1:0.4)", 2.0, PolicyConfig::HemtFromHints, 600);
+    fig
+}
+
+// ---------------------------------------------------------------- Fig 18
+
+/// One PageRank run: a single job with 1 + iterations shuffle-chained
+/// stages.
+pub fn pagerank_total_time(
+    cluster: &ClusterConfig,
+    wl: &WorkloadConfig,
+    policy: &PolicyConfig,
+    seed: u64,
+) -> f64 {
+    let mut s = cluster.build_session(SimParams::default(), seed);
+    let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
+    let pol = resolve_policy(policy, &s, None);
+    let rec = s.run_job(&workloads::pagerank_job(
+        file,
+        pol,
+        wl.iterations,
+        wl.cpu_secs_per_mb,
+    ));
+    rec.completion_time()
+}
+
+/// Fig. 18: PageRank finish time — microtask-sensitive because stages are
+/// short, so per-task overhead dominates at high partition counts.
+pub fn fig18() -> Figure {
+    let cluster = ClusterConfig::containers_1_and_04();
+    let wl = WorkloadConfig::pagerank_256mb();
+    let mut fig = Figure::new(
+        "Fig 18: PageRank (100 iterations, 256 MB) finish time",
+        "configuration",
+        "job finish time (s)",
+    );
+    let mut run = |name: &str, x: f64, policy: PolicyConfig, seed: u64| {
+        let times: Vec<f64> = (0..TRIALS)
+            .map(|t| pagerank_total_time(&cluster, &wl, &policy, seed + 1000 * t as u64))
+            .collect();
+        let mut s = Series::new(name);
+        s.push(x, name, &times);
+        fig.add(s);
+    };
+    run("default (2-way)", 2.0, PolicyConfig::Default, 700);
+    for m in [4usize, 8, 16, 32, 64] {
+        run(&format!("HomT {m}-way"), m as f64, PolicyConfig::Homt(m), 700 + m as u64);
+    }
+    run("HeMT (1:0.4)", 2.0, PolicyConfig::HemtFromHints, 800);
+    fig
+}
+
+// ---------------------------------------------------------------- headline
+
+/// The paper's headline: HeMT improves average completion times ~10% over
+/// the default system across realistic workloads. Compares HeMT vs the
+/// *best even* configuration per scenario and vs the default.
+pub fn headline() -> Figure {
+    let mut fig = Figure::new(
+        "Headline: HeMT vs default / best-HomT across workloads",
+        "scenario",
+        "completion time (s)",
+    );
+    // WordCount on static containers.
+    let c1 = ClusterConfig::containers_1_and_04();
+    let wc = WorkloadConfig::wordcount_2gb();
+    let mut s = Series::new("wordcount/static");
+    s.push(0.0, "default", &wordcount_trials(&c1, &wc, &PolicyConfig::Default, 31));
+    s.push(0.0, "best HomT (8)", &wordcount_trials(&c1, &wc, &PolicyConfig::Homt(8), 32));
+    s.push(0.0, "HeMT", &wordcount_trials(&c1, &wc, &PolicyConfig::HemtFromHints, 33));
+    fig.add(s);
+    // WordCount on the burstable pair.
+    let c2 = ClusterConfig::burstable_pair(600.0);
+    let mut s = Series::new("wordcount/burstable");
+    s.push(1.0, "default", &wordcount_trials(&c2, &wc, &PolicyConfig::Default, 41));
+    s.push(1.0, "best HomT (8)", &wordcount_trials(&c2, &wc, &PolicyConfig::Homt(8), 42));
+    s.push(
+        1.0,
+        "HeMT (fudged)",
+        &wordcount_trials(&c2, &wc, &PolicyConfig::HemtStatic(vec![1.0, 0.32]), 43),
+    );
+    fig.add(s);
+    // K-Means and PageRank on static containers.
+    let km = WorkloadConfig::kmeans_256mb();
+    let mut s = Series::new("kmeans/static");
+    for (label, pol, seed) in [
+        ("default", PolicyConfig::Default, 51u64),
+        ("best HomT (8)", PolicyConfig::Homt(8), 52),
+        ("HeMT", PolicyConfig::HemtFromHints, 53),
+    ] {
+        let times: Vec<f64> = (0..TRIALS)
+            .map(|t| kmeans_total_time(&c1, &km, &pol, seed + 1000 * t as u64))
+            .collect();
+        s.push(2.0, label, &times);
+    }
+    fig.add(s);
+    let pr = WorkloadConfig::pagerank_256mb();
+    let mut s = Series::new("pagerank/static");
+    for (label, pol, seed) in [
+        ("default", PolicyConfig::Default, 61u64),
+        ("best HomT (4)", PolicyConfig::Homt(4), 62),
+        ("HeMT", PolicyConfig::HemtFromHints, 63),
+    ] {
+        let times: Vec<f64> = (0..TRIALS)
+            .map(|t| pagerank_total_time(&c1, &pr, &pol, seed + 1000 * t as u64))
+            .collect();
+        s.push(3.0, label, &times);
+    }
+    fig.add(s);
+    fig
+}
+
+/// Dispatch by figure name for the CLI.
+pub fn by_name(name: &str) -> Option<Figure> {
+    match name {
+        "4" | "fig4" => Some(fig4()),
+        "5" | "fig5" => Some(fig5()),
+        "7" | "fig7" => Some(fig7()),
+        "8" | "fig8" => Some(fig8()),
+        "9" | "fig9" => Some(fig9()),
+        "10" | "11" | "12" | "fig10_12" => Some(fig10_12()),
+        "13" | "fig13" => Some(fig13()),
+        "14" | "fig14" => Some(fig14()),
+        "15" | "fig15" => Some(fig15()),
+        "17" | "fig17" => Some(fig17()),
+        "18" | "fig18" => Some(fig18()),
+        "headline" => Some(headline()),
+        "4node" | "extension" => Some(extension::four_node()),
+        _ => None,
+    }
+}
+
+/// All figure names, for `hemt figure all`.
+pub const ALL_FIGURES: &[&str] = &[
+    "fig4", "fig5", "fig7", "fig8", "fig9", "fig10_12", "fig13", "fig14", "fig15",
+    "fig17", "fig18", "headline", "extension",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_shape_hemt_beats_best_homt_and_u_curve() {
+        let fig = fig9();
+        let homt = &fig.series[0];
+        let hemt = &fig.series[1];
+        let best_homt = homt.best().unwrap().stats.mean;
+        let hemt_mean = hemt.points[0].stats.mean;
+        assert!(
+            hemt_mean < best_homt,
+            "HeMT {hemt_mean:.1}s must beat best HomT {best_homt:.1}s"
+        );
+        // U-shape: the coarsest and finest partitionings are both worse
+        // than the best interior configuration.
+        let first = homt.points.first().unwrap().stats.mean;
+        let last = homt.points.last().unwrap().stats.mean;
+        assert!(first > best_homt + 1.0, "left arm missing: {first} vs {best_homt}");
+        assert!(last > best_homt + 1.0, "right arm missing: {last} vs {best_homt}");
+        // Optimal region near the paper's ~60 s.
+        assert!((50.0..80.0).contains(&hemt_mean), "HeMT time {hemt_mean}");
+    }
+
+    #[test]
+    fn fig13_shape_fudged_hemt_wins() {
+        let fig = fig13();
+        let homt_best = fig.series[0].best().unwrap().stats.mean;
+        let naive = fig.series[1].points[0].stats.mean;
+        let adjusted = fig.series[2].points[0].stats.mean;
+        assert!(
+            adjusted < naive,
+            "fudge factor must help: adjusted {adjusted:.1} vs naive {naive:.1}"
+        );
+        assert!(
+            adjusted < homt_best,
+            "adjusted HeMT {adjusted:.1} must beat best HomT {homt_best:.1}"
+        );
+    }
+
+    #[test]
+    fn fig15_shape_hemt_dominates_under_network_bottleneck() {
+        let fig = fig15();
+        let homt = &fig.series[0];
+        let homt8 = homt.points.iter().find(|p| p.x == 8.0).unwrap().stats.mean;
+        let homt_best = homt.best().unwrap().stats.mean;
+        let naive = fig.series[1].points[0].stats.mean;
+        let adjusted = fig.series[2].points[0].stats.mean;
+        // Paper's Fig 15 claims: (a) 8-way — among the best configs under
+        // ample bandwidth (Fig 13) — is "no longer one of the best" here;
+        assert!(
+            homt8 > homt_best + 1.0,
+            "8-way ({homt8:.1}) should degrade vs best HomT ({homt_best:.1})"
+        );
+        // (b) even naive credit-based HeMT now beats the previous champion
+        // configuration (it lost to it clearly in Fig 13);
+        assert!(naive < homt8, "naive {naive:.1} vs 8-way {homt8:.1}");
+        // (c) adjusted HeMT beats every HomT configuration.
+        assert!(
+            adjusted < homt_best,
+            "adjusted {adjusted:.1} vs best HomT {homt_best:.1}"
+        );
+    }
+
+    #[test]
+    fn fig13_vs_fig15_crossover() {
+        // The cross-figure shape: under ample bandwidth best-HomT clearly
+        // beats naive HeMT; under the 250 Mbps bottleneck the gap closes
+        // sharply (the paper's "started to significantly outperform").
+        let f13 = fig13();
+        let f15 = fig15();
+        let gap13 = f13.series[1].points[0].stats.mean - f13.series[0].best().unwrap().stats.mean;
+        let gap15 = f15.series[1].points[0].stats.mean - f15.series[0].best().unwrap().stats.mean;
+        assert!(gap13 > 0.0, "fig13: best HomT should beat naive HeMT");
+        assert!(
+            gap15 < gap13 - 1.0,
+            "network bottleneck must close the HomT advantage: {gap13:.1} -> {gap15:.1}"
+        );
+    }
+
+    #[test]
+    fn fig8_converges_within_two_trials() {
+        let fig = fig8();
+        let pts = &fig.series[0].points;
+        let first = pts[0].stats.mean;
+        let settled = pts[3].stats.mean;
+        assert!(
+            settled < first - 5.0,
+            "adaptation should cut the map time: {first:.1} -> {settled:.1}"
+        );
+        // Near the paper's ~60 s optimum once converged.
+        assert!((50.0..75.0).contains(&settled), "settled at {settled:.1}");
+    }
+
+    #[test]
+    fn fig5_rises_with_partition_count() {
+        let fig = fig5();
+        let pts = &fig.series[0].points;
+        let t2 = pts[0].stats.mean;
+        let t64 = pts.last().unwrap().stats.mean;
+        assert!(
+            t64 > t2 * 1.1,
+            "network-bound stage time must grow with partitions: {t2:.1} -> {t64:.1}"
+        );
+    }
+}

@@ -1,0 +1,353 @@
+//! HDFS substrate: block placement, replica selection, and the mapping
+//! from task input ranges to datanode read flows.
+//!
+//! Faithful to the paper's Sec. 3 model: a file is a sequence of fixed-size
+//! blocks; each block's `r` replicas land on a uniformly random `r`-subset
+//! of the `n` datanodes (no two replicas of a block share a datanode; rack
+//! awareness off); a reader picks uniformly among a block's replicas. The
+//! uplink-contention behaviour that penalizes microtasking (Claim 2,
+//! Figs 5 & 15) then emerges from the shared-uplink flow model in
+//! [`crate::netsim`].
+
+use crate::netsim::{LinkId, NetSim};
+use crate::util::Rng;
+
+pub type DatanodeId = usize;
+pub type BlockId = usize;
+
+/// Block placement policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Each block's replicas on a uniformly random r-subset (the paper's
+    /// baseline assumption).
+    FlatRandom,
+    /// HDFS rack awareness: first replica on the writer's datanode when
+    /// the writer is cluster-local (`writer = Some(d)`, the HDFS default)
+    /// or a random node for remote writers; the remaining replicas
+    /// concentrated on one other rack. Less spread, more uplink
+    /// competition (footnote 3).
+    RackAware { racks: usize, writer: Option<DatanodeId> },
+}
+
+/// One HDFS file: its block placement across the datanode cluster.
+#[derive(Debug, Clone)]
+pub struct HdfsFile {
+    pub size_bytes: u64,
+    pub block_size: u64,
+    /// Per block, the datanodes holding its replicas.
+    pub placement: Vec<Vec<DatanodeId>>,
+}
+
+impl HdfsFile {
+    pub fn num_blocks(&self) -> usize {
+        self.placement.len()
+    }
+
+    /// Bytes in block `b` (the final block may be short).
+    pub fn block_len(&self, b: BlockId) -> u64 {
+        let start = b as u64 * self.block_size;
+        self.block_size.min(self.size_bytes - start)
+    }
+
+    /// Decompose a byte range into per-block `(block, bytes)` pieces —
+    /// exactly the ranges a task's HDFS reads cover.
+    pub fn read_ranges(&self, offset: u64, len: u64) -> Vec<(BlockId, u64)> {
+        assert!(offset + len <= self.size_bytes, "read beyond EOF");
+        let mut out = Vec::new();
+        let mut pos = offset;
+        let end = offset + len;
+        while pos < end {
+            let b = (pos / self.block_size) as BlockId;
+            let block_end = (b as u64 + 1) * self.block_size;
+            let take = end.min(block_end) - pos;
+            out.push((b, take));
+            pos += take;
+        }
+        out
+    }
+}
+
+/// The datanode cluster: uplink links (registered in the caller's
+/// [`NetSim`]) plus placement/replica-selection policy.
+#[derive(Debug, Clone)]
+pub struct HdfsCluster {
+    pub num_datanodes: usize,
+    pub replication: usize,
+    /// Netsim link id of each datanode's uplink.
+    pub uplinks: Vec<LinkId>,
+}
+
+impl HdfsCluster {
+    /// Register `n` datanodes with `uplink_bps` uplinks in `net`.
+    /// `serving_eta` is the per-uplink concurrency-efficiency loss (the
+    /// paper's datanode-side inefficiency under simultaneous readers,
+    /// Sec. 3; see [`crate::netsim::Link::concurrency_eta`]).
+    pub fn build(
+        net: &mut NetSim,
+        n: usize,
+        replication: usize,
+        uplink_bps: f64,
+        serving_eta: f64,
+    ) -> HdfsCluster {
+        assert!(replication >= 1 && replication <= n, "need 1 <= r <= n");
+        let uplinks = (0..n)
+            .map(|i| net.add_link_with_eta(&format!("datanode{i}-up"), uplink_bps, serving_eta))
+            .collect();
+        HdfsCluster { num_datanodes: n, replication, uplinks }
+    }
+
+    /// Upload a file: each block's replicas land on a uniformly random
+    /// r-subset of datanodes (the paper's simplified placement policy,
+    /// rack awareness off — footnote 3).
+    pub fn upload(&self, size_bytes: u64, block_size: u64, rng: &mut Rng) -> HdfsFile {
+        self.upload_with_policy(size_bytes, block_size, Placement::FlatRandom, rng)
+    }
+
+    /// Upload under an explicit placement policy.
+    pub fn upload_with_policy(
+        &self,
+        size_bytes: u64,
+        block_size: u64,
+        policy: Placement,
+        rng: &mut Rng,
+    ) -> HdfsFile {
+        assert!(size_bytes > 0 && block_size > 0);
+        let blocks = size_bytes.div_ceil(block_size) as usize;
+        let placement = (0..blocks)
+            .map(|_| self.place_block(&policy, rng))
+            .collect();
+        HdfsFile { size_bytes, block_size, placement }
+    }
+
+    fn place_block(&self, policy: &Placement, rng: &mut Rng) -> Vec<DatanodeId> {
+        match *policy {
+            Placement::FlatRandom => rng.subset(self.num_datanodes, self.replication),
+            Placement::RackAware { racks, writer } => {
+                // HDFS default: first replica on the writer's node (or a
+                // random node for remote writers); the other r-1 replicas
+                // concentrated on one *other* rack. Less randomness ->
+                // blocks less broadly spread -> intensified uplink
+                // competition (the paper's footnote 3).
+                assert!(racks >= 2, "rack awareness needs >= 2 racks");
+                assert_eq!(
+                    self.num_datanodes % racks,
+                    0,
+                    "datanodes must divide evenly into racks"
+                );
+                let per_rack = self.num_datanodes / racks;
+                assert!(
+                    self.replication <= per_rack + 1,
+                    "r-1 replicas must fit one rack"
+                );
+                let first = writer.unwrap_or_else(|| rng.below(self.num_datanodes));
+                assert!(first < self.num_datanodes, "writer off-cluster");
+                let first_rack = first / per_rack;
+                let other_rack = {
+                    let k = rng.below(racks - 1);
+                    if k >= first_rack {
+                        k + 1
+                    } else {
+                        k
+                    }
+                };
+                let mut nodes = vec![first];
+                let in_rack = rng.subset(per_rack, self.replication - 1);
+                nodes.extend(in_rack.iter().map(|&i| other_rack * per_rack + i));
+                nodes
+            }
+        }
+    }
+
+    /// A reader's replica choice for `block`: uniform among the replicas
+    /// (all datanodes equally distant, per the paper's setup).
+    pub fn pick_replica(&self, file: &HdfsFile, block: BlockId, rng: &mut Rng) -> DatanodeId {
+        *rng.choose(&file.placement[block])
+    }
+
+    /// Uplink link id for a datanode.
+    pub fn uplink(&self, d: DatanodeId) -> LinkId {
+        self.uplinks[d]
+    }
+}
+
+/// Monte-Carlo check of the paper's Claim 2 probabilities against this
+/// placement/selection implementation: returns empirical `(p1, p2)` — the
+/// probability two readers of the *same* block, resp. of two *different*
+/// blocks, hit the same datanode.
+pub fn empirical_collision_probs(n: usize, r: usize, trials: usize, rng: &mut Rng) -> (f64, f64) {
+    let cluster = HdfsCluster {
+        num_datanodes: n,
+        replication: r,
+        uplinks: (0..n).collect(),
+    };
+    let mut same_block_hits = 0usize;
+    let mut diff_block_hits = 0usize;
+    for _ in 0..trials {
+        // Two fresh blocks with independent placements.
+        let file = HdfsFile {
+            size_bytes: 2,
+            block_size: 1,
+            placement: vec![rng.subset(n, r), rng.subset(n, r)],
+        };
+        let a = cluster.pick_replica(&file, 0, rng);
+        let b = cluster.pick_replica(&file, 0, rng);
+        if a == b {
+            same_block_hits += 1;
+        }
+        let c = cluster.pick_replica(&file, 0, rng);
+        let d = cluster.pick_replica(&file, 1, rng);
+        if c == d {
+            diff_block_hits += 1;
+        }
+    }
+    (
+        same_block_hits as f64 / trials as f64,
+        diff_block_hits as f64 / trials as f64,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis;
+
+    #[test]
+    fn block_layout_and_final_short_block() {
+        let f = HdfsFile {
+            size_bytes: 2_500,
+            block_size: 1_000,
+            placement: vec![vec![0], vec![1], vec![2]],
+        };
+        assert_eq!(f.num_blocks(), 3);
+        assert_eq!(f.block_len(0), 1_000);
+        assert_eq!(f.block_len(2), 500);
+    }
+
+    #[test]
+    fn read_ranges_split_on_block_boundaries() {
+        let f = HdfsFile {
+            size_bytes: 3_000,
+            block_size: 1_000,
+            placement: vec![vec![0], vec![1], vec![2]],
+        };
+        assert_eq!(f.read_ranges(0, 1_000), vec![(0, 1_000)]);
+        assert_eq!(f.read_ranges(500, 1_000), vec![(0, 500), (1, 500)]);
+        assert_eq!(
+            f.read_ranges(250, 2_500),
+            vec![(0, 750), (1, 1_000), (2, 750)]
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "read beyond EOF")]
+    fn read_past_eof_panics() {
+        let f = HdfsFile { size_bytes: 10, block_size: 10, placement: vec![vec![0]] };
+        f.read_ranges(5, 6);
+    }
+
+    #[test]
+    fn upload_places_r_distinct_replicas_per_block() {
+        let mut net = NetSim::new();
+        let cluster = HdfsCluster::build(&mut net, 4, 2, 64e6, 0.0);
+        let mut rng = Rng::new(1);
+        let f = cluster.upload(2 << 30, 1 << 30, &mut rng);
+        assert_eq!(f.num_blocks(), 2);
+        for blk in &f.placement {
+            assert_eq!(blk.len(), 2);
+            assert_ne!(blk[0], blk[1], "replicas must not share a datanode");
+            assert!(blk.iter().all(|&d| d < 4));
+        }
+    }
+
+    #[test]
+    fn uplinks_registered_in_netsim() {
+        let mut net = NetSim::new();
+        let cluster = HdfsCluster::build(&mut net, 4, 2, 64e6, 0.0);
+        assert_eq!(net.num_links(), 4);
+        assert_eq!(net.link(cluster.uplink(2)).capacity_bps, 64e6);
+    }
+
+    #[test]
+    fn empirical_collisions_match_claim2_closed_forms() {
+        // The heart of Sec. 3: measured p1/p2 from the actual placement +
+        // replica-selection code must match Eqs. (1)-(2).
+        let mut rng = Rng::new(42);
+        for &(n, r) in &[(4usize, 2usize), (6, 2), (8, 3), (5, 5)] {
+            let (p1_emp, p2_emp) = empirical_collision_probs(n, r, 200_000, &mut rng);
+            let p1 = analysis::p1(r);
+            let p2 = analysis::p2(n, r);
+            assert!((p1_emp - p1).abs() < 0.01, "n={n} r={r}: p1 {p1_emp} vs {p1}");
+            assert!((p2_emp - p2).abs() < 0.01, "n={n} r={r}: p2 {p2_emp} vs {p2}");
+            assert!(p1 >= p2 - 1e-12, "Claim 2 violated: n={n} r={r}");
+        }
+    }
+
+    #[test]
+    fn rack_aware_replicas_valid_and_concentrated() {
+        let mut net = NetSim::new();
+        let cluster = HdfsCluster::build(&mut net, 8, 3, 64e6, 0.0);
+        let mut rng = Rng::new(5);
+        let f = cluster.upload_with_policy(
+            8 << 20,
+            1 << 20,
+            Placement::RackAware { racks: 2, writer: None },
+            &mut rng,
+        );
+        let per_rack = 4;
+        for blk in &f.placement {
+            assert_eq!(blk.len(), 3);
+            let mut uniq = blk.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            assert_eq!(uniq.len(), 3, "replica collision: {blk:?}");
+            // Replicas 2..r share a rack, different from replica 1's rack.
+            let r0 = blk[0] / per_rack;
+            let r1 = blk[1] / per_rack;
+            assert_ne!(r0, r1, "second replica must change racks");
+            assert_eq!(blk[1] / per_rack, blk[2] / per_rack, "tail replicas same rack");
+        }
+    }
+
+    #[test]
+    fn rack_awareness_with_writer_affinity_intensifies_collisions() {
+        // Footnote 3: rack awareness has less randomness. With a cluster-
+        // local writer (the HDFS default), every block's first replica is
+        // the writer's node, so readers of *different* blocks collide far
+        // more than the flat-random p2. (With a remote writer and
+        // independent placements, pairwise collision is exactly 1/n for
+        // ANY symmetric policy — also checked.)
+        let mut net = NetSim::new();
+        let cluster = HdfsCluster::build(&mut net, 8, 3, 64e6, 0.0);
+        let mut rng = Rng::new(7);
+        let trials = 60_000;
+        let collide = |policy: Placement, rng: &mut Rng| -> f64 {
+            let mut hits = 0usize;
+            for _ in 0..trials {
+                let f = cluster.upload_with_policy(2, 1, policy, rng);
+                let a = cluster.pick_replica(&f, 0, rng);
+                let b = cluster.pick_replica(&f, 1, rng);
+                if a == b {
+                    hits += 1;
+                }
+            }
+            hits as f64 / trials as f64
+        };
+        let flat = collide(Placement::FlatRandom, &mut rng);
+        let remote = collide(Placement::RackAware { racks: 2, writer: None }, &mut rng);
+        let local = collide(
+            Placement::RackAware { racks: 2, writer: Some(0) },
+            &mut rng,
+        );
+        let p2 = analysis::p2(8, 3);
+        assert!((flat - p2).abs() < 0.01, "flat {flat} vs closed form {p2}");
+        // Symmetric-policy identity: remote-writer rack awareness keeps
+        // pairwise collision at 1/n.
+        assert!((remote - 1.0 / 8.0).abs() < 0.01, "remote {remote}");
+        // Writer affinity: analytic 2/9 for (n=8, r=3, 2 racks).
+        assert!(
+            (local - 2.0 / 9.0).abs() < 0.01,
+            "writer-affinity collision {local} vs 2/9"
+        );
+        assert!(local > flat * 1.5, "footnote 3 effect: {local} vs {flat}");
+    }
+}

@@ -1,0 +1,50 @@
+//! # HeMT — Heterogeneous MacroTasking for Parallel Processing in the Public Cloud
+//!
+//! A full reproduction of Shan, Kesidis, Urgaonkar, Schad, Khamse-Ashari &
+//! Lambadaris, *"Heterogeneous MacroTasking (HeMT) for Parallel Processing
+//! in the Public Cloud"* (2018), as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: a
+//!   Spark-like driver ([`coordinator`]) over a Mesos-like cluster manager
+//!   ([`cluster`]), with the HeMT partitioners ([`partition`]), the
+//!   OA-HeMT online speed estimator and burstable-credit planner
+//!   ([`estimator`]), plus every substrate the paper's testbed needed:
+//!   an HDFS model ([`hdfs`]), node capacity models ([`nodes`]), a
+//!   max-min-fair network ([`netsim`]) and a deterministic fluid
+//!   discrete-event engine ([`sim`]).
+//! * **L2/L1 (build time, `python/compile/`)** — the workloads' compute
+//!   bodies (WordCount histogram, K-Means Lloyd step, PageRank matvec) as
+//!   JAX functions over Pallas kernels, AOT-lowered to HLO text.
+//! * **Runtime bridge** — [`runtime`] loads the HLO artifacts via PJRT and
+//!   [`exec`] runs them on real data from the coordinator's request path
+//!   (python is never on that path).
+//!
+//! Two execution modes share one coordinator:
+//!
+//! * `sim` — the fluid DES reproduces every figure of the paper's
+//!   evaluation (see [`experiments`] and `rust/benches/`).
+//! * `real` — tasks execute the compiled PJRT artifacts on this machine,
+//!   with heterogeneity imposed by duty-cycle throttling; measured task
+//!   times feed the same OA-HeMT estimator (see `examples/`).
+//!
+//! Entry points: the `hemt` binary (`hemt figure 9`, `hemt run ...`),
+//! the examples, and the per-figure benches.
+
+pub mod analysis;
+pub mod bench_harness;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod estimator;
+pub mod exec;
+pub mod experiments;
+pub mod hdfs;
+pub mod metrics;
+pub mod netsim;
+pub mod nodes;
+pub mod partition;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,238 @@
+//! `hemt` — the HeMT reproduction CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!
+//! * `hemt figure <4|5|7|8|9|10|13|14|15|17|18|headline|all> [--json]` —
+//!   regenerate a paper figure on the simulation substrate and print the
+//!   paper-shaped table (or JSON).
+//! * `hemt run --config <file.json> [--json]` — run a custom experiment
+//!   described by an [`hemt::config::ExperimentConfig`].
+//! * `hemt analysis` — print the closed-form Claim 1 / Claim 2 numbers.
+//! * `hemt plan-credits --work <W> <credits...>` — the Sec. 6.2 burstable
+//!   credit planner: split `W` CPU-minutes across t2.small-like nodes.
+//! * `hemt real <wordcount|kmeans|pagerank>` — run the workload for real
+//!   through the PJRT artifacts on a throttled heterogeneous pool
+//!   (requires `make artifacts`).
+//! * `hemt artifacts` — list the loaded AOT artifacts.
+
+use std::process::ExitCode;
+
+use hemt::estimator::credits::{plan, CreditCurve};
+use hemt::{analysis, config, experiments};
+
+fn usage() -> &'static str {
+    "usage:
+  hemt figure <id|all> [--json]     reproduce a paper figure (4,5,7,8,9,10,13,14,15,17,18,headline)
+  hemt ablation <name|all> [--json] design-choice ablations (alpha, speculation, rack, stale_credits)
+  hemt run --config <file> [--json] run an experiment config
+  hemt analysis                     closed-form Claim 1 / Claim 2 numbers
+  hemt plan-credits --work <W> <c1> <c2> ...   burstable credit planner
+  hemt real <wordcount|kmeans|pagerank>        real PJRT execution demo
+  hemt artifacts                    list AOT artifacts"
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let result = match args.first().map(String::as_str) {
+        Some("figure") => cmd_figure(&args[1..]),
+        Some("ablation") => cmd_ablation(&args[1..]),
+        Some("run") => cmd_run(&args[1..]),
+        Some("analysis") => cmd_analysis(),
+        Some("plan-credits") => cmd_plan_credits(&args[1..]),
+        Some("real") => cmd_real(&args[1..]),
+        Some("artifacts") => cmd_artifacts(),
+        Some("--help") | Some("-h") | None => {
+            println!("{}", usage());
+            Ok(())
+        }
+        Some(other) => Err(format!("unknown command '{other}'\n{}", usage())),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn cmd_figure(args: &[String]) -> Result<(), String> {
+    let json = args.iter().any(|a| a == "--json");
+    let name = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .ok_or("figure id required")?;
+    let names: Vec<&str> = if name == "all" {
+        experiments::ALL_FIGURES.to_vec()
+    } else {
+        vec![name.as_str()]
+    };
+    for n in names {
+        let fig = experiments::by_name(n).ok_or_else(|| format!("unknown figure '{n}'"))?;
+        if json {
+            println!("{}", fig.to_json().pretty());
+        } else {
+            println!("{}", fig.to_table());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_ablation(args: &[String]) -> Result<(), String> {
+    let json = args.iter().any(|a| a == "--json");
+    let name = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .ok_or("ablation name required")?;
+    let names: Vec<&str> = if name == "all" {
+        experiments::ablations::ALL_ABLATIONS.to_vec()
+    } else {
+        vec![name.as_str()]
+    };
+    for n in names {
+        let fig = experiments::ablations::by_name(n)
+            .ok_or_else(|| format!("unknown ablation '{n}'"))?;
+        if json {
+            println!("{}", fig.to_json().pretty());
+        } else {
+            println!("{}", fig.to_table());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &[String]) -> Result<(), String> {
+    let json = args.iter().any(|a| a == "--json");
+    let path = args
+        .iter()
+        .position(|a| a == "--config")
+        .and_then(|i| args.get(i + 1))
+        .ok_or("--config <file> required")?;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    let cfg = config::ExperimentConfig::from_str(&text)?;
+    let fig = run_config(&cfg);
+    if json {
+        println!("{}", fig.to_json().pretty());
+    } else {
+        println!("{}", fig.to_table());
+    }
+    Ok(())
+}
+
+/// Execute a config: `trials` runs of the configured workload under the
+/// configured policy, reporting completion-time stats.
+fn run_config(cfg: &config::ExperimentConfig) -> hemt::metrics::Figure {
+    use config::WorkloadKind;
+    let mut fig = hemt::metrics::Figure::new(&cfg.name, "trial set", "completion time (s)");
+    let times: Vec<f64> = (0..cfg.trials)
+        .map(|t| {
+            let seed = cfg.base_seed + 1000 * t as u64;
+            match cfg.workload.kind {
+                WorkloadKind::WordCount => {
+                    let mut s = cfg
+                        .cluster
+                        .build_session(hemt::coordinator::driver::SimParams::default(), seed);
+                    let file = s.hdfs.upload(
+                        cfg.workload.data_mb * experiments::MB,
+                        cfg.workload.block_mb * experiments::MB,
+                        &mut s.rng,
+                    );
+                    let map = experiments::resolve_policy(&cfg.policy, &s, None);
+                    let reduce = map.clone();
+                    let job = hemt::workloads::wordcount_job(
+                        file,
+                        map,
+                        reduce,
+                        cfg.workload.cpu_secs_per_mb,
+                    );
+                    s.run_job(&job).completion_time()
+                }
+                WorkloadKind::KMeans => {
+                    experiments::kmeans_total_time(&cfg.cluster, &cfg.workload, &cfg.policy, seed)
+                }
+                WorkloadKind::PageRank => {
+                    experiments::pagerank_total_time(&cfg.cluster, &cfg.workload, &cfg.policy, seed)
+                }
+            }
+        })
+        .collect();
+    let mut series = hemt::metrics::Series::new(cfg.workload.kind.name());
+    series.push(0.0, &cfg.name, &times);
+    fig.add(series);
+    fig
+}
+
+fn cmd_analysis() -> Result<(), String> {
+    println!("Claim 2 (Sec. 3): same-datanode collision probabilities");
+    println!("{:>4} {:>4} {:>10} {:>10}", "n", "r", "p1", "p2");
+    for r in [2usize, 3] {
+        for n in [r, 4, 8, 16, 30] {
+            if n >= r {
+                println!(
+                    "{:>4} {:>4} {:>10.4} {:>10.4}",
+                    n,
+                    r,
+                    analysis::p1(r),
+                    analysis::p2(n, r)
+                );
+            }
+        }
+    }
+    println!();
+    println!("Claim 1 (Sec. 3): pull-based idle-time bound demo (speeds 1.0/0.4)");
+    for m in [2usize, 8, 32] {
+        let f = analysis::pull_schedule_finish_times(&[1.0, 0.4], 100.0 / m as f64, m);
+        println!(
+            "  m={m:>3}: idle {:>7.2} s <= bound {:>7.2} s",
+            analysis::idle_time(&f),
+            analysis::claim1_bound(&[100.0 / m as f64 / 1.0, 100.0 / m as f64 / 0.4])
+        );
+    }
+    Ok(())
+}
+
+fn cmd_plan_credits(args: &[String]) -> Result<(), String> {
+    let work_pos = args
+        .iter()
+        .position(|a| a == "--work")
+        .ok_or("--work <cpu-minutes> required")?;
+    let work: f64 = args
+        .get(work_pos + 1)
+        .ok_or("--work needs a value")?
+        .parse()
+        .map_err(|e| format!("bad --work: {e}"))?;
+    let credits: Vec<f64> = args
+        .iter()
+        .enumerate()
+        .filter(|&(i, a)| !a.starts_with("--") && i != work_pos + 1)
+        .map(|(_, a)| a.parse().map_err(|e| format!("bad credit value '{a}': {e}")))
+        .collect::<Result<_, _>>()?;
+    if credits.is_empty() {
+        return Err("need at least one node's credit balance".into());
+    }
+    let curves: Vec<CreditCurve> = credits.iter().map(|&c| CreditCurve::t2_small(c)).collect();
+    let p = plan(&curves, work).ok_or("workload unreachable with these curves")?;
+    println!("t' = {:.4} minutes (all nodes finish simultaneously)", p.t_prime);
+    for (i, (c, share)) in credits.iter().zip(p.shares.iter()).enumerate() {
+        println!(
+            "  node {i}: credits {c:>6.2} -> share {share:>8.4} CPU-min ({:.1}%)",
+            100.0 * share / work
+        );
+    }
+    Ok(())
+}
+
+fn cmd_real(args: &[String]) -> Result<(), String> {
+    let wl = args.first().ok_or("workload required: wordcount|kmeans|pagerank")?;
+    hemt::exec::demo::run_demo(wl).map_err(|e| format!("{e:#}"))
+}
+
+fn cmd_artifacts() -> Result<(), String> {
+    let rt = hemt::runtime::Runtime::load_default().map_err(|e| format!("{e:#}"))?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts dir: {}", rt.artifacts_dir().display());
+    for name in rt.artifact_names() {
+        println!("  {name}");
+    }
+    Ok(())
+}

@@ -1,0 +1,301 @@
+//! Run records and figure-shaped reporting.
+//!
+//! Every simulated or real run produces a [`JobRecord`] tree (job → stages
+//! → tasks) from which the experiment drivers compute the quantities the
+//! paper plots: stage completion times, job finish times, per-executor
+//! task times (synchronization delay), and the ±1σ beams.
+
+use crate::util::{json, Summary};
+
+/// One task's lifecycle within a stage.
+#[derive(Debug, Clone)]
+pub struct TaskRecord {
+    pub task: usize,
+    pub executor: usize,
+    pub bytes: u64,
+    /// Driver dispatch time (start of scheduling overhead).
+    pub dispatched: f64,
+    /// Work began on the executor.
+    pub started: f64,
+    /// Task fully complete (input read + compute).
+    pub finished: f64,
+}
+
+impl TaskRecord {
+    pub fn duration(&self) -> f64 {
+        self.finished - self.started
+    }
+}
+
+/// One stage: tasks plus the barrier bounds.
+#[derive(Debug, Clone, Default)]
+pub struct StageRecord {
+    pub tasks: Vec<TaskRecord>,
+    pub start: f64,
+    pub end: f64,
+}
+
+impl StageRecord {
+    pub fn completion_time(&self) -> f64 {
+        self.end - self.start
+    }
+
+    /// Synchronization delay at the stage barrier: the paper's *resource
+    /// idling time* — latest executor finish time minus earliest executor
+    /// finish time (each executor "finishes" with its last task).
+    pub fn sync_delay(&self) -> f64 {
+        if self.tasks.is_empty() {
+            return 0.0;
+        }
+        let mut last_by_exec: std::collections::BTreeMap<usize, f64> = Default::default();
+        for t in &self.tasks {
+            let e = last_by_exec.entry(t.executor).or_insert(f64::NEG_INFINITY);
+            *e = e.max(t.finished);
+        }
+        let first = last_by_exec.values().cloned().fold(f64::INFINITY, f64::min);
+        let last = last_by_exec.values().cloned().fold(f64::NEG_INFINITY, f64::max);
+        last - first
+    }
+
+    /// Bytes processed by each executor in this stage.
+    pub fn executor_bytes(&self, num_executors: usize) -> Vec<u64> {
+        let mut out = vec![0u64; num_executors];
+        for t in &self.tasks {
+            out[t.executor] += t.bytes;
+        }
+        out
+    }
+}
+
+/// One job: a barrier-separated stage sequence.
+#[derive(Debug, Clone, Default)]
+pub struct JobRecord {
+    pub stages: Vec<StageRecord>,
+    pub start: f64,
+    pub end: f64,
+}
+
+impl JobRecord {
+    pub fn completion_time(&self) -> f64 {
+        self.end - self.start
+    }
+
+    /// First (map) stage completion — what Figs. 9 & 13–15 plot.
+    pub fn map_stage_time(&self) -> f64 {
+        self.stages.first().map(StageRecord::completion_time).unwrap_or(0.0)
+    }
+}
+
+/// One plotted point: x plus the summary of repeated trials at that x.
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub x: f64,
+    pub label: String,
+    pub stats: Summary,
+}
+
+/// A named series — one curve/beam of a paper figure.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<Point>,
+}
+
+impl Series {
+    pub fn new(name: &str) -> Series {
+        Series { name: name.to_string(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, label: &str, samples: &[f64]) {
+        self.points.push(Point {
+            x,
+            label: label.to_string(),
+            stats: Summary::of(samples),
+        });
+    }
+
+    /// The series minimum by mean — e.g. "best HomT configuration".
+    pub fn best(&self) -> Option<&Point> {
+        self.points
+            .iter()
+            .min_by(|a, b| a.stats.mean.partial_cmp(&b.stats.mean).unwrap())
+    }
+}
+
+/// A figure: series plus axis labels, printable as the paper-shaped table.
+#[derive(Debug, Clone)]
+pub struct Figure {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub series: Vec<Series>,
+}
+
+impl Figure {
+    pub fn new(title: &str, x_label: &str, y_label: &str) -> Figure {
+        Figure {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            y_label: y_label.to_string(),
+            series: Vec::new(),
+        }
+    }
+
+    pub fn add(&mut self, s: Series) {
+        self.series.push(s);
+    }
+
+    /// Render the rows the paper's figure shows, one line per point:
+    /// `series | x | mean ± std [beam]`.
+    pub fn to_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        out.push_str(&format!(
+            "{:<28} {:>12} {:>24} {:>10}\n",
+            "series",
+            self.x_label.as_str(),
+            format!("{} (mean ± σ)", self.y_label),
+            "n"
+        ));
+        for s in &self.series {
+            for p in &s.points {
+                let x = if p.label.is_empty() {
+                    format!("{:.6}", p.x)
+                        .trim_end_matches('0')
+                        .trim_end_matches('.')
+                        .to_string()
+                } else {
+                    p.label.clone()
+                };
+                out.push_str(&format!(
+                    "{:<28} {:>12} {:>24} {:>10}\n",
+                    s.name,
+                    x,
+                    p.stats.pm(2),
+                    p.stats.n
+                ));
+            }
+        }
+        out
+    }
+
+    /// Machine-readable form for EXPERIMENTS.md tooling.
+    pub fn to_json(&self) -> json::Value {
+        json::obj(vec![
+            ("title", json::s(&self.title)),
+            ("x_label", json::s(&self.x_label)),
+            ("y_label", json::s(&self.y_label)),
+            (
+                "series",
+                json::arr(
+                    self.series
+                        .iter()
+                        .map(|s| {
+                            json::obj(vec![
+                                ("name", json::s(&s.name)),
+                                (
+                                    "points",
+                                    json::arr(
+                                        s.points
+                                            .iter()
+                                            .map(|p| {
+                                                json::obj(vec![
+                                                    ("x", json::num(p.x)),
+                                                    ("label", json::s(&p.label)),
+                                                    ("mean", json::num(p.stats.mean)),
+                                                    ("std", json::num(p.stats.std)),
+                                                    ("n", json::num(p.stats.n as f64)),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stage(finishes: &[f64]) -> StageRecord {
+        StageRecord {
+            tasks: finishes
+                .iter()
+                .enumerate()
+                .map(|(i, &f)| TaskRecord {
+                    task: i,
+                    executor: i % 2,
+                    bytes: 100,
+                    dispatched: 0.0,
+                    started: 0.0,
+                    finished: f,
+                })
+                .collect(),
+            start: 0.0,
+            end: finishes.iter().cloned().fold(0.0, f64::max),
+        }
+    }
+
+    #[test]
+    fn sync_delay_is_executor_finish_spread() {
+        // Executors alternate 0,1,0: exec0 last-finish 12, exec1 14.
+        let s = stage(&[10.0, 14.0, 12.0]);
+        assert!((s.sync_delay() - 2.0).abs() < 1e-12);
+        assert!((s.completion_time() - 14.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn executor_bytes_aggregates() {
+        let s = stage(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.executor_bytes(2), vec![200, 100]);
+    }
+
+    #[test]
+    fn job_times() {
+        let j = JobRecord {
+            stages: vec![stage(&[5.0]), stage(&[3.0])],
+            start: 1.0,
+            end: 9.0,
+        };
+        assert!((j.completion_time() - 8.0).abs() < 1e-12);
+        assert!((j.map_stage_time() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn series_best_finds_minimum_mean() {
+        let mut s = Series::new("homt");
+        s.push(2.0, "2", &[100.0, 110.0]);
+        s.push(8.0, "8", &[80.0, 84.0]);
+        s.push(64.0, "64", &[95.0, 99.0]);
+        assert_eq!(s.best().unwrap().x, 8.0);
+    }
+
+    #[test]
+    fn figure_table_contains_all_rows() {
+        let mut f = Figure::new("Fig 9", "partitions", "stage time (s)");
+        let mut s = Series::new("HomT");
+        s.push(2.0, "", &[100.0]);
+        f.add(s);
+        let t = f.to_table();
+        assert!(t.contains("Fig 9"));
+        assert!(t.contains("HomT"));
+        assert!(t.contains("100.00"));
+    }
+
+    #[test]
+    fn figure_json_roundtrips() {
+        let mut f = Figure::new("Fig 4", "n", "p");
+        let mut s = Series::new("p1");
+        s.push(4.0, "", &[0.5, 0.5]);
+        f.add(s);
+        let v = f.to_json();
+        let parsed = crate::util::json::Value::parse(&v.pretty()).unwrap();
+        assert_eq!(parsed.get("title").unwrap().as_str(), Some("Fig 4"));
+    }
+}

@@ -1,0 +1,412 @@
+//! Fluid network model with max-min fair bandwidth sharing.
+//!
+//! Links are capacity-limited pipes (datanode uplinks, compute-node
+//! downlinks); a flow occupies a route (a set of links) and receives the
+//! max-min fair rate computed by progressive filling — the standard model
+//! of TCP-fair sharing the paper's HDFS uplink-contention analysis (Sec. 3)
+//! assumes. This is the substrate on which microtasking's datanode uplink
+//! collisions (Claim 2, Figs 5 & 15) become completion-time effects.
+
+use std::collections::BTreeMap;
+
+pub type LinkId = usize;
+pub type FlowId = u64;
+
+/// A capacity-limited pipe, in bits/second.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub capacity_bps: f64,
+    pub name: String,
+    /// Serving-efficiency loss under concurrency: with `n` concurrent
+    /// flows the link's effective capacity is
+    /// `capacity / (1 + eta * (n - 1))`. Models the paper's observation
+    /// that concurrent readers make a (t2.small) datanode's CPU and
+    /// network use inefficient (Sec. 3); 0 = ideal pipe.
+    pub concurrency_eta: f64,
+}
+
+impl Link {
+    /// Effective capacity with `n` concurrent flows.
+    pub fn effective_capacity(&self, n: usize) -> f64 {
+        if n <= 1 {
+            self.capacity_bps
+        } else {
+            self.capacity_bps / (1.0 + self.concurrency_eta * (n as f64 - 1.0))
+        }
+    }
+}
+
+/// A fluid flow traversing a set of links.
+#[derive(Debug, Clone)]
+pub struct Flow {
+    pub id: FlowId,
+    pub route: Vec<LinkId>,
+    /// Remaining volume, in bits.
+    pub remaining: f64,
+    /// Opaque correlation tag owned by the driver.
+    pub tag: u64,
+    /// Per-flow rate cap (bits/s) — models receiver backpressure: a
+    /// pipelined task only pulls input as fast as it consumes it
+    /// (`f64::INFINITY` = unconstrained).
+    pub limit: f64,
+    /// Current max-min fair rate (bits/s); valid after `recompute_rates`.
+    pub rate: f64,
+}
+
+/// Reusable scratch buffers for `recompute_rates` (the hot path).
+#[derive(Debug, Default)]
+struct RateScratch {
+    limits: Vec<f64>,
+    route_flat: Vec<LinkId>,
+    route_span: Vec<(usize, usize)>,
+    rates: Vec<f64>,
+    capped: Vec<bool>,
+    uncapped_per_link: Vec<usize>,
+    residual: Vec<f64>,
+}
+
+/// The flow network: links plus currently-active flows.
+#[derive(Debug, Default)]
+pub struct NetSim {
+    links: Vec<Link>,
+    flows: BTreeMap<FlowId, Flow>,
+    next_id: FlowId,
+    rates_dirty: bool,
+    scratch: RateScratch,
+}
+
+impl NetSim {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add an ideal link; returns its id.
+    pub fn add_link(&mut self, name: &str, capacity_bps: f64) -> LinkId {
+        self.add_link_with_eta(name, capacity_bps, 0.0)
+    }
+
+    /// Add a link with a concurrency-efficiency loss factor.
+    pub fn add_link_with_eta(&mut self, name: &str, capacity_bps: f64, eta: f64) -> LinkId {
+        assert!(capacity_bps > 0.0, "link capacity must be positive");
+        assert!(eta >= 0.0, "eta must be non-negative");
+        self.links.push(Link {
+            capacity_bps,
+            name: name.to_string(),
+            concurrency_eta: eta,
+        });
+        self.links.len() - 1
+    }
+
+    pub fn link(&self, id: LinkId) -> &Link {
+        &self.links[id]
+    }
+
+    pub fn num_links(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Start an unconstrained flow of `bits` over `route`. Returns its id.
+    pub fn add_flow(&mut self, route: Vec<LinkId>, bits: f64, tag: u64) -> FlowId {
+        self.add_flow_with_limit(route, bits, tag, f64::INFINITY)
+    }
+
+    /// Start a flow with a receiver-side rate cap (backpressure).
+    pub fn add_flow_with_limit(
+        &mut self,
+        route: Vec<LinkId>,
+        bits: f64,
+        tag: u64,
+        limit: f64,
+    ) -> FlowId {
+        assert!(bits > 0.0, "flow volume must be positive");
+        assert!(!route.is_empty(), "flow needs at least one link");
+        assert!(limit > 0.0, "flow limit must be positive");
+        for &l in &route {
+            assert!(l < self.links.len(), "unknown link {l}");
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.flows
+            .insert(id, Flow { id, route, remaining: bits, tag, limit, rate: 0.0 });
+        self.rates_dirty = true;
+        id
+    }
+
+    pub fn remove_flow(&mut self, id: FlowId) -> Option<Flow> {
+        let f = self.flows.remove(&id);
+        if f.is_some() {
+            self.rates_dirty = true;
+        }
+        f
+    }
+
+    pub fn flow(&self, id: FlowId) -> Option<&Flow> {
+        self.flows.get(&id)
+    }
+
+    pub fn active_flows(&self) -> impl Iterator<Item = &Flow> {
+        self.flows.values()
+    }
+
+    pub fn num_flows(&self) -> usize {
+        self.flows.len()
+    }
+
+    /// Recompute every flow's max-min fair rate by progressive filling:
+    /// repeatedly find the most-loaded unsaturated link, fix its flows at
+    /// the equal share of its residual capacity, and continue.
+    pub fn recompute_rates(&mut self) {
+        if !self.rates_dirty {
+            return;
+        }
+        self.rates_dirty = false;
+        let n_links = self.links.len();
+        let n_flows = self.flows.len();
+        // Snapshot flow metadata into flat scratch buffers (reused across
+        // calls) so the filling loops below are allocation- and
+        // tree-lookup-free — this is the simulator's hottest function.
+        let s = &mut self.scratch;
+        s.limits.clear();
+        s.route_flat.clear();
+        s.route_span.clear();
+        s.rates.clear();
+        s.capped.clear();
+        for f in self.flows.values() {
+            s.limits.push(f.limit);
+            let start = s.route_flat.len();
+            s.route_flat.extend_from_slice(&f.route);
+            s.route_span.push((start, f.route.len()));
+            s.rates.push(0.0);
+            s.capped.push(false);
+        }
+        s.uncapped_per_link.clear();
+        s.uncapped_per_link.resize(n_links, 0);
+        for &l in &s.route_flat {
+            s.uncapped_per_link[l] += 1;
+        }
+        // Concurrency-degraded capacities, fixed for this allocation round
+        // (stream count per link is known up front).
+        s.residual.clear();
+        s.residual.extend(
+            self.links
+                .iter()
+                .enumerate()
+                .map(|(l, link)| link.effective_capacity(s.uncapped_per_link[l])),
+        );
+
+        let mut remaining = n_flows;
+        while remaining > 0 {
+            // Bottleneck link: smallest equal-share among links that still
+            // carry uncapped flows.
+            let mut best: Option<(f64, LinkId)> = None;
+            for l in 0..n_links {
+                if s.uncapped_per_link[l] == 0 {
+                    continue;
+                }
+                let share = s.residual[l] / s.uncapped_per_link[l] as f64;
+                if best.map_or(true, |(b, _)| share < b) {
+                    best = Some((share, l));
+                }
+            }
+            let Some((share, bott)) = best else { break };
+            // Receiver backpressure: flows whose own limit is below the
+            // bottleneck share saturate first — fix them at their limit
+            // and refill.
+            let mut limited = false;
+            for i in 0..n_flows {
+                if s.capped[i] || s.limits[i] > share {
+                    continue;
+                }
+                s.rates[i] = s.limits[i];
+                s.capped[i] = true;
+                remaining -= 1;
+                let (start, len) = s.route_span[i];
+                for &l in &s.route_flat[start..start + len] {
+                    s.residual[l] = (s.residual[l] - s.limits[i]).max(0.0);
+                    s.uncapped_per_link[l] -= 1;
+                }
+                limited = true;
+            }
+            if limited {
+                continue; // shares changed — recompute the bottleneck
+            }
+            // Cap every uncapped flow crossing the bottleneck at `share`.
+            for i in 0..n_flows {
+                if s.capped[i] {
+                    continue;
+                }
+                let (start, len) = s.route_span[i];
+                let route = &s.route_flat[start..start + len];
+                if !route.contains(&bott) {
+                    continue;
+                }
+                s.rates[i] = share;
+                s.capped[i] = true;
+                remaining -= 1;
+                for &l in route {
+                    s.residual[l] -= share;
+                    s.uncapped_per_link[l] -= 1;
+                }
+            }
+            // Guard against fp drift leaving tiny negative residuals.
+            s.residual[bott] = s.residual[bott].max(0.0);
+        }
+        // Write rates back (BTreeMap iteration order matches the snapshot
+        // order above).
+        for (f, &rate) in self.flows.values_mut().zip(s.rates.iter()) {
+            f.rate = rate;
+        }
+    }
+
+    /// Earliest completion among active flows at current rates:
+    /// `(dt_from_now, flow_id)`. Requires fresh rates.
+    pub fn next_completion(&self) -> Option<(f64, FlowId)> {
+        assert!(!self.rates_dirty, "rates stale — call recompute_rates");
+        self.flows
+            .values()
+            .filter(|f| f.rate > 0.0)
+            .map(|f| (f.remaining / f.rate, f.id))
+            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)))
+    }
+
+    /// Advance every flow by `dt` seconds at current rates.
+    pub fn advance(&mut self, dt: f64) {
+        assert!(!self.rates_dirty, "rates stale — call recompute_rates");
+        for f in self.flows.values_mut() {
+            f.remaining = (f.remaining - f.rate * dt).max(0.0);
+        }
+    }
+
+    /// Flows whose volume is exhausted (ready to complete), in id order.
+    pub fn finished_flows(&self) -> Vec<FlowId> {
+        self.flows
+            .values()
+            .filter(|f| f.remaining <= 1e-6)
+            .map(|f| f.id)
+            .collect()
+    }
+
+    /// First finished flow by id, allocation-free (hot-path variant).
+    pub fn first_finished_flow(&self) -> Option<FlowId> {
+        self.flows
+            .values()
+            .find(|f| f.remaining <= 1e-6)
+            .map(|f| f.id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net_with(caps: &[f64]) -> NetSim {
+        let mut n = NetSim::new();
+        for (i, &c) in caps.iter().enumerate() {
+            n.add_link(&format!("l{i}"), c);
+        }
+        n
+    }
+
+    #[test]
+    fn single_flow_gets_full_bottleneck() {
+        let mut n = net_with(&[100.0, 50.0]);
+        let f = n.add_flow(vec![0, 1], 1000.0, 0);
+        n.recompute_rates();
+        assert_eq!(n.flow(f).unwrap().rate, 50.0);
+    }
+
+    #[test]
+    fn two_flows_share_a_link_equally() {
+        let mut n = net_with(&[100.0]);
+        let a = n.add_flow(vec![0], 1000.0, 0);
+        let b = n.add_flow(vec![0], 1000.0, 1);
+        n.recompute_rates();
+        assert_eq!(n.flow(a).unwrap().rate, 50.0);
+        assert_eq!(n.flow(b).unwrap().rate, 50.0);
+    }
+
+    #[test]
+    fn max_min_redistributes_headroom() {
+        // Flow a crosses both links; flow b only link 0; flow c only link 1.
+        // Link0 = 100, link1 = 30. Progressive filling: link1 share = 15
+        // caps a and c; then b gets 100 - 15 = 85.
+        let mut n = net_with(&[100.0, 30.0]);
+        let a = n.add_flow(vec![0, 1], 1e6, 0);
+        let b = n.add_flow(vec![0], 1e6, 1);
+        let c = n.add_flow(vec![1], 1e6, 2);
+        n.recompute_rates();
+        assert!((n.flow(a).unwrap().rate - 15.0).abs() < 1e-9);
+        assert!((n.flow(c).unwrap().rate - 15.0).abs() < 1e-9);
+        assert!((n.flow(b).unwrap().rate - 85.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rates_respect_all_link_capacities() {
+        use crate::util::{prop, Rng};
+        prop::check("netsim-capacity", 0xBEEF, 200, |rng: &mut Rng| {
+            let n_links = rng.range(1, 6);
+            let caps: Vec<f64> = (0..n_links).map(|_| rng.range_f64(10.0, 1000.0)).collect();
+            let mut net = net_with(&caps);
+            let n_flows = rng.range(1, 12);
+            for t in 0..n_flows {
+                let route_len = rng.range(1, n_links + 1);
+                let mut route = rng.subset(n_links, route_len);
+                route.sort_unstable();
+                net.add_flow(route, rng.range_f64(1.0, 1e6), t as u64);
+            }
+            net.recompute_rates();
+            // (1) No link over capacity.
+            let mut load = vec![0.0; n_links];
+            for f in net.active_flows() {
+                assert!(f.rate > 0.0, "active flow starved");
+                for &l in &f.route {
+                    load[l] += f.rate;
+                }
+            }
+            for l in 0..n_links {
+                assert!(load[l] <= caps[l] * (1.0 + 1e-9), "link {l} overloaded");
+            }
+            // (2) Max-min property: a flow's rate can only be limited by a
+            // saturated link on its route.
+            for f in net.active_flows() {
+                let on_saturated = f.route.iter().any(|&l| load[l] >= caps[l] * (1.0 - 1e-6));
+                assert!(on_saturated, "flow {} not bottlenecked anywhere", f.id);
+            }
+        });
+    }
+
+    #[test]
+    fn advance_and_complete() {
+        let mut n = net_with(&[100.0]);
+        let a = n.add_flow(vec![0], 200.0, 7);
+        n.recompute_rates();
+        let (dt, id) = n.next_completion().unwrap();
+        assert_eq!(id, a);
+        assert!((dt - 2.0).abs() < 1e-9);
+        n.advance(dt);
+        assert_eq!(n.finished_flows(), vec![a]);
+        let f = n.remove_flow(a).unwrap();
+        assert_eq!(f.tag, 7);
+        assert_eq!(n.num_flows(), 0);
+    }
+
+    #[test]
+    fn removal_releases_bandwidth() {
+        let mut n = net_with(&[100.0]);
+        let a = n.add_flow(vec![0], 1e6, 0);
+        let b = n.add_flow(vec![0], 1e6, 1);
+        n.recompute_rates();
+        assert_eq!(n.flow(b).unwrap().rate, 50.0);
+        n.remove_flow(a);
+        n.recompute_rates();
+        assert_eq!(n.flow(b).unwrap().rate, 100.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "rates stale")]
+    fn stale_rates_are_rejected() {
+        let mut n = net_with(&[100.0]);
+        n.add_flow(vec![0], 1.0, 0);
+        n.advance(0.1);
+    }
+}

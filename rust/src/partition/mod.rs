@@ -1,0 +1,303 @@
+//! Workload partitioners: the paper's core knob.
+//!
+//! * [`Partitioning::even`] — Spark's default: one equal task per slot.
+//! * [`Partitioning::homt`] — Homogeneous microTasking: `m` equal tasks
+//!   (`m >>` slots) consumed pull-based (Sec. 3).
+//! * [`Partitioning::hemt`] — Heterogeneous MacroTasking: one task per
+//!   executor, sized proportionally to capacity weights (Sec. 4,
+//!   `d_i = D * v_i / V`).
+//! * [`SkewedHashPartitioner`] — the paper's Algorithm 1: a shuffle
+//!   partitioner that skews reduce buckets by capacity weights so HeMT
+//!   survives multi-stage jobs (Sec. 7).
+
+/// How a stage's input of `total` bytes is split into tasks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Partitioning {
+    /// Per-task input sizes, in bytes; sums to the stage input.
+    pub task_bytes: Vec<u64>,
+}
+
+impl Partitioning {
+    /// `m` equal tasks (HomT when `m >>` slots; Spark default when `m` =
+    /// slots). Remainder bytes spread one-per-task from the front, so
+    /// sizes differ by at most one byte.
+    pub fn even(total: u64, m: usize) -> Partitioning {
+        assert!(m > 0, "need at least one task");
+        let base = total / m as u64;
+        let rem = (total % m as u64) as usize;
+        let task_bytes = (0..m).map(|i| base + u64::from(i < rem)).collect();
+        Partitioning { task_bytes }
+    }
+
+    /// Alias for [`Partitioning::even`] documenting intent at call sites.
+    pub fn homt(total: u64, m: usize) -> Partitioning {
+        Self::even(total, m)
+    }
+
+    /// HeMT: one task per executor, `d_i = D * w_i / sum(w)` (Sec. 5.1),
+    /// with byte-level remainders assigned by largest fractional part so
+    /// the total is exact.
+    pub fn hemt(total: u64, weights: &[f64]) -> Partitioning {
+        assert!(!weights.is_empty(), "need at least one executor");
+        assert!(
+            weights.iter().all(|&w| w > 0.0 && w.is_finite()),
+            "weights must be positive and finite: {weights:?}"
+        );
+        let sum: f64 = weights.iter().sum();
+        // Largest-remainder apportionment: exact, deterministic.
+        let exact: Vec<f64> = weights.iter().map(|w| total as f64 * w / sum).collect();
+        let mut task_bytes: Vec<u64> = exact.iter().map(|x| x.floor() as u64).collect();
+        let assigned: u64 = task_bytes.iter().sum();
+        let mut order: Vec<usize> = (0..weights.len()).collect();
+        order.sort_by(|&a, &b| {
+            let fa = exact[a] - exact[a].floor();
+            let fb = exact[b] - exact[b].floor();
+            fb.partial_cmp(&fa).unwrap().then(a.cmp(&b))
+        });
+        for k in 0..(total - assigned) as usize {
+            task_bytes[order[k % order.len()]] += 1;
+        }
+        Partitioning { task_bytes }
+    }
+
+    pub fn num_tasks(&self) -> usize {
+        self.task_bytes.len()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.task_bytes.iter().sum()
+    }
+
+    /// Byte offsets `(start, len)` of each task within the stage input,
+    /// in task order — how the driver maps tasks onto the HDFS file.
+    pub fn ranges(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::with_capacity(self.task_bytes.len());
+        let mut off = 0;
+        for &len in &self.task_bytes {
+            out.push((off, len));
+            off += len;
+        }
+        out
+    }
+}
+
+/// The paper's Algorithm 1: a hash partitioner whose bucket boundaries
+/// follow the cumulative capacity weights, so reducer `i` receives a
+/// `w_i / sum(w)` share of shuffled records in expectation.
+#[derive(Debug, Clone)]
+pub struct SkewedHashPartitioner {
+    /// Cumulative integer capacity boundaries (Algorithm 1's prefix sums).
+    cumulative: Vec<u64>,
+}
+
+impl SkewedHashPartitioner {
+    /// Build from executor capacity weights, integer-scaled to
+    /// parts-per-`scale` (minimum one part each so no bucket is empty) —
+    /// Algorithm 1 with float capacities made exact.
+    pub fn new(weights: &[f64], scale: u64) -> SkewedHashPartitioner {
+        assert!(!weights.is_empty());
+        assert!(weights.iter().all(|&w| w > 0.0 && w.is_finite()));
+        let sum: f64 = weights.iter().sum();
+        let mut cumulative = Vec::with_capacity(weights.len());
+        let mut acc = 0u64;
+        for &w in weights {
+            let parts = ((w / sum * scale as f64).round() as u64).max(1);
+            acc += parts;
+            cumulative.push(acc);
+        }
+        SkewedHashPartitioner { cumulative }
+    }
+
+    /// Even hash partitioner (Spark default): equal buckets.
+    pub fn even(num_buckets: usize) -> SkewedHashPartitioner {
+        Self::new(&vec![1.0; num_buckets], num_buckets as u64)
+    }
+
+    pub fn num_buckets(&self) -> usize {
+        self.cumulative.len()
+    }
+
+    /// Algorithm 1: `hash = r.hashCode mod sum(executors)`, return the
+    /// bucket whose cumulative capacity first exceeds the hash.
+    pub fn bucket_of(&self, record_hash: u64) -> usize {
+        let total = *self.cumulative.last().unwrap();
+        let h = record_hash % total;
+        // Binary search over the (sorted) cumulative boundaries.
+        match self.cumulative.binary_search(&(h + 1)) {
+            Ok(i) | Err(i) => i,
+        }
+    }
+
+    /// Expected fraction of records landing in each bucket.
+    pub fn bucket_fractions(&self) -> Vec<f64> {
+        let total = *self.cumulative.last().unwrap() as f64;
+        let mut prev = 0u64;
+        self.cumulative
+            .iter()
+            .map(|&c| {
+                let f = (c - prev) as f64 / total;
+                prev = c;
+                f
+            })
+            .collect()
+    }
+}
+
+/// FNV-1a — the record-hash stand-in for JVM `hashCode` in Algorithm 1.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn even_splits_exactly() {
+        let p = Partitioning::even(10, 3);
+        assert_eq!(p.task_bytes, vec![4, 3, 3]);
+        assert_eq!(p.total(), 10);
+    }
+
+    #[test]
+    fn even_sizes_differ_by_at_most_one() {
+        prop::check("even-balance", 0xE7E7, 300, |rng: &mut Rng| {
+            let total = rng.below(1 << 30) as u64;
+            let m = rng.range(1, 128);
+            let p = Partitioning::even(total, m);
+            assert_eq!(p.total(), total);
+            let max = *p.task_bytes.iter().max().unwrap();
+            let min = *p.task_bytes.iter().min().unwrap();
+            assert!(max - min <= 1);
+        });
+    }
+
+    #[test]
+    fn hemt_proportional_to_weights() {
+        // The paper's container experiment ratio: 1.0 vs 0.4 cores.
+        let p = Partitioning::hemt(1400, &[1.0, 0.4]);
+        assert_eq!(p.task_bytes, vec![1000, 400]);
+    }
+
+    #[test]
+    fn hemt_fudge_factor_partition() {
+        // Sec. 6.2's learned 1 : 0.32 split of 2 GB.
+        let total = 2u64 << 30;
+        let p = Partitioning::hemt(total, &[1.0, 0.32]);
+        let frac = p.task_bytes[0] as f64 / total as f64;
+        assert!((frac - 1.0 / 1.32).abs() < 1e-6);
+        assert_eq!(p.total(), total);
+    }
+
+    #[test]
+    fn hemt_is_exact_and_proportional() {
+        prop::check("hemt-exact", 0xAE71, 300, |rng: &mut Rng| {
+            let n = rng.range(1, 10);
+            let weights: Vec<f64> = (0..n).map(|_| rng.range_f64(0.05, 4.0)).collect();
+            let total = rng.below(1 << 31) as u64;
+            let p = Partitioning::hemt(total, &weights);
+            assert_eq!(p.total(), total, "bytes lost");
+            assert_eq!(p.num_tasks(), n);
+            let sum: f64 = weights.iter().sum();
+            for i in 0..n {
+                let ideal = total as f64 * weights[i] / sum;
+                assert!(
+                    (p.task_bytes[i] as f64 - ideal).abs() <= 1.0 + 1e-6,
+                    "task {i}: {} vs ideal {ideal}",
+                    p.task_bytes[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn ranges_are_contiguous() {
+        let p = Partitioning::hemt(100, &[3.0, 1.0]);
+        assert_eq!(p.ranges(), vec![(0, 75), (75, 25)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "weights must be positive")]
+    fn hemt_rejects_zero_weight() {
+        Partitioning::hemt(10, &[1.0, 0.0]);
+    }
+
+    #[test]
+    fn skewed_hash_matches_weights_statistically() {
+        let part = SkewedHashPartitioner::new(&[1.0, 0.4], 1000);
+        let mut counts = vec![0usize; 2];
+        let mut rng = Rng::new(99);
+        let n = 200_000;
+        for _ in 0..n {
+            counts[part.bucket_of(rng.next_u64())] += 1;
+        }
+        let f0 = counts[0] as f64 / n as f64;
+        assert!((f0 - 1.0 / 1.4).abs() < 0.01, "f0 {f0}");
+    }
+
+    #[test]
+    fn even_hash_is_uniform() {
+        let part = SkewedHashPartitioner::even(4);
+        let mut counts = vec![0usize; 4];
+        let mut rng = Rng::new(5);
+        for _ in 0..100_000 {
+            counts[part.bucket_of(rng.next_u64())] += 1;
+        }
+        for &c in &counts {
+            assert!((22_000..28_000).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn bucket_fractions_sum_to_one_and_track_weights() {
+        prop::check("skew-fractions", 0x5CEB, 200, |rng: &mut Rng| {
+            let n = rng.range(1, 8);
+            let weights: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 3.0)).collect();
+            let part = SkewedHashPartitioner::new(&weights, 10_000);
+            let fr = part.bucket_fractions();
+            assert_eq!(fr.len(), n);
+            assert!((fr.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            let sum: f64 = weights.iter().sum();
+            for i in 0..n {
+                assert!((fr[i] - weights[i] / sum).abs() < 0.01);
+            }
+        });
+    }
+
+    #[test]
+    fn every_bucket_reachable() {
+        prop::check("skew-reachable", 0xBEE5, 100, |rng: &mut Rng| {
+            let n = rng.range(1, 6);
+            let weights: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 3.0)).collect();
+            let part = SkewedHashPartitioner::new(&weights, 100);
+            let mut seen = vec![false; n];
+            for h in 0..10_000u64 {
+                seen[part.bucket_of(h)] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "unreachable bucket: {seen:?}");
+        });
+    }
+
+    #[test]
+    fn fnv_disperses() {
+        let a = fnv1a(b"record-1");
+        let b = fnv1a(b"record-2");
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn alg1_reference_example() {
+        // Algorithm 1 with integer capacities [3, 4, 4] (the Sec. 6.2
+        // worked example's {3,4,4} weights): hashes 0..10 map to buckets
+        // 0,0,0,1,1,1,1,2,2,2,2.
+        let part = SkewedHashPartitioner::new(&[3.0, 4.0, 4.0], 11);
+        let got: Vec<usize> = (0..11u64).map(|h| part.bucket_of(h)).collect();
+        assert_eq!(got, vec![0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2]);
+    }
+}

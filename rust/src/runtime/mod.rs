@@ -1,0 +1,244 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts and executes them
+//! from the rust request path (python is build-time only).
+//!
+//! Pattern (see `/opt/xla-example/load_hlo`): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format — jax >= 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids. Entry computations are lowered with
+//! `return_tuple=True`, so results unwrap with `to_tuple`.
+
+pub mod shapes;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Value;
+use shapes::*;
+
+/// The default artifact directory (relative to the repo root).
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// One loaded, compiled artifact.
+struct LoadedArtifact {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: a CPU client plus the compiled artifact set from
+/// `artifacts/manifest.json`.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, LoadedArtifact>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load every artifact listed in `<dir>/manifest.json` and compile it
+    /// on a fresh PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest =
+            Value::parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut artifacts = HashMap::new();
+        for (name, entry) in manifest.as_obj().ok_or_else(|| anyhow!("manifest not an object"))? {
+            let file = entry
+                .get("file")
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow!("artifact '{name}' missing file"))?;
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            artifacts.insert(name.clone(), LoadedArtifact { exe });
+        }
+        Ok(Runtime { client, artifacts, dir })
+    }
+
+    /// Try the repo-default location; `Err` explains how to build.
+    pub fn load_default() -> Result<Runtime> {
+        Self::load(DEFAULT_ARTIFACTS_DIR)
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.artifacts.keys().map(String::as_str).collect();
+        names.sort_unstable();
+        names
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Execute an artifact on input literals; returns the decomposed
+    /// result tuple.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let art = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}' (have {:?})", self.artifact_names()))?;
+        let result = art.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    // ---- typed per-workload wrappers (fixed block shapes) ----
+
+    /// WordCount map block: weighted histogram of `WORDCOUNT_BLOCK_TOKENS`
+    /// token ids. `weights[i] = 0.0` marks padding.
+    pub fn wordcount_block(&self, tokens: &[i32], weights: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(tokens.len() == WORDCOUNT_BLOCK_TOKENS, "bad token block");
+        anyhow::ensure!(weights.len() == WORDCOUNT_BLOCK_TOKENS, "bad weight block");
+        let t = xla::Literal::vec1(tokens);
+        let w = xla::Literal::vec1(weights);
+        let out = self.execute("wordcount", &[t, w])?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// K-Means Lloyd block: per-cluster `(sums, counts)` for one block of
+    /// `KMEANS_BLOCK_POINTS` x `KMEANS_DIM` points against `KMEANS_K`
+    /// centroids.
+    pub fn kmeans_block(
+        &self,
+        points: &[f32],
+        weights: &[f32],
+        centroids: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        anyhow::ensure!(points.len() == KMEANS_BLOCK_POINTS * KMEANS_DIM, "bad point block");
+        anyhow::ensure!(weights.len() == KMEANS_BLOCK_POINTS, "bad weight block");
+        anyhow::ensure!(centroids.len() == KMEANS_K * KMEANS_DIM, "bad centroids");
+        let p = xla::Literal::vec1(points)
+            .reshape(&[KMEANS_BLOCK_POINTS as i64, KMEANS_DIM as i64])?;
+        let w = xla::Literal::vec1(weights);
+        let c = xla::Literal::vec1(centroids).reshape(&[KMEANS_K as i64, KMEANS_DIM as i64])?;
+        let out = self.execute("kmeans", &[p, w, c])?;
+        Ok((out[0].to_vec::<f32>()?, out[1].to_vec::<f32>()?))
+    }
+
+    /// PageRank block: damped matvec for `PAGERANK_ROW_BLOCK` rows of the
+    /// `PAGERANK_N`-node transition matrix.
+    pub fn pagerank_block(&self, p_rows: &[f32], rank: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(p_rows.len() == PAGERANK_ROW_BLOCK * PAGERANK_N, "bad row block");
+        anyhow::ensure!(rank.len() == PAGERANK_N, "bad rank vector");
+        let p = xla::Literal::vec1(p_rows)
+            .reshape(&[PAGERANK_ROW_BLOCK as i64, PAGERANK_N as i64])?;
+        let r = xla::Literal::vec1(rank);
+        let out = self.execute("pagerank", &[p, r])?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+}
+
+/// True when the artifact manifest exists (used by tests/examples to give
+/// an actionable skip message instead of a failure).
+pub fn artifacts_available(dir: impl AsRef<Path>) -> bool {
+    dir.as_ref().join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime_or_skip() -> Option<Runtime> {
+        if !artifacts_available(DEFAULT_ARTIFACTS_DIR) {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            return None;
+        }
+        Some(Runtime::load_default().expect("artifacts load"))
+    }
+
+    #[test]
+    fn loads_all_three_artifacts() {
+        let Some(rt) = runtime_or_skip() else { return };
+        assert_eq!(rt.artifact_names(), vec!["kmeans", "pagerank", "wordcount"]);
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    }
+
+    #[test]
+    fn wordcount_counts_tokens_exactly() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let mut tokens = vec![0i32; WORDCOUNT_BLOCK_TOKENS];
+        let mut weights = vec![0f32; WORDCOUNT_BLOCK_TOKENS];
+        // 100 tokens of id 7, 50 of id 1023, rest padding.
+        for t in tokens.iter_mut().take(100) {
+            *t = 7;
+        }
+        for w in weights.iter_mut().take(100) {
+            *w = 1.0;
+        }
+        for i in 100..150 {
+            tokens[i] = 1023;
+            weights[i] = 1.0;
+        }
+        let counts = rt.wordcount_block(&tokens, &weights).unwrap();
+        assert_eq!(counts.len(), WORDCOUNT_BINS);
+        assert_eq!(counts[7], 100.0);
+        assert_eq!(counts[1023], 50.0);
+        assert_eq!(counts.iter().sum::<f32>(), 150.0);
+    }
+
+    #[test]
+    fn kmeans_matches_cpu_reference() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let mut rng = crate::util::Rng::new(11);
+        let points: Vec<f32> = (0..KMEANS_BLOCK_POINTS * KMEANS_DIM)
+            .map(|_| rng.normal() as f32)
+            .collect();
+        let weights: Vec<f32> = (0..KMEANS_BLOCK_POINTS)
+            .map(|i| (i % 2) as f32)
+            .collect();
+        let centroids: Vec<f32> = (0..KMEANS_K * KMEANS_DIM)
+            .map(|_| rng.normal() as f32)
+            .collect();
+        let (sums, counts) = rt.kmeans_block(&points, &weights, &centroids).unwrap();
+        assert_eq!(sums.len(), KMEANS_K * KMEANS_DIM);
+        assert_eq!(counts.len(), KMEANS_K);
+        // Invariant: counts sum to the weight mass.
+        let mass: f32 = weights.iter().sum();
+        assert!((counts.iter().sum::<f32>() - mass).abs() < 1.0);
+        // Invariant: per-dim sums of `sums` equal weighted point sums.
+        for d in 0..KMEANS_DIM {
+            let lhs: f32 = (0..KMEANS_K).map(|k| sums[k * KMEANS_DIM + d]).sum();
+            let rhs: f32 = (0..KMEANS_BLOCK_POINTS)
+                .map(|i| weights[i] * points[i * KMEANS_DIM + d])
+                .sum();
+            assert!((lhs - rhs).abs() / rhs.abs().max(1.0) < 1e-3, "dim {d}: {lhs} vs {rhs}");
+        }
+    }
+
+    #[test]
+    fn pagerank_preserves_rank_mass() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let mut rng = crate::util::Rng::new(5);
+        let matrix = crate::workloads::gen::transition_matrix(PAGERANK_N, 8, &mut rng);
+        let rank = vec![1.0f32 / PAGERANK_N as f32; PAGERANK_N];
+        // Full iteration = 4 row blocks.
+        let mut next = Vec::with_capacity(PAGERANK_N);
+        for b in 0..PAGERANK_N / PAGERANK_ROW_BLOCK {
+            let rows =
+                &matrix[b * PAGERANK_ROW_BLOCK * PAGERANK_N..(b + 1) * PAGERANK_ROW_BLOCK * PAGERANK_N];
+            next.extend(rt.pagerank_block(rows, &rank).unwrap());
+        }
+        let mass: f32 = next.iter().sum();
+        assert!((mass - 1.0).abs() < 1e-3, "mass {mass}");
+    }
+
+    #[test]
+    fn unknown_artifact_is_an_error() {
+        let Some(rt) = runtime_or_skip() else { return };
+        assert!(rt.execute("nope", &[]).is_err());
+    }
+}

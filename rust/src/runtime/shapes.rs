@@ -1,0 +1,30 @@
+//! Frozen AOT artifact shapes — the rust mirror of
+//! `python/compile/model.py`. The AOT artifacts are shape-specialized, so
+//! these constants are the contract between the two sides; changing one
+//! requires regenerating `artifacts/` (`make artifacts`).
+
+/// WordCount: tokens per block and histogram bins.
+pub const WORDCOUNT_BLOCK_TOKENS: usize = 65536;
+pub const WORDCOUNT_BINS: usize = 1024;
+
+/// K-Means: points per block, feature dim, cluster count.
+pub const KMEANS_BLOCK_POINTS: usize = 4096;
+pub const KMEANS_DIM: usize = 32;
+pub const KMEANS_K: usize = 16;
+
+/// PageRank: graph order and rows per block.
+pub const PAGERANK_N: usize = 1024;
+pub const PAGERANK_ROW_BLOCK: usize = 256;
+pub const PAGERANK_DAMPING: f64 = 0.85;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocks_divide_cleanly() {
+        assert_eq!(PAGERANK_N % PAGERANK_ROW_BLOCK, 0);
+        assert!(WORDCOUNT_BLOCK_TOKENS.is_power_of_two());
+        assert!(KMEANS_BLOCK_POINTS.is_power_of_two());
+    }
+}

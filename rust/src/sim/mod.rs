@@ -1,0 +1,469 @@
+//! Deterministic fluid discrete-event engine.
+//!
+//! Combines three resource models into one clock:
+//!
+//! * network flows with max-min fair rates ([`crate::netsim`]),
+//! * CPU jobs sharing each node's (time-varying) capacity by water-filling
+//!   with per-job caps ([`crate::nodes`]),
+//! * user timers (driver dispatch latencies, probes, arrivals).
+//!
+//! The engine advances in variable steps to the earliest of: a timer, a
+//! flow completion, a CPU-job completion, or a node capacity change
+//! (credit depletion/replenish, interference boundary). Rates are
+//! recomputed after every change, so completion times under shifting
+//! contention are exact for the fluid model. All randomness comes from the
+//! seeded [`crate::util::Rng`] owned by the caller — identical seeds give
+//! identical schedules, which is what makes the paper's figure sweeps
+//! replayable.
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
+
+use crate::netsim::{FlowId, LinkId, NetSim};
+use crate::nodes::{water_fill, Node};
+
+pub type NodeId = usize;
+pub type JobId = u64;
+
+/// A CPU job: `remaining` core-seconds of work on `node`, rate-capped at
+/// `cap` cores (the executor's CFS limit).
+#[derive(Debug, Clone)]
+pub struct CpuJob {
+    pub id: JobId,
+    pub node: NodeId,
+    pub cap: f64,
+    pub remaining: f64,
+    pub tag: u64,
+    rate: f64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+struct Timer {
+    time: f64,
+    seq: u64,
+    tag: u64,
+}
+
+impl Eq for Timer {}
+
+impl PartialOrd for Timer {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Timer {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time
+            .partial_cmp(&other.time)
+            .unwrap()
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// What the engine hands back to the driver.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A timer set with [`Engine::set_timer`] fired.
+    Timer { tag: u64 },
+    /// A network flow delivered all its bits.
+    FlowDone { id: FlowId, tag: u64 },
+    /// A CPU job finished its work.
+    JobDone { id: JobId, tag: u64 },
+}
+
+/// The simulation world: clock + network + nodes + CPU jobs + timers.
+pub struct Engine {
+    pub now: f64,
+    pub net: NetSim,
+    pub nodes: Vec<Node>,
+    jobs: BTreeMap<JobId, CpuJob>,
+    timers: BinaryHeap<Reverse<Timer>>,
+    next_job: JobId,
+    next_seq: u64,
+    /// CPU-rate cache invalidation: set when the job set changes; node
+    /// capacity changes are detected by comparing `capacity_cache`.
+    cpu_rates_dirty: bool,
+    capacity_cache: Vec<f64>,
+}
+
+impl Engine {
+    pub fn new(nodes: Vec<Node>, net: NetSim) -> Engine {
+        Engine {
+            now: 0.0,
+            net,
+            nodes,
+            jobs: BTreeMap::new(),
+            timers: BinaryHeap::new(),
+            next_job: 0,
+            next_seq: 0,
+            cpu_rates_dirty: true,
+            capacity_cache: Vec::new(),
+        }
+    }
+
+    /// Schedule a timer at absolute time `at` (>= now).
+    pub fn set_timer(&mut self, at: f64, tag: u64) {
+        assert!(at >= self.now - 1e-9, "timer in the past: {at} < {}", self.now);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.timers.push(Reverse(Timer { time: at.max(self.now), seq, tag }));
+    }
+
+    /// Start a CPU job of `work` core-seconds on `node`, capped at `cap`
+    /// cores.
+    pub fn add_cpu_job(&mut self, node: NodeId, cap: f64, work: f64, tag: u64) -> JobId {
+        assert!(node < self.nodes.len(), "unknown node {node}");
+        assert!(work > 0.0, "job work must be positive");
+        assert!(cap > 0.0, "job cap must be positive");
+        let id = self.next_job;
+        self.next_job += 1;
+        self.jobs
+            .insert(id, CpuJob { id, node, cap, remaining: work, tag, rate: 0.0 });
+        self.cpu_rates_dirty = true;
+        id
+    }
+
+    /// Start a network flow of `bits` over `route`.
+    pub fn add_flow(&mut self, route: Vec<LinkId>, bits: f64, tag: u64) -> FlowId {
+        self.net.add_flow(route, bits, tag)
+    }
+
+    /// Start a backpressure-limited flow (receiver consumes at most
+    /// `limit` bits/s).
+    pub fn add_flow_with_limit(
+        &mut self,
+        route: Vec<LinkId>,
+        bits: f64,
+        tag: u64,
+        limit: f64,
+    ) -> FlowId {
+        self.net.add_flow_with_limit(route, bits, tag, limit)
+    }
+
+    pub fn cpu_job(&self, id: JobId) -> Option<&CpuJob> {
+        self.jobs.get(&id)
+    }
+
+    /// Cancel a running CPU job (speculative-execution loser kill).
+    pub fn cancel_cpu_job(&mut self, id: JobId) -> Option<CpuJob> {
+        let j = self.jobs.remove(&id);
+        if j.is_some() {
+            self.cpu_rates_dirty = true;
+        }
+        j
+    }
+
+    /// Cancel a flow (speculative-execution loser kill).
+    pub fn cancel_flow(&mut self, id: crate::netsim::FlowId) {
+        self.net.remove_flow(id);
+    }
+
+    pub fn num_cpu_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Per-node total CPU usage (cores) at current rates.
+    fn node_usage(&self) -> Vec<f64> {
+        let mut usage = vec![0.0; self.nodes.len()];
+        for j in self.jobs.values() {
+            usage[j.node] += j.rate;
+        }
+        usage
+    }
+
+    /// Recompute CPU job rates if the job set or any node's capacity
+    /// changed since the last computation (the hot-path fast-out: steady
+    /// intervals between events skip the water-fill entirely).
+    fn recompute_cpu_rates(&mut self) {
+        let changed = self.cpu_rates_dirty
+            || self.capacity_cache.len() != self.nodes.len()
+            || self
+                .nodes
+                .iter()
+                .zip(self.capacity_cache.iter())
+                .any(|(n, &c)| n.available_cores(self.now) != c);
+        if !changed {
+            return;
+        }
+        self.cpu_rates_dirty = false;
+        self.capacity_cache.clear();
+        self.capacity_cache
+            .extend(self.nodes.iter().map(|n| n.available_cores(self.now)));
+        let mut per_node: BTreeMap<NodeId, Vec<JobId>> = BTreeMap::new();
+        for j in self.jobs.values() {
+            per_node.entry(j.node).or_default().push(j.id);
+        }
+        for (node, ids) in per_node {
+            let capacity = self.capacity_cache[node];
+            let caps: Vec<f64> = ids.iter().map(|i| self.jobs[i].cap).collect();
+            let rates = water_fill(capacity, &caps);
+            for (i, id) in ids.iter().enumerate() {
+                self.jobs.get_mut(id).unwrap().rate = rates[i];
+            }
+        }
+    }
+
+    /// Advance the world to the next event and return it; `None` when the
+    /// simulation has fully drained (no timers, flows, or jobs).
+    pub fn step(&mut self) -> Option<Event> {
+        // Livelock guard: a correct model never needs this many zero-
+        // progress iterations; fail loudly instead of spinning forever
+        // (e.g. on an fp-zeno node-state oscillation).
+        let mut stalled_iters = 0u32;
+        loop {
+            stalled_iters += 1;
+            assert!(
+                stalled_iters < 100_000,
+                "engine livelock at t={}: {} flows, {} jobs, {} timers",
+                self.now,
+                self.net.num_flows(),
+                self.jobs.len(),
+                self.timers.len()
+            );
+            // 0. Deliver any already-elapsed completions (zero-dt events).
+            if let Some(ev) = self.pop_ready() {
+                return Some(ev);
+            }
+            if self.timers.is_empty() && self.net.num_flows() == 0 && self.jobs.is_empty() {
+                return None;
+            }
+
+            // 1. Fresh rates for both resource kinds.
+            self.net.recompute_rates();
+            self.recompute_cpu_rates();
+
+            // 2. Candidate times for the next state change.
+            let mut dt = f64::INFINITY;
+            if let Some(Reverse(t)) = self.timers.peek() {
+                dt = dt.min(t.time - self.now);
+            }
+            if let Some((d, _)) = self.net.next_completion() {
+                dt = dt.min(d);
+            }
+            for j in self.jobs.values() {
+                if j.rate > 0.0 {
+                    dt = dt.min(j.remaining / j.rate);
+                }
+            }
+            let usage = self.node_usage();
+            for (i, n) in self.nodes.iter().enumerate() {
+                if let Some(t) = n.next_state_change(self.now, usage[i]) {
+                    dt = dt.min(t - self.now);
+                }
+            }
+            assert!(
+                dt.is_finite(),
+                "deadlock at t={}: {} flows, {} jobs stalled",
+                self.now,
+                self.net.num_flows(),
+                self.jobs.len()
+            );
+            let dt = dt.max(0.0);
+            if dt > 1e-9 {
+                stalled_iters = 0; // real progress — not a livelock
+            }
+
+            // 3. Advance the world by dt.
+            self.net.advance(dt);
+            for j in self.jobs.values_mut() {
+                j.remaining = (j.remaining - j.rate * dt).max(0.0);
+            }
+            for (i, n) in self.nodes.iter_mut().enumerate() {
+                n.advance(self.now, dt, usage[i]);
+            }
+            self.now += dt;
+            // Loop: pop_ready will deliver whatever completed; if only a
+            // node state change happened, rates get recomputed and we
+            // continue.
+        }
+    }
+
+    /// Pop one due event in deterministic order: timers, then flows (by
+    /// id), then CPU jobs (by id).
+    fn pop_ready(&mut self) -> Option<Event> {
+        if let Some(Reverse(t)) = self.timers.peek() {
+            if t.time <= self.now + 1e-9 {
+                let t = self.timers.pop().unwrap().0;
+                return Some(Event::Timer { tag: t.tag });
+            }
+        }
+        if let Some(id) = self.net.first_finished_flow() {
+            let f = self.net.remove_flow(id).unwrap();
+            return Some(Event::FlowDone { id, tag: f.tag });
+        }
+        let done_job = self
+            .jobs
+            .values()
+            .find(|j| j.remaining <= 1e-9)
+            .map(|j| j.id);
+        if let Some(id) = done_job {
+            let j = self.jobs.remove(&id).unwrap();
+            self.cpu_rates_dirty = true;
+            return Some(Event::JobDone { id, tag: j.tag });
+        }
+        None
+    }
+
+    /// Drain the simulation, collecting `(time, event)` pairs — test and
+    /// small-experiment convenience.
+    pub fn run_to_end(&mut self) -> Vec<(f64, Event)> {
+        let mut out = Vec::new();
+        while let Some(ev) = self.step() {
+            out.push((self.now, ev));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nodes::Burstable;
+
+    fn one_node() -> Vec<Node> {
+        vec![Node::fixed("n0", 1.0)]
+    }
+
+    #[test]
+    fn timer_fires_at_time() {
+        let mut e = Engine::new(one_node(), NetSim::new());
+        e.set_timer(5.0, 42);
+        let ev = e.step().unwrap();
+        assert_eq!(ev, Event::Timer { tag: 42 });
+        assert!((e.now - 5.0).abs() < 1e-9);
+        assert_eq!(e.step(), None);
+    }
+
+    #[test]
+    fn timers_fire_in_order_with_fifo_ties() {
+        let mut e = Engine::new(one_node(), NetSim::new());
+        e.set_timer(2.0, 1);
+        e.set_timer(1.0, 2);
+        e.set_timer(2.0, 3);
+        let evs = e.run_to_end();
+        let tags: Vec<u64> = evs
+            .iter()
+            .map(|(_, ev)| match ev {
+                Event::Timer { tag } => *tag,
+                _ => panic!(),
+            })
+            .collect();
+        assert_eq!(tags, vec![2, 1, 3]);
+    }
+
+    #[test]
+    fn cpu_job_duration_scales_with_capacity() {
+        let mut e = Engine::new(vec![Node::fixed("slow", 0.4)], NetSim::new());
+        e.add_cpu_job(0, 1.0, 4.0, 7); // 4 core-s at 0.4 cores -> 10 s
+        let ev = e.step().unwrap();
+        assert!(matches!(ev, Event::JobDone { tag: 7, .. }));
+        assert!((e.now - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cfs_cap_limits_job_rate() {
+        // Full node, but the executor is capped at 0.4 cores.
+        let mut e = Engine::new(one_node(), NetSim::new());
+        e.add_cpu_job(0, 0.4, 4.0, 0);
+        e.step().unwrap();
+        assert!((e.now - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn colocated_jobs_share_a_node_fairly() {
+        let mut e = Engine::new(one_node(), NetSim::new());
+        e.add_cpu_job(0, 1.0, 5.0, 0); // shares 0.5 each until first exits
+        e.add_cpu_job(0, 1.0, 10.0, 1);
+        let evs = e.run_to_end();
+        // Job 0: 5 core-s at 0.5 -> done at t=10. Then job 1 has 5 left at
+        // rate 1.0 -> done at t=15.
+        assert!((evs[0].0 - 10.0).abs() < 1e-9);
+        assert!((evs[1].0 - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn flow_and_job_complete_independently() {
+        let mut net = NetSim::new();
+        let l = net.add_link("up", 100.0);
+        let mut e = Engine::new(one_node(), net);
+        e.add_flow(vec![l], 300.0, 10); // 3 s
+        e.add_cpu_job(0, 1.0, 2.0, 20); // 2 s
+        let evs = e.run_to_end();
+        assert_eq!(evs.len(), 2);
+        assert!(matches!(evs[0].1, Event::JobDone { tag: 20, .. }));
+        assert!((evs[0].0 - 2.0).abs() < 1e-9);
+        assert!(matches!(evs[1].1, Event::FlowDone { tag: 10, .. }));
+        assert!((evs[1].0 - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn burstable_node_slows_mid_job() {
+        // 80 core-s of credit, busy at 1.0 with earn 0.4: depletes at
+        // t = 80/(1-0.4) = 133.33; job of 200 core-s then finishes the
+        // remaining 200-133.33 at 0.4.
+        let b = Burstable::t2_medium_core(80.0);
+        let mut e = Engine::new(vec![Node::burstable("b", b)], NetSim::new());
+        e.add_cpu_job(0, 1.0, 200.0, 0);
+        let evs = e.run_to_end();
+        let t_deplete = 80.0 / 0.6;
+        let expect = t_deplete + (200.0 - t_deplete) / 0.4;
+        assert!((evs[0].0 - expect).abs() < 1e-6, "got {}, want {expect}", evs[0].0);
+    }
+
+    #[test]
+    fn interference_step_slows_job() {
+        // Node halves at t=5: 10 core-s job -> 5 at rate 1 (t=5), then
+        // 5 core-s at 0.5 -> 10 more seconds: t=15.
+        let n = Node::fixed("n", 1.0).with_interference(vec![(5.0, 0.5)]);
+        let mut e = Engine::new(vec![n], NetSim::new());
+        e.add_cpu_job(0, 1.0, 10.0, 0);
+        let evs = e.run_to_end();
+        assert!((evs[0].0 - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shared_uplink_contention_serializes_flows() {
+        // Two flows over one 100 bps link, 100 bits each: both at 50 bps,
+        // complete together at t=2 (fluid fair sharing).
+        let mut net = NetSim::new();
+        let l = net.add_link("up", 100.0);
+        let mut e = Engine::new(one_node(), net);
+        e.add_flow(vec![l], 100.0, 0);
+        e.add_flow(vec![l], 100.0, 1);
+        let evs = e.run_to_end();
+        assert!((evs[0].0 - 2.0).abs() < 1e-9);
+        assert!((evs[1].0 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn drained_engine_returns_none() {
+        let mut e = Engine::new(one_node(), NetSim::new());
+        assert_eq!(e.step(), None);
+    }
+
+    #[test]
+    fn determinism_under_identical_setup() {
+        let build = || {
+            let mut net = NetSim::new();
+            let l = net.add_link("up", 64e6);
+            let mut e = Engine::new(
+                vec![Node::fixed("a", 1.0), Node::fixed("b", 0.4)],
+                net,
+            );
+            for i in 0..10 {
+                e.add_cpu_job(i % 2, 1.0, 3.0 + i as f64, 100 + i as u64);
+                e.add_flow(vec![l], 1e6 * (i + 1) as f64, 200 + i as u64);
+                e.set_timer(i as f64 * 0.5, 300 + i as u64);
+            }
+            e
+        };
+        let a = build().run_to_end();
+        let b = build().run_to_end();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.0, y.0);
+            assert_eq!(x.1, y.1);
+        }
+    }
+}

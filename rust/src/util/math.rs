@@ -1,0 +1,76 @@
+//! Exact combinatorics for the paper's HDFS replica analysis (Sec. 3):
+//! binomial coefficients and the hypergeometric pmf behind Eq. (3).
+
+/// Binomial coefficient C(n, k) as f64, exact for the n <= 60 range the
+/// replica analysis uses (computed multiplicatively to avoid overflow).
+pub fn binom(n: u64, k: u64) -> f64 {
+    if k > n {
+        return 0.0;
+    }
+    let k = k.min(n - k);
+    let mut acc = 1.0f64;
+    for i in 0..k {
+        acc = acc * (n - i) as f64 / (i + 1) as f64;
+    }
+    acc
+}
+
+/// Hypergeometric pmf P(v): of the r datanodes holding block B's replicas,
+/// the probability exactly v also hold block A's replicas, when each
+/// block's replicas occupy a uniformly random r-subset of n datanodes
+/// (paper Eq. (3)).
+pub fn hypergeom_pv(n: u64, r: u64, v: u64) -> f64 {
+    binom(r, v) * binom(n - r, r - v) / binom(n, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binom_small_values() {
+        assert_eq!(binom(5, 0), 1.0);
+        assert_eq!(binom(5, 5), 1.0);
+        assert_eq!(binom(5, 2), 10.0);
+        assert_eq!(binom(10, 3), 120.0);
+        assert_eq!(binom(3, 5), 0.0);
+    }
+
+    #[test]
+    fn binom_symmetry() {
+        for n in 0..30u64 {
+            for k in 0..=n {
+                assert!((binom(n, k) - binom(n, n - k)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn binom_pascal() {
+        for n in 1..40u64 {
+            for k in 1..n {
+                let lhs = binom(n, k);
+                let rhs = binom(n - 1, k - 1) + binom(n - 1, k);
+                assert!((lhs - rhs).abs() / rhs.max(1.0) < 1e-12, "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn hypergeom_sums_to_one() {
+        for n in 2..20u64 {
+            for r in 1..=n / 2 {
+                let lo = (2 * r).saturating_sub(n);
+                let total: f64 = (lo..=r).map(|v| hypergeom_pv(n, r, v)).sum();
+                assert!((total - 1.0).abs() < 1e-9, "n={n} r={r} total={total}");
+            }
+        }
+    }
+
+    #[test]
+    fn hypergeom_r_equals_n_is_deterministic() {
+        // When replicas cover every node, overlap is exactly r.
+        assert!((hypergeom_pv(3, 3, 3) - 1.0).abs() < 1e-12);
+        assert_eq!(hypergeom_pv(3, 3, 2), 0.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Self-contained utility layer: deterministic RNG, statistics, exact
+//! combinatorics, a minimal JSON codec, and a property-test helper.
+//!
+//! The offline vendor set has no `rand`/`serde`/`proptest`, so these are
+//! implemented from scratch here (and tested like any other substrate).
+
+pub mod json;
+pub mod math;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::Summary;

@@ -1,0 +1,54 @@
+//! Tiny property-testing helper (the vendor set has no `proptest`).
+//!
+//! `check` runs a property over `cases` seeded RNG-driven inputs and, on
+//! failure, reports the failing case's seed so it can be replayed as a
+//! pinned regression test. Shrinking is out of scope — seeds are stable,
+//! so a failing seed IS the minimal repro handle.
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` deterministic random cases derived from
+/// `base_seed`. Panics (with the failing seed) on the first violation.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, base_seed: u64, cases: usize, mut prop: F) {
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(panic) = result {
+            let msg = panic
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| panic.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed on case {case} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 1, 64, |rng| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-small' failed")]
+    fn failing_property_reports_seed() {
+        check("always-small", 2, 256, |rng| {
+            assert!(rng.below(100) < 99, "drew 99");
+        });
+    }
+}

@@ -1,0 +1,122 @@
+//! Synthetic dataset generators for the real-execution mode.
+//!
+//! The paper drives its workloads with text corpora (WordCount), point
+//! sets (K-Means), and web graphs (PageRank). Real traces aren't available
+//! offline, so these generators produce statistically analogous data:
+//! Zipf-distributed token streams, Gaussian-mixture points, and random
+//! column-stochastic transition matrices — each shaped to the AOT artifact
+//! shapes in [`crate::runtime::shapes`].
+
+use crate::util::Rng;
+
+/// Zipf-distributed token ids in `[0, vocab)` — word frequencies in text
+/// are famously Zipfian, which is what makes WordCount's reduce skewed.
+pub fn zipf_tokens(n: usize, vocab: usize, exponent: f64, rng: &mut Rng) -> Vec<i32> {
+    assert!(vocab >= 1);
+    // Inverse-CDF sampling over precomputed Zipf weights.
+    let weights: Vec<f64> = (1..=vocab).map(|k| 1.0 / (k as f64).powf(exponent)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut cdf = Vec::with_capacity(vocab);
+    let mut acc = 0.0;
+    for w in &weights {
+        acc += w / total;
+        cdf.push(acc);
+    }
+    (0..n)
+        .map(|_| {
+            let u = rng.f64();
+            match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+                Ok(i) | Err(i) => (i.min(vocab - 1)) as i32,
+            }
+        })
+        .collect()
+}
+
+/// Points drawn from `k` spherical Gaussian blobs in `dim` dimensions
+/// (blob centers on a scaled hypercube diagonal pattern), row-major.
+pub fn gaussian_blobs(n: usize, dim: usize, k: usize, rng: &mut Rng) -> Vec<f32> {
+    assert!(k >= 1);
+    let centers: Vec<Vec<f64>> = (0..k)
+        .map(|c| {
+            (0..dim)
+                .map(|d| 10.0 * (((c * dim + d) % 7) as f64 - 3.0))
+                .collect()
+        })
+        .collect();
+    let mut out = Vec::with_capacity(n * dim);
+    for i in 0..n {
+        let c = &centers[i % k];
+        for d in 0..dim {
+            out.push((c[d] + rng.normal()) as f32);
+        }
+    }
+    out
+}
+
+/// A random column-stochastic transition matrix (n x n, row-major):
+/// each column j has `out_degree` random outgoing links of equal weight
+/// (a random graph's PageRank transition matrix, dangling-free).
+pub fn transition_matrix(n: usize, out_degree: usize, rng: &mut Rng) -> Vec<f32> {
+    assert!(out_degree >= 1 && out_degree <= n);
+    let mut m = vec![0.0f32; n * n];
+    for col in 0..n {
+        let targets = rng.subset(n, out_degree);
+        let w = 1.0 / out_degree as f32;
+        for &row in &targets {
+            m[row * n + col] = w;
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipf_tokens_in_range_and_skewed() {
+        let mut rng = Rng::new(1);
+        let toks = zipf_tokens(50_000, 100, 1.0, &mut rng);
+        assert!(toks.iter().all(|&t| (0..100).contains(&t)));
+        let mut counts = vec![0usize; 100];
+        for &t in &toks {
+            counts[t as usize] += 1;
+        }
+        // Zipf: rank-1 token much more frequent than rank-50.
+        assert!(counts[0] > 5 * counts[49], "{} vs {}", counts[0], counts[49]);
+    }
+
+    #[test]
+    fn blobs_have_centers_apart() {
+        let mut rng = Rng::new(2);
+        let pts = gaussian_blobs(1_000, 8, 2, &mut rng);
+        assert_eq!(pts.len(), 8_000);
+        // Means of alternating points differ (two blobs).
+        let mean = |start: usize| -> f64 {
+            (start..1_000)
+                .step_by(2)
+                .map(|i| pts[i * 8] as f64)
+                .sum::<f64>()
+                / 500.0
+        };
+        assert!((mean(0) - mean(1)).abs() > 1.0);
+    }
+
+    #[test]
+    fn transition_matrix_is_column_stochastic() {
+        let mut rng = Rng::new(3);
+        let n = 64;
+        let m = transition_matrix(n, 8, &mut rng);
+        for col in 0..n {
+            let s: f32 = (0..n).map(|row| m[row * n + col]).sum();
+            assert!((s - 1.0).abs() < 1e-5, "col {col} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        let a = zipf_tokens(100, 50, 1.0, &mut Rng::new(9));
+        let b = zipf_tokens(100, 50, 1.0, &mut Rng::new(9));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,218 @@
+//! The paper's three evaluation workloads as [`JobPlan`] builders, plus
+//! synthetic data generators for the real-execution mode.
+//!
+//! * **WordCount** (Secs. 5–6) — a two-stage job: a CPU-heavy map over the
+//!   HDFS input, then a small shuffle+reduce. Load-balancing quality is
+//!   read off the map stage.
+//! * **K-Means** (Sec. 7) — `iterations` repetitions of a simple two-stage
+//!   job; the input is read from HDFS once and cached on executors, so
+//!   iterations 2+ are pure compute. The partition chosen for iteration 1
+//!   *fixes* the per-executor cache, which is exactly why HeMT must get
+//!   the weights right up front.
+//! * **PageRank** (Sec. 7) — one job of `1 + iterations` stages chained by
+//!   shuffles; stages are short, making relative scheduling overhead the
+//!   dominant microtasking cost (the paper's Fig. 18 observation).
+
+pub mod gen;
+
+use crate::coordinator::{JobPlan, PartitionPolicy, StageInput, StagePlan};
+use crate::hdfs::HdfsFile;
+
+const MB: f64 = (1u64 << 20) as f64;
+
+/// WordCount shape constants: map emits ~5% of its input as (word, count)
+/// pairs; the reduce is ~10x lighter per byte than the map.
+pub const WC_OUTPUT_RATIO: f64 = 0.05;
+pub const WC_REDUCE_CPU_FRACTION: f64 = 0.1;
+
+/// Build the two-stage WordCount job.
+pub fn wordcount_job(
+    file: HdfsFile,
+    map_policy: PartitionPolicy,
+    reduce_policy: PartitionPolicy,
+    cpu_secs_per_mb: f64,
+) -> JobPlan {
+    let cpb = cpu_secs_per_mb / MB;
+    JobPlan {
+        name: "wordcount".into(),
+        stages: vec![
+            StagePlan {
+                input: StageInput::Hdfs { file },
+                policy: map_policy,
+                cpu_secs_per_byte: cpb,
+                output_ratio: WC_OUTPUT_RATIO,
+            },
+            StagePlan {
+                input: StageInput::Shuffle,
+                policy: reduce_policy,
+                cpu_secs_per_byte: cpb * WC_REDUCE_CPU_FRACTION,
+                output_ratio: 0.0,
+            },
+        ],
+    }
+}
+
+/// K-Means: the first iteration's job (reads HDFS, caches the partition).
+pub fn kmeans_first_job(
+    file: HdfsFile,
+    map_policy: PartitionPolicy,
+    cpu_secs_per_mb: f64,
+) -> JobPlan {
+    let cpb = cpu_secs_per_mb / MB;
+    JobPlan {
+        name: "kmeans-iter0".into(),
+        stages: vec![
+            StagePlan {
+                input: StageInput::Hdfs { file },
+                policy: map_policy,
+                cpu_secs_per_byte: cpb,
+                // Map emits per-cluster partial sums: tiny.
+                output_ratio: 0.001,
+            },
+            kmeans_reduce(cpb),
+        ],
+    }
+}
+
+/// K-Means: an iteration over executor-cached data. `partitions` is the
+/// `(bytes, executor)` layout fixed by the first iteration's map stage —
+/// derive it with [`cached_partitions_of`].
+pub fn kmeans_cached_job(partitions: Vec<(u64, usize)>, cpu_secs_per_mb: f64) -> JobPlan {
+    let cpb = cpu_secs_per_mb / MB;
+    JobPlan {
+        name: "kmeans-iter".into(),
+        stages: vec![
+            StagePlan {
+                input: StageInput::Cached { partitions },
+                policy: PartitionPolicy::EvenTasks(1), // ignored for cached
+                cpu_secs_per_byte: cpb,
+                output_ratio: 0.001,
+            },
+            kmeans_reduce(cpb),
+        ],
+    }
+}
+
+/// The cache layout a map stage leaves behind: one `(bytes, executor)`
+/// partition per map task, pinned where it ran.
+pub fn cached_partitions_of(stage: &crate::metrics::StageRecord) -> Vec<(u64, usize)> {
+    stage.tasks.iter().map(|t| (t.bytes, t.executor)).collect()
+}
+
+fn kmeans_reduce(cpb: f64) -> StagePlan {
+    StagePlan {
+        input: StageInput::Shuffle,
+        // Centroid update is a single small aggregation task.
+        policy: PartitionPolicy::EvenTasks(1),
+        cpu_secs_per_byte: cpb * 0.1,
+        output_ratio: 0.0,
+    }
+}
+
+/// PageRank: one job with an HDFS-read stage followed by `iterations`
+/// shuffle-chained rank-update stages. `policy` applies to every stage
+/// (for HeMT it must carry one weight per executor; the skewed hash
+/// partitioner of Algorithm 1 then shapes every shuffle).
+pub fn pagerank_job(
+    file: HdfsFile,
+    policy: PartitionPolicy,
+    iterations: usize,
+    cpu_secs_per_mb: f64,
+) -> JobPlan {
+    let cpb = cpu_secs_per_mb / MB;
+    let mut stages = vec![StagePlan {
+        input: StageInput::Hdfs { file },
+        policy: policy.clone(),
+        cpu_secs_per_byte: cpb,
+        // Ranks + adjacency flow to every subsequent iteration.
+        output_ratio: 1.0,
+    }];
+    for i in 0..iterations {
+        stages.push(StagePlan {
+            input: StageInput::Shuffle,
+            policy: policy.clone(),
+            cpu_secs_per_byte: cpb,
+            output_ratio: if i + 1 == iterations { 0.0 } else { 1.0 },
+        });
+    }
+    JobPlan { name: "pagerank".into(), stages }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::driver::{SessionBuilder, SimParams};
+    use crate::nodes::Node;
+
+    const MBU: u64 = 1 << 20;
+
+    fn session() -> crate::coordinator::driver::Session {
+        SessionBuilder::two_node(Node::fixed("a", 1.0), 1.0, Node::fixed("b", 1.0), 0.4)
+            .with_params(SimParams { sched_overhead: 0.0, launch_latency: 0.0, io_setup: 0.0, ..Default::default() })
+            .with_hdfs_uplink_bps(1e12)
+            .build()
+    }
+
+    #[test]
+    fn wordcount_has_map_and_reduce() {
+        let mut s = session();
+        let file = s.hdfs.upload(100 * MBU, 100 * MBU, &mut s.rng);
+        let job = wordcount_job(
+            file,
+            PartitionPolicy::Hemt(vec![1.0, 0.4]),
+            PartitionPolicy::Hemt(vec![1.0, 0.4]),
+            1.0,
+        );
+        let rec = s.run_job(&job);
+        assert_eq!(rec.stages.len(), 2);
+        // Map dominates: reduce moves 5% of the data at 10% intensity.
+        assert!(rec.stages[1].completion_time() < 0.1 * rec.stages[0].completion_time());
+    }
+
+    #[test]
+    fn kmeans_cached_iterations_are_cheaper_than_first() {
+        let mut s = session();
+        let file = s.hdfs.upload(256 * MBU, 128 * MBU, &mut s.rng);
+        let first = s.run_job(&kmeans_first_job(
+            file,
+            PartitionPolicy::Hemt(vec![1.0, 0.4]),
+            1.0,
+        ));
+        let parts = cached_partitions_of(&first.stages[0]);
+        let cached_bytes = first.stages[0].executor_bytes(2);
+        let iter = s.run_job(&kmeans_cached_job(parts, 1.0));
+        // Cached iteration compute equals the first iteration's, but there
+        // is no HDFS read; with ample bandwidth they're comparable, and
+        // the cache split must match the HeMT partition.
+        assert_eq!(cached_bytes.iter().sum::<u64>(), 256 * MBU);
+        assert!((cached_bytes[0] as f64 / (256.0 * MBU as f64) - 1.0 / 1.4).abs() < 0.01);
+        assert!(iter.completion_time() <= first.completion_time() + 1.0);
+    }
+
+    #[test]
+    fn pagerank_stage_count_matches_iterations() {
+        let mut s = session();
+        let file = s.hdfs.upload(64 * MBU, 64 * MBU, &mut s.rng);
+        let job = pagerank_job(file, PartitionPolicy::EvenTasks(2), 5, 0.1);
+        let rec = s.run_job(&job);
+        assert_eq!(rec.stages.len(), 6);
+        // Every iteration re-shuffles the full volume.
+        for st in &rec.stages[1..] {
+            let total: u64 = st.tasks.iter().map(|t| t.bytes).sum();
+            assert!((total as f64 - 64.0 * MB).abs() < MB, "shuffle lost volume: {total}");
+        }
+    }
+
+    #[test]
+    fn pagerank_hemt_skews_every_stage() {
+        let mut s = session();
+        let file = s.hdfs.upload(64 * MBU, 64 * MBU, &mut s.rng);
+        let job = pagerank_job(file, PartitionPolicy::Hemt(vec![1.0, 0.4]), 3, 0.1);
+        let rec = s.run_job(&job);
+        for st in &rec.stages {
+            let by_exec = st.executor_bytes(2);
+            let frac = by_exec[0] as f64 / (by_exec[0] + by_exec[1]) as f64;
+            assert!((frac - 1.0 / 1.4).abs() < 0.02, "stage skew {frac}");
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! Integration tests for the config system: file-backed configs drive
+//! real runs; JSON round-trips; presets match the paper's testbeds.
+
+use hemt::config::{
+    ClusterConfig, ExperimentConfig, PolicyConfig, WorkloadConfig, WorkloadKind,
+};
+use hemt::coordinator::driver::SimParams;
+use hemt::experiments;
+
+#[test]
+fn config_file_roundtrip_through_disk() {
+    let cfg = ExperimentConfig {
+        name: "fig13-adjusted".into(),
+        cluster: ClusterConfig::burstable_pair(600.0),
+        workload: WorkloadConfig::wordcount_2gb(),
+        policy: PolicyConfig::HemtStatic(vec![1.0, 0.32]),
+        trials: 3,
+        base_seed: 11,
+    };
+    let dir = std::env::temp_dir().join("hemt-config-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.json");
+    std::fs::write(&path, cfg.to_json().pretty()).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let back = ExperimentConfig::from_str(&text).unwrap();
+    assert_eq!(cfg, back);
+}
+
+#[test]
+fn every_preset_builds_and_runs_a_job() {
+    for (cluster, wl) in [
+        (ClusterConfig::containers_1_and_04(), WorkloadConfig::wordcount_2gb()),
+        (ClusterConfig::burstable_pair(600.0), WorkloadConfig::wordcount_2gb()),
+        (ClusterConfig::containers_1_and_04(), WorkloadConfig::kmeans_256mb()),
+    ] {
+        let mut s = cluster.build_session(SimParams::default(), 1);
+        let file = s.hdfs.upload(
+            wl.data_mb * experiments::MB,
+            wl.block_mb * experiments::MB,
+            &mut s.rng,
+        );
+        let policy = experiments::resolve_policy(&PolicyConfig::HemtFromHints, &s, None);
+        let job = hemt::workloads::wordcount_job(
+            file,
+            policy.clone(),
+            policy,
+            wl.cpu_secs_per_mb,
+        );
+        let rec = s.run_job(&job);
+        assert!(rec.completion_time() > 0.0);
+        assert_eq!(rec.stages.len(), 2);
+    }
+}
+
+#[test]
+fn workload_kinds_parse_and_name() {
+    for kind in [WorkloadKind::WordCount, WorkloadKind::KMeans, WorkloadKind::PageRank] {
+        assert_eq!(WorkloadKind::parse(kind.name()).unwrap(), kind);
+    }
+    assert!(WorkloadKind::parse("sorting").is_err());
+}
+
+#[test]
+fn malformed_configs_are_rejected_with_context() {
+    for (text, needle) in [
+        ("{}", "cluster"),
+        (r#"{"cluster": {}}"#, "nodes"),
+        (
+            r#"{"cluster": {"nodes": [{"kind": "warp-drive"}], "exec_cpus": [1]}}"#,
+            "warp-drive",
+        ),
+    ] {
+        let err = ExperimentConfig::from_str(text).unwrap_err();
+        assert!(err.contains(needle), "'{err}' should mention '{needle}'");
+    }
+}
+
+#[test]
+fn experiment_dispatch_covers_all_figures() {
+    for name in experiments::ALL_FIGURES {
+        // Only check dispatch is wired (don't run the heavy ones here).
+        if *name == "fig4" || *name == "fig10_12" {
+            assert!(experiments::by_name(name).is_some());
+        }
+    }
+    assert!(experiments::by_name("fig99").is_none());
+}

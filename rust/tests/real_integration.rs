@@ -1,0 +1,166 @@
+//! Integration tests for the real-execution path: coordinator decisions
+//! driving actual PJRT compute (the AOT Pallas-kernel artifacts).
+//!
+//! Skipped with a message when `artifacts/` is missing (`make artifacts`).
+
+use std::sync::Arc;
+
+use hemt::estimator::SpeedEstimator;
+use hemt::exec::{Output, Payload, RealPool, RealTask};
+use hemt::partition::Partitioning;
+use hemt::runtime::shapes::*;
+use hemt::runtime::{artifacts_available, DEFAULT_ARTIFACTS_DIR};
+use hemt::util::Rng;
+use hemt::workloads::gen;
+
+fn pool_or_skip(speeds: &[f64]) -> Option<RealPool> {
+    if !artifacts_available(DEFAULT_ARTIFACTS_DIR) {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(RealPool::spawn(DEFAULT_ARTIFACTS_DIR, speeds).unwrap())
+}
+
+/// WordCount end to end: HeMT and HomT compute identical histograms, and
+/// the histogram matches a host-side count.
+#[test]
+fn real_wordcount_partitionings_agree_with_host_count() {
+    let Some(pool) = pool_or_skip(&[1.0, 0.5]) else { return };
+    let mut rng = Rng::new(31);
+    let total = 4 * WORDCOUNT_BLOCK_TOKENS;
+    let tokens = Arc::new(gen::zipf_tokens(total, WORDCOUNT_BINS, 1.0, &mut rng));
+    let mut host = vec![0f32; WORDCOUNT_BINS];
+    for &t in tokens.iter() {
+        host[t as usize] += 1.0;
+    }
+    let run = |parts: &Partitioning, bound: bool| -> Vec<f32> {
+        let tasks: Vec<RealTask> = parts
+            .ranges()
+            .iter()
+            .enumerate()
+            .map(|(i, &(start, len))| RealTask {
+                id: i,
+                bound_to: if bound { Some(i % 2) } else { None },
+                payload: Payload::WordCount {
+                    tokens: Arc::clone(&tokens),
+                    start: start as usize,
+                    len: len as usize,
+                },
+            })
+            .collect();
+        let mut counts = vec![0f32; WORDCOUNT_BINS];
+        for r in pool.run_stage(tasks) {
+            if let Output::Counts(c) = r.output {
+                for (a, x) in counts.iter_mut().zip(c.iter()) {
+                    *a += x;
+                }
+            }
+        }
+        counts
+    };
+    let hemt = run(&Partitioning::hemt(total as u64, &[1.0, 0.5]), true);
+    let homt = run(&Partitioning::homt(total as u64, 7), false);
+    assert_eq!(hemt, host, "HeMT histogram != host count");
+    assert_eq!(homt, host, "HomT histogram != host count");
+}
+
+/// K-Means end to end: running Lloyd steps through PJRT reduces the
+/// within-cluster movement (convergence), independent of partitioning.
+#[test]
+fn real_kmeans_converges_under_hemt() {
+    let Some(pool) = pool_or_skip(&[1.0, 0.5]) else { return };
+    let mut rng = Rng::new(33);
+    let n = 2 * KMEANS_BLOCK_POINTS;
+    let points = Arc::new(gen::gaussian_blobs(n, KMEANS_DIM, KMEANS_K, &mut rng));
+    let parts = Partitioning::hemt(n as u64, &[1.0, 0.5]);
+    let mut centroids: Vec<f32> = gen::gaussian_blobs(KMEANS_K, KMEANS_DIM, KMEANS_K, &mut rng);
+    let mut shifts = Vec::new();
+    for _ in 0..5 {
+        let cent = Arc::new(centroids.clone());
+        let tasks: Vec<RealTask> = parts
+            .ranges()
+            .iter()
+            .enumerate()
+            .map(|(i, &(start, len))| RealTask {
+                id: i,
+                bound_to: Some(i),
+                payload: Payload::KMeans {
+                    points: Arc::clone(&points),
+                    start_point: start as usize,
+                    num_points: len as usize,
+                    centroids: Arc::clone(&cent),
+                },
+            })
+            .collect();
+        let mut sums = vec![0f32; KMEANS_K * KMEANS_DIM];
+        let mut counts = vec![0f32; KMEANS_K];
+        for r in pool.run_stage(tasks) {
+            if let Output::SumsCounts { sums: s, counts: c } = r.output {
+                for (a, x) in sums.iter_mut().zip(s.iter()) {
+                    *a += x;
+                }
+                for (a, x) in counts.iter_mut().zip(c.iter()) {
+                    *a += x;
+                }
+            }
+        }
+        let mut shift = 0f64;
+        for k in 0..KMEANS_K {
+            for d in 0..KMEANS_DIM {
+                let idx = k * KMEANS_DIM + d;
+                let new = if counts[k] > 0.0 { sums[idx] / counts[k] } else { centroids[idx] };
+                shift += ((new - centroids[idx]) as f64).powi(2);
+                centroids[idx] = new;
+            }
+        }
+        shifts.push(shift.sqrt());
+    }
+    assert!(
+        shifts[4] < shifts[0] * 0.2,
+        "Lloyd iterations must converge: {shifts:?}"
+    );
+}
+
+/// Measured durations from the real pool recover the imposed throttle
+/// ratio through the OA-HeMT estimator.
+#[test]
+fn estimator_recovers_throttle_ratio_from_real_measurements() {
+    let Some(pool) = pool_or_skip(&[1.0, 0.4]) else { return };
+    let mut rng = Rng::new(35);
+    let total = 16 * WORDCOUNT_BLOCK_TOKENS;
+    let tokens = Arc::new(gen::zipf_tokens(total, WORDCOUNT_BINS, 1.0, &mut rng));
+    let mut est = SpeedEstimator::new(0.25);
+    // Several equal-split rounds, feeding measured durations.
+    for _ in 0..4 {
+        let tasks: Vec<RealTask> = (0..2)
+            .map(|i| RealTask {
+                id: i,
+                bound_to: Some(i),
+                payload: Payload::WordCount {
+                    tokens: Arc::clone(&tokens),
+                    start: i * total / 2,
+                    len: total / 2,
+                },
+            })
+            .collect();
+        for r in pool.run_stage(tasks) {
+            est.observe(r.worker, r.work_bytes as f64, r.duration_secs);
+        }
+    }
+    let w = est.weights(&[0, 1]);
+    let ratio = w[1] / w[0];
+    assert!(
+        (0.25..0.6).contains(&ratio),
+        "estimated ratio {ratio:.3} should approximate the 0.4 throttle"
+    );
+}
+
+/// The `hemt real` demo drivers run clean end to end.
+#[test]
+fn demo_drivers_run() {
+    if !artifacts_available(DEFAULT_ARTIFACTS_DIR) {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    hemt::exec::demo::run_demo("pagerank").expect("pagerank demo");
+}
