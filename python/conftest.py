@@ -1,0 +1,7 @@
+# Make the `compile` package importable when pytest is invoked from the
+# repository root (`python -m pytest python/tests -q`, the CI command):
+# test modules import `compile.kernels`, which lives next to this file.
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -121,6 +121,27 @@ fn bench_pagerank_sweep() {
     println!("pagerank_sim_100it_64tasks: {} s", s.pm(4));
 }
 
+fn bench_sweep_parallelism() {
+    // The tentpole speedup: one figure-sized sweep spec, serial pool vs
+    // the machine's full pool. Output is bit-identical; only wall-clock
+    // differs.
+    use hemt::experiments::fig5_spec;
+    use hemt::sweep::SweepRunner;
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let serial = time(0, 3, || {
+        std::hint::black_box(SweepRunner::new(1).run(&fig5_spec()));
+    });
+    let pooled = time(0, 3, || {
+        std::hint::black_box(SweepRunner::new(threads).run(&fig5_spec()));
+    });
+    println!(
+        "sweep_fig5_serial:   {} s\nsweep_fig5_pool({threads}): {} s  ({:.2}x)",
+        serial.pm(3),
+        pooled.pm(3),
+        serial.mean / pooled.mean
+    );
+}
+
 fn main() {
     println!("== perf_microbench (L3 hot paths) ==");
     bench_engine_event_throughput();
@@ -128,4 +149,5 @@ fn main() {
     bench_partitioners();
     bench_wordcount_sweep();
     bench_pagerank_sweep();
+    bench_sweep_parallelism();
 }

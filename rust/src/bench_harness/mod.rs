@@ -4,15 +4,24 @@
 //! use this: warmup + timed iterations with mean/σ/min reporting, plus a
 //! standard banner for figure-reproduction targets (which both *time* the
 //! experiment driver and *print* the paper-shaped table).
+//!
+//! Besides the human-readable output, [`run_figure_bench`] writes a
+//! machine-readable `BENCH_<name>.json` (mean/σ/min/max plus
+//! median/p10/p90 and the raw per-iteration samples) into
+//! `$HEMT_BENCH_DIR` (default `bench_results/`), so the perf trajectory
+//! of every figure is tracked across commits.
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use crate::metrics::Figure;
+use crate::util::json;
+use crate::util::stats::percentile;
 use crate::util::Summary;
 
 /// Time `f` over `iters` iterations (after `warmup` unrecorded runs);
-/// returns per-iteration seconds.
-pub fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+/// returns the raw per-iteration seconds.
+pub fn time_samples<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Vec<f64> {
     assert!(iters > 0);
     for _ in 0..warmup {
         f();
@@ -23,23 +32,74 @@ pub fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
         f();
         samples.push(t0.elapsed().as_secs_f64());
     }
-    Summary::of(&samples)
+    samples
+}
+
+/// Time `f` over `iters` iterations (after `warmup` unrecorded runs);
+/// returns per-iteration seconds summarized.
+pub fn time<F: FnMut()>(warmup: usize, iters: usize, f: F) -> Summary {
+    Summary::of(&time_samples(warmup, iters, f))
+}
+
+/// Where bench JSON reports go: `$HEMT_BENCH_DIR` or `bench_results/`.
+pub fn bench_output_dir() -> PathBuf {
+    std::env::var("HEMT_BENCH_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("bench_results"))
+}
+
+/// Serialize one bench run's wall-clock samples as the machine-readable
+/// report written next to the text output.
+pub fn bench_report_json(name: &str, samples: &[f64]) -> json::Value {
+    let stats = Summary::of(samples);
+    json::obj(vec![
+        ("name", json::s(name)),
+        ("iters", json::num(samples.len() as f64)),
+        ("mean_secs", json::num(stats.mean)),
+        ("std_secs", json::num(stats.std)),
+        ("min_secs", json::num(stats.min)),
+        ("max_secs", json::num(stats.max)),
+        ("median_secs", json::num(percentile(samples, 50.0))),
+        ("p10_secs", json::num(percentile(samples, 10.0))),
+        ("p90_secs", json::num(percentile(samples, 90.0))),
+        (
+            "samples_secs",
+            json::arr(samples.iter().map(|&s| json::num(s)).collect()),
+        ),
+    ])
+}
+
+/// Write `BENCH_<name>.json` under `dir`; returns the path written.
+pub fn write_bench_json(
+    dir: &Path,
+    name: &str,
+    samples: &[f64],
+) -> std::io::Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, bench_report_json(name, samples).pretty())?;
+    Ok(path)
 }
 
 /// Run one figure-reproduction bench: time the driver, print the timing
-/// line and the figure table.
+/// line and the figure table, and write the JSON report.
 pub fn run_figure_bench(name: &str, iters: usize, mut driver: impl FnMut() -> Figure) {
     println!("bench {name}: running {iters} iteration(s)");
     let mut last: Option<Figure> = None;
-    let stats = time(0, iters, || {
+    let samples = time_samples(0, iters, || {
         last = Some(driver());
     });
+    let stats = Summary::of(&samples);
     println!(
         "bench {name}: {} s/iter (min {:.3} s, n={})",
         stats.pm(3),
         stats.min,
         stats.n
     );
+    match write_bench_json(&bench_output_dir(), name, &samples) {
+        Ok(path) => println!("bench {name}: wrote {}", path.display()),
+        Err(e) => eprintln!("bench {name}: could not write JSON report: {e}"),
+    }
     println!();
     println!("{}", last.expect("driver ran").to_table());
 }
@@ -74,5 +134,33 @@ mod tests {
         assert!(rate(2e9, 1.0).contains("GB/s"));
         assert!(rate(5e6, 1.0).contains("MB/s"));
         assert!(rate(1e3, 1.0).contains("kB/s"));
+    }
+
+    #[test]
+    fn bench_report_has_percentiles_and_samples() {
+        let samples = [0.4, 0.1, 0.2, 0.3, 0.5];
+        let v = bench_report_json("demo", &samples);
+        let text = v.pretty();
+        let parsed = json::Value::parse(&text).unwrap();
+        assert_eq!(parsed.get("name").unwrap().as_str(), Some("demo"));
+        assert_eq!(parsed.get("iters").unwrap().as_f64(), Some(5.0));
+        assert_eq!(parsed.get("median_secs").unwrap().as_f64(), Some(0.3));
+        let p10 = parsed.get("p10_secs").unwrap().as_f64().unwrap();
+        let p90 = parsed.get("p90_secs").unwrap().as_f64().unwrap();
+        assert!(p10 < p90);
+        assert_eq!(
+            parsed.get("samples_secs").unwrap().as_arr().unwrap().len(),
+            5
+        );
+    }
+
+    #[test]
+    fn bench_json_file_round_trips() {
+        let dir = std::env::temp_dir().join("hemt-bench-test");
+        let path = write_bench_json(&dir, "unit", &[0.25, 0.75]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = json::Value::parse(&text).unwrap();
+        assert_eq!(parsed.get("mean_secs").unwrap().as_f64(), Some(0.5));
+        std::fs::remove_file(path).ok();
     }
 }

@@ -11,15 +11,20 @@
 //!   competition.
 //! * [`stale_credits`] — footnote 8: CloudWatch's 1–5 minute update lag
 //!   degrades credit-based HeMT planning.
+//!
+//! Like the figures, each ablation is a [`SweepSpec`] (`*_spec()`): the
+//! alpha sweep fans its five 70-job adaptation sequences out over the
+//! worker pool; speculation/rack fan out per-trial simulations.
 
 use crate::config::{ClusterConfig, NodeConfig, PolicyConfig, WorkloadConfig, WorkloadKind};
 use crate::coordinator::driver::{SimParams, Speculation};
 use crate::coordinator::PartitionPolicy;
 use crate::estimator::credits::{plan, CreditCurve};
 use crate::estimator::SpeedEstimator;
-use crate::experiments::{observe_map_stage, resolve_policy, MB};
+use crate::experiments::{default_runner, observe_map_stage, resolve_policy, MB};
 use crate::hdfs::Placement;
-use crate::metrics::{Figure, Series};
+use crate::metrics::Figure;
+use crate::sweep::{Sample, SweepSpec};
 use crate::util::Summary;
 use crate::workloads;
 
@@ -43,7 +48,7 @@ fn two_full_cores(hdfs_mbps: f64) -> ClusterConfig {
 /// recovery cost (mean excess over the settled level in the 4 jobs after
 /// the hit). Sec. 5.1: small α tracks the latest sample (fast recovery,
 /// high jitter); large α averages noise out (smooth, slow recovery).
-pub fn alpha() -> Figure {
+pub fn alpha_spec() -> SweepSpec {
     let wl = WorkloadConfig {
         kind: WorkloadKind::WordCount,
         data_mb: 512,
@@ -51,129 +56,197 @@ pub fn alpha() -> Figure {
         cpu_secs_per_mb: 42.0 / 1024.0,
         iterations: 1,
     };
-    let mut fig = Figure::new(
+    let mut spec = SweepSpec::new(
         "Ablation: OA-HeMT forgetting factor (noise sigma=0.3, interference at job 15)",
         "alpha",
         "seconds",
     );
-    let mut jitter = Series::new("partition instability (share sigma, steady)");
-    let mut recovery = Series::new("recovery cost (mean excess secs, jobs 16-19)");
+    let jitter = spec.series("partition instability (share sigma, steady)");
+    let recovery = spec.series("recovery cost (mean excess secs, jobs 16-19)");
     for &a in &[0.0, 0.25, 0.5, 0.75, 0.9] {
-        let mut params = SimParams::default();
-        params.exec_noise = 0.3;
-        let cluster = two_full_cores(600.0);
-        let mut s = cluster.build_session(params, 7);
-        let mut est = SpeedEstimator::new(a);
-        let mut times = Vec::new();
-        let mut shares = Vec::new();
-        for job_idx in 0..70usize {
-            if job_idx == 15 {
-                let t = s.engine.now;
-                s.engine.nodes[1] =
-                    s.engine.nodes[1].clone().with_interference(vec![(t, 0.5)]);
+        let wl = wl.clone();
+        // One 70-job adaptation sequence per alpha; the five sequences
+        // are independent and run in parallel on the sweep pool.
+        spec.sequence(move || {
+            let mut params = SimParams::default();
+            params.exec_noise = 0.3;
+            let cluster = two_full_cores(600.0);
+            let mut s = cluster.build_session(params, 7);
+            let mut est = SpeedEstimator::new(a);
+            let mut times = Vec::new();
+            let mut shares = Vec::new();
+            for job_idx in 0..70usize {
+                if job_idx == 15 {
+                    let t = s.engine.now;
+                    s.engine.nodes[1] =
+                        s.engine.nodes[1].clone().with_interference(vec![(t, 0.5)]);
+                }
+                let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
+                let policy = resolve_policy(
+                    &PolicyConfig::HemtAdaptive { alpha: a },
+                    &s,
+                    if est.is_cold() { None } else { Some(&est) },
+                );
+                let job = workloads::wordcount_job(
+                    file,
+                    policy.clone(),
+                    policy,
+                    wl.cpu_secs_per_mb,
+                );
+                let rec = s.run_job(&job);
+                observe_map_stage(&mut est, &rec, 2);
+                times.push(rec.map_stage_time());
+                let by_exec = rec.stages[0].executor_bytes(2);
+                shares.push(by_exec[1] as f64 / (by_exec[0] + by_exec[1]) as f64);
             }
-            let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
-            let policy = resolve_policy(
-                &PolicyConfig::HemtAdaptive { alpha: a },
-                &s,
-                if est.is_cold() { None } else { Some(&est) },
-            );
-            let job =
-                workloads::wordcount_job(file, policy.clone(), policy, wl.cpu_secs_per_mb);
-            let rec = s.run_job(&job);
-            observe_map_stage(&mut est, &rec, 2);
-            times.push(rec.map_stage_time());
-            let by_exec = rec.stages[0].executor_bytes(2);
-            shares.push(by_exec[1] as f64 / (by_exec[0] + by_exec[1]) as f64);
-        }
-        // Steady window well past the alpha=0.9 re-convergence horizon.
-        // The Sec. 5.1 tradeoff is about the *estimate*: a small alpha
-        // chases per-task noise (unstable partitions), a large alpha
-        // averages it out but reacts slowly to real changes.
-        let share_stability = Summary::of(&shares[50..70]);
-        jitter.push(a, "", &[share_stability.std]);
-        let settled = Summary::of(&times[50..70]);
-        let excess: Vec<f64> = times[16..20].iter().map(|t| t - settled.mean).collect();
-        recovery.push(a, "", &[excess.iter().sum::<f64>() / excess.len() as f64]);
+            // Steady window well past the alpha=0.9 re-convergence
+            // horizon. The Sec. 5.1 tradeoff is about the *estimate*: a
+            // small alpha chases per-task noise (unstable partitions), a
+            // large alpha averages it out but reacts slowly to changes.
+            let share_stability = Summary::of(&shares[50..70]);
+            let settled = Summary::of(&times[50..70]);
+            let excess: Vec<f64> = times[16..20].iter().map(|t| t - settled.mean).collect();
+            vec![
+                Sample {
+                    series: jitter,
+                    x: a,
+                    label: String::new(),
+                    value: share_stability.std,
+                },
+                Sample {
+                    series: recovery,
+                    x: a,
+                    label: String::new(),
+                    value: excess.iter().sum::<f64>() / excess.len() as f64,
+                },
+            ]
+        });
     }
-    fig.add(jitter);
-    fig.add(recovery);
-    fig
+    spec
+}
+
+pub fn alpha() -> Figure {
+    default_runner().run(&alpha_spec())
+}
+
+/// One speculation-ablation trial: a WordCount map stage under the given
+/// cluster/policy with speculation on or off.
+fn speculation_trial(
+    cluster: &ClusterConfig,
+    wl: &WorkloadConfig,
+    policy: &PolicyConfig,
+    speculation: Option<Speculation>,
+    seed: u64,
+) -> f64 {
+    let mut params = SimParams::default();
+    params.speculation = speculation;
+    let mut s = cluster.build_session(params, seed);
+    let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
+    let map = resolve_policy(policy, &s, None);
+    let job = workloads::wordcount_job(
+        file,
+        map,
+        PartitionPolicy::EvenTasks(2),
+        wl.cpu_secs_per_mb,
+    );
+    s.run_job(&job).map_stage_time()
 }
 
 /// Speculative execution vs HeMT, under two failure models:
 /// *persistent* heterogeneity (the Sec. 6.1 container split — speculation
 /// wastes duplicate work, HeMT wins) and a *transient* straggler (a
 /// sysbench burst mid-stage — speculation rescues HomT).
-pub fn speculation() -> Figure {
+pub fn speculation_spec() -> SweepSpec {
     let wl = WorkloadConfig::wordcount_2gb();
-    let mut fig = Figure::new(
+    let mut spec = SweepSpec::new(
         "Ablation: speculative execution vs HeMT",
         "scenario",
         "map stage time (s)",
     );
-
-    let run = |cluster: &ClusterConfig, policy: &PolicyConfig, spec: Option<Speculation>,
-               seeds: u64| -> Vec<f64> {
-        (0..5u64)
-            .map(|t| {
-                let mut params = SimParams::default();
-                params.speculation = spec;
-                let mut s = cluster.build_session(params, seeds + 1000 * t);
-                let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
-                let map = resolve_policy(policy, &s, None);
-                let job = workloads::wordcount_job(
-                    file,
-                    map,
-                    PartitionPolicy::EvenTasks(2),
-                    wl.cpu_secs_per_mb,
-                );
-                s.run_job(&job).map_stage_time()
-            })
-            .collect()
+    let cell = |spec: &mut SweepSpec,
+                series: usize,
+                    x: f64,
+                    label: &str,
+                    cluster: ClusterConfig,
+                    policy: PolicyConfig,
+                    speculation: Option<Speculation>,
+                    base_seed: u64| {
+        let wl = wl.clone();
+        spec.grid(series, x, label, 5, base_seed, move |seed| {
+            speculation_trial(&cluster, &wl, &policy, speculation, seed)
+        });
     };
 
     // Persistent heterogeneity (1.0 vs 0.4 cores, known to the manager).
     let static_cluster = ClusterConfig::containers_1_and_04();
-    let mut s1 = Series::new("persistent 1:0.4");
-    s1.push(0.0, "HomT 8", &run(&static_cluster, &PolicyConfig::Homt(8), None, 11));
-    s1.push(
+    let s1 = spec.series("persistent 1:0.4");
+    cell(
+        &mut spec,
+        s1,
+        0.0,
+        "HomT 8",
+        static_cluster.clone(),
+        PolicyConfig::Homt(8),
+        None,
+        11,
+    );
+    cell(
+        &mut spec,
+        s1,
         0.0,
         "HomT 8 + speculation",
-        &run(
-            &static_cluster,
-            &PolicyConfig::Homt(8),
-            Some(Speculation::default()),
-            12,
-        ),
+        static_cluster.clone(),
+        PolicyConfig::Homt(8),
+        Some(Speculation::default()),
+        12,
     );
-    s1.push(0.0, "HeMT (hints)", &run(&static_cluster, &PolicyConfig::HemtFromHints, None, 13));
-    fig.add(s1);
+    cell(
+        &mut spec,
+        s1,
+        0.0,
+        "HeMT (hints)",
+        static_cluster,
+        PolicyConfig::HemtFromHints,
+        None,
+        13,
+    );
 
     // Transient straggler: both nodes nominally equal; node 1 collapses
     // to 10% at t=20 s (mid-stage) — the case speculation was built for.
     let mut transient = two_full_cores(600.0);
     transient.interference[1] = vec![(20.0, 0.1)];
-    let mut s2 = Series::new("transient straggler");
-    s2.push(1.0, "HomT 8", &run(&transient, &PolicyConfig::Homt(8), None, 21));
-    s2.push(
+    let s2 = spec.series("transient straggler");
+    cell(
+        &mut spec,
+        s2,
+        1.0,
+        "HomT 8",
+        transient.clone(),
+        PolicyConfig::Homt(8),
+        None,
+        21,
+    );
+    cell(
+        &mut spec,
+        s2,
         1.0,
         "HomT 8 + speculation",
-        &run(
-            &transient,
-            &PolicyConfig::Homt(8),
-            Some(Speculation { quantile: 0.5, multiplier: 1.5, check_interval: 0.1 }),
-            22,
-        ),
+        transient,
+        PolicyConfig::Homt(8),
+        Some(Speculation { quantile: 0.5, multiplier: 1.5, check_interval: 0.1 }),
+        22,
     );
-    fig.add(s2);
-    fig
+    spec
+}
+
+pub fn speculation() -> Figure {
+    default_runner().run(&speculation_spec())
 }
 
 /// Footnote 3: rack-aware placement (cluster-local writer) vs flat-random
 /// under a network bottleneck — concentration intensifies uplink
 /// competition and slows the stage.
-pub fn rack_awareness() -> Figure {
+pub fn rack_awareness_spec() -> SweepSpec {
     let wl = WorkloadConfig {
         kind: WorkloadKind::WordCount,
         data_mb: 1024,
@@ -182,42 +255,50 @@ pub fn rack_awareness() -> Figure {
         iterations: 1,
     };
     let cluster = two_full_cores(64.0);
-    let mut fig = Figure::new(
+    let mut spec = SweepSpec::new(
         "Ablation: HDFS rack awareness under a 64 Mbps uplink bottleneck",
         "placement",
         "map stage time (s)",
     );
-    let mut run = |name: &str, x: f64, placement: Placement, seed: u64| {
-        let times: Vec<f64> = (0..5u64)
-            .map(|t| {
-                let mut s = cluster.build_session(SimParams::default(), seed + 1000 * t);
-                let file = s.hdfs.upload_with_policy(
-                    wl.data_mb * MB,
-                    wl.block_mb * MB,
-                    placement,
-                    &mut s.rng,
-                );
-                let job = workloads::wordcount_job(
-                    file,
-                    PartitionPolicy::EvenTasks(16),
-                    PartitionPolicy::EvenTasks(2),
-                    wl.cpu_secs_per_mb,
-                );
-                s.run_job(&job).map_stage_time()
-            })
-            .collect();
-        let mut series = Series::new(name);
-        series.push(x, name, &times);
-        fig.add(series);
+    let cell = |spec: &mut SweepSpec,
+                name: &str,
+                    x: f64,
+                    placement: Placement,
+                    base_seed: u64| {
+        let series = spec.series(name);
+        let cluster = cluster.clone();
+        let wl = wl.clone();
+        let label = name.to_string();
+        spec.grid(series, x, &label, 5, base_seed, move |seed| {
+            let mut s = cluster.build_session(SimParams::default(), seed);
+            let file = s.hdfs.upload_with_policy(
+                wl.data_mb * MB,
+                wl.block_mb * MB,
+                placement,
+                &mut s.rng,
+            );
+            let job = workloads::wordcount_job(
+                file,
+                PartitionPolicy::EvenTasks(16),
+                PartitionPolicy::EvenTasks(2),
+                wl.cpu_secs_per_mb,
+            );
+            s.run_job(&job).map_stage_time()
+        });
     };
-    run("flat random (paper baseline)", 0.0, Placement::FlatRandom, 31);
-    run(
+    cell(&mut spec, "flat random (paper baseline)", 0.0, Placement::FlatRandom, 31);
+    cell(
+        &mut spec,
         "rack-aware, local writer",
         1.0,
         Placement::RackAware { racks: 2, writer: Some(0) },
         32,
     );
-    fig
+    spec
+}
+
+pub fn rack_awareness() -> Figure {
+    default_runner().run(&rack_awareness_spec())
 }
 
 /// Footnote 8: the credit planner with stale CloudWatch readings. Credits
@@ -225,50 +306,61 @@ pub fn rack_awareness() -> Figure {
 /// bursting; the plan equalizes the *stale* curves, so actual finish
 /// times spread apart as the lag grows (0 s = exact, 60 s = paid
 /// per-minute monitoring, 300 s = free tier).
-pub fn stale_credits() -> Figure {
+pub fn stale_credits_spec() -> SweepSpec {
     let read_credits = [4.0, 8.0, 12.0]; // minutes, at reading time
     let w0 = 20.0;
     let burn_per_sec = (1.0 - 0.2) / 60.0; // busy at peak until job start
-    let mut fig = Figure::new(
+    let mut spec = SweepSpec::new(
         "Ablation: credit-planner accuracy vs CloudWatch staleness",
         "reading lag (s)",
         "finish-time spread (min)",
     );
-    let mut spread_series = Series::new("finish-time spread");
-    let mut stage_series = Series::new("job completion (max finish)");
+    let spread_series = spec.series("finish-time spread");
+    let stage_series = spec.series("job completion (max finish)");
     for &lag in &[0.0, 60.0, 300.0] {
-        let stale: Vec<CreditCurve> =
-            read_credits.iter().map(|&c| CreditCurve::t2_small(c)).collect();
-        let actual: Vec<CreditCurve> = read_credits
-            .iter()
-            .map(|&c| CreditCurve::t2_small((c - lag * burn_per_sec).max(0.0)))
-            .collect();
-        let p = plan(&stale, w0).expect("solvable");
-        // Execute the stale plan on the *actual* curves.
-        let finishes: Vec<f64> = actual
-            .iter()
-            .zip(p.shares.iter())
-            .map(|(c, &share)| c.time_for_work(share))
-            .collect();
-        let max = finishes.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-        let min = finishes.iter().cloned().fold(f64::INFINITY, f64::min);
-        spread_series.push(lag, "", &[max - min]);
-        stage_series.push(lag, "", &[max]);
+        spec.sequence(move || {
+            let stale: Vec<CreditCurve> =
+                read_credits.iter().map(|&c| CreditCurve::t2_small(c)).collect();
+            let actual: Vec<CreditCurve> = read_credits
+                .iter()
+                .map(|&c| CreditCurve::t2_small((c - lag * burn_per_sec).max(0.0)))
+                .collect();
+            let p = plan(&stale, w0).expect("solvable");
+            // Execute the stale plan on the *actual* curves.
+            let finishes: Vec<f64> = actual
+                .iter()
+                .zip(p.shares.iter())
+                .map(|(c, &share)| c.time_for_work(share))
+                .collect();
+            let max = finishes.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let min = finishes.iter().cloned().fold(f64::INFINITY, f64::min);
+            vec![
+                Sample { series: spread_series, x: lag, label: String::new(), value: max - min },
+                Sample { series: stage_series, x: lag, label: String::new(), value: max },
+            ]
+        });
     }
-    fig.add(spread_series);
-    fig.add(stage_series);
-    fig
+    spec
+}
+
+pub fn stale_credits() -> Figure {
+    default_runner().run(&stale_credits_spec())
+}
+
+/// Dispatch to an ablation's sweep spec by CLI name.
+pub fn spec_by_name(name: &str) -> Option<SweepSpec> {
+    match name {
+        "alpha" => Some(alpha_spec()),
+        "speculation" => Some(speculation_spec()),
+        "rack" | "rack_awareness" => Some(rack_awareness_spec()),
+        "stale_credits" | "stale" => Some(stale_credits_spec()),
+        _ => None,
+    }
 }
 
 /// Dispatch for the CLI (`hemt ablation <name>`).
 pub fn by_name(name: &str) -> Option<Figure> {
-    match name {
-        "alpha" => Some(alpha()),
-        "speculation" => Some(speculation()),
-        "rack" | "rack_awareness" => Some(rack_awareness()),
-        "stale_credits" | "stale" => Some(stale_credits()),
-        _ => None,
-    }
+    spec_by_name(name).map(|spec| default_runner().run(&spec))
 }
 
 pub const ALL_ABLATIONS: &[&str] = &["alpha", "speculation", "rack", "stale_credits"];

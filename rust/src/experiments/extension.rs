@@ -5,13 +5,16 @@
 //!   recovering the paper's 1:0.32 fudge factor instead of hard-coding it.
 //! * [`four_node`] — generality check on a 4-node mixed cluster (full
 //!   core, half core, depleted burstable, interfered node): the paper's
-//!   2-node conclusions carry over.
+//!   2-node conclusions carry over. Declared as a [`SweepSpec`]
+//!   (`four_node_spec()`) whose HomT sweep, probed-HeMT and OA-HeMT
+//!   trials all fan out over the worker pool.
 
 use crate::config::{ClusterConfig, NodeConfig, PolicyConfig, WorkloadConfig};
 use crate::coordinator::driver::{Session, SimParams};
 use crate::coordinator::PartitionPolicy;
-use crate::experiments::{observe_map_stage, resolve_policy, MB, TRIALS};
-use crate::metrics::{Figure, Series};
+use crate::experiments::{default_runner, observe_map_stage, resolve_policy, MB, TRIALS};
+use crate::metrics::Figure;
+use crate::sweep::SweepSpec;
 use crate::workloads;
 
 /// Run one short probe job (`probe_mb` per executor, evenly sized, bound
@@ -72,40 +75,41 @@ pub fn four_node_cluster() -> ClusterConfig {
     }
 }
 
-/// Extension experiment: HomT sweep vs probed HeMT on the 4-node mixed
-/// cluster — the 2-node conclusions generalize.
-pub fn four_node() -> Figure {
+/// Extension experiment: HomT sweep vs probed HeMT vs converged OA-HeMT
+/// on the 4-node mixed cluster — the 2-node conclusions generalize.
+pub fn four_node_spec() -> SweepSpec {
     let cluster = four_node_cluster();
     let wl = WorkloadConfig::wordcount_2gb();
-    let mut fig = Figure::new(
+    let mut spec = SweepSpec::new(
         "Extension: 4-node mixed cluster (1.0 / 0.5 / depleted-burstable / 0.6-interfered)",
         "configuration",
         "map stage time (s)",
     );
-    let mut homt = Series::new("even (HomT sweep)");
-    for m in [4usize, 8, 16, 32, 64, 128] {
-        let times: Vec<f64> = (0..TRIALS)
-            .map(|t| {
-                let mut s = cluster.build_session(SimParams::default(), 400 + m as u64 + 1000 * t as u64);
-                let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
-                let map = resolve_policy(&PolicyConfig::Homt(m), &s, None);
-                let job = workloads::wordcount_job(
-                    file,
-                    map,
-                    PartitionPolicy::EvenTasks(4),
-                    wl.cpu_secs_per_mb,
-                );
-                s.run_job(&job).map_stage_time()
-            })
-            .collect();
-        homt.push(m as f64, "", &times);
-    }
-    fig.add(homt);
 
-    let mut probed = Series::new("HeMT (one probe round)");
-    let times: Vec<f64> = (0..TRIALS)
-        .map(|t| {
-            let mut s = cluster.build_session(SimParams::default(), 500 + 1000 * t as u64);
+    let homt = spec.series("even (HomT sweep)");
+    for m in [4usize, 8, 16, 32, 64, 128] {
+        let cluster = cluster.clone();
+        let wl = wl.clone();
+        spec.grid(homt, m as f64, "", TRIALS, 400 + m as u64, move |seed| {
+            let mut s = cluster.build_session(SimParams::default(), seed);
+            let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
+            let map = resolve_policy(&PolicyConfig::Homt(m), &s, None);
+            let job = workloads::wordcount_job(
+                file,
+                map,
+                PartitionPolicy::EvenTasks(4),
+                wl.cpu_secs_per_mb,
+            );
+            s.run_job(&job).map_stage_time()
+        });
+    }
+
+    let probed = spec.series("HeMT (one probe round)");
+    {
+        let cluster = cluster.clone();
+        let wl = wl.clone();
+        spec.grid(probed, 4.0, "4 (probed)", TRIALS, 500, move |seed| {
+            let mut s = cluster.build_session(SimParams::default(), seed);
             let w = probed_weights(&mut s, 32, wl.cpu_secs_per_mb);
             let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
             let job = workloads::wordcount_job(
@@ -115,18 +119,18 @@ pub fn four_node() -> Figure {
                 wl.cpu_secs_per_mb,
             );
             s.run_job(&job).map_stage_time()
-        })
-        .collect();
-    probed.push(4.0, "4 (probed)", &times);
-    fig.add(probed);
+        });
+    }
 
     // Converged OA-HeMT: weights refined over full-size warmup jobs (the
     // paper's Sec. 5 mechanism) — steady-state accuracy the probe can't
     // reach on a bursty node.
-    let mut adaptive = Series::new("OA-HeMT (converged)");
-    let times: Vec<f64> = (0..TRIALS)
-        .map(|t| {
-            let mut s = cluster.build_session(SimParams::default(), 600 + 1000 * t as u64);
+    let adaptive = spec.series("OA-HeMT (converged)");
+    {
+        let cluster = cluster.clone();
+        let wl = wl.clone();
+        spec.grid(adaptive, 4.0, "4 (adaptive)", TRIALS, 600, move |seed| {
+            let mut s = cluster.build_session(SimParams::default(), seed);
             let mut est = crate::estimator::SpeedEstimator::new(0.25);
             let mut last = 0.0;
             for _ in 0..4 {
@@ -147,11 +151,13 @@ pub fn four_node() -> Figure {
                 last = rec.map_stage_time();
             }
             last
-        })
-        .collect();
-    adaptive.push(4.0, "4 (adaptive)", &times);
-    fig.add(adaptive);
-    fig
+        });
+    }
+    spec
+}
+
+pub fn four_node() -> Figure {
+    default_runner().run(&four_node_spec())
 }
 
 #[cfg(test)]

@@ -1,50 +1,34 @@
 //! Per-figure experiment drivers: every table and figure of the paper's
 //! evaluation, regenerated on the simulation substrate.
 //!
-//! Each `figN()` returns a [`Figure`] whose series reproduce the *shape*
-//! of the paper's plot (who wins, by what factor, where crossovers fall);
-//! the per-figure benches (`rust/benches/`) and the CLI (`hemt figure N`)
-//! print them. DESIGN.md §6 maps figures to modules; EXPERIMENTS.md
-//! records paper-vs-measured.
+//! Each figure is declared as a [`SweepSpec`] (`figN_spec()`) — a
+//! cluster × workload × policy × trial grid, plus stateful sequence units
+//! for the adaptive/closed-form figures — and executed through the
+//! multi-threaded [`SweepRunner`] (`figN()` convenience wrappers use
+//! [`default_runner`]). Output is bit-identical for any worker count; see
+//! `rust/tests/golden_figures.rs`. The per-figure benches
+//! (`rust/benches/`) and the CLI (`hemt figure N`) print the results.
 
 pub mod ablations;
 pub mod extension;
 
 use crate::analysis;
 use crate::config::{ClusterConfig, NodeConfig, PolicyConfig, WorkloadConfig};
-use crate::coordinator::driver::{Session, SimParams};
-use crate::coordinator::PartitionPolicy;
 use crate::estimator::credits::CreditCurve;
 use crate::estimator::SpeedEstimator;
-use crate::metrics::{Figure, JobRecord, Series};
+use crate::metrics::{Figure, JobRecord};
+use crate::sweep::{Metric, Sample, Scenario, SweepRunner, SweepSpec};
 use crate::workloads;
 
-pub const MB: u64 = 1 << 20;
+pub use crate::sweep::{kmeans_total_time, pagerank_total_time, resolve_policy, MB};
 
 /// Default trial count behind every ±σ beam.
 pub const TRIALS: usize = 5;
 
-/// Resolve a policy description into a concrete partitioning for a
-/// session (static weights, manager hints, or estimator state).
-pub fn resolve_policy(
-    policy: &PolicyConfig,
-    session: &Session,
-    estimator: Option<&SpeedEstimator>,
-) -> PartitionPolicy {
-    let n = session.executors.len();
-    match policy {
-        PolicyConfig::Default => PartitionPolicy::PerBlock,
-        PolicyConfig::Homt(m) => PartitionPolicy::EvenTasks(*m),
-        PolicyConfig::HemtStatic(w) => PartitionPolicy::Hemt(w.clone()),
-        PolicyConfig::HemtFromHints => PartitionPolicy::Hemt(session.capacity_hints()),
-        PolicyConfig::HemtAdaptive { .. } => {
-            let weights = match estimator {
-                Some(e) => e.weights(&(0..n).collect::<Vec<_>>()),
-                None => vec![1.0; n],
-            };
-            PartitionPolicy::Hemt(weights)
-        }
-    }
+/// The sweep runner behind every `figN()` convenience wrapper: worker
+/// count from `HEMT_SWEEP_THREADS`, defaulting to available parallelism.
+pub fn default_runner() -> SweepRunner {
+    SweepRunner::from_env()
 }
 
 /// Feed a finished map stage into the OA-HeMT estimator: per executor,
@@ -64,55 +48,49 @@ pub fn observe_map_stage(est: &mut SpeedEstimator, rec: &JobRecord, num_executor
     }
 }
 
-/// Run one WordCount job and return the map-stage completion time.
-fn wordcount_map_time(
+/// Shorthand for the per-figure scenario grid cell: the named policy on
+/// the given cluster/workload, `TRIALS` trials, map-stage metric (for
+/// K-Means / PageRank workloads the trial reports the workload total).
+fn scenario_of(
     cluster: &ClusterConfig,
     wl: &WorkloadConfig,
-    policy: &PolicyConfig,
-    seed: u64,
-) -> f64 {
-    let mut s = cluster.build_session(SimParams::default(), seed);
-    let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
-    let map = resolve_policy(policy, &s, None);
-    let reduce = match &map {
-        PartitionPolicy::Hemt(w) => PartitionPolicy::Hemt(w.clone()),
-        _ => PartitionPolicy::EvenTasks(s.executors.len()),
-    };
-    let job = workloads::wordcount_job(file, map, reduce, wl.cpu_secs_per_mb);
-    let rec = s.run_job(&job);
-    rec.map_stage_time()
-}
-
-/// Map-stage time summarized over `TRIALS` seeds.
-fn wordcount_trials(
-    cluster: &ClusterConfig,
-    wl: &WorkloadConfig,
-    policy: &PolicyConfig,
+    policy: PolicyConfig,
     base_seed: u64,
-) -> Vec<f64> {
-    (0..TRIALS)
-        .map(|t| wordcount_map_time(cluster, wl, policy, base_seed + 1000 * t as u64))
-        .collect()
+) -> Scenario {
+    Scenario {
+        cluster: cluster.clone(),
+        workload: wl.clone(),
+        policy,
+        metric: Metric::MapStageTime,
+        trials: TRIALS,
+        base_seed,
+    }
 }
 
 // ---------------------------------------------------------------- Fig 4
 
 /// Fig. 4: closed-form p1, p2 vs datanode count (r = 2).
-pub fn fig4() -> Figure {
-    let mut fig = Figure::new(
+pub fn fig4_spec() -> SweepSpec {
+    let mut spec = SweepSpec::new(
         "Fig 4: same-datanode read collision probability (r=2)",
         "n (datanodes)",
         "probability",
     );
-    let mut s1 = Series::new("p1 (same block)");
-    let mut s2 = Series::new("p2 (different blocks)");
-    for (n, p1, p2) in analysis::fig4_series(2, 30) {
-        s1.push(n as f64, "", &[p1]);
-        s2.push(n as f64, "", &[p2]);
-    }
-    fig.add(s1);
-    fig.add(s2);
-    fig
+    let s1 = spec.series("p1 (same block)");
+    let s2 = spec.series("p2 (different blocks)");
+    spec.sequence(move || {
+        let mut out = Vec::new();
+        for (n, p1, p2) in analysis::fig4_series(2, 30) {
+            out.push(Sample { series: s1, x: n as f64, label: String::new(), value: p1 });
+            out.push(Sample { series: s2, x: n as f64, label: String::new(), value: p2 });
+        }
+        out
+    });
+    spec
+}
+
+pub fn fig4() -> Figure {
+    default_runner().run(&fig4_spec())
 }
 
 // ---------------------------------------------------------------- Fig 5
@@ -121,7 +99,7 @@ pub fn fig4() -> Figure {
 /// (64 Mbps, n=4, r=2) are the universal bottleneck — more partitions
 /// means more same-block reads colliding on uplinks (Claim 2) plus
 /// per-task overhead.
-pub fn fig5() -> Figure {
+pub fn fig5_spec() -> SweepSpec {
     let cluster = ClusterConfig {
         nodes: vec![NodeConfig::Static { cores: 1.0 }, NodeConfig::Static { cores: 1.0 }],
         exec_cpus: vec![1.0, 1.0],
@@ -140,86 +118,112 @@ pub fn fig5() -> Figure {
         cpu_secs_per_mb: 0.001, // network-bound
         iterations: 1,
     };
-    let mut fig = Figure::new(
+    let mut spec = SweepSpec::new(
         "Fig 5: stage completion vs partitions, network-bottlenecked (64 Mbps uplinks)",
         "partitions",
         "stage time (s)",
     );
-    let mut s = Series::new("HomT (even partitioning)");
+    let s = spec.series("HomT (even partitioning)");
     for m in [2usize, 4, 8, 16, 32, 64] {
-        let times = wordcount_trials(&cluster, &wl, &PolicyConfig::Homt(m), 10 + m as u64);
-        s.push(m as f64, "", &times);
+        spec.scenario(
+            s,
+            m as f64,
+            "",
+            scenario_of(&cluster, &wl, PolicyConfig::Homt(m), 10 + m as u64),
+        );
     }
-    fig.add(s);
-    fig
+    spec
+}
+
+pub fn fig5() -> Figure {
+    default_runner().run(&fig5_spec())
 }
 
 // ---------------------------------------------------------------- Fig 7
 
 /// Fig. 7: OA-HeMT adapting to injected interference across a 50-job
 /// WordCount sequence (alpha = 0). Returns per-job map time and the
-/// fraction of data assigned to the interfered node.
-pub fn fig7() -> Figure {
-    let wl = WorkloadConfig {
-        kind: crate::config::WorkloadKind::WordCount,
-        data_mb: 512,
-        block_mb: 256,
-        cpu_secs_per_mb: 42.0 / 1024.0,
-        iterations: 1,
-    };
-    let cluster = ClusterConfig {
-        nodes: vec![NodeConfig::Static { cores: 1.0 }, NodeConfig::Static { cores: 1.0 }],
-        exec_cpus: vec![1.0, 1.0],
-        interference: vec![vec![], vec![]],
-        node_uplink_mbps: 600.0,
-        node_downlink_mbps: 600.0,
-        hdfs_datanodes: 4,
-        hdfs_replication: 2,
-        hdfs_uplink_mbps: 600.0,
-        hdfs_serving_eta: 0.26,
-    };
-    let mut s = cluster.build_session(SimParams::default(), 42);
-    let mut est = SpeedEstimator::new(0.0);
-    let mut times = Series::new("job map-stage time");
-    let mut share = Series::new("node-1 data share");
-    for job_idx in 0..50usize {
-        // Interference events: sysbench-like load lands on node 1 before
-        // job 15 (halving it) and intensifies before job 32.
-        if job_idx == 15 {
-            let t = s.engine.now;
-            s.engine.nodes[1] = s.engine.nodes[1].clone().with_interference(vec![(t, 0.5)]);
-        }
-        if job_idx == 32 {
-            let t = s.engine.now;
-            s.engine.nodes[1] = s.engine.nodes[1].clone().with_interference(vec![(t, 0.25)]);
-        }
-        let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
-        let policy = resolve_policy(
-            &PolicyConfig::HemtAdaptive { alpha: 0.0 },
-            &s,
-            if est.is_cold() { None } else { Some(&est) },
-        );
-        let job = workloads::wordcount_job(
-            file,
-            policy.clone(),
-            policy,
-            wl.cpu_secs_per_mb,
-        );
-        let rec = s.run_job(&job);
-        observe_map_stage(&mut est, &rec, 2);
-        times.push(job_idx as f64, "", &[rec.map_stage_time()]);
-        let by_exec = rec.stages[0].executor_bytes(2);
-        let frac = by_exec[1] as f64 / (by_exec[0] + by_exec[1]) as f64;
-        share.push(job_idx as f64, "", &[frac]);
-    }
-    let mut fig = Figure::new(
+/// fraction of data assigned to the interfered node. One stateful
+/// sequence unit: jobs share a session, so they cannot be split into
+/// independent trials.
+pub fn fig7_spec() -> SweepSpec {
+    let mut spec = SweepSpec::new(
         "Fig 7: OA-HeMT rebalancing under injected interference (alpha=0)",
         "job index",
         "seconds / share",
     );
-    fig.add(times);
-    fig.add(share);
-    fig
+    let times = spec.series("job map-stage time");
+    let share = spec.series("node-1 data share");
+    spec.sequence(move || {
+        let wl = WorkloadConfig {
+            kind: crate::config::WorkloadKind::WordCount,
+            data_mb: 512,
+            block_mb: 256,
+            cpu_secs_per_mb: 42.0 / 1024.0,
+            iterations: 1,
+        };
+        let cluster = ClusterConfig {
+            nodes: vec![
+                NodeConfig::Static { cores: 1.0 },
+                NodeConfig::Static { cores: 1.0 },
+            ],
+            exec_cpus: vec![1.0, 1.0],
+            interference: vec![vec![], vec![]],
+            node_uplink_mbps: 600.0,
+            node_downlink_mbps: 600.0,
+            hdfs_datanodes: 4,
+            hdfs_replication: 2,
+            hdfs_uplink_mbps: 600.0,
+            hdfs_serving_eta: 0.26,
+        };
+        let mut s = cluster.build_session(crate::coordinator::driver::SimParams::default(), 42);
+        let mut est = SpeedEstimator::new(0.0);
+        let mut out = Vec::new();
+        for job_idx in 0..50usize {
+            // Interference events: sysbench-like load lands on node 1
+            // before job 15 (halving it) and intensifies before job 32.
+            if job_idx == 15 {
+                let t = s.engine.now;
+                s.engine.nodes[1] =
+                    s.engine.nodes[1].clone().with_interference(vec![(t, 0.5)]);
+            }
+            if job_idx == 32 {
+                let t = s.engine.now;
+                s.engine.nodes[1] =
+                    s.engine.nodes[1].clone().with_interference(vec![(t, 0.25)]);
+            }
+            let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
+            let policy = resolve_policy(
+                &PolicyConfig::HemtAdaptive { alpha: 0.0 },
+                &s,
+                if est.is_cold() { None } else { Some(&est) },
+            );
+            let job =
+                workloads::wordcount_job(file, policy.clone(), policy, wl.cpu_secs_per_mb);
+            let rec = s.run_job(&job);
+            observe_map_stage(&mut est, &rec, 2);
+            out.push(Sample {
+                series: times,
+                x: job_idx as f64,
+                label: String::new(),
+                value: rec.map_stage_time(),
+            });
+            let by_exec = rec.stages[0].executor_bytes(2);
+            let frac = by_exec[1] as f64 / (by_exec[0] + by_exec[1]) as f64;
+            out.push(Sample {
+                series: share,
+                x: job_idx as f64,
+                label: String::new(),
+                value: frac,
+            });
+        }
+        out
+    });
+    spec
+}
+
+pub fn fig7() -> Figure {
+    default_runner().run(&fig7_spec())
 }
 
 // ---------------------------------------------------------------- Fig 8
@@ -227,56 +231,79 @@ pub fn fig7() -> Figure {
 /// Fig. 8: OA-HeMT convergence when executors differ by initial
 /// provisioning (1.0 vs 0.4 cores): the map stage reaches the optimal
 /// ~60 s within two trials.
-pub fn fig8() -> Figure {
-    let cluster = ClusterConfig::containers_1_and_04();
-    let wl = WorkloadConfig::wordcount_2gb();
-    let mut s = cluster.build_session(SimParams::default(), 7);
-    let mut est = SpeedEstimator::new(0.0);
-    let mut times = Series::new("map-stage time (adaptive)");
-    for job_idx in 0..8usize {
-        let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
-        let policy = resolve_policy(
-            &PolicyConfig::HemtAdaptive { alpha: 0.0 },
-            &s,
-            if est.is_cold() { None } else { Some(&est) },
-        );
-        let job = workloads::wordcount_job(file, policy.clone(), policy, wl.cpu_secs_per_mb);
-        let rec = s.run_job(&job);
-        observe_map_stage(&mut est, &rec, 2);
-        times.push(job_idx as f64, "", &[rec.map_stage_time()]);
-    }
-    let mut fig = Figure::new(
+pub fn fig8_spec() -> SweepSpec {
+    let mut spec = SweepSpec::new(
         "Fig 8: OA-HeMT convergence with 1.0 + 0.4 core executors",
         "trial",
         "map stage time (s)",
     );
-    fig.add(times);
-    fig
+    let times = spec.series("map-stage time (adaptive)");
+    spec.sequence(move || {
+        let cluster = ClusterConfig::containers_1_and_04();
+        let wl = WorkloadConfig::wordcount_2gb();
+        let mut s = cluster.build_session(crate::coordinator::driver::SimParams::default(), 7);
+        let mut est = SpeedEstimator::new(0.0);
+        let mut out = Vec::new();
+        for job_idx in 0..8usize {
+            let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
+            let policy = resolve_policy(
+                &PolicyConfig::HemtAdaptive { alpha: 0.0 },
+                &s,
+                if est.is_cold() { None } else { Some(&est) },
+            );
+            let job =
+                workloads::wordcount_job(file, policy.clone(), policy, wl.cpu_secs_per_mb);
+            let rec = s.run_job(&job);
+            observe_map_stage(&mut est, &rec, 2);
+            out.push(Sample {
+                series: times,
+                x: job_idx as f64,
+                label: String::new(),
+                value: rec.map_stage_time(),
+            });
+        }
+        out
+    });
+    spec
+}
+
+pub fn fig8() -> Figure {
+    default_runner().run(&fig8_spec())
 }
 
 // ---------------------------------------------------------------- Fig 9
 
 /// Fig. 9: static containers (1.0 + 0.4 cores), WordCount 2 GB — the
 /// HomT U-curve vs the HeMT beam from cluster-manager resource hints.
-pub fn fig9() -> Figure {
+pub fn fig9_spec() -> SweepSpec {
     let cluster = ClusterConfig::containers_1_and_04();
     let wl = WorkloadConfig::wordcount_2gb();
-    let mut fig = Figure::new(
+    let mut spec = SweepSpec::new(
         "Fig 9: even partitioning vs HeMT, statically provisioned containers",
         "partitions",
         "map stage time (s)",
     );
-    let mut homt = Series::new("even (HomT sweep)");
+    let homt = spec.series("even (HomT sweep)");
     for m in [2usize, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64] {
-        let times = wordcount_trials(&cluster, &wl, &PolicyConfig::Homt(m), 100 + m as u64);
-        homt.push(m as f64, "", &times);
+        spec.scenario(
+            homt,
+            m as f64,
+            "",
+            scenario_of(&cluster, &wl, PolicyConfig::Homt(m), 100 + m as u64),
+        );
     }
-    fig.add(homt);
-    let mut hemt = Series::new("HeMT (Mesos resource info)");
-    let times = wordcount_trials(&cluster, &wl, &PolicyConfig::HemtFromHints, 900);
-    hemt.push(2.0, "2 (1:0.4)", &times);
-    fig.add(hemt);
-    fig
+    let hemt = spec.series("HeMT (Mesos resource info)");
+    spec.scenario(
+        hemt,
+        2.0,
+        "2 (1:0.4)",
+        scenario_of(&cluster, &wl, PolicyConfig::HemtFromHints, 900),
+    );
+    spec
+}
+
+pub fn fig9() -> Figure {
+    default_runner().run(&fig9_spec())
 }
 
 // --------------------------------------------------------- Figs 10-12
@@ -284,39 +311,62 @@ pub fn fig9() -> Figure {
 /// Figs. 10–12: the burstable-credit planner's closed forms — W(t) for a
 /// t2.small with 4 credits, the superposed curve for credits {4, 8, 12},
 /// and the t' = 80/11 solve giving the 3:4:4 split of a 20-minute job.
-pub fn fig10_12() -> Figure {
-    let mut fig = Figure::new(
+pub fn fig10_12_spec() -> SweepSpec {
+    let mut spec = SweepSpec::new(
         "Figs 10-12: burstable credit planner (t2.small, credits {4,8,12}, W0=20)",
         "t (minutes)",
         "work (CPU-minutes)",
     );
-    let single = CreditCurve::t2_small(4.0);
-    let mut w_single = Series::new("W(t), 4 credits (Fig 10)");
-    for t in 0..=10 {
-        w_single.push(t as f64, "", &[single.work_by(t as f64)]);
-    }
-    fig.add(w_single);
+    let w_single = spec.series("W(t), 4 credits (Fig 10)");
+    let w_sum = spec.series("superposed W_s(t) (Fig 12)");
+    let solve = spec.series("t' and shares");
+    spec.sequence(move || {
+        let mut out = Vec::new();
+        let single = CreditCurve::t2_small(4.0);
+        for t in 0..=10 {
+            out.push(Sample {
+                series: w_single,
+                x: t as f64,
+                label: String::new(),
+                value: single.work_by(t as f64),
+            });
+        }
+        let curves = [
+            CreditCurve::t2_small(4.0),
+            CreditCurve::t2_small(8.0),
+            CreditCurve::t2_small(12.0),
+        ];
+        for t in 0..=20 {
+            let total: f64 = curves.iter().map(|c| c.work_by(t as f64)).sum();
+            out.push(Sample {
+                series: w_sum,
+                x: t as f64,
+                label: String::new(),
+                value: total,
+            });
+        }
+        let plan = crate::estimator::credits::plan(&curves, 20.0).expect("solvable");
+        out.push(Sample {
+            series: solve,
+            x: plan.t_prime,
+            label: "t'".to_string(),
+            value: plan.t_prime,
+        });
+        for (i, share) in plan.shares.iter().enumerate() {
+            out.push(Sample {
+                series: solve,
+                x: plan.t_prime,
+                label: format!("W_{}(t')", i + 1),
+                value: *share,
+            });
+        }
+        out
+    });
+    spec
+}
 
-    let curves = [
-        CreditCurve::t2_small(4.0),
-        CreditCurve::t2_small(8.0),
-        CreditCurve::t2_small(12.0),
-    ];
-    let mut w_sum = Series::new("superposed W_s(t) (Fig 12)");
-    for t in 0..=20 {
-        let total: f64 = curves.iter().map(|c| c.work_by(t as f64)).sum();
-        w_sum.push(t as f64, "", &[total]);
-    }
-    fig.add(w_sum);
-
-    let plan = crate::estimator::credits::plan(&curves, 20.0).expect("solvable");
-    let mut solve = Series::new("t' and shares");
-    solve.push(plan.t_prime, "t'", &[plan.t_prime]);
-    for (i, share) in plan.shares.iter().enumerate() {
-        solve.push(plan.t_prime, &format!("W_{}(t')", i + 1), &[*share]);
-    }
-    fig.add(solve);
-    fig
+pub fn fig10_12() -> Figure {
+    default_runner().run(&fig10_12_spec())
 }
 
 // ------------------------------------------------------- Figs 13/14/15
@@ -324,138 +374,132 @@ pub fn fig10_12() -> Figure {
 /// Figs. 13–15: burstable pair (one credit-rich node, one depleted with
 /// the measured contention penalty), HomT sweep vs naive HeMT (1:0.4) vs
 /// fudge-adjusted HeMT (1:0.32), at the given HDFS uplink bandwidth.
-pub fn fig_burstable(hdfs_mbps: f64, fig_name: &str) -> Figure {
+pub fn fig_burstable_spec(hdfs_mbps: f64, fig_name: &str) -> SweepSpec {
     let cluster = ClusterConfig::burstable_pair(hdfs_mbps);
     let wl = WorkloadConfig::wordcount_2gb();
-    let mut fig = Figure::new(fig_name, "partitions", "map stage time (s)");
-    let mut homt = Series::new("even (HomT sweep)");
+    let mut spec = SweepSpec::new(fig_name, "partitions", "map stage time (s)");
+    let homt = spec.series("even (HomT sweep)");
     for m in [2usize, 4, 8, 16, 32, 64] {
-        let times = wordcount_trials(&cluster, &wl, &PolicyConfig::Homt(m), 200 + m as u64);
-        homt.push(m as f64, "", &times);
+        spec.scenario(
+            homt,
+            m as f64,
+            "",
+            scenario_of(&cluster, &wl, PolicyConfig::Homt(m), 200 + m as u64),
+        );
     }
-    fig.add(homt);
-    let mut naive = Series::new("HeMT naive (1:0.4)");
-    naive.push(
+    let naive = spec.series("HeMT naive (1:0.4)");
+    spec.scenario(
+        naive,
         2.0,
         "2 (1:0.4)",
-        &wordcount_trials(&cluster, &wl, &PolicyConfig::HemtStatic(vec![1.0, 0.4]), 300),
+        scenario_of(&cluster, &wl, PolicyConfig::HemtStatic(vec![1.0, 0.4]), 300),
     );
-    fig.add(naive);
-    let mut adjusted = Series::new("HeMT adjusted (1:0.32)");
-    adjusted.push(
+    let adjusted = spec.series("HeMT adjusted (1:0.32)");
+    spec.scenario(
+        adjusted,
         2.0,
         "2 (1:0.32)",
-        &wordcount_trials(&cluster, &wl, &PolicyConfig::HemtStatic(vec![1.0, 0.32]), 400),
+        scenario_of(&cluster, &wl, PolicyConfig::HemtStatic(vec![1.0, 0.32]), 400),
     );
-    fig.add(adjusted);
-    fig
+    spec
+}
+
+pub fn fig_burstable(hdfs_mbps: f64, fig_name: &str) -> Figure {
+    default_runner().run(&fig_burstable_spec(hdfs_mbps, fig_name))
+}
+
+pub fn fig13_spec() -> SweepSpec {
+    fig_burstable_spec(600.0, "Fig 13: burstable pair, CPU-bound (~600 Mbps uplinks)")
 }
 
 pub fn fig13() -> Figure {
-    fig_burstable(600.0, "Fig 13: burstable pair, CPU-bound (~600 Mbps uplinks)")
+    default_runner().run(&fig13_spec())
+}
+
+pub fn fig14_spec() -> SweepSpec {
+    fig_burstable_spec(480.0, "Fig 14: burstable pair, ~480 Mbps uplinks (still CPU-bound)")
 }
 
 pub fn fig14() -> Figure {
-    fig_burstable(480.0, "Fig 14: burstable pair, ~480 Mbps uplinks (still CPU-bound)")
+    default_runner().run(&fig14_spec())
+}
+
+pub fn fig15_spec() -> SweepSpec {
+    fig_burstable_spec(
+        250.0,
+        "Fig 15: burstable pair, ~250 Mbps uplinks (fast node network-bound)",
+    )
 }
 
 pub fn fig15() -> Figure {
-    fig_burstable(250.0, "Fig 15: burstable pair, ~250 Mbps uplinks (fast node network-bound)")
+    default_runner().run(&fig15_spec())
 }
 
 // ---------------------------------------------------------------- Fig 17
 
-/// One full K-Means run (30 iterations): first iteration reads HDFS and
-/// fixes the cached partition; the rest compute on the cache.
-pub fn kmeans_total_time(
-    cluster: &ClusterConfig,
-    wl: &WorkloadConfig,
-    policy: &PolicyConfig,
-    seed: u64,
-) -> f64 {
-    let mut s = cluster.build_session(SimParams::default(), seed);
-    let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
-    let map = resolve_policy(policy, &s, None);
-    let start = s.engine.now;
-    let first = s.run_job(&workloads::kmeans_first_job(file, map, wl.cpu_secs_per_mb));
-    let parts = workloads::cached_partitions_of(&first.stages[0]);
-    for _ in 1..wl.iterations {
-        s.run_job(&workloads::kmeans_cached_job(parts.clone(), wl.cpu_secs_per_mb));
-    }
-    s.engine.now - start
-}
-
 /// Fig. 17: K-Means job finish time, HeMT vs default vs HomT.
-pub fn fig17() -> Figure {
+pub fn fig17_spec() -> SweepSpec {
     let cluster = ClusterConfig::containers_1_and_04();
     let wl = WorkloadConfig::kmeans_256mb();
-    let mut fig = Figure::new(
+    let mut spec = SweepSpec::new(
         "Fig 17: K-Means (30 iterations, 256 MB) finish time",
         "configuration",
         "job finish time (s)",
     );
-    let mut run = |name: &str, x: f64, policy: PolicyConfig, seed: u64| {
-        let times: Vec<f64> = (0..TRIALS)
-            .map(|t| kmeans_total_time(&cluster, &wl, &policy, seed + 1000 * t as u64))
-            .collect();
-        let mut s = Series::new(name);
-        s.push(x, name, &times);
-        fig.add(s);
+    let add = |spec: &mut SweepSpec, name: &str, x: f64, policy: PolicyConfig, seed: u64| {
+        let series = spec.series(name);
+        spec.scenario(series, x, name, scenario_of(&cluster, &wl, policy, seed));
     };
-    run("default (2 blocks)", 2.0, PolicyConfig::Default, 500);
+    add(&mut spec, "default (2 blocks)", 2.0, PolicyConfig::Default, 500);
     for m in [4usize, 8, 16, 32] {
-        run(&format!("HomT {m}-way"), m as f64, PolicyConfig::Homt(m), 500 + m as u64);
+        add(
+            &mut spec,
+            &format!("HomT {m}-way"),
+            m as f64,
+            PolicyConfig::Homt(m),
+            500 + m as u64,
+        );
     }
-    run("HeMT (1:0.4)", 2.0, PolicyConfig::HemtFromHints, 600);
-    fig
+    add(&mut spec, "HeMT (1:0.4)", 2.0, PolicyConfig::HemtFromHints, 600);
+    spec
+}
+
+pub fn fig17() -> Figure {
+    default_runner().run(&fig17_spec())
 }
 
 // ---------------------------------------------------------------- Fig 18
 
-/// One PageRank run: a single job with 1 + iterations shuffle-chained
-/// stages.
-pub fn pagerank_total_time(
-    cluster: &ClusterConfig,
-    wl: &WorkloadConfig,
-    policy: &PolicyConfig,
-    seed: u64,
-) -> f64 {
-    let mut s = cluster.build_session(SimParams::default(), seed);
-    let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
-    let pol = resolve_policy(policy, &s, None);
-    let rec = s.run_job(&workloads::pagerank_job(
-        file,
-        pol,
-        wl.iterations,
-        wl.cpu_secs_per_mb,
-    ));
-    rec.completion_time()
-}
-
 /// Fig. 18: PageRank finish time — microtask-sensitive because stages are
 /// short, so per-task overhead dominates at high partition counts.
-pub fn fig18() -> Figure {
+pub fn fig18_spec() -> SweepSpec {
     let cluster = ClusterConfig::containers_1_and_04();
     let wl = WorkloadConfig::pagerank_256mb();
-    let mut fig = Figure::new(
+    let mut spec = SweepSpec::new(
         "Fig 18: PageRank (100 iterations, 256 MB) finish time",
         "configuration",
         "job finish time (s)",
     );
-    let mut run = |name: &str, x: f64, policy: PolicyConfig, seed: u64| {
-        let times: Vec<f64> = (0..TRIALS)
-            .map(|t| pagerank_total_time(&cluster, &wl, &policy, seed + 1000 * t as u64))
-            .collect();
-        let mut s = Series::new(name);
-        s.push(x, name, &times);
-        fig.add(s);
+    let add = |spec: &mut SweepSpec, name: &str, x: f64, policy: PolicyConfig, seed: u64| {
+        let series = spec.series(name);
+        spec.scenario(series, x, name, scenario_of(&cluster, &wl, policy, seed));
     };
-    run("default (2-way)", 2.0, PolicyConfig::Default, 700);
+    add(&mut spec, "default (2-way)", 2.0, PolicyConfig::Default, 700);
     for m in [4usize, 8, 16, 32, 64] {
-        run(&format!("HomT {m}-way"), m as f64, PolicyConfig::Homt(m), 700 + m as u64);
+        add(
+            &mut spec,
+            &format!("HomT {m}-way"),
+            m as f64,
+            PolicyConfig::Homt(m),
+            700 + m as u64,
+        );
     }
-    run("HeMT (1:0.4)", 2.0, PolicyConfig::HemtFromHints, 800);
-    fig
+    add(&mut spec, "HeMT (1:0.4)", 2.0, PolicyConfig::HemtFromHints, 800);
+    spec
+}
+
+pub fn fig18() -> Figure {
+    default_runner().run(&fig18_spec())
 }
 
 // ---------------------------------------------------------------- headline
@@ -463,8 +507,8 @@ pub fn fig18() -> Figure {
 /// The paper's headline: HeMT improves average completion times ~10% over
 /// the default system across realistic workloads. Compares HeMT vs the
 /// *best even* configuration per scenario and vs the default.
-pub fn headline() -> Figure {
-    let mut fig = Figure::new(
+pub fn headline_spec() -> SweepSpec {
+    let mut spec = SweepSpec::new(
         "Headline: HeMT vs default / best-HomT across workloads",
         "scenario",
         "completion time (s)",
@@ -472,70 +516,70 @@ pub fn headline() -> Figure {
     // WordCount on static containers.
     let c1 = ClusterConfig::containers_1_and_04();
     let wc = WorkloadConfig::wordcount_2gb();
-    let mut s = Series::new("wordcount/static");
-    s.push(0.0, "default", &wordcount_trials(&c1, &wc, &PolicyConfig::Default, 31));
-    s.push(0.0, "best HomT (8)", &wordcount_trials(&c1, &wc, &PolicyConfig::Homt(8), 32));
-    s.push(0.0, "HeMT", &wordcount_trials(&c1, &wc, &PolicyConfig::HemtFromHints, 33));
-    fig.add(s);
+    let s = spec.series("wordcount/static");
+    spec.scenario(s, 0.0, "default", scenario_of(&c1, &wc, PolicyConfig::Default, 31));
+    spec.scenario(s, 0.0, "best HomT (8)", scenario_of(&c1, &wc, PolicyConfig::Homt(8), 32));
+    spec.scenario(s, 0.0, "HeMT", scenario_of(&c1, &wc, PolicyConfig::HemtFromHints, 33));
     // WordCount on the burstable pair.
     let c2 = ClusterConfig::burstable_pair(600.0);
-    let mut s = Series::new("wordcount/burstable");
-    s.push(1.0, "default", &wordcount_trials(&c2, &wc, &PolicyConfig::Default, 41));
-    s.push(1.0, "best HomT (8)", &wordcount_trials(&c2, &wc, &PolicyConfig::Homt(8), 42));
-    s.push(
+    let s = spec.series("wordcount/burstable");
+    spec.scenario(s, 1.0, "default", scenario_of(&c2, &wc, PolicyConfig::Default, 41));
+    spec.scenario(s, 1.0, "best HomT (8)", scenario_of(&c2, &wc, PolicyConfig::Homt(8), 42));
+    spec.scenario(
+        s,
         1.0,
         "HeMT (fudged)",
-        &wordcount_trials(&c2, &wc, &PolicyConfig::HemtStatic(vec![1.0, 0.32]), 43),
+        scenario_of(&c2, &wc, PolicyConfig::HemtStatic(vec![1.0, 0.32]), 43),
     );
-    fig.add(s);
     // K-Means and PageRank on static containers.
     let km = WorkloadConfig::kmeans_256mb();
-    let mut s = Series::new("kmeans/static");
+    let s = spec.series("kmeans/static");
     for (label, pol, seed) in [
         ("default", PolicyConfig::Default, 51u64),
         ("best HomT (8)", PolicyConfig::Homt(8), 52),
         ("HeMT", PolicyConfig::HemtFromHints, 53),
     ] {
-        let times: Vec<f64> = (0..TRIALS)
-            .map(|t| kmeans_total_time(&c1, &km, &pol, seed + 1000 * t as u64))
-            .collect();
-        s.push(2.0, label, &times);
+        spec.scenario(s, 2.0, label, scenario_of(&c1, &km, pol, seed));
     }
-    fig.add(s);
     let pr = WorkloadConfig::pagerank_256mb();
-    let mut s = Series::new("pagerank/static");
+    let s = spec.series("pagerank/static");
     for (label, pol, seed) in [
         ("default", PolicyConfig::Default, 61u64),
         ("best HomT (4)", PolicyConfig::Homt(4), 62),
         ("HeMT", PolicyConfig::HemtFromHints, 63),
     ] {
-        let times: Vec<f64> = (0..TRIALS)
-            .map(|t| pagerank_total_time(&c1, &pr, &pol, seed + 1000 * t as u64))
-            .collect();
-        s.push(3.0, label, &times);
+        spec.scenario(s, 3.0, label, scenario_of(&c1, &pr, pol, seed));
     }
-    fig.add(s);
-    fig
+    spec
 }
 
-/// Dispatch by figure name for the CLI.
-pub fn by_name(name: &str) -> Option<Figure> {
+pub fn headline() -> Figure {
+    default_runner().run(&headline_spec())
+}
+
+/// Dispatch to a figure's sweep spec by CLI name.
+pub fn spec_by_name(name: &str) -> Option<SweepSpec> {
     match name {
-        "4" | "fig4" => Some(fig4()),
-        "5" | "fig5" => Some(fig5()),
-        "7" | "fig7" => Some(fig7()),
-        "8" | "fig8" => Some(fig8()),
-        "9" | "fig9" => Some(fig9()),
-        "10" | "11" | "12" | "fig10_12" => Some(fig10_12()),
-        "13" | "fig13" => Some(fig13()),
-        "14" | "fig14" => Some(fig14()),
-        "15" | "fig15" => Some(fig15()),
-        "17" | "fig17" => Some(fig17()),
-        "18" | "fig18" => Some(fig18()),
-        "headline" => Some(headline()),
-        "4node" | "extension" => Some(extension::four_node()),
+        "4" | "fig4" => Some(fig4_spec()),
+        "5" | "fig5" => Some(fig5_spec()),
+        "7" | "fig7" => Some(fig7_spec()),
+        "8" | "fig8" => Some(fig8_spec()),
+        "9" | "fig9" => Some(fig9_spec()),
+        "10" | "11" | "12" | "fig10_12" => Some(fig10_12_spec()),
+        "13" | "fig13" => Some(fig13_spec()),
+        "14" | "fig14" => Some(fig14_spec()),
+        "15" | "fig15" => Some(fig15_spec()),
+        "17" | "fig17" => Some(fig17_spec()),
+        "18" | "fig18" => Some(fig18_spec()),
+        "headline" => Some(headline_spec()),
+        "4node" | "extension" => Some(extension::four_node_spec()),
         _ => None,
     }
+}
+
+/// Dispatch by figure name for the CLI (runs through [`default_runner`]).
+pub fn by_name(name: &str) -> Option<Figure> {
+    spec_by_name(name).map(|spec| default_runner().run(&spec))
 }
 
 /// All figure names, for `hemt figure all`.

@@ -23,7 +23,9 @@
 //! Two execution modes share one coordinator:
 //!
 //! * `sim` — the fluid DES reproduces every figure of the paper's
-//!   evaluation (see [`experiments`] and `rust/benches/`).
+//!   evaluation (see [`experiments`] and `rust/benches/`); figures are
+//!   declared as [`sweep`] specs and fanned out over a deterministic
+//!   multi-threaded sweep runner.
 //! * `real` — tasks execute the compiled PJRT artifacts on this machine,
 //!   with heterogeneity imposed by duty-cycle throttling; measured task
 //!   times feed the same OA-HeMT estimator (see `examples/`).
@@ -46,5 +48,6 @@ pub mod nodes;
 pub mod partition;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod util;
 pub mod workloads;

@@ -22,13 +22,39 @@ use hemt::{analysis, config, experiments};
 
 fn usage() -> &'static str {
     "usage:
-  hemt figure <id|all> [--json]     reproduce a paper figure (4,5,7,8,9,10,13,14,15,17,18,headline)
-  hemt ablation <name|all> [--json] design-choice ablations (alpha, speculation, rack, stale_credits)
-  hemt run --config <file> [--json] run an experiment config
+  hemt figure <id|all> [--json] [--threads N]
+                                    reproduce a paper figure (4,5,7,8,9,10,13,14,15,17,18,headline)
+  hemt ablation <name|all> [--json] [--threads N]
+                                    design-choice ablations (alpha, speculation, rack, stale_credits)
+  hemt run --config <file> [--json] [--threads N]
+                                    run an experiment config
   hemt analysis                     closed-form Claim 1 / Claim 2 numbers
   hemt plan-credits --work <W> <c1> <c2> ...   burstable credit planner
   hemt real <wordcount|kmeans|pagerank>        real PJRT execution demo
-  hemt artifacts                    list AOT artifacts"
+  hemt artifacts                    list AOT artifacts
+
+  Sweeps fan trials out over a worker pool: --threads (or the
+  HEMT_SWEEP_THREADS env var) sets the pool size, defaulting to the
+  machine's available parallelism. Results are bit-identical for any
+  thread count."
+}
+
+/// Parse `--threads N` into a sweep runner (default: env/auto).
+fn runner_from_args(args: &[String]) -> Result<hemt::sweep::SweepRunner, String> {
+    match args.iter().position(|a| a == "--threads") {
+        None => Ok(hemt::experiments::default_runner()),
+        Some(i) => {
+            let n: usize = args
+                .get(i + 1)
+                .ok_or("--threads needs a value")?
+                .parse()
+                .map_err(|e| format!("bad --threads: {e}"))?;
+            if n == 0 {
+                return Err("--threads must be >= 1".into());
+            }
+            Ok(hemt::sweep::SweepRunner::new(n))
+        }
+    }
 }
 
 fn main() -> ExitCode {
@@ -56,19 +82,39 @@ fn main() -> ExitCode {
     }
 }
 
+/// First positional argument, skipping flags and their values.
+fn positional(args: &[String]) -> Option<&String> {
+    let mut skip_next = false;
+    for a in args {
+        if skip_next {
+            skip_next = false;
+            continue;
+        }
+        if a == "--threads" || a == "--config" {
+            skip_next = true;
+            continue;
+        }
+        if a.starts_with("--") {
+            continue;
+        }
+        return Some(a);
+    }
+    None
+}
+
 fn cmd_figure(args: &[String]) -> Result<(), String> {
     let json = args.iter().any(|a| a == "--json");
-    let name = args
-        .iter()
-        .find(|a| !a.starts_with("--"))
-        .ok_or("figure id required")?;
+    let runner = runner_from_args(args)?;
+    let name = positional(args).ok_or("figure id required")?;
     let names: Vec<&str> = if name == "all" {
         experiments::ALL_FIGURES.to_vec()
     } else {
         vec![name.as_str()]
     };
     for n in names {
-        let fig = experiments::by_name(n).ok_or_else(|| format!("unknown figure '{n}'"))?;
+        let spec =
+            experiments::spec_by_name(n).ok_or_else(|| format!("unknown figure '{n}'"))?;
+        let fig = runner.run(&spec);
         if json {
             println!("{}", fig.to_json().pretty());
         } else {
@@ -80,18 +126,17 @@ fn cmd_figure(args: &[String]) -> Result<(), String> {
 
 fn cmd_ablation(args: &[String]) -> Result<(), String> {
     let json = args.iter().any(|a| a == "--json");
-    let name = args
-        .iter()
-        .find(|a| !a.starts_with("--"))
-        .ok_or("ablation name required")?;
+    let runner = runner_from_args(args)?;
+    let name = positional(args).ok_or("ablation name required")?;
     let names: Vec<&str> = if name == "all" {
         experiments::ablations::ALL_ABLATIONS.to_vec()
     } else {
         vec![name.as_str()]
     };
     for n in names {
-        let fig = experiments::ablations::by_name(n)
+        let spec = experiments::ablations::spec_by_name(n)
             .ok_or_else(|| format!("unknown ablation '{n}'"))?;
+        let fig = runner.run(&spec);
         if json {
             println!("{}", fig.to_json().pretty());
         } else {
@@ -103,6 +148,7 @@ fn cmd_ablation(args: &[String]) -> Result<(), String> {
 
 fn cmd_run(args: &[String]) -> Result<(), String> {
     let json = args.iter().any(|a| a == "--json");
+    let runner = runner_from_args(args)?;
     let path = args
         .iter()
         .position(|a| a == "--config")
@@ -110,7 +156,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         .ok_or("--config <file> required")?;
     let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
     let cfg = config::ExperimentConfig::from_str(&text)?;
-    let fig = run_config(&cfg);
+    let fig = runner.run(&config_spec(&cfg));
     if json {
         println!("{}", fig.to_json().pretty());
     } else {
@@ -119,47 +165,26 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     Ok(())
 }
 
-/// Execute a config: `trials` runs of the configured workload under the
-/// configured policy, reporting completion-time stats.
-fn run_config(cfg: &config::ExperimentConfig) -> hemt::metrics::Figure {
-    use config::WorkloadKind;
-    let mut fig = hemt::metrics::Figure::new(&cfg.name, "trial set", "completion time (s)");
-    let times: Vec<f64> = (0..cfg.trials)
-        .map(|t| {
-            let seed = cfg.base_seed + 1000 * t as u64;
-            match cfg.workload.kind {
-                WorkloadKind::WordCount => {
-                    let mut s = cfg
-                        .cluster
-                        .build_session(hemt::coordinator::driver::SimParams::default(), seed);
-                    let file = s.hdfs.upload(
-                        cfg.workload.data_mb * experiments::MB,
-                        cfg.workload.block_mb * experiments::MB,
-                        &mut s.rng,
-                    );
-                    let map = experiments::resolve_policy(&cfg.policy, &s, None);
-                    let reduce = map.clone();
-                    let job = hemt::workloads::wordcount_job(
-                        file,
-                        map,
-                        reduce,
-                        cfg.workload.cpu_secs_per_mb,
-                    );
-                    s.run_job(&job).completion_time()
-                }
-                WorkloadKind::KMeans => {
-                    experiments::kmeans_total_time(&cfg.cluster, &cfg.workload, &cfg.policy, seed)
-                }
-                WorkloadKind::PageRank => {
-                    experiments::pagerank_total_time(&cfg.cluster, &cfg.workload, &cfg.policy, seed)
-                }
-            }
-        })
-        .collect();
-    let mut series = hemt::metrics::Series::new(cfg.workload.kind.name());
-    series.push(0.0, &cfg.name, &times);
-    fig.add(series);
-    fig
+/// Express a config file as a sweep spec: `trials` runs of the configured
+/// workload under the configured policy, reporting completion-time stats.
+fn config_spec(cfg: &config::ExperimentConfig) -> hemt::sweep::SweepSpec {
+    let mut spec =
+        hemt::sweep::SweepSpec::new(&cfg.name, "trial set", "completion time (s)");
+    let series = spec.series(cfg.workload.kind.name());
+    spec.scenario(
+        series,
+        0.0,
+        &cfg.name,
+        hemt::sweep::Scenario {
+            cluster: cfg.cluster.clone(),
+            workload: cfg.workload.clone(),
+            policy: cfg.policy.clone(),
+            metric: hemt::sweep::Metric::JobTime,
+            trials: cfg.trials,
+            base_seed: cfg.base_seed,
+        },
+    );
+    spec
 }
 
 fn cmd_analysis() -> Result<(), String> {

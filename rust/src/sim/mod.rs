@@ -61,6 +61,31 @@ impl Ord for Timer {
     }
 }
 
+/// Indexed CPU-completion candidate: the absolute time job `id` finishes
+/// at its current rate. The heap is rebuilt whenever rates change (job
+/// set or node capacity — the `cpu_rates_dirty` machinery), so between
+/// rebuilds the head is the exact next completion without scanning jobs.
+/// Entries for cancelled jobs are dropped lazily at the head.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct CpuCandidate {
+    time: f64,
+    id: JobId,
+}
+
+impl Eq for CpuCandidate {}
+
+impl PartialOrd for CpuCandidate {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for CpuCandidate {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time.total_cmp(&other.time).then(self.id.cmp(&other.id))
+    }
+}
+
 /// What the engine hands back to the driver.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Event {
@@ -85,10 +110,18 @@ pub struct Engine {
     /// capacity changes are detected by comparing `capacity_cache`.
     cpu_rates_dirty: bool,
     capacity_cache: Vec<f64>,
+    /// Min-heap of absolute job-completion candidates, valid between rate
+    /// recomputations (rebuilt alongside the rates).
+    cpu_heap: BinaryHeap<Reverse<CpuCandidate>>,
+    /// Per-node CPU usage (cores) at current rates, maintained
+    /// incrementally by `recompute_cpu_rates` instead of re-summed from
+    /// every job on every step.
+    usage_cache: Vec<f64>,
 }
 
 impl Engine {
     pub fn new(nodes: Vec<Node>, net: NetSim) -> Engine {
+        let num_nodes = nodes.len();
         Engine {
             now: 0.0,
             net,
@@ -99,6 +132,8 @@ impl Engine {
             next_seq: 0,
             cpu_rates_dirty: true,
             capacity_cache: Vec::new(),
+            cpu_heap: BinaryHeap::new(),
+            usage_cache: vec![0.0; num_nodes],
         }
     }
 
@@ -163,18 +198,11 @@ impl Engine {
         self.jobs.len()
     }
 
-    /// Per-node total CPU usage (cores) at current rates.
-    fn node_usage(&self) -> Vec<f64> {
-        let mut usage = vec![0.0; self.nodes.len()];
-        for j in self.jobs.values() {
-            usage[j.node] += j.rate;
-        }
-        usage
-    }
-
     /// Recompute CPU job rates if the job set or any node's capacity
     /// changed since the last computation (the hot-path fast-out: steady
-    /// intervals between events skip the water-fill entirely).
+    /// intervals between events skip the water-fill entirely). A real
+    /// recomputation also rebuilds the completion-candidate heap and the
+    /// per-node usage cache, which stay valid until the next change.
     fn recompute_cpu_rates(&mut self) {
         let changed = self.cpu_rates_dirty
             || self.capacity_cache.len() != self.nodes.len()
@@ -201,6 +229,24 @@ impl Engine {
             for (i, id) in ids.iter().enumerate() {
                 self.jobs.get_mut(id).unwrap().rate = rates[i];
             }
+        }
+        self.usage_cache.clear();
+        self.usage_cache.resize(self.nodes.len(), 0.0);
+        self.cpu_heap.clear();
+        for j in self.jobs.values() {
+            self.usage_cache[j.node] += j.rate;
+            if j.remaining <= 1e-9 {
+                // Born-finished (sub-epsilon work): completes immediately.
+                self.cpu_heap
+                    .push(Reverse(CpuCandidate { time: self.now, id: j.id }));
+            } else if j.rate > 0.0 {
+                self.cpu_heap.push(Reverse(CpuCandidate {
+                    time: self.now + j.remaining / j.rate,
+                    id: j.id,
+                }));
+            }
+            // rate == 0 with work left: no candidate — the job cannot
+            // finish until a rate change rebuilds the heap.
         }
     }
 
@@ -241,14 +287,21 @@ impl Engine {
             if let Some((d, _)) = self.net.next_completion() {
                 dt = dt.min(d);
             }
-            for j in self.jobs.values() {
-                if j.rate > 0.0 {
-                    dt = dt.min(j.remaining / j.rate);
+            // Earliest CPU completion from the indexed candidates (fresh
+            // after recompute); skim any lazily-invalidated head entries.
+            loop {
+                let head = match self.cpu_heap.peek() {
+                    Some(Reverse(c)) => (c.time, c.id),
+                    None => break,
+                };
+                if self.jobs.contains_key(&head.1) {
+                    dt = dt.min(head.0 - self.now);
+                    break;
                 }
+                self.cpu_heap.pop();
             }
-            let usage = self.node_usage();
             for (i, n) in self.nodes.iter().enumerate() {
-                if let Some(t) = n.next_state_change(self.now, usage[i]) {
+                if let Some(t) = n.next_state_change(self.now, self.usage_cache[i]) {
                     dt = dt.min(t - self.now);
                 }
             }
@@ -266,11 +319,13 @@ impl Engine {
 
             // 3. Advance the world by dt.
             self.net.advance(dt);
-            for j in self.jobs.values_mut() {
-                j.remaining = (j.remaining - j.rate * dt).max(0.0);
+            if dt > 0.0 {
+                for j in self.jobs.values_mut() {
+                    j.remaining = (j.remaining - j.rate * dt).max(0.0);
+                }
             }
             for (i, n) in self.nodes.iter_mut().enumerate() {
-                n.advance(self.now, dt, usage[i]);
+                n.advance(self.now, dt, self.usage_cache[i]);
             }
             self.now += dt;
             // Loop: pop_ready will deliver whatever completed; if only a
@@ -292,15 +347,31 @@ impl Engine {
             let f = self.net.remove_flow(id).unwrap();
             return Some(Event::FlowDone { id, tag: f.tag });
         }
-        let done_job = self
-            .jobs
-            .values()
-            .find(|j| j.remaining <= 1e-9)
-            .map(|j| j.id);
-        if let Some(id) = done_job {
-            let j = self.jobs.remove(&id).unwrap();
-            self.cpu_rates_dirty = true;
-            return Some(Event::JobDone { id, tag: j.tag });
+        // CPU jobs complete in candidate order (time, then id). Entries
+        // whose job was cancelled are dropped here; an unfinished head
+        // means no job is due (candidate times are consistent with the
+        // rates that produced the current `remaining` values).
+        loop {
+            let head_id = match self.cpu_heap.peek() {
+                Some(Reverse(c)) => c.id,
+                None => break,
+            };
+            let finished = match self.jobs.get(&head_id) {
+                None => None, // cancelled — drop the stale entry below
+                Some(j) => Some(j.remaining <= 1e-9),
+            };
+            match finished {
+                None => {
+                    self.cpu_heap.pop();
+                }
+                Some(true) => {
+                    self.cpu_heap.pop();
+                    let j = self.jobs.remove(&head_id).unwrap();
+                    self.cpu_rates_dirty = true;
+                    return Some(Event::JobDone { id: head_id, tag: j.tag });
+                }
+                Some(false) => break,
+            }
         }
         None
     }
@@ -440,6 +511,108 @@ mod tests {
     fn drained_engine_returns_none() {
         let mut e = Engine::new(one_node(), NetSim::new());
         assert_eq!(e.step(), None);
+    }
+
+    #[test]
+    fn simultaneous_timer_flow_job_order_is_timer_flow_job() {
+        // All three complete at t=1: the deterministic delivery order is
+        // timers, then flows, then CPU jobs.
+        let mut net = NetSim::new();
+        let l = net.add_link("up", 100.0);
+        let mut e = Engine::new(one_node(), net);
+        e.set_timer(1.0, 10);
+        e.add_flow(vec![l], 100.0, 20); // 100 bits at 100 bps -> t=1
+        e.add_cpu_job(0, 1.0, 1.0, 30); // 1 core-s at 1 core -> t=1
+        let evs = e.run_to_end();
+        assert_eq!(evs.len(), 3);
+        assert!(evs.iter().all(|(t, _)| (t - 1.0).abs() < 1e-9));
+        assert_eq!(evs[0].1, Event::Timer { tag: 10 });
+        assert!(matches!(evs[1].1, Event::FlowDone { tag: 20, .. }));
+        assert!(matches!(evs[2].1, Event::JobDone { tag: 30, .. }));
+    }
+
+    #[test]
+    fn simultaneous_jobs_complete_in_id_order() {
+        // Two equal jobs on separate nodes finish at the same instant;
+        // candidate order (time, then id) delivers the lower id first.
+        let nodes = vec![Node::fixed("a", 1.0), Node::fixed("b", 1.0)];
+        let mut e = Engine::new(nodes, NetSim::new());
+        let a = e.add_cpu_job(0, 1.0, 3.0, 100);
+        let b = e.add_cpu_job(1, 1.0, 3.0, 200);
+        assert!(a < b);
+        let evs = e.run_to_end();
+        assert!(matches!(evs[0].1, Event::JobDone { tag: 100, .. }));
+        assert!(matches!(evs[1].1, Event::JobDone { tag: 200, .. }));
+        assert!((evs[0].0 - 3.0).abs() < 1e-9);
+        assert!((evs[1].0 - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cancel_before_first_step_never_delivers() {
+        let mut e = Engine::new(one_node(), NetSim::new());
+        let a = e.add_cpu_job(0, 1.0, 1.0, 1);
+        let _b = e.add_cpu_job(0, 1.0, 5.0, 2);
+        assert!(e.cancel_cpu_job(a).is_some());
+        let evs = e.run_to_end();
+        // Only b remains; alone at rate 1.0 its 5 core-s finish at t=5.
+        assert_eq!(evs.len(), 1);
+        assert!(matches!(evs[0].1, Event::JobDone { tag: 2, .. }));
+        assert!((evs[0].0 - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cancel_mid_run_invalidates_heap_entry_and_releases_capacity() {
+        // Both jobs share the node at 0.5 cores; at t=2 each has 9 core-s
+        // left. Cancelling `a` (whose completion candidate is already in
+        // the heap) must drop its stale entry and let `b` run at 1.0.
+        let mut e = Engine::new(one_node(), NetSim::new());
+        let a = e.add_cpu_job(0, 1.0, 10.0, 1);
+        let _b = e.add_cpu_job(0, 1.0, 10.0, 2);
+        e.set_timer(2.0, 99);
+        let ev = e.step().unwrap();
+        assert_eq!(ev, Event::Timer { tag: 99 });
+        let cancelled = e.cancel_cpu_job(a).unwrap();
+        assert!((cancelled.remaining - 9.0).abs() < 1e-9);
+        let evs = e.run_to_end();
+        assert_eq!(evs.len(), 1);
+        assert!(matches!(evs[0].1, Event::JobDone { tag: 2, .. }));
+        assert!((evs[0].0 - 11.0).abs() < 1e-9, "got {}", evs[0].0);
+        assert_eq!(e.num_cpu_jobs(), 0);
+    }
+
+    #[test]
+    fn capacity_change_reschedules_completion_candidates() {
+        // The heap candidate computed at rate 1.0 (t=10) must be replaced
+        // when the node halves at t=4: 6 core-s remain at 0.5 -> t=16.
+        let n = Node::fixed("n", 1.0).with_interference(vec![(4.0, 0.5)]);
+        let mut e = Engine::new(vec![n], NetSim::new());
+        e.add_cpu_job(0, 1.0, 10.0, 7);
+        let evs = e.run_to_end();
+        assert_eq!(evs.len(), 1);
+        assert!((evs[0].0 - 16.0).abs() < 1e-9, "got {}", evs[0].0);
+    }
+
+    #[test]
+    #[should_panic(expected = "engine livelock")]
+    fn livelock_guard_fires_on_zero_progress_oscillation() {
+        // A pathological burstable whose credit balance can never reach
+        // its replenish threshold (max_credits < replenish_threshold) but
+        // whose enormous earn rate schedules a state change every ~1e-12
+        // simulated seconds: the engine makes no real progress and the
+        // guard must fail loudly instead of spinning forever.
+        let b = Burstable {
+            peak: 1.0,
+            baseline: 0.4,
+            earn: 1e12,
+            credits: 1.0,
+            max_credits: 1.0,
+            contention_penalty: 1.0,
+            depleted: true,
+            replenish_threshold: 2.0,
+        };
+        let mut e = Engine::new(vec![Node::burstable("z", b)], NetSim::new());
+        e.set_timer(1000.0, 1);
+        while e.step().is_some() {}
     }
 
     #[test]

@@ -1,0 +1,487 @@
+//! Parallel scenario-sweep subsystem: declarative sweep specs fanned out
+//! over a scoped-thread worker pool.
+//!
+//! The paper's contribution is an *experimental* comparison — HeMT vs.
+//! HomT across cluster × workload × policy scenarios — so the value of
+//! this reproduction scales with how many scenarios it can sweep and how
+//! fast. A [`SweepSpec`] declares a figure as independent work units
+//! (per-trial simulations, or whole stateful sequences such as the
+//! OA-HeMT adaptation runs); a [`SweepRunner`] executes the units over a
+//! worker pool and merges their samples into a [`Figure`].
+//!
+//! **Determinism contract:** every unit derives all randomness from its
+//! own seed (via [`trial_seed`]) and owns its simulation state, so unit
+//! outputs are independent of scheduling; the merge consumes them in
+//! declaration order. The resulting `Figure` is therefore *bit-identical*
+//! for any worker count — asserted by `rust/tests/golden_figures.rs`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::{ClusterConfig, PolicyConfig, WorkloadConfig, WorkloadKind};
+use crate::coordinator::driver::{Session, SimParams};
+use crate::coordinator::PartitionPolicy;
+use crate::estimator::SpeedEstimator;
+use crate::metrics::{Figure, Series};
+use crate::workloads;
+
+pub const MB: u64 = 1 << 20;
+
+/// Canonical per-trial seed derivation: trial `t` of a point seeded at
+/// `base` runs with `base + 1000 * t` (the seed spacing every experiment
+/// driver has used since the repo's first figures — kept so refactored
+/// figures reproduce the same numbers).
+pub fn trial_seed(base: u64, trial: usize) -> u64 {
+    base + 1000 * trial as u64
+}
+
+/// One measurement emitted by a work unit: a `value` for the cell
+/// `(series, x, label)` of the figure under construction. Samples that
+/// share a cell are aggregated into that point's trial summary.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub series: usize,
+    pub x: f64,
+    pub label: String,
+    pub value: f64,
+}
+
+/// An independent work unit: runs on some worker thread, returns its
+/// samples. Units must be self-contained (own session, own seed).
+pub type UnitFn = Box<dyn Fn() -> Vec<Sample> + Send + Sync>;
+
+/// Which quantity a declarative [`Scenario`] trial reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    /// Map-stage completion time (what Figs. 5, 9, 13–15 plot). For
+    /// K-Means / PageRank this is the workload's total time.
+    MapStageTime,
+    /// Whole-job completion time (`hemt run` configs, headline totals).
+    JobTime,
+}
+
+/// A declarative grid cell: cluster × workload × policy, plus the trial
+/// plan. [`SweepSpec::scenario`] expands it into per-trial units.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub cluster: ClusterConfig,
+    pub workload: WorkloadConfig,
+    pub policy: PolicyConfig,
+    pub metric: Metric,
+    pub trials: usize,
+    pub base_seed: u64,
+}
+
+/// A declarative figure: metadata, named series, and the work units that
+/// fill them.
+pub struct SweepSpec {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    series_names: Vec<String>,
+    units: Vec<UnitFn>,
+}
+
+impl SweepSpec {
+    pub fn new(title: &str, x_label: &str, y_label: &str) -> SweepSpec {
+        SweepSpec {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            y_label: y_label.to_string(),
+            series_names: Vec::new(),
+            units: Vec::new(),
+        }
+    }
+
+    /// Declare the next series; returns its index for use in samples.
+    /// Series appear in the figure in declaration order.
+    pub fn series(&mut self, name: &str) -> usize {
+        self.series_names.push(name.to_string());
+        self.series_names.len() - 1
+    }
+
+    pub fn num_series(&self) -> usize {
+        self.series_names.len()
+    }
+
+    /// Total independent work units (the sweep's parallelism budget).
+    pub fn num_units(&self) -> usize {
+        self.units.len()
+    }
+
+    /// Add one point of a trial grid: `trials` units, each calling
+    /// `run(trial_seed(base_seed, t))` and contributing one sample to the
+    /// cell `(series, x, label)`.
+    pub fn grid<F>(
+        &mut self,
+        series: usize,
+        x: f64,
+        label: &str,
+        trials: usize,
+        base_seed: u64,
+        run: F,
+    ) where
+        F: Fn(u64) -> f64 + Send + Sync + 'static,
+    {
+        assert!(series < self.series_names.len(), "undeclared series {series}");
+        assert!(trials > 0, "a grid point needs at least one trial");
+        let run = Arc::new(run);
+        for t in 0..trials {
+            let run = Arc::clone(&run);
+            let label = label.to_string();
+            let seed = trial_seed(base_seed, t);
+            self.units.push(Box::new(move || {
+                vec![Sample { series, x, label: label.clone(), value: (*run)(seed) }]
+            }));
+        }
+    }
+
+    /// Add one point of a declarative cluster × workload × policy grid.
+    pub fn scenario(&mut self, series: usize, x: f64, label: &str, sc: Scenario) {
+        let trials = sc.trials;
+        let base_seed = sc.base_seed;
+        let sc = Arc::new(sc);
+        self.grid(series, x, label, trials, base_seed, move |seed| {
+            run_scenario_trial(&sc, seed)
+        });
+    }
+
+    /// Add a stateful sequence unit (one worker, runs start to finish):
+    /// adaptive multi-job runs, closed-form series, anything that cannot
+    /// be split into independent trials. May emit samples for any
+    /// declared series.
+    pub fn sequence<F>(&mut self, run: F)
+    where
+        F: Fn() -> Vec<Sample> + Send + Sync + 'static,
+    {
+        self.units.push(Box::new(run));
+    }
+}
+
+/// Executes [`SweepSpec`]s over a pool of `threads` scoped worker
+/// threads. Output is bit-identical for any thread count.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepRunner {
+    threads: usize,
+}
+
+impl SweepRunner {
+    pub fn new(threads: usize) -> SweepRunner {
+        assert!(threads >= 1, "need at least one worker");
+        SweepRunner { threads }
+    }
+
+    /// Single-threaded runner (the serial baseline).
+    pub fn serial() -> SweepRunner {
+        SweepRunner::new(1)
+    }
+
+    /// Worker count from `HEMT_SWEEP_THREADS`, defaulting to the
+    /// machine's available parallelism. A set-but-invalid value (not a
+    /// positive integer) is a hard error, matching the CLI's `--threads`.
+    pub fn from_env() -> SweepRunner {
+        let threads = match std::env::var("HEMT_SWEEP_THREADS") {
+            Err(_) => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            Ok(v) => match v.trim().parse::<usize>() {
+                Ok(n) if n >= 1 => n,
+                _ => panic!("HEMT_SWEEP_THREADS must be a positive integer, got '{v}'"),
+            },
+        };
+        SweepRunner::new(threads)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run every unit and merge samples into the figure. Units execute in
+    /// work-stealing order across the pool; results are merged in unit
+    /// declaration order, so the output does not depend on scheduling.
+    pub fn run(&self, spec: &SweepSpec) -> Figure {
+        let outputs = self.execute_units(&spec.units);
+        // Cells keyed by (x bit-pattern, label), per series, in first-
+        // appearance order — exactly the order a serial driver would have
+        // pushed points.
+        let mut cells: Vec<Vec<(u64, String, Vec<f64>)>> =
+            vec![Vec::new(); spec.series_names.len()];
+        for unit_samples in &outputs {
+            for s in unit_samples {
+                assert!(
+                    s.series < cells.len(),
+                    "sample for undeclared series {}",
+                    s.series
+                );
+                let key = s.x.to_bits();
+                let list = &mut cells[s.series];
+                match list.iter_mut().find(|(xb, lab, _)| *xb == key && *lab == s.label) {
+                    Some((_, _, values)) => values.push(s.value),
+                    None => list.push((key, s.label.clone(), vec![s.value])),
+                }
+            }
+        }
+        let mut fig = Figure::new(&spec.title, &spec.x_label, &spec.y_label);
+        for (si, name) in spec.series_names.iter().enumerate() {
+            let mut series = Series::new(name);
+            for (xb, label, values) in &cells[si] {
+                series.push(f64::from_bits(*xb), label, values);
+            }
+            fig.add(series);
+        }
+        fig
+    }
+
+    /// Fan the units out over the pool; returns per-unit outputs indexed
+    /// by declaration order.
+    fn execute_units(&self, units: &[UnitFn]) -> Vec<Vec<Sample>> {
+        let n = units.len();
+        if self.threads == 1 || n <= 1 {
+            return units.iter().map(|u| u()).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<Vec<Sample>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        let workers = self.threads.min(n);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                // Handles are joined implicitly when the scope exits.
+                let _ = scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let out = units[i]();
+                    *slots[i].lock().unwrap() = Some(out);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("worker filled its slot"))
+            .collect()
+    }
+}
+
+// ------------------------------------------------------- scenario trials
+
+/// Resolve a policy description into a concrete partitioning for a
+/// session (static weights, manager hints, or estimator state).
+pub fn resolve_policy(
+    policy: &PolicyConfig,
+    session: &Session,
+    estimator: Option<&SpeedEstimator>,
+) -> PartitionPolicy {
+    let n = session.executors.len();
+    match policy {
+        PolicyConfig::Default => PartitionPolicy::PerBlock,
+        PolicyConfig::Homt(m) => PartitionPolicy::EvenTasks(*m),
+        PolicyConfig::HemtStatic(w) => PartitionPolicy::Hemt(w.clone()),
+        PolicyConfig::HemtFromHints => PartitionPolicy::Hemt(session.capacity_hints()),
+        PolicyConfig::HemtAdaptive { .. } => {
+            let weights = match estimator {
+                Some(e) => e.weights(&(0..n).collect::<Vec<_>>()),
+                None => vec![1.0; n],
+            };
+            PartitionPolicy::Hemt(weights)
+        }
+    }
+}
+
+/// Execute one trial of a [`Scenario`] at the given seed.
+pub fn run_scenario_trial(sc: &Scenario, seed: u64) -> f64 {
+    match sc.workload.kind {
+        WorkloadKind::WordCount => wordcount_trial(sc, seed),
+        WorkloadKind::KMeans => {
+            kmeans_total_time(&sc.cluster, &sc.workload, &sc.policy, seed)
+        }
+        WorkloadKind::PageRank => {
+            pagerank_total_time(&sc.cluster, &sc.workload, &sc.policy, seed)
+        }
+    }
+}
+
+/// One WordCount job; reports the scenario's metric.
+fn wordcount_trial(sc: &Scenario, seed: u64) -> f64 {
+    let mut s = sc.cluster.build_session(SimParams::default(), seed);
+    let file = s
+        .hdfs
+        .upload(sc.workload.data_mb * MB, sc.workload.block_mb * MB, &mut s.rng);
+    let map = resolve_policy(&sc.policy, &s, None);
+    let reduce = match (&map, sc.metric) {
+        (PartitionPolicy::Hemt(w), _) => PartitionPolicy::Hemt(w.clone()),
+        (_, Metric::MapStageTime) => PartitionPolicy::EvenTasks(s.executors.len()),
+        (other, Metric::JobTime) => other.clone(),
+    };
+    let job = workloads::wordcount_job(file, map, reduce, sc.workload.cpu_secs_per_mb);
+    let rec = s.run_job(&job);
+    match sc.metric {
+        Metric::MapStageTime => rec.map_stage_time(),
+        Metric::JobTime => rec.completion_time(),
+    }
+}
+
+/// One full K-Means run (`wl.iterations` iterations): the first iteration
+/// reads HDFS and fixes the cached partition; the rest compute on the
+/// cache. Returns the total time.
+pub fn kmeans_total_time(
+    cluster: &ClusterConfig,
+    wl: &WorkloadConfig,
+    policy: &PolicyConfig,
+    seed: u64,
+) -> f64 {
+    let mut s = cluster.build_session(SimParams::default(), seed);
+    let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
+    let map = resolve_policy(policy, &s, None);
+    let start = s.engine.now;
+    let first = s.run_job(&workloads::kmeans_first_job(file, map, wl.cpu_secs_per_mb));
+    let parts = workloads::cached_partitions_of(&first.stages[0]);
+    for _ in 1..wl.iterations {
+        s.run_job(&workloads::kmeans_cached_job(parts.clone(), wl.cpu_secs_per_mb));
+    }
+    s.engine.now - start
+}
+
+/// One PageRank run: a single job with 1 + iterations shuffle-chained
+/// stages. Returns the job completion time.
+pub fn pagerank_total_time(
+    cluster: &ClusterConfig,
+    wl: &WorkloadConfig,
+    policy: &PolicyConfig,
+    seed: u64,
+) -> f64 {
+    let mut s = cluster.build_session(SimParams::default(), seed);
+    let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
+    let pol = resolve_policy(policy, &s, None);
+    let rec = s.run_job(&workloads::pagerank_job(
+        file,
+        pol,
+        wl.iterations,
+        wl.cpu_secs_per_mb,
+    ));
+    rec.completion_time()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn figure_bits(fig: &Figure) -> Vec<(String, Vec<(u64, String, u64, u64, usize)>)> {
+        fig.series
+            .iter()
+            .map(|s| {
+                (
+                    s.name.clone(),
+                    s.points
+                        .iter()
+                        .map(|p| {
+                            (
+                                p.x.to_bits(),
+                                p.label.clone(),
+                                p.stats.mean.to_bits(),
+                                p.stats.std.to_bits(),
+                                p.stats.n,
+                            )
+                        })
+                        .collect(),
+                )
+            })
+            .collect()
+    }
+
+    fn toy_spec() -> SweepSpec {
+        let mut spec = SweepSpec::new("toy", "x", "y");
+        let a = spec.series("a");
+        let b = spec.series("b");
+        for m in [2usize, 4, 8] {
+            spec.grid(a, m as f64, "", 5, 100 + m as u64, |seed| {
+                // Deterministic pseudo-measurement derived from the seed.
+                let mut rng = crate::util::Rng::new(seed);
+                10.0 + rng.f64()
+            });
+        }
+        spec.sequence(move || {
+            (0..4)
+                .map(|i| Sample {
+                    series: b,
+                    x: i as f64,
+                    label: String::new(),
+                    value: i as f64 * 2.0,
+                })
+                .collect()
+        });
+        spec
+    }
+
+    #[test]
+    fn trial_seed_matches_historic_spacing() {
+        assert_eq!(trial_seed(100, 0), 100);
+        assert_eq!(trial_seed(100, 3), 3100);
+    }
+
+    #[test]
+    fn grid_points_aggregate_trials_in_order() {
+        let fig = SweepRunner::serial().run(&toy_spec());
+        assert_eq!(fig.series.len(), 2);
+        assert_eq!(fig.series[0].name, "a");
+        let xs: Vec<f64> = fig.series[0].points.iter().map(|p| p.x).collect();
+        assert_eq!(xs, vec![2.0, 4.0, 8.0]);
+        for p in &fig.series[0].points {
+            assert_eq!(p.stats.n, 5);
+            assert!(p.stats.mean > 10.0 && p.stats.mean < 11.0);
+        }
+        assert_eq!(fig.series[1].points.len(), 4);
+        assert_eq!(fig.series[1].points[3].stats.mean, 6.0);
+    }
+
+    #[test]
+    fn output_is_bit_identical_across_thread_counts() {
+        let baseline = figure_bits(&SweepRunner::new(1).run(&toy_spec()));
+        for threads in [2usize, 3, 8] {
+            let fig = SweepRunner::new(threads).run(&toy_spec());
+            assert_eq!(figure_bits(&fig), baseline, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn scenario_trials_match_direct_simulation() {
+        let sc = Scenario {
+            cluster: ClusterConfig::containers_1_and_04(),
+            workload: WorkloadConfig::wordcount_2gb(),
+            policy: PolicyConfig::Homt(8),
+            metric: Metric::MapStageTime,
+            trials: 2,
+            base_seed: 108,
+        };
+        let direct: Vec<f64> = (0..2)
+            .map(|t| run_scenario_trial(&sc, trial_seed(108, t)))
+            .collect();
+        let mut spec = SweepSpec::new("one-cell", "partitions", "s");
+        let s = spec.series("homt");
+        spec.scenario(s, 8.0, "", sc);
+        let fig = SweepRunner::new(2).run(&spec);
+        let p = &fig.series[0].points[0];
+        assert_eq!(p.stats.n, 2);
+        let mean = (direct[0] + direct[1]) / 2.0;
+        assert_eq!(p.stats.mean.to_bits(), mean.to_bits());
+    }
+
+    #[test]
+    fn labels_keep_cells_distinct_at_equal_x() {
+        let mut spec = SweepSpec::new("labels", "scenario", "s");
+        let s = spec.series("wc");
+        spec.grid(s, 0.0, "default", 1, 1, |seed| seed as f64);
+        spec.grid(s, 0.0, "hemt", 1, 2, |seed| seed as f64);
+        let fig = SweepRunner::serial().run(&spec);
+        assert_eq!(fig.series[0].points.len(), 2);
+        assert_eq!(fig.series[0].points[0].label, "default");
+        assert_eq!(fig.series[0].points[1].label, "hemt");
+    }
+
+    #[test]
+    fn runner_handles_more_threads_than_units() {
+        let mut spec = SweepSpec::new("tiny", "x", "y");
+        let s = spec.series("only");
+        spec.grid(s, 1.0, "", 1, 7, |seed| seed as f64);
+        let fig = SweepRunner::new(16).run(&spec);
+        assert_eq!(fig.series[0].points[0].stats.mean, 7.0);
+    }
+}

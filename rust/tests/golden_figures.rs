@@ -1,0 +1,153 @@
+//! Golden-figure regression tests: fixed-seed figure series snapshots,
+//! asserted *bit-identical* across sweep-runner thread counts —
+//! determinism is the sweep subsystem's contract.
+//!
+//! Two layers:
+//! * a structural golden snapshot (series names, point grid, labels,
+//!   trial counts) pinned against the paper figures' fixed layout;
+//! * a value-level identity check: the full `Figure` produced with 1, 2
+//!   and 8 worker threads must match to the last mantissa bit.
+
+use hemt::experiments;
+use hemt::metrics::Figure;
+use hemt::sweep::{SweepRunner, SweepSpec};
+
+/// Every f64 in the figure, as raw bits — exact comparison, no epsilon.
+fn figure_bits(fig: &Figure) -> Vec<(String, Vec<(u64, String, u64, u64, u64, u64, usize)>)> {
+    fig.series
+        .iter()
+        .map(|s| {
+            (
+                s.name.clone(),
+                s.points
+                    .iter()
+                    .map(|p| {
+                        (
+                            p.x.to_bits(),
+                            p.label.clone(),
+                            p.stats.mean.to_bits(),
+                            p.stats.std.to_bits(),
+                            p.stats.min.to_bits(),
+                            p.stats.max.to_bits(),
+                            p.stats.n,
+                        )
+                    })
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+/// Run the spec with 1, 2 and 8 worker threads; assert all three outputs
+/// are bit-identical and return the single-thread figure.
+fn assert_thread_count_invariant(make_spec: impl Fn() -> SweepSpec, what: &str) -> Figure {
+    let serial = SweepRunner::new(1).run(&make_spec());
+    let baseline = figure_bits(&serial);
+    for threads in [2usize, 8] {
+        let fig = SweepRunner::new(threads).run(&make_spec());
+        assert_eq!(
+            figure_bits(&fig),
+            baseline,
+            "{what}: {threads}-thread output differs from serial"
+        );
+    }
+    serial
+}
+
+#[test]
+fn fig9_is_bit_identical_across_thread_counts() {
+    let fig = assert_thread_count_invariant(experiments::fig9_spec, "fig9");
+
+    // Structural golden snapshot: the fixed-seed sweep grid.
+    assert_eq!(fig.series.len(), 2);
+    assert_eq!(fig.series[0].name, "even (HomT sweep)");
+    assert_eq!(fig.series[1].name, "HeMT (Mesos resource info)");
+    let xs: Vec<f64> = fig.series[0].points.iter().map(|p| p.x).collect();
+    assert_eq!(
+        xs,
+        vec![2.0, 3.0, 4.0, 6.0, 8.0, 12.0, 16.0, 24.0, 32.0, 48.0, 64.0]
+    );
+    assert!(fig.series.iter().all(|s| s.points.iter().all(|p| p.stats.n == 5)));
+    assert_eq!(fig.series[1].points.len(), 1);
+    assert_eq!(fig.series[1].points[0].label, "2 (1:0.4)");
+    // Fixed seeds put every map-stage time in a stable physical band.
+    for s in &fig.series {
+        for p in &s.points {
+            assert!(
+                p.stats.mean > 30.0 && p.stats.mean < 400.0,
+                "{}@{}: {}",
+                s.name,
+                p.x,
+                p.stats.mean
+            );
+        }
+    }
+}
+
+#[test]
+fn fig13_is_bit_identical_across_thread_counts() {
+    let fig = assert_thread_count_invariant(experiments::fig13_spec, "fig13");
+
+    assert_eq!(fig.series.len(), 3);
+    assert_eq!(fig.series[0].name, "even (HomT sweep)");
+    assert_eq!(fig.series[1].name, "HeMT naive (1:0.4)");
+    assert_eq!(fig.series[2].name, "HeMT adjusted (1:0.32)");
+    let xs: Vec<f64> = fig.series[0].points.iter().map(|p| p.x).collect();
+    assert_eq!(xs, vec![2.0, 4.0, 8.0, 16.0, 32.0, 64.0]);
+    assert_eq!(fig.series[1].points[0].label, "2 (1:0.4)");
+    assert_eq!(fig.series[2].points[0].label, "2 (1:0.32)");
+    assert!(fig.series.iter().all(|s| s.points.iter().all(|p| p.stats.n == 5)));
+}
+
+#[test]
+fn headline_is_bit_identical_across_thread_counts() {
+    let fig = assert_thread_count_invariant(experiments::headline_spec, "headline");
+
+    let names: Vec<&str> = fig.series.iter().map(|s| s.name.as_str()).collect();
+    assert_eq!(
+        names,
+        vec![
+            "wordcount/static",
+            "wordcount/burstable",
+            "kmeans/static",
+            "pagerank/static"
+        ]
+    );
+    for (i, s) in fig.series.iter().enumerate() {
+        assert_eq!(s.points.len(), 3, "{}", s.name);
+        assert!(s.points.iter().all(|p| p.x == i as f64));
+        assert!(s.points.iter().all(|p| p.stats.n == 5));
+    }
+    // The paper's headline claim on this substrate: HeMT never loses
+    // materially to the default, and wins on the wordcount scenarios.
+    for s in &fig.series {
+        let default = s.points.iter().find(|p| p.label == "default").unwrap();
+        let hemt = s
+            .points
+            .iter()
+            .find(|p| p.label.starts_with("HeMT"))
+            .unwrap();
+        let bound = if s.name.starts_with("wordcount") {
+            default.stats.mean
+        } else {
+            default.stats.mean * 1.05
+        };
+        assert!(
+            hemt.stats.mean < bound,
+            "{}: HeMT {:.1} vs default {:.1}",
+            s.name,
+            hemt.stats.mean,
+            default.stats.mean
+        );
+    }
+}
+
+#[test]
+fn repeated_runs_are_bit_identical() {
+    // Same runner, run twice: the sweep derives all randomness from the
+    // spec's seeds, so repetition is exact.
+    let runner = SweepRunner::new(4);
+    let a = figure_bits(&runner.run(&experiments::fig5_spec()));
+    let b = figure_bits(&runner.run(&experiments::fig5_spec()));
+    assert_eq!(a, b);
+}

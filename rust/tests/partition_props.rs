@@ -1,0 +1,116 @@
+//! Property tests for the partitioners through the public API, driven by
+//! the repo's `util::prop` helper (seeded cases, replayable failures).
+//!
+//! The invariants the paper's mechanisms rely on:
+//! * every split conserves the stage's total bytes exactly;
+//! * HeMT shares track the capacity weights within byte rounding
+//!   (`d_i = D * w_i / V`, Sec. 5.1);
+//! * Algorithm 1's bucket fractions form a probability distribution that
+//!   tracks the weights.
+
+use hemt::partition::{Partitioning, SkewedHashPartitioner};
+use hemt::util::{prop, Rng};
+
+#[test]
+fn even_split_conserves_total_and_balances() {
+    prop::check("even-conserves", 0xE0E1, 400, |rng: &mut Rng| {
+        let total = rng.below(1 << 31) as u64;
+        let m = rng.range(1, 256);
+        let p = Partitioning::even(total, m);
+        assert_eq!(p.total(), total, "bytes lost or invented");
+        assert_eq!(p.num_tasks(), m);
+        let max = *p.task_bytes.iter().max().unwrap();
+        let min = *p.task_bytes.iter().min().unwrap();
+        assert!(max - min <= 1, "even split unbalanced: {min}..{max}");
+    });
+}
+
+#[test]
+fn homt_is_the_even_partitioning() {
+    prop::check("homt-alias", 0x401A, 200, |rng: &mut Rng| {
+        let total = rng.below(1 << 28) as u64;
+        let m = rng.range(1, 128);
+        assert_eq!(
+            Partitioning::homt(total, m).task_bytes,
+            Partitioning::even(total, m).task_bytes
+        );
+    });
+}
+
+#[test]
+fn hemt_conserves_total_and_tracks_weights() {
+    prop::check("hemt-weights", 0x4E47, 400, |rng: &mut Rng| {
+        let n = rng.range(1, 12);
+        let weights: Vec<f64> = (0..n).map(|_| rng.range_f64(0.01, 8.0)).collect();
+        let total = rng.below(1 << 31) as u64;
+        let p = Partitioning::hemt(total, &weights);
+        assert_eq!(p.total(), total, "bytes lost or invented");
+        assert_eq!(p.num_tasks(), n);
+        let sum: f64 = weights.iter().sum();
+        for i in 0..n {
+            let ideal = total as f64 * weights[i] / sum;
+            assert!(
+                (p.task_bytes[i] as f64 - ideal).abs() <= 1.0 + 1e-6,
+                "task {i}: {} vs ideal {ideal:.2}",
+                p.task_bytes[i]
+            );
+        }
+        // Ranges tile the input contiguously.
+        let ranges = p.ranges();
+        let mut off = 0u64;
+        for (i, &(start, len)) in ranges.iter().enumerate() {
+            assert_eq!(start, off, "range {i} not contiguous");
+            off += len;
+        }
+        assert_eq!(off, total);
+    });
+}
+
+#[test]
+fn bucket_fractions_sum_to_one_and_track_weights() {
+    prop::check("bucket-fractions", 0xB0C4, 300, |rng: &mut Rng| {
+        let n = rng.range(1, 10);
+        let weights: Vec<f64> = (0..n).map(|_| rng.range_f64(0.05, 5.0)).collect();
+        let part = SkewedHashPartitioner::new(&weights, 10_000);
+        let fr = part.bucket_fractions();
+        assert_eq!(fr.len(), n);
+        assert!(
+            (fr.iter().sum::<f64>() - 1.0).abs() < 1e-9,
+            "fractions sum to {}",
+            fr.iter().sum::<f64>()
+        );
+        assert!(fr.iter().all(|&f| f > 0.0), "empty bucket: {fr:?}");
+        let sum: f64 = weights.iter().sum();
+        for i in 0..n {
+            assert!(
+                (fr[i] - weights[i] / sum).abs() < 0.01,
+                "bucket {i}: {} vs weight share {}",
+                fr[i],
+                weights[i] / sum
+            );
+        }
+    });
+}
+
+#[test]
+fn bucket_of_agrees_with_fractions_statistically() {
+    prop::check("bucket-empirical", 0x3A77, 8, |rng: &mut Rng| {
+        let n = rng.range(2, 6);
+        let weights: Vec<f64> = (0..n).map(|_| rng.range_f64(0.2, 3.0)).collect();
+        let part = SkewedHashPartitioner::new(&weights, 10_000);
+        let fr = part.bucket_fractions();
+        let draws = 60_000;
+        let mut counts = vec![0usize; n];
+        for _ in 0..draws {
+            counts[part.bucket_of(rng.next_u64())] += 1;
+        }
+        for i in 0..n {
+            let emp = counts[i] as f64 / draws as f64;
+            assert!(
+                (emp - fr[i]).abs() < 0.02,
+                "bucket {i}: empirical {emp:.3} vs expected {:.3}",
+                fr[i]
+            );
+        }
+    });
+}

@@ -1,0 +1,180 @@
+//! Offline shim for the `anyhow` crate: the subset of its API this
+//! repository uses, implemented over a plain message chain so the build
+//! needs no network or registry access.
+//!
+//! Covered surface: [`Error`], [`Result`], the [`anyhow!`], [`bail!`] and
+//! [`ensure!`] macros, and the [`Context`] extension trait with
+//! `context`/`with_context` on `Result`. `{:#}` formatting prints the
+//! full cause chain like the real crate.
+
+use std::fmt;
+
+/// A dynamically-typed error: a message plus an optional cause chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The outermost message and each cause below it, in order.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain().join(": "))
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.source.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.source.as_deref();
+        }
+        Ok(())
+    }
+}
+
+// Like the real crate: any std error converts into `Error` (so `?` works),
+// which is only coherent because `Error` itself is not a `std::error::Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs = Vec::new();
+        msgs.push(e.to_string());
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for m in msgs.into_iter().rev() {
+            err = Some(match err {
+                None => Error::msg(m),
+                Some(inner) => inner.context(m),
+            });
+        }
+        err.expect("at least one message")
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("inner {}", 42);
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "inner 42");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_prints_chain() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner 42");
+    }
+
+    #[test]
+    fn with_context_on_io_error() {
+        let r: std::io::Result<()> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let e = r.with_context(|| "reading manifest").unwrap_err();
+        assert!(format!("{e:#}").starts_with("reading manifest: "));
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert!(check(-1).is_err());
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("x").is_err());
+    }
+}

@@ -1,0 +1,152 @@
+//! Compile-time stub of the `xla` (PJRT) bindings.
+//!
+//! The real-execution mode (`hemt real`, `examples/{kmeans,pagerank}_cluster`)
+//! needs the XLA PJRT C++ runtime, which is not part of the offline build
+//! environment. This stub provides the exact API surface the repository
+//! uses so everything compiles and the simulation path is fully usable;
+//! every runtime entry point returns an "unavailable" error instead of
+//! executing. Swapping in the real `xla` bindings (same module paths)
+//! re-enables real execution without source changes — see rust/README.md.
+
+use std::fmt;
+
+/// Error raised by every stubbed runtime entry point.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: XLA/PJRT runtime unavailable (built with the offline stub backend — \
+         link the real xla bindings to enable real execution)"
+    ))
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy + 'static {}
+
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+impl NativeType for u64 {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+
+/// A host-side tensor value (stub: shape/data are not retained).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(_values: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    /// Reinterpret under a new shape.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable("Literal::reshape"))
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// A parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation built from an HLO module (stub).
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A device-resident buffer (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A PJRT client (stub: construction always fails).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("unavailable"));
+        let lit = Literal::vec1(&[1i32, 2, 3]);
+        assert!(lit.to_vec::<i32>().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+    }
+}
