@@ -1,12 +1,19 @@
 //! Performance microbenchmarks of the L3 hot paths — the §Perf
 //! measurement harness (see EXPERIMENTS.md §Perf).
 //!
-//! Covers: DES event throughput, max-min rate recomputation under load,
+//! Covers: DES event throughput, max-min rate recomputation under load
+//! (incremental vs from-scratch, in both the multi-rack regime where the
+//! incremental engine's component scoping wins and the fully-coupled
+//! shuffle regime where it must at least match the full solve),
 //! partitioner cost, skewed-hash bucket assignment, and the end-to-end
 //! figure-sweep drivers that dominate `cargo bench` wall-clock.
+//!
+//! Every sub-bench writes a machine-readable `BENCH_<name>.json` into
+//! `$HEMT_BENCH_DIR` (default `bench_results/`) — these files feed the
+//! CI bench-trajectory gate (`hemt bench-diff`).
 //! Run via `cargo bench --bench perf_microbench`.
 
-use hemt::bench_harness::time;
+use hemt::bench_harness::time_and_report as timed;
 use hemt::netsim::NetSim;
 use hemt::nodes::Node;
 use hemt::partition::{Partitioning, SkewedHashPartitioner};
@@ -27,7 +34,7 @@ fn bench_engine_event_throughput() {
         e
     };
     let events = 1024.0;
-    let s = time(1, 5, || {
+    let s = timed("engine_event_throughput", 1, 5, || {
         let mut e = mk();
         let n = e.run_to_end().len();
         assert_eq!(n, 1024);
@@ -39,8 +46,10 @@ fn bench_engine_event_throughput() {
     );
 }
 
-fn bench_netsim_recompute() {
-    // 256 flows over 16 links: one full max-min recompute.
+/// Fully-coupled topology: 256 flows over 16 shared links — every churn
+/// touches one giant component, so the incremental path falls back to
+/// the full solve and must not be slower than calling it directly.
+fn bench_netsim_coupled() {
     let mut net = NetSim::new();
     let links: Vec<usize> = (0..16).map(|i| net.add_link(&format!("l{i}"), 1e8)).collect();
     let mut rng = Rng::new(1);
@@ -50,18 +59,78 @@ fn bench_netsim_recompute() {
         let route = if a == b { vec![a] } else { vec![a, b] };
         net.add_flow(route, 1e9, t);
     }
-    let s = time(3, 20, || {
-        // Force a fresh recompute by perturbing the flow set.
+    let s_full = timed("netsim_full_256f_16l", 3, 20, || {
+        let id = net.add_flow(vec![links[0]], 1e9, 999);
+        net.recompute_rates_full();
+        net.remove_flow(id);
+        net.recompute_rates_full();
+    });
+    let s_incr = timed("netsim_incremental_256f_16l", 3, 20, || {
         let id = net.add_flow(vec![links[0]], 1e9, 999);
         net.recompute_rates();
         net.remove_flow(id);
+        net.recompute_rates();
     });
-    println!("netsim_recompute_256f_16l: {} s", s.pm(6));
+    println!("netsim_full_256f_16l:        {} s", s_full.pm(6));
+    println!(
+        "netsim_incremental_256f_16l: {} s  ({:.2}x, coupled: parity expected)",
+        s_incr.pm(6),
+        s_full.mean / s_incr.mean
+    );
+}
+
+/// Multi-rack topology: 32 racks × (uplink, downlink) with 8 steady
+/// cross-link flows each, churning one rack at a time — the regime the
+/// incremental engine is built for (shuffle-heavy sweeps where one
+/// transfer finishes while unrelated racks' flows keep streaming).
+fn bench_netsim_multirack() {
+    const RACKS: usize = 32;
+    const FLOWS_PER_RACK: usize = 8;
+    let mut net = NetSim::new();
+    let mut rack_links = Vec::new();
+    for r in 0..RACKS {
+        let up = net.add_link(&format!("up{r}"), 1e8);
+        let down = net.add_link(&format!("down{r}"), 1e8);
+        rack_links.push((up, down));
+        for t in 0..FLOWS_PER_RACK {
+            net.add_flow(vec![up, down], 1e9, (r * FLOWS_PER_RACK + t) as u64);
+        }
+    }
+    net.recompute_rates();
+    // One churn pass = complete-and-replace one flow in every rack, with
+    // a rate refresh after each mutation (the engine's access pattern).
+    let s_incr = timed("netsim_incremental_multirack", 2, 10, || {
+        for (r, &(up, down)) in rack_links.iter().enumerate() {
+            let id = net.add_flow(vec![up, down], 1e9, 10_000 + r as u64);
+            net.recompute_rates();
+            net.remove_flow(id);
+            net.recompute_rates();
+        }
+    });
+    let s_full = timed("netsim_full_multirack", 2, 10, || {
+        for (r, &(up, down)) in rack_links.iter().enumerate() {
+            let id = net.add_flow(vec![up, down], 1e9, 20_000 + r as u64);
+            net.recompute_rates_full();
+            net.remove_flow(id);
+            net.recompute_rates_full();
+        }
+    });
+    println!("netsim_full_multirack:        {} s", s_full.pm(6));
+    println!(
+        "netsim_incremental_multirack: {} s  ({:.2}x speedup from component scoping)",
+        s_incr.pm(6),
+        s_full.mean / s_incr.mean
+    );
+    let st = net.stats;
+    println!(
+        "  solver paths: {} incremental / {} full ({} flows re-levelled incrementally)",
+        st.incremental_solves, st.full_solves, st.flows_relevelled
+    );
 }
 
 fn bench_partitioners() {
     let weights: Vec<f64> = (1..=64).map(|i| i as f64).collect();
-    let s = time(10, 50, || {
+    let s = timed("hemt_partition_64w", 10, 50, || {
         let p = Partitioning::hemt(2 << 30, &weights);
         assert_eq!(p.num_tasks(), 64);
     });
@@ -70,7 +139,7 @@ fn bench_partitioners() {
     let part = SkewedHashPartitioner::new(&weights, 1 << 20);
     let mut rng = Rng::new(2);
     let hashes: Vec<u64> = (0..100_000).map(|_| rng.next_u64()).collect();
-    let s = time(2, 10, || {
+    let s = timed("skewed_hash_bucket", 2, 10, || {
         let mut acc = 0usize;
         for &h in &hashes {
             acc += part.bucket_of(h);
@@ -91,7 +160,7 @@ fn bench_wordcount_sweep() {
     use hemt::coordinator::PartitionPolicy;
     let cluster = ClusterConfig::containers_1_and_04();
     let wl = WorkloadConfig::wordcount_2gb();
-    let s = time(1, 5, || {
+    let s = timed("wordcount_sim_64tasks", 1, 5, || {
         let mut sess = cluster.build_session(SimParams::default(), 1);
         let file = sess.hdfs.upload(wl.data_mb << 20, wl.block_mb << 20, &mut sess.rng);
         let job = hemt::workloads::wordcount_job(
@@ -106,11 +175,12 @@ fn bench_wordcount_sweep() {
 }
 
 fn bench_pagerank_sweep() {
-    // fig18's heaviest point: 100 iterations at 64-way.
+    // fig18's heaviest point: 100 iterations at 64-way — shuffle-heavy,
+    // so it leans hardest on the network engine of any figure driver.
     use hemt::config::{ClusterConfig, PolicyConfig, WorkloadConfig};
     let cluster = ClusterConfig::containers_1_and_04();
     let wl = WorkloadConfig::pagerank_256mb();
-    let s = time(0, 3, || {
+    let s = timed("pagerank_sim_100it_64tasks", 0, 3, || {
         std::hint::black_box(hemt::experiments::pagerank_total_time(
             &cluster,
             &wl,
@@ -122,16 +192,15 @@ fn bench_pagerank_sweep() {
 }
 
 fn bench_sweep_parallelism() {
-    // The tentpole speedup: one figure-sized sweep spec, serial pool vs
-    // the machine's full pool. Output is bit-identical; only wall-clock
-    // differs.
+    // One figure-sized sweep spec, serial pool vs the machine's full
+    // pool. Output is bit-identical; only wall-clock differs.
     use hemt::experiments::fig5_spec;
     use hemt::sweep::SweepRunner;
     let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let serial = time(0, 3, || {
+    let serial = timed("sweep_fig5_serial", 0, 3, || {
         std::hint::black_box(SweepRunner::new(1).run(&fig5_spec()));
     });
-    let pooled = time(0, 3, || {
+    let pooled = timed("sweep_fig5_pool", 0, 3, || {
         std::hint::black_box(SweepRunner::new(threads).run(&fig5_spec()));
     });
     println!(
@@ -145,7 +214,8 @@ fn bench_sweep_parallelism() {
 fn main() {
     println!("== perf_microbench (L3 hot paths) ==");
     bench_engine_event_throughput();
-    bench_netsim_recompute();
+    bench_netsim_coupled();
+    bench_netsim_multirack();
     bench_partitioners();
     bench_wordcount_sweep();
     bench_pagerank_sweep();

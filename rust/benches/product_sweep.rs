@@ -1,0 +1,41 @@
+//! Whole-grid product-sweep bench: the built-in tiny-tasks regime
+//! product (clusters × workloads × policies × granularities — what
+//! `hemt sweep` runs) timed through the sweep runner, serial baseline vs
+//! the machine's full pool.
+//!
+//! Writes `BENCH_product_sweep.json` (pooled) and
+//! `BENCH_product_sweep_serial.json` for the CI trajectory gate; the
+//! pooled/serial ratio is the sweep subsystem's parallel speedup on a
+//! whole-grid unit mix (the shuffle-heavy PageRank cells are the ones
+//! that lean on the incremental network engine).
+
+use hemt::bench_harness::time_and_report;
+use hemt::sweep::{ProductSweepSpec, SweepRunner};
+
+fn main() {
+    let product = ProductSweepSpec::tiny_tasks_regimes();
+    let spec = product.to_spec();
+    println!(
+        "== product_sweep: {} cells x {} trials = {} units ==",
+        product.num_cells(),
+        product.trials,
+        spec.num_units()
+    );
+
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let serial = time_and_report("product_sweep_serial", 0, 3, || {
+        std::hint::black_box(SweepRunner::new(1).run(&product.to_spec()));
+    });
+    let mut last = None;
+    let pooled = time_and_report("product_sweep", 0, 3, || {
+        last = Some(SweepRunner::new(threads).run(&product.to_spec()));
+    });
+    println!(
+        "product_sweep_serial:    {} s\nproduct_sweep_pool({threads}): {} s  ({:.2}x)",
+        serial.pm(3),
+        pooled.pm(3),
+        serial.mean / pooled.mean
+    );
+    println!();
+    println!("{}", last.expect("pooled run happened").to_table());
+}

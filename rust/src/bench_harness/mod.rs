@@ -81,6 +81,18 @@ pub fn write_bench_json(
     Ok(path)
 }
 
+/// Time `f` (warmup + `iters` recorded runs), write its `BENCH_<name>.json`
+/// into [`bench_output_dir`], and return the summary — the standard shape
+/// of a trajectory-gated sub-bench.
+pub fn time_and_report<F: FnMut()>(name: &str, warmup: usize, iters: usize, f: F) -> Summary {
+    let samples = time_samples(warmup, iters, f);
+    match write_bench_json(&bench_output_dir(), name, &samples) {
+        Ok(path) => println!("bench {name}: wrote {}", path.display()),
+        Err(e) => eprintln!("bench {name}: could not write JSON report: {e}"),
+    }
+    Summary::of(&samples)
+}
+
 /// Run one figure-reproduction bench: time the driver, print the timing
 /// line and the figure table, and write the JSON report.
 pub fn run_figure_bench(name: &str, iters: usize, mut driver: impl FnMut() -> Figure) {
@@ -102,6 +114,206 @@ pub fn run_figure_bench(name: &str, iters: usize, mut driver: impl FnMut() -> Fi
     }
     println!();
     println!("{}", last.expect("driver ran").to_table());
+}
+
+// ------------------------------------------------------ trajectory gate
+
+/// Verdict of one bench's baseline-vs-new median comparison.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BenchVerdict {
+    /// Within the threshold (includes improvements).
+    Ok,
+    /// New median exceeds baseline by more than the threshold fraction.
+    Regression,
+    /// The baseline names a bench the new run did not produce.
+    MissingNew,
+    /// The new run has a bench with no committed baseline (informational).
+    NoBaseline,
+}
+
+/// One row of the trajectory report.
+#[derive(Debug, Clone)]
+pub struct BenchComparison {
+    pub name: String,
+    pub baseline_median: Option<f64>,
+    pub new_median: Option<f64>,
+    pub verdict: BenchVerdict,
+}
+
+impl BenchComparison {
+    /// `new/baseline` when both sides exist.
+    pub fn ratio(&self) -> Option<f64> {
+        match (self.baseline_median, self.new_median) {
+            (Some(b), Some(n)) if b > 0.0 => Some(n / b),
+            _ => None,
+        }
+    }
+}
+
+/// Median of the `BENCH_*.json` at `path`; falls back to recomputing the
+/// percentile from the raw samples when `median_secs` is absent.
+fn read_bench_median(path: &Path) -> Result<(String, f64), String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("reading {}: {e}", path.display()))?;
+    let v = json::Value::parse(&text)
+        .map_err(|e| format!("parsing {}: {e}", path.display()))?;
+    let name = v
+        .get("name")
+        .and_then(json::Value::as_str)
+        .ok_or_else(|| format!("{}: missing 'name'", path.display()))?
+        .to_string();
+    if let Some(m) = v.get("median_secs").and_then(json::Value::as_f64) {
+        return Ok((name, m));
+    }
+    let samples: Vec<f64> = v
+        .get("samples_secs")
+        .and_then(json::Value::as_arr)
+        .ok_or_else(|| format!("{}: missing 'median_secs' and 'samples_secs'", path.display()))?
+        .iter()
+        .filter_map(json::Value::as_f64)
+        .collect();
+    if samples.is_empty() {
+        return Err(format!("{}: no samples", path.display()));
+    }
+    Ok((name, percentile(&samples, 50.0)))
+}
+
+/// All `BENCH_*.json` medians under `dir`, sorted by bench name.
+/// A missing directory reads as an empty baseline (the bootstrap case).
+pub fn read_bench_dir(dir: &Path) -> Result<Vec<(String, f64)>, String> {
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(out),
+    };
+    for entry in entries {
+        let path = entry.map_err(|e| format!("listing {}: {e}", dir.display()))?.path();
+        let fname = match path.file_name().and_then(|f| f.to_str()) {
+            Some(f) => f,
+            None => continue,
+        };
+        if fname.starts_with("BENCH_") && fname.ends_with(".json") {
+            out.push(read_bench_median(&path)?);
+        }
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(out)
+}
+
+/// Diff two bench-report directories: every baseline bench must exist in
+/// `new_dir` with a median no more than `threshold` (fractional, e.g.
+/// 0.15) above its baseline. Returns the per-bench report; the run
+/// passes iff no row is a `Regression` or `MissingNew`.
+pub fn compare_bench_dirs(
+    baseline_dir: &Path,
+    new_dir: &Path,
+    threshold: f64,
+) -> Result<Vec<BenchComparison>, String> {
+    assert!(threshold >= 0.0, "threshold must be non-negative");
+    let baseline = read_bench_dir(baseline_dir)?;
+    let new: Vec<(String, f64)> = read_bench_dir(new_dir)?;
+    let mut report = Vec::new();
+    for (name, base_median) in &baseline {
+        match new.iter().find(|(n, _)| n == name) {
+            None => report.push(BenchComparison {
+                name: name.clone(),
+                baseline_median: Some(*base_median),
+                new_median: None,
+                verdict: BenchVerdict::MissingNew,
+            }),
+            Some((_, new_median)) => {
+                let verdict = if *new_median > base_median * (1.0 + threshold) {
+                    BenchVerdict::Regression
+                } else {
+                    BenchVerdict::Ok
+                };
+                report.push(BenchComparison {
+                    name: name.clone(),
+                    baseline_median: Some(*base_median),
+                    new_median: Some(*new_median),
+                    verdict,
+                });
+            }
+        }
+    }
+    for (name, new_median) in &new {
+        if !baseline.iter().any(|(n, _)| n == name) {
+            report.push(BenchComparison {
+                name: name.clone(),
+                baseline_median: None,
+                new_median: Some(*new_median),
+                verdict: BenchVerdict::NoBaseline,
+            });
+        }
+    }
+    Ok(report)
+}
+
+/// Whether a trajectory report passes the gate.
+pub fn trajectory_passes(report: &[BenchComparison]) -> bool {
+    report
+        .iter()
+        .all(|c| !matches!(c.verdict, BenchVerdict::Regression | BenchVerdict::MissingNew))
+}
+
+/// Render the trajectory report as the human-readable gate table.
+pub fn trajectory_table(report: &[BenchComparison], threshold: f64) -> String {
+    let mut out = String::new();
+    let fmt_med = |m: Option<f64>| match m {
+        Some(v) => format!("{v:>12.6}"),
+        None => format!("{:>12}", "-"),
+    };
+    out.push_str(&format!(
+        "{:<36} {:>12} {:>12} {:>8}  verdict (threshold +{:.0}%)\n",
+        "bench",
+        "base med(s)",
+        "new med(s)",
+        "ratio",
+        threshold * 100.0
+    ));
+    for c in report {
+        let ratio = match c.ratio() {
+            Some(r) => format!("{r:>8.3}"),
+            None => format!("{:>8}", "-"),
+        };
+        let verdict = match c.verdict {
+            BenchVerdict::Ok => "ok",
+            BenchVerdict::Regression => "REGRESSION",
+            BenchVerdict::MissingNew => "MISSING IN NEW RUN",
+            BenchVerdict::NoBaseline => "no baseline (new bench)",
+        };
+        out.push_str(&format!(
+            "{:<36} {} {} {ratio}  {verdict}\n",
+            c.name,
+            fmt_med(c.baseline_median),
+            fmt_med(c.new_median)
+        ));
+    }
+    out
+}
+
+/// Copy every `BENCH_*.json` in `new_dir` over `baseline_dir` (the
+/// baseline-refresh path; see rust/README.md). Returns the copied names.
+pub fn update_baselines(baseline_dir: &Path, new_dir: &Path) -> Result<Vec<String>, String> {
+    std::fs::create_dir_all(baseline_dir)
+        .map_err(|e| format!("creating {}: {e}", baseline_dir.display()))?;
+    let mut copied = Vec::new();
+    let entries = std::fs::read_dir(new_dir)
+        .map_err(|e| format!("listing {}: {e}", new_dir.display()))?;
+    for entry in entries {
+        let path = entry.map_err(|e| format!("listing {}: {e}", new_dir.display()))?.path();
+        let fname = match path.file_name().and_then(|f| f.to_str()) {
+            Some(f) => f.to_string(),
+            None => continue,
+        };
+        if fname.starts_with("BENCH_") && fname.ends_with(".json") {
+            std::fs::copy(&path, baseline_dir.join(&fname))
+                .map_err(|e| format!("copying {fname}: {e}"))?;
+            copied.push(fname);
+        }
+    }
+    copied.sort();
+    Ok(copied)
 }
 
 /// Format a bytes/sec figure human-readably.
@@ -152,6 +364,78 @@ mod tests {
             parsed.get("samples_secs").unwrap().as_arr().unwrap().len(),
             5
         );
+    }
+
+    fn temp_pair(tag: &str) -> (std::path::PathBuf, std::path::PathBuf) {
+        let root = std::env::temp_dir().join(format!("hemt-gate-{tag}-{}", std::process::id()));
+        let base = root.join("baseline");
+        let new = root.join("new");
+        std::fs::create_dir_all(&base).unwrap();
+        std::fs::create_dir_all(&new).unwrap();
+        (base, new)
+    }
+
+    #[test]
+    fn trajectory_gate_passes_within_threshold_and_fails_past_it() {
+        let (base, new) = temp_pair("basic");
+        write_bench_json(&base, "steady", &[1.0, 1.0, 1.0]).unwrap();
+        write_bench_json(&base, "hot", &[1.0, 1.0, 1.0]).unwrap();
+        write_bench_json(&new, "steady", &[1.10, 1.10, 1.10]).unwrap(); // +10%
+        write_bench_json(&new, "hot", &[1.30, 1.30, 1.30]).unwrap(); // +30%
+        let report = compare_bench_dirs(&base, &new, 0.15).unwrap();
+        assert!(!trajectory_passes(&report));
+        let hot = report.iter().find(|c| c.name == "hot").unwrap();
+        assert_eq!(hot.verdict, BenchVerdict::Regression);
+        assert!((hot.ratio().unwrap() - 1.3).abs() < 1e-9);
+        let steady = report.iter().find(|c| c.name == "steady").unwrap();
+        assert_eq!(steady.verdict, BenchVerdict::Ok);
+        let table = trajectory_table(&report, 0.15);
+        assert!(table.contains("REGRESSION"), "{table}");
+        std::fs::remove_dir_all(base.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn trajectory_gate_flags_missing_and_tolerates_new_benches() {
+        let (base, new) = temp_pair("missing");
+        write_bench_json(&base, "gone", &[1.0]).unwrap();
+        write_bench_json(&new, "brand_new", &[1.0]).unwrap();
+        let report = compare_bench_dirs(&base, &new, 0.15).unwrap();
+        assert!(!trajectory_passes(&report), "a vanished bench must fail the gate");
+        assert!(report
+            .iter()
+            .any(|c| c.name == "gone" && c.verdict == BenchVerdict::MissingNew));
+        assert!(report
+            .iter()
+            .any(|c| c.name == "brand_new" && c.verdict == BenchVerdict::NoBaseline));
+        // A new bench alone (empty baseline) must pass — the bootstrap case.
+        std::fs::remove_file(base.join("BENCH_gone.json")).unwrap();
+        let report = compare_bench_dirs(&base, &new, 0.15).unwrap();
+        assert!(trajectory_passes(&report));
+        std::fs::remove_dir_all(base.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn trajectory_gate_handles_absent_baseline_dir() {
+        let (base, new) = temp_pair("absent");
+        std::fs::remove_dir_all(&base).unwrap();
+        write_bench_json(&new, "only", &[0.5]).unwrap();
+        let report = compare_bench_dirs(&base, &new, 0.15).unwrap();
+        assert_eq!(report.len(), 1);
+        assert!(trajectory_passes(&report));
+        std::fs::remove_dir_all(new.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn update_baselines_copies_reports() {
+        let (base, new) = temp_pair("update");
+        write_bench_json(&new, "a", &[0.5]).unwrap();
+        write_bench_json(&new, "b", &[0.25]).unwrap();
+        let copied = update_baselines(&base, &new).unwrap();
+        assert_eq!(copied, vec!["BENCH_a.json", "BENCH_b.json"]);
+        let back = read_bench_dir(&base).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0], ("a".to_string(), 0.5));
+        std::fs::remove_dir_all(base.parent().unwrap()).ok();
     }
 
     #[test]

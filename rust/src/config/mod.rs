@@ -464,6 +464,9 @@ impl ExperimentConfig {
         })
     }
 
+    /// Inherent by design (the `FromStr` trait can't carry the richer
+    /// error `String`s cleanly; every config type here matches).
+    #[allow(clippy::should_implement_trait)]
     pub fn from_str(text: &str) -> Result<ExperimentConfig, String> {
         let v = Value::parse(text).map_err(|e| e.to_string())?;
         Self::from_json(&v)

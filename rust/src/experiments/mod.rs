@@ -22,6 +22,8 @@ use crate::workloads;
 
 pub use crate::sweep::{kmeans_total_time, pagerank_total_time, resolve_policy, MB};
 
+use crate::sweep::ProductSweepSpec;
+
 /// Default trial count behind every ±σ beam.
 pub const TRIALS: usize = 5;
 
@@ -557,6 +559,15 @@ pub fn headline() -> Figure {
     default_runner().run(&headline_spec())
 }
 
+// ---------------------------------------------------------- product sweep
+
+/// The built-in whole-grid product sweep (clusters × workloads × policies
+/// × granularities), expanded to a flat spec — `hemt sweep` and the
+/// `product_sweep` bench run this when given no custom product.
+pub fn product_sweep_spec() -> SweepSpec {
+    ProductSweepSpec::tiny_tasks_regimes().to_spec()
+}
+
 /// Dispatch to a figure's sweep spec by CLI name.
 pub fn spec_by_name(name: &str) -> Option<SweepSpec> {
     match name {
@@ -573,6 +584,7 @@ pub fn spec_by_name(name: &str) -> Option<SweepSpec> {
         "18" | "fig18" => Some(fig18_spec()),
         "headline" => Some(headline_spec()),
         "4node" | "extension" => Some(extension::four_node_spec()),
+        "product" | "sweep" => Some(product_sweep_spec()),
         _ => None,
     }
 }

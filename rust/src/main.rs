@@ -28,6 +28,13 @@ fn usage() -> &'static str {
                                     design-choice ablations (alpha, speculation, rack, stale_credits)
   hemt run --config <file> [--json] [--threads N]
                                     run an experiment config
+  hemt sweep [--config <file>] [--json] [--threads N]
+                                    whole-grid product sweep (clusters x workloads x
+                                    policies x granularities); default: the built-in
+                                    tiny-tasks regime product
+  hemt bench-diff --baseline <dir> --new <dir> [--threshold F] [--update]
+                                    diff BENCH_*.json medians against a committed
+                                    baseline; exit 1 past the threshold (default 0.15)
   hemt analysis                     closed-form Claim 1 / Claim 2 numbers
   hemt plan-credits --work <W> <c1> <c2> ...   burstable credit planner
   hemt real <wordcount|kmeans|pagerank>        real PJRT execution demo
@@ -63,6 +70,8 @@ fn main() -> ExitCode {
         Some("figure") => cmd_figure(&args[1..]),
         Some("ablation") => cmd_ablation(&args[1..]),
         Some("run") => cmd_run(&args[1..]),
+        Some("sweep") => cmd_sweep(&args[1..]),
+        Some("bench-diff") => cmd_bench_diff(&args[1..]),
         Some("analysis") => cmd_analysis(),
         Some("plan-credits") => cmd_plan_credits(&args[1..]),
         Some("real") => cmd_real(&args[1..]),
@@ -163,6 +172,92 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         println!("{}", fig.to_table());
     }
     Ok(())
+}
+
+/// `hemt sweep`: run a whole-grid scenario product (the built-in
+/// tiny-tasks regime product, or a JSON `ProductSweepSpec` via
+/// `--config`) through the sweep runner.
+fn cmd_sweep(args: &[String]) -> Result<(), String> {
+    let json = args.iter().any(|a| a == "--json");
+    let runner = runner_from_args(args)?;
+    let product = match args.iter().position(|a| a == "--config") {
+        None => hemt::sweep::ProductSweepSpec::tiny_tasks_regimes(),
+        Some(i) => {
+            let path = args.get(i + 1).ok_or("--config needs a value")?;
+            let text =
+                std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+            hemt::sweep::ProductSweepSpec::from_str(&text)?
+        }
+    };
+    let spec = product.to_spec();
+    eprintln!(
+        "product sweep: {} cells x {} trials = {} units over {} thread(s)",
+        product.num_cells(),
+        product.trials,
+        spec.num_units(),
+        runner.threads()
+    );
+    let fig = runner.run(&spec);
+    if json {
+        println!("{}", fig.to_json().pretty());
+    } else {
+        println!("{}", fig.to_table());
+    }
+    Ok(())
+}
+
+/// `hemt bench-diff`: the CI bench-trajectory gate. Compares medians of
+/// `BENCH_*.json` files in `--new` against `--baseline`; exits non-zero
+/// when any bench regressed past the threshold or went missing.
+fn cmd_bench_diff(args: &[String]) -> Result<(), String> {
+    use hemt::bench_harness as bh;
+    let dir_arg = |flag: &str| -> Result<std::path::PathBuf, String> {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1))
+            .map(std::path::PathBuf::from)
+            .ok_or_else(|| format!("{flag} <dir> required"))
+    };
+    let baseline = dir_arg("--baseline")?;
+    let new = dir_arg("--new")?;
+    let threshold: f64 = match args.iter().position(|a| a == "--threshold") {
+        None => 0.15,
+        Some(i) => args
+            .get(i + 1)
+            .ok_or("--threshold needs a value")?
+            .parse()
+            .map_err(|e| format!("bad --threshold: {e}"))?,
+    };
+    if args.iter().any(|a| a == "--update") {
+        let copied = bh::update_baselines(&baseline, &new)?;
+        println!("updated {} baseline report(s) in {}:", copied.len(), baseline.display());
+        for name in copied {
+            println!("  {name}");
+        }
+        return Ok(());
+    }
+    let report = bh::compare_bench_dirs(&baseline, &new, threshold)?;
+    if report.is_empty() {
+        println!(
+            "bench-diff: no BENCH_*.json in {} or {} — nothing to gate",
+            baseline.display(),
+            new.display()
+        );
+        return Ok(());
+    }
+    print!("{}", bh::trajectory_table(&report, threshold));
+    if bh::trajectory_passes(&report) {
+        println!("bench trajectory: OK");
+        Ok(())
+    } else {
+        Err(format!(
+            "bench trajectory gate failed (>{:.0}% median regression or missing bench); \
+             refresh intentionally with `hemt bench-diff --baseline {} --new {} --update`",
+            threshold * 100.0,
+            baseline.display(),
+            new.display()
+        ))
+    }
 }
 
 /// Express a config file as a sweep spec: `trials` runs of the configured

@@ -1,4 +1,4 @@
-//! Fluid network model with max-min fair bandwidth sharing.
+//! Fluid network model with max-min fair bandwidth sharing — incremental.
 //!
 //! Links are capacity-limited pipes (datanode uplinks, compute-node
 //! downlinks); a flow occupies a route (a set of links) and receives the
@@ -6,11 +6,61 @@
 //! of TCP-fair sharing the paper's HDFS uplink-contention analysis (Sec. 3)
 //! assumes. This is the substrate on which microtasking's datanode uplink
 //! collisions (Claim 2, Figs 5 & 15) become completion-time effects.
+//!
+//! # Incremental recomputation
+//!
+//! Max-min fair allocation decomposes exactly over the *connected
+//! components* of the bipartite flow–link interaction graph: a flow's rate
+//! depends only on the flows and links reachable from it through shared
+//! links. `NetSim` exploits this:
+//!
+//! * a per-link active-flow index (`flows_on_link`) plus per-link
+//!   active-flow counts keep the interaction graph queryable in O(degree);
+//! * `add_flow` / `remove_flow` / `set_link_capacity` mark only the links
+//!   they touch dirty (the *dirty set*);
+//! * [`NetSim::recompute_rates`] BFSes outward from the dirty links,
+//!   collects the affected components, and re-levels **only those** with
+//!   the shared per-component water-filler ([`fill_component`]); every
+//!   other flow keeps its previous rate, which is provably still correct
+//!   (an untouched component has identical contents, capacities and
+//!   counts, so its local solve is unchanged);
+//! * when the affected region covers most of the network (the dirty set
+//!   exceeds [`FULL_SOLVE_NUMER`]/[`FULL_SOLVE_DENOM`] of active flows)
+//!   the solver falls back to enumerating *all* components — the same
+//!   per-component arithmetic, so the fallback is bit-identical by
+//!   construction, not by luck;
+//! * in debug builds every incremental solve is cross-checked against the
+//!   from-scratch full solve ([`NetSim::full_solve_oracle`]) and must
+//!   match every rate to the last mantissa bit.
+//!
+//! Inside a component the bottleneck link of each filling round comes from
+//! a lazy min-heap ordered by `(share, link)` — shares are nondecreasing
+//! across rounds, so stale entries are simply re-validated and re-pushed —
+//! instead of a scan over every link in the network.
 
-use std::collections::BTreeMap;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
 
 pub type LinkId = usize;
 pub type FlowId = u64;
+
+/// Incremental solves covering more than `FULL_SOLVE_NUMER / FULL_SOLVE_DENOM`
+/// of the active flows fall back to the all-components solve: past that
+/// point the BFS bookkeeping costs more than it saves.
+pub const FULL_SOLVE_NUMER: usize = 1;
+pub const FULL_SOLVE_DENOM: usize = 2;
+
+/// Misuse of the rate-dependent accessors while rates are stale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StaleRates;
+
+impl std::fmt::Display for StaleRates {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "rates stale — call recompute_rates first")
+    }
+}
+
+impl std::error::Error for StaleRates {}
 
 /// A capacity-limited pipe, in bits/second.
 #[derive(Debug, Clone)]
@@ -53,26 +103,73 @@ pub struct Flow {
     pub rate: f64,
 }
 
-/// Reusable scratch buffers for `recompute_rates` (the hot path).
-#[derive(Debug, Default)]
+/// Reusable scratch buffers for the component water-filler (the hot path).
+#[derive(Debug, Default, Clone)]
 struct RateScratch {
+    /// Component flow snapshot, parallel arrays indexed by local slot.
+    ids: Vec<FlowId>,
     limits: Vec<f64>,
     route_flat: Vec<LinkId>,
     route_span: Vec<(usize, usize)>,
     rates: Vec<f64>,
     capped: Vec<bool>,
+    /// Indexed by global `LinkId`; only entries for the component's links
+    /// are meaningful (reset per component via `comp_links`).
     uncapped_per_link: Vec<usize>,
     residual: Vec<f64>,
+    comp_links: Vec<LinkId>,
+    /// Lazy bottleneck min-heap of `(share, link)` candidates.
+    heap: BinaryHeap<Reverse<(ShareOrd, LinkId)>>,
+    /// BFS worklists + visit marks for component discovery.
+    link_visited: Vec<bool>,
+    flow_stack: Vec<FlowId>,
+    link_stack: Vec<LinkId>,
+}
+
+/// Total-order wrapper so shares can live in a `BinaryHeap`. Shares are
+/// finite and non-negative, so `total_cmp` agrees with numeric order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct ShareOrd(f64);
+
+impl Eq for ShareOrd {}
+
+impl PartialOrd for ShareOrd {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for ShareOrd {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
 }
 
 /// The flow network: links plus currently-active flows.
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone)]
 pub struct NetSim {
     links: Vec<Link>,
     flows: BTreeMap<FlowId, Flow>,
     next_id: FlowId,
     rates_dirty: bool,
+    /// Active flows crossing each link (unordered; membership only).
+    flows_on_link: Vec<Vec<FlowId>>,
+    /// Links whose flow set or capacity changed since the last solve.
+    dirty_links: Vec<LinkId>,
+    link_dirty: Vec<bool>,
     scratch: RateScratch,
+    /// Diagnostics: how many solves took each path since construction.
+    pub stats: SolveStats,
+}
+
+/// Counters exposed for benches and tests: which path `recompute_rates`
+/// took, and how much of the network each incremental solve touched.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SolveStats {
+    pub incremental_solves: u64,
+    pub full_solves: u64,
+    /// Flows re-levelled by incremental solves (sum over solves).
+    pub flows_relevelled: u64,
 }
 
 impl NetSim {
@@ -94,6 +191,8 @@ impl NetSim {
             name: name.to_string(),
             concurrency_eta: eta,
         });
+        self.flows_on_link.push(Vec::new());
+        self.link_dirty.push(false);
         self.links.len() - 1
     }
 
@@ -103,6 +202,26 @@ impl NetSim {
 
     pub fn num_links(&self) -> usize {
         self.links.len()
+    }
+
+    /// Change a link's capacity mid-simulation (throttling, contention
+    /// regime shifts). Only the link's own component gets re-levelled on
+    /// the next `recompute_rates`.
+    pub fn set_link_capacity(&mut self, id: LinkId, capacity_bps: f64) {
+        assert!(capacity_bps > 0.0, "link capacity must be positive");
+        assert!(id < self.links.len(), "unknown link {id}");
+        if self.links[id].capacity_bps != capacity_bps {
+            self.links[id].capacity_bps = capacity_bps;
+            self.mark_link_dirty(id);
+            self.rates_dirty = true;
+        }
+    }
+
+    fn mark_link_dirty(&mut self, l: LinkId) {
+        if !self.link_dirty[l] {
+            self.link_dirty[l] = true;
+            self.dirty_links.push(l);
+        }
     }
 
     /// Start an unconstrained flow of `bits` over `route`. Returns its id.
@@ -126,6 +245,10 @@ impl NetSim {
         }
         let id = self.next_id;
         self.next_id += 1;
+        for &l in &route {
+            self.flows_on_link[l].push(id);
+            self.mark_link_dirty(l);
+        }
         self.flows
             .insert(id, Flow { id, route, remaining: bits, tag, limit, rate: 0.0 });
         self.rates_dirty = true;
@@ -133,11 +256,16 @@ impl NetSim {
     }
 
     pub fn remove_flow(&mut self, id: FlowId) -> Option<Flow> {
-        let f = self.flows.remove(&id);
-        if f.is_some() {
-            self.rates_dirty = true;
+        let f = self.flows.remove(&id)?;
+        for &l in &f.route {
+            let list = &mut self.flows_on_link[l];
+            if let Some(pos) = list.iter().position(|&x| x == id) {
+                list.swap_remove(pos);
+            }
+            self.mark_link_dirty(l);
         }
-        f
+        self.rates_dirty = true;
+        Some(f)
     }
 
     pub fn flow(&self, id: FlowId) -> Option<&Flow> {
@@ -152,26 +280,200 @@ impl NetSim {
         self.flows.len()
     }
 
-    /// Recompute every flow's max-min fair rate by progressive filling:
-    /// repeatedly find the most-loaded unsaturated link, fix its flows at
-    /// the equal share of its residual capacity, and continue.
+    /// Number of active flows crossing `link` (the per-link concurrency
+    /// the serving-efficiency model sees).
+    pub fn active_flows_on_link(&self, link: LinkId) -> usize {
+        self.flows_on_link[link].len()
+    }
+
+    /// Bring every flow's max-min fair rate up to date. Incremental:
+    /// only components reachable from the dirty links are re-levelled;
+    /// falls back to the full (all-components) solve when the affected
+    /// region covers most of the network. Both paths run the identical
+    /// per-component water-filler, so the result is bit-identical either
+    /// way — and, in debug builds, asserted so against the full solve.
     pub fn recompute_rates(&mut self) {
         if !self.rates_dirty {
             return;
         }
         self.rates_dirty = false;
-        let n_links = self.links.len();
-        let n_flows = self.flows.len();
-        // Snapshot flow metadata into flat scratch buffers (reused across
-        // calls) so the filling loops below are allocation- and
-        // tree-lookup-free — this is the simulator's hottest function.
+
+        // Collect the affected flow set by BFS from the dirty links; the
+        // BFS itself bails to the full path as soon as the dirty set
+        // crosses the fallback threshold, so a fully-coupled network
+        // never pays for building a near-complete closure first.
+        // Underscore-named: only read under cfg(debug_assertions) below.
+        let _took_incremental_path = match self.collect_affected_flows() {
+            None => {
+                self.stats.full_solves += 1;
+                self.solve_all_components();
+                false
+            }
+            Some(affected) => {
+                self.stats.incremental_solves += 1;
+                self.stats.flows_relevelled += affected.len() as u64;
+                self.solve_flow_set(&affected);
+                true
+            }
+        };
+
+        for &l in &self.dirty_links {
+            self.link_dirty[l] = false;
+        }
+        self.dirty_links.clear();
+
+        // Oracle only where it proves something: a full-path solve *is*
+        // the oracle computation, so re-checking it would only slow
+        // debug/test builds down.
+        #[cfg(debug_assertions)]
+        if _took_incremental_path {
+            self.assert_matches_full_solve();
+        }
+    }
+
+    /// Force the from-scratch, all-components solve (ignores the dirty
+    /// set). Public so benches and property tests can pit the incremental
+    /// path against it.
+    pub fn recompute_rates_full(&mut self) {
+        self.rates_dirty = false;
+        for &l in &self.dirty_links {
+            self.link_dirty[l] = false;
+        }
+        self.dirty_links.clear();
+        self.stats.full_solves += 1;
+        self.solve_all_components();
+    }
+
+    /// Flows whose rate may have changed: everything connected (through
+    /// shared links, transitively) to a dirty link. Returns the sorted
+    /// id list, or `None` as soon as the closure crosses the full-solve
+    /// threshold (`affected/flows >= FULL_SOLVE_NUMER/FULL_SOLVE_DENOM`)
+    /// — the caller then solves everything without finishing the BFS.
+    fn collect_affected_flows(&mut self) -> Option<Vec<FlowId>> {
+        let total = self.flows.len();
+        if total == 0 {
+            return None;
+        }
         let s = &mut self.scratch;
+        s.link_visited.clear();
+        s.link_visited.resize(self.links.len(), false);
+        s.link_stack.clear();
+        let mut affected: std::collections::BTreeSet<FlowId> = std::collections::BTreeSet::new();
+        for &l in &self.dirty_links {
+            if !s.link_visited[l] {
+                s.link_visited[l] = true;
+                s.link_stack.push(l);
+            }
+        }
+        while let Some(l) = s.link_stack.pop() {
+            for &fid in &self.flows_on_link[l] {
+                if affected.insert(fid) {
+                    if affected.len() * FULL_SOLVE_DENOM >= total * FULL_SOLVE_NUMER {
+                        return None;
+                    }
+                    for &rl in &self.flows[&fid].route {
+                        if !s.link_visited[rl] {
+                            s.link_visited[rl] = true;
+                            s.link_stack.push(rl);
+                        }
+                    }
+                }
+            }
+        }
+        Some(affected.into_iter().collect())
+    }
+
+    /// Re-level every component intersecting `flow_ids` (sorted). Flows
+    /// outside those components keep their rates.
+    fn solve_flow_set(&mut self, flow_ids: &[FlowId]) {
+        // Partition the affected set into its connected components and
+        // run the shared filler on each. `comp_seen` marks flows already
+        // assigned to an earlier component.
+        let mut comp_seen: Vec<bool> = vec![false; flow_ids.len()];
+        for start in 0..flow_ids.len() {
+            if comp_seen[start] {
+                continue;
+            }
+            let comp = self.component_of(flow_ids[start], flow_ids, &mut comp_seen);
+            self.fill_component(&comp);
+        }
+    }
+
+    /// All components of the whole network, each solved independently.
+    fn solve_all_components(&mut self) {
+        let ids: Vec<FlowId> = self.flows.keys().copied().collect();
+        let mut comp_seen: Vec<bool> = vec![false; ids.len()];
+        for start in 0..ids.len() {
+            if comp_seen[start] {
+                continue;
+            }
+            let comp = self.component_of(ids[start], &ids, &mut comp_seen);
+            self.fill_component(&comp);
+        }
+    }
+
+    /// BFS one connected component from `seed`, marking members in
+    /// `comp_seen` (parallel to the sorted `universe` id list). Returns
+    /// the component's flow ids, sorted ascending — the canonical
+    /// snapshot order both solve paths share.
+    fn component_of(
+        &mut self,
+        seed: FlowId,
+        universe: &[FlowId],
+        comp_seen: &mut [bool],
+    ) -> Vec<FlowId> {
+        let s = &mut self.scratch;
+        s.link_visited.clear();
+        s.link_visited.resize(self.links.len(), false);
+        s.flow_stack.clear();
+        let mut comp: Vec<FlowId> = Vec::new();
+        let seed_pos = universe.binary_search(&seed).expect("seed in universe");
+        comp_seen[seed_pos] = true;
+        s.flow_stack.push(seed);
+        while let Some(fid) = s.flow_stack.pop() {
+            comp.push(fid);
+            for &l in &self.flows[&fid].route {
+                if s.link_visited[l] {
+                    continue;
+                }
+                s.link_visited[l] = true;
+                for &nfid in &self.flows_on_link[l] {
+                    // Every flow on a component link is in the same
+                    // component; on the incremental path the universe is
+                    // exactly the affected closure, so membership holds.
+                    let pos = universe.binary_search(&nfid).expect("closed component");
+                    if !comp_seen[pos] {
+                        comp_seen[pos] = true;
+                        s.flow_stack.push(nfid);
+                    }
+                }
+            }
+        }
+        comp.sort_unstable();
+        comp
+    }
+
+    /// Progressive filling over one connected component: repeatedly pull
+    /// the least-share bottleneck link from the lazy heap, fix its flows
+    /// at the equal share of its residual capacity, and continue. The
+    /// arithmetic (and its order) depends only on the component's sorted
+    /// flow list and its links, which is what makes incremental and full
+    /// solves bit-identical.
+    fn fill_component(&mut self, comp: &[FlowId]) {
+        let s = &mut self.scratch;
+        let n_flows = comp.len();
+        s.ids.clear();
         s.limits.clear();
         s.route_flat.clear();
         s.route_span.clear();
         s.rates.clear();
         s.capped.clear();
-        for f in self.flows.values() {
+        s.comp_links.clear();
+        s.uncapped_per_link.resize(self.links.len(), 0);
+        s.residual.resize(self.links.len(), 0.0);
+        for &fid in comp {
+            let f = &self.flows[&fid];
+            s.ids.push(fid);
             s.limits.push(f.limit);
             let start = s.route_flat.len();
             s.route_flat.extend_from_slice(&f.route);
@@ -179,36 +481,48 @@ impl NetSim {
             s.rates.push(0.0);
             s.capped.push(false);
         }
-        s.uncapped_per_link.clear();
-        s.uncapped_per_link.resize(n_links, 0);
         for &l in &s.route_flat {
+            if s.uncapped_per_link[l] == 0 {
+                s.comp_links.push(l);
+            }
             s.uncapped_per_link[l] += 1;
         }
+        s.comp_links.sort_unstable();
         // Concurrency-degraded capacities, fixed for this allocation round
         // (stream count per link is known up front).
-        s.residual.clear();
-        s.residual.extend(
-            self.links
-                .iter()
-                .enumerate()
-                .map(|(l, link)| link.effective_capacity(s.uncapped_per_link[l])),
-        );
+        s.heap.clear();
+        for &l in &s.comp_links {
+            let n = s.uncapped_per_link[l];
+            s.residual[l] = self.links[l].effective_capacity(n);
+            s.heap.push(Reverse((ShareOrd(s.residual[l] / n as f64), l)));
+        }
 
         let mut remaining = n_flows;
         while remaining > 0 {
             // Bottleneck link: smallest equal-share among links that still
-            // carry uncapped flows.
-            let mut best: Option<(f64, LinkId)> = None;
-            for l in 0..n_links {
+            // carry uncapped flows. Lazy heap: entries are revalidated on
+            // pop (shares are nondecreasing as flows get capped, so a
+            // stale entry only ever under-states the current share).
+            let (share, bott) = loop {
+                let Some(Reverse((ShareOrd(sh), l))) = s.heap.pop() else {
+                    // No unsaturated link left but flows remain uncapped —
+                    // cannot happen with positive capacities; bail to
+                    // match the old solver's defensive break.
+                    break (f64::INFINITY, usize::MAX);
+                };
                 if s.uncapped_per_link[l] == 0 {
                     continue;
                 }
-                let share = s.residual[l] / s.uncapped_per_link[l] as f64;
-                if best.map_or(true, |(b, _)| share < b) {
-                    best = Some((share, l));
+                let cur = s.residual[l] / s.uncapped_per_link[l] as f64;
+                if cur > sh {
+                    s.heap.push(Reverse((ShareOrd(cur), l)));
+                    continue;
                 }
+                break (cur, l);
+            };
+            if bott == usize::MAX {
+                break;
             }
-            let Some((share, bott)) = best else { break };
             // Receiver backpressure: flows whose own limit is below the
             // bottleneck share saturate first — fix them at their limit
             // and refill.
@@ -228,7 +542,12 @@ impl NetSim {
                 limited = true;
             }
             if limited {
-                continue; // shares changed — recompute the bottleneck
+                // Shares changed — put the bottleneck back and re-level.
+                if s.uncapped_per_link[bott] > 0 {
+                    let sh = s.residual[bott] / s.uncapped_per_link[bott] as f64;
+                    s.heap.push(Reverse((ShareOrd(sh), bott)));
+                }
+                continue;
             }
             // Cap every uncapped flow crossing the bottleneck at `share`.
             for i in 0..n_flows {
@@ -251,17 +570,38 @@ impl NetSim {
             // Guard against fp drift leaving tiny negative residuals.
             s.residual[bott] = s.residual[bott].max(0.0);
         }
-        // Write rates back (BTreeMap iteration order matches the snapshot
-        // order above).
-        for (f, &rate) in self.flows.values_mut().zip(s.rates.iter()) {
-            f.rate = rate;
+        // Write rates back and reset the per-link scratch entries this
+        // component touched (so the next component starts clean).
+        for (i, &fid) in s.ids.iter().enumerate() {
+            self.flows.get_mut(&fid).expect("component flow exists").rate = s.rates[i];
+        }
+        for &l in &s.comp_links {
+            s.uncapped_per_link[l] = 0;
+            s.residual[l] = 0.0;
         }
     }
 
-    /// Earliest completion among active flows at current rates:
-    /// `(dt_from_now, flow_id)`. Requires fresh rates.
-    pub fn next_completion(&self) -> Option<(f64, FlowId)> {
-        assert!(!self.rates_dirty, "rates stale — call recompute_rates");
+    /// Debug oracle: recompute every rate from scratch (all components)
+    /// into a side table and assert the stored rates match bit-for-bit.
+    #[cfg(debug_assertions)]
+    fn assert_matches_full_solve(&mut self) {
+        let stored: Vec<(FlowId, u64)> =
+            self.flows.values().map(|f| (f.id, f.rate.to_bits())).collect();
+        self.solve_all_components();
+        for (fid, bits) in stored {
+            let fresh = self.flows[&fid].rate;
+            assert!(
+                fresh.to_bits() == bits,
+                "incremental solve diverged on flow {fid}: {} (incremental) vs {} (full)",
+                f64::from_bits(bits),
+                fresh
+            );
+        }
+    }
+
+    /// The earliest-completion scan over the stored rates (whatever
+    /// their freshness — callers gate on `rates_dirty`).
+    fn completion_scan(&self) -> Option<(f64, FlowId)> {
         self.flows
             .values()
             .filter(|f| f.rate > 0.0)
@@ -269,12 +609,47 @@ impl NetSim {
             .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)))
     }
 
-    /// Advance every flow by `dt` seconds at current rates.
-    pub fn advance(&mut self, dt: f64) {
-        assert!(!self.rates_dirty, "rates stale — call recompute_rates");
+    /// Earliest completion among active flows at current rates:
+    /// `(dt_from_now, flow_id)`. `Err(StaleRates)` if rates are stale.
+    pub fn try_next_completion(&self) -> Result<Option<(f64, FlowId)>, StaleRates> {
+        if self.rates_dirty {
+            return Err(StaleRates);
+        }
+        Ok(self.completion_scan())
+    }
+
+    /// Earliest completion among active flows at current rates. Requires
+    /// fresh rates: debug builds panic on staleness; release builds fall
+    /// back to the (possibly stale) stored rates instead of aborting the
+    /// whole sweep — use [`NetSim::try_next_completion`] to handle
+    /// staleness explicitly.
+    pub fn next_completion(&self) -> Option<(f64, FlowId)> {
+        debug_assert!(!self.rates_dirty, "rates stale — call recompute_rates");
+        self.completion_scan()
+    }
+
+    /// Advance every flow by `dt` seconds at current rates;
+    /// `Err(StaleRates)` if rates are stale.
+    pub fn try_advance(&mut self, dt: f64) -> Result<(), StaleRates> {
+        if self.rates_dirty {
+            return Err(StaleRates);
+        }
         for f in self.flows.values_mut() {
             f.remaining = (f.remaining - f.rate * dt).max(0.0);
         }
+        Ok(())
+    }
+
+    /// Advance every flow by `dt` seconds at current rates. Requires
+    /// fresh rates: debug builds panic on staleness; release builds
+    /// recover by recomputing first (`&mut self` makes self-healing
+    /// possible here) instead of aborting the whole sweep.
+    pub fn advance(&mut self, dt: f64) {
+        debug_assert!(!self.rates_dirty, "rates stale — call recompute_rates");
+        if self.rates_dirty {
+            self.recompute_rates();
+        }
+        let _ = self.try_advance(dt);
     }
 
     /// Flows whose volume is exhausted (ready to complete), in id order.
@@ -403,8 +778,82 @@ mod tests {
     }
 
     #[test]
+    fn capacity_change_relevels_only_its_component() {
+        // Two disjoint single-link components. Halving link 1's capacity
+        // must update flow b and leave flow a's rate untouched.
+        let mut n = net_with(&[100.0, 80.0]);
+        let a = n.add_flow(vec![0], 1e6, 0);
+        let b = n.add_flow(vec![1], 1e6, 1);
+        n.recompute_rates();
+        assert_eq!(n.flow(a).unwrap().rate, 100.0);
+        assert_eq!(n.flow(b).unwrap().rate, 80.0);
+        n.set_link_capacity(1, 40.0);
+        n.recompute_rates();
+        assert_eq!(n.flow(a).unwrap().rate, 100.0);
+        assert_eq!(n.flow(b).unwrap().rate, 40.0);
+    }
+
+    #[test]
+    fn incremental_add_remove_in_disjoint_clusters() {
+        // Two 2-link clusters; churning the small cluster 0 must not
+        // disturb the rates in the 12-flow cluster 1, and must take the
+        // incremental path (affected ≪ half the flows). The dirty-set
+        // accounting must agree with the full solve — the debug oracle
+        // checks this on every recompute.
+        let mut n = net_with(&[100.0, 100.0, 60.0, 60.0]);
+        let keeps: Vec<FlowId> =
+            (0..12).map(|t| n.add_flow(vec![2, 3], 1e9, t)).collect();
+        n.recompute_rates();
+        assert!((n.flow(keeps[0]).unwrap().rate - 5.0).abs() < 1e-9);
+        let keep_bits = n.flow(keeps[0]).unwrap().rate.to_bits();
+        n.stats = SolveStats::default();
+        let mut ids = Vec::new();
+        for t in 0..2u64 {
+            ids.push(n.add_flow(vec![0, 1], 1e9, 100 + t));
+            n.recompute_rates();
+        }
+        assert!((n.flow(ids[0]).unwrap().rate - 50.0).abs() < 1e-9);
+        assert_eq!(n.flow(keeps[0]).unwrap().rate.to_bits(), keep_bits);
+        for id in ids {
+            n.remove_flow(id);
+            n.recompute_rates();
+        }
+        assert_eq!(n.flow(keeps[0]).unwrap().rate.to_bits(), keep_bits);
+        assert_eq!(n.stats.full_solves, 0, "churn must stay incremental");
+        assert_eq!(n.stats.incremental_solves, 4);
+    }
+
+    #[test]
+    fn full_solve_fallback_matches_incremental() {
+        // One fully-coupled component: every solve must fall back to the
+        // full path (affected == all flows) and still be correct.
+        let mut n = net_with(&[100.0, 50.0, 25.0]);
+        for t in 0..6u64 {
+            n.add_flow(vec![0, 1, 2], 1e9, t);
+            n.recompute_rates();
+        }
+        for f in n.active_flows() {
+            assert!((f.rate - 25.0 / 6.0).abs() < 1e-9);
+        }
+        assert_eq!(n.stats.incremental_solves, 0);
+        assert!(n.stats.full_solves >= 6);
+    }
+
+    #[test]
+    fn stale_rates_error_paths() {
+        let mut n = net_with(&[100.0]);
+        n.add_flow(vec![0], 1.0, 0);
+        assert_eq!(n.try_next_completion(), Err(StaleRates));
+        assert_eq!(n.try_advance(0.1), Err(StaleRates));
+        n.recompute_rates();
+        assert!(n.try_next_completion().unwrap().is_some());
+        assert!(n.try_advance(0.001).is_ok());
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
     #[should_panic(expected = "rates stale")]
-    fn stale_rates_are_rejected() {
+    fn stale_rates_are_rejected_in_debug() {
         let mut n = net_with(&[100.0]);
         n.add_flow(vec![0], 1.0, 0);
         n.advance(0.1);

@@ -10,8 +10,10 @@
 //! The engine advances in variable steps to the earliest of: a timer, a
 //! flow completion, a CPU-job completion, or a node capacity change
 //! (credit depletion/replenish, interference boundary). Rates are
-//! recomputed after every change, so completion times under shifting
-//! contention are exact for the fluid model. All randomness comes from the
+//! recomputed after every change — incrementally on the network side
+//! (see [`crate::netsim`]: only the affected max-min components are
+//! re-levelled) — so completion times under shifting contention are
+//! exact for the fluid model. All randomness comes from the
 //! seeded [`crate::util::Rng`] owned by the caller — identical seeds give
 //! identical schedules, which is what makes the paper's figure sweeps
 //! replayable.
@@ -275,7 +277,12 @@ impl Engine {
                 return None;
             }
 
-            // 1. Fresh rates for both resource kinds.
+            // 1. Fresh rates for both resource kinds. The network side is
+            // incremental: `recompute_rates` re-levels only the max-min
+            // components reachable from links whose flow set changed since
+            // the last step (falling back to the full solve past a dirty-
+            // set threshold), so steady shuffle phases where one flow
+            // finishes at a time cost O(component), not O(network).
             self.net.recompute_rates();
             self.recompute_cpu_rates();
 

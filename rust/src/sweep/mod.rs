@@ -7,7 +7,10 @@
 //! fast. A [`SweepSpec`] declares a figure as independent work units
 //! (per-trial simulations, or whole stateful sequences such as the
 //! OA-HeMT adaptation runs); a [`SweepRunner`] executes the units over a
-//! worker pool and merges their samples into a [`Figure`].
+//! worker pool and merges their samples into a [`Figure`]. Whole-grid
+//! scenario products (clusters × workloads × policies × granularities in
+//! one declarative spec) live in [`product`] and expand to ordinary
+//! `SweepSpec`s, so they inherit the runner and its guarantees.
 //!
 //! **Determinism contract:** every unit derives all randomness from its
 //! own seed (via [`trial_seed`]) and owns its simulation state, so unit
@@ -15,8 +18,12 @@
 //! declaration order. The resulting `Figure` is therefore *bit-identical*
 //! for any worker count — asserted by `rust/tests/golden_figures.rs`.
 
+pub mod product;
+
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+
+pub use product::{Named, ProductSweepSpec};
 
 use crate::config::{ClusterConfig, PolicyConfig, WorkloadConfig, WorkloadKind};
 use crate::coordinator::driver::{Session, SimParams};

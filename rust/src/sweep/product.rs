@@ -1,0 +1,462 @@
+//! Whole-grid scenario *product* sweeps: clusters × workloads × policies
+//! × granularities in one declarative spec, à la the Tiny-Tasks
+//! granularity-regime studies (arXiv:2202.11464).
+//!
+//! A [`ProductSweepSpec`] names each axis value and expands the full
+//! cartesian product into an ordinary [`SweepSpec`] (one series per
+//! cluster × workload × policy, one point per granularity), which the
+//! existing [`SweepRunner`] executes with the same any-thread-count
+//! bit-identity guarantee every figure already has. Granularity maps onto
+//! the policy under test via [`PolicyConfig::with_granularity`]: HomT
+//! takes the granularity as its task count; granularity-insensitive
+//! policies (default, HeMT variants) are swept once, at the first
+//! granularity, instead of being duplicated along the axis.
+//!
+//! Seeds are derived structurally from each cell's axis coordinates
+//! (`base_seed + ci·CLUSTER_STRIDE + wi·WORKLOAD_STRIDE + pi·POLICY_STRIDE
+//! + gi·CELL_SEED_STRIDE`), so extending any axis never reshuffles the
+//! seeds — hence the values — of the cells that already existed.
+
+use crate::config::{ClusterConfig, PolicyConfig, WorkloadConfig};
+use crate::util::json::{self, Value};
+
+use super::{Metric, Scenario, SweepSpec};
+
+/// Seed spacing along the granularity axis. Each cell internally spaces
+/// its trials by 1000 ([`super::trial_seed`]), so any stride well above
+/// `1000 * trials` keeps cells' seed ranges disjoint.
+pub const CELL_SEED_STRIDE: u64 = 1_000_000;
+/// Seed strides for the outer axes: each axis gets 100 slots of the next
+/// inner stride, so cells' seed ranges stay disjoint for up to 100 values
+/// per axis (asserted by [`ProductSweepSpec::to_spec`]).
+pub const POLICY_SEED_STRIDE: u64 = 100 * CELL_SEED_STRIDE;
+pub const WORKLOAD_SEED_STRIDE: u64 = 100 * POLICY_SEED_STRIDE;
+pub const CLUSTER_SEED_STRIDE: u64 = 100 * WORKLOAD_SEED_STRIDE;
+
+impl PolicyConfig {
+    /// Instantiate this policy at task-granularity `m` (the Tiny-Tasks
+    /// axis): HomT runs with `m` even tasks; every other policy fixes its
+    /// own parallelism and is returned unchanged.
+    pub fn with_granularity(&self, m: usize) -> PolicyConfig {
+        match self {
+            PolicyConfig::Homt(_) => PolicyConfig::Homt(m),
+            other => other.clone(),
+        }
+    }
+
+    /// Whether [`PolicyConfig::with_granularity`] actually varies with
+    /// `m` (false ⇒ the product sweep runs this policy once).
+    pub fn granularity_sensitive(&self) -> bool {
+        matches!(self, PolicyConfig::Homt(_))
+    }
+}
+
+/// A named axis value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Named<T> {
+    pub name: String,
+    pub value: T,
+}
+
+impl<T> Named<T> {
+    pub fn new(name: &str, value: T) -> Named<T> {
+        Named { name: name.to_string(), value }
+    }
+}
+
+/// The declarative whole-grid product: every combination of the four
+/// axes becomes one trial-grid cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProductSweepSpec {
+    pub title: String,
+    pub clusters: Vec<Named<ClusterConfig>>,
+    pub workloads: Vec<Named<WorkloadConfig>>,
+    pub policies: Vec<Named<PolicyConfig>>,
+    /// Task-count granularities (the x-axis), ascending by convention.
+    pub granularities: Vec<usize>,
+    pub metric: Metric,
+    pub trials: usize,
+    pub base_seed: u64,
+}
+
+impl ProductSweepSpec {
+    /// Number of scenario cells the product expands to (granularity-
+    /// insensitive policies count once, not per granularity).
+    pub fn num_cells(&self) -> usize {
+        let g = self.granularities.len();
+        let per_policy: usize = self
+            .policies
+            .iter()
+            .map(|p| if p.value.granularity_sensitive() { g } else { 1 })
+            .sum();
+        self.clusters.len() * self.workloads.len() * per_policy
+    }
+
+    /// Expand the product into a flat [`SweepSpec`]: one series per
+    /// cluster × workload × policy (named `cluster/workload/policy`),
+    /// one point per granularity, `trials` units per point.
+    pub fn to_spec(&self) -> SweepSpec {
+        assert!(!self.clusters.is_empty(), "product needs at least one cluster");
+        assert!(!self.workloads.is_empty(), "product needs at least one workload");
+        assert!(!self.policies.is_empty(), "product needs at least one policy");
+        assert!(
+            !self.granularities.is_empty(),
+            "product needs at least one granularity"
+        );
+        for (axis, len) in [
+            ("clusters", self.clusters.len()),
+            ("workloads", self.workloads.len()),
+            ("policies", self.policies.len()),
+            ("granularities", self.granularities.len()),
+        ] {
+            assert!(len <= 100, "product axis '{axis}' exceeds 100 values ({len})");
+        }
+        let mut spec = SweepSpec::new(&self.title, "granularity (tasks)", "time (s)");
+        for (ci, cl) in self.clusters.iter().enumerate() {
+            for (wi, wl) in self.workloads.iter().enumerate() {
+                for (pi, pol) in self.policies.iter().enumerate() {
+                    let series = spec
+                        .series(&format!("{}/{}/{}", cl.name, wl.name, pol.name));
+                    let sensitive = pol.value.granularity_sensitive();
+                    for (gi, &g) in self.granularities.iter().enumerate() {
+                        // Structural seed: a cell's seed depends only on
+                        // its own axis coordinates, never on which other
+                        // cells exist.
+                        let seed = self.base_seed
+                            + ci as u64 * CLUSTER_SEED_STRIDE
+                            + wi as u64 * WORKLOAD_SEED_STRIDE
+                            + pi as u64 * POLICY_SEED_STRIDE
+                            + gi as u64 * CELL_SEED_STRIDE;
+                        if gi > 0 && !sensitive {
+                            continue; // one point is enough — same policy
+                        }
+                        let label = if sensitive {
+                            String::new()
+                        } else {
+                            format!("fixed ({})", pol.name)
+                        };
+                        spec.scenario(
+                            series,
+                            g as f64,
+                            &label,
+                            Scenario {
+                                cluster: cl.value.clone(),
+                                workload: wl.value.clone(),
+                                policy: pol.value.with_granularity(g),
+                                metric: self.metric,
+                                trials: self.trials,
+                                base_seed: seed,
+                            },
+                        );
+                    }
+                }
+            }
+        }
+        spec
+    }
+
+    /// The built-in demo product: both paper testbeds × both
+    /// completion-time-sensitive workloads × the three policy families ×
+    /// a coarse-to-fine granularity ladder. `hemt sweep` runs this when
+    /// no `--config` is given.
+    pub fn tiny_tasks_regimes() -> ProductSweepSpec {
+        ProductSweepSpec {
+            title: "Product sweep: cluster x workload x policy x granularity".to_string(),
+            clusters: vec![
+                Named::new("static", ClusterConfig::containers_1_and_04()),
+                Named::new("burstable", ClusterConfig::burstable_pair(600.0)),
+            ],
+            workloads: vec![
+                Named::new("wordcount", WorkloadConfig::wordcount_2gb()),
+                Named::new("pagerank", WorkloadConfig::pagerank_256mb()),
+            ],
+            policies: vec![
+                Named::new("default", PolicyConfig::Default),
+                Named::new("homt", PolicyConfig::Homt(2)),
+                Named::new("hemt", PolicyConfig::HemtFromHints),
+            ],
+            granularities: vec![2, 8, 32],
+            metric: Metric::MapStageTime,
+            trials: 3,
+            base_seed: 20_000,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("title", json::s(&self.title)),
+            (
+                "clusters",
+                json::arr(
+                    self.clusters
+                        .iter()
+                        .map(|c| {
+                            json::obj(vec![
+                                ("name", json::s(&c.name)),
+                                ("cluster", c.value.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "workloads",
+                json::arr(
+                    self.workloads
+                        .iter()
+                        .map(|w| {
+                            json::obj(vec![
+                                ("name", json::s(&w.name)),
+                                ("workload", w.value.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "policies",
+                json::arr(
+                    self.policies
+                        .iter()
+                        .map(|p| {
+                            json::obj(vec![
+                                ("name", json::s(&p.name)),
+                                ("policy", p.value.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "granularities",
+                json::arr(
+                    self.granularities.iter().map(|&g| json::num(g as f64)).collect(),
+                ),
+            ),
+            (
+                "metric",
+                json::s(match self.metric {
+                    Metric::MapStageTime => "map_stage_time",
+                    Metric::JobTime => "job_time",
+                }),
+            ),
+            ("trials", json::num(self.trials as f64)),
+            ("base_seed", json::num(self.base_seed as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<ProductSweepSpec, String> {
+        fn axis<T>(
+            v: &Value,
+            key: &str,
+            inner: &str,
+            parse: impl Fn(&Value) -> Result<T, String>,
+        ) -> Result<Vec<Named<T>>, String> {
+            let arr = v
+                .get(key)
+                .and_then(Value::as_arr)
+                .ok_or_else(|| format!("product.{key} missing"))?;
+            if arr.is_empty() {
+                return Err(format!("product.{key} must be non-empty"));
+            }
+            if arr.len() > 100 {
+                return Err(format!(
+                    "product.{key} exceeds 100 values ({}) — seed strides would collide",
+                    arr.len()
+                ));
+            }
+            arr.iter()
+                .map(|e| {
+                    Ok(Named {
+                        name: e
+                            .get("name")
+                            .and_then(Value::as_str)
+                            .ok_or_else(|| format!("product.{key}[].name missing"))?
+                            .to_string(),
+                        value: parse(
+                            e.get(inner)
+                                .ok_or_else(|| format!("product.{key}[].{inner} missing"))?,
+                        )?,
+                    })
+                })
+                .collect()
+        }
+        let granularities: Vec<usize> = v
+            .get("granularities")
+            .and_then(Value::as_arr)
+            .ok_or("product.granularities missing")?
+            .iter()
+            .map(|g| g.as_usize().ok_or("bad granularity"))
+            .collect::<Result<_, _>>()?;
+        if granularities.is_empty() {
+            return Err("product.granularities must be non-empty".into());
+        }
+        if granularities.len() > 100 {
+            return Err(format!(
+                "product.granularities exceeds 100 values ({}) — seed strides would collide",
+                granularities.len()
+            ));
+        }
+        let metric = match v.get("metric").and_then(Value::as_str).unwrap_or("map_stage_time")
+        {
+            "map_stage_time" => Metric::MapStageTime,
+            "job_time" => Metric::JobTime,
+            other => return Err(format!("unknown metric '{other}'")),
+        };
+        Ok(ProductSweepSpec {
+            title: v
+                .get("title")
+                .and_then(Value::as_str)
+                .unwrap_or("product sweep")
+                .to_string(),
+            clusters: axis(v, "clusters", "cluster", ClusterConfig::from_json)?,
+            workloads: axis(v, "workloads", "workload", WorkloadConfig::from_json)?,
+            policies: axis(v, "policies", "policy", PolicyConfig::from_json)?,
+            granularities,
+            metric,
+            trials: v.get("trials").and_then(Value::as_usize).unwrap_or(3),
+            base_seed: v.get("base_seed").and_then(Value::as_u64).unwrap_or(20_000),
+        })
+    }
+
+    /// Inherent by design, mirroring `ExperimentConfig::from_str` (the
+    /// `FromStr` trait can't carry the richer error `String`s cleanly).
+    #[allow(clippy::should_implement_trait)]
+    pub fn from_str(text: &str) -> Result<ProductSweepSpec, String> {
+        let v = Value::parse(text).map_err(|e| e.to_string())?;
+        Self::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::SweepRunner;
+
+    /// A product small enough for unit tests: one tiny wordcount on the
+    /// static pair, all three policy families, two granularities.
+    fn small_product() -> ProductSweepSpec {
+        let mut wl = WorkloadConfig::wordcount_2gb();
+        wl.data_mb = 256;
+        wl.block_mb = 128;
+        ProductSweepSpec {
+            title: "test product".to_string(),
+            clusters: vec![Named::new("static", ClusterConfig::containers_1_and_04())],
+            workloads: vec![Named::new("wc", wl)],
+            policies: vec![
+                Named::new("homt", PolicyConfig::Homt(2)),
+                Named::new("hemt", PolicyConfig::HemtFromHints),
+            ],
+            granularities: vec![2, 8],
+            metric: Metric::MapStageTime,
+            trials: 2,
+            base_seed: 555,
+        }
+    }
+
+    #[test]
+    fn product_expands_expected_grid() {
+        let p = small_product();
+        assert_eq!(p.num_cells(), 3); // homt@2, homt@8, hemt (once)
+        let spec = p.to_spec();
+        assert_eq!(spec.num_series(), 2);
+        assert_eq!(spec.num_units(), 3 * 2); // cells * trials
+        let fig = SweepRunner::serial().run(&spec);
+        assert_eq!(fig.series[0].name, "static/wc/homt");
+        assert_eq!(fig.series[1].name, "static/wc/hemt");
+        let xs: Vec<f64> = fig.series[0].points.iter().map(|p| p.x).collect();
+        assert_eq!(xs, vec![2.0, 8.0]);
+        // Granularity-insensitive policy: exactly one point, at the first
+        // granularity, labelled as fixed.
+        assert_eq!(fig.series[1].points.len(), 1);
+        assert_eq!(fig.series[1].points[0].x, 2.0);
+        assert_eq!(fig.series[1].points[0].label, "fixed (hemt)");
+        for s in &fig.series {
+            for pt in &s.points {
+                assert_eq!(pt.stats.n, 2);
+                assert!(pt.stats.mean > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn product_output_is_bit_identical_across_thread_counts() {
+        let p = small_product();
+        let bits = |threads: usize| {
+            let fig = SweepRunner::new(threads).run(&p.to_spec());
+            fig.series
+                .iter()
+                .map(|s| {
+                    (
+                        s.name.clone(),
+                        s.points
+                            .iter()
+                            .map(|pt| (pt.x.to_bits(), pt.stats.mean.to_bits(), pt.stats.n))
+                            .collect::<Vec<_>>(),
+                    )
+                })
+                .collect::<Vec<_>>()
+        };
+        let baseline = bits(1);
+        for threads in [2usize, 8] {
+            assert_eq!(bits(threads), baseline, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn cell_seeds_are_stable_under_axis_extension() {
+        // Appending a granularity must not change the seeds (hence the
+        // values) of the cells that already existed.
+        let p = small_product();
+        let mut extended = p.clone();
+        extended.granularities.push(16);
+        let a = SweepRunner::serial().run(&p.to_spec());
+        let b = SweepRunner::serial().run(&extended.to_spec());
+        // homt@2 and homt@8 must be bit-identical between the two runs,
+        // and so must the granularity-insensitive hemt point.
+        for (pa, pb) in a.series[0].points.iter().zip(b.series[0].points.iter().take(2)) {
+            assert_eq!(pa.x.to_bits(), pb.x.to_bits());
+            assert_eq!(pa.stats.mean.to_bits(), pb.stats.mean.to_bits());
+        }
+        assert_eq!(
+            a.series[1].points[0].stats.mean.to_bits(),
+            b.series[1].points[0].stats.mean.to_bits()
+        );
+    }
+
+    #[test]
+    fn with_granularity_only_varies_homt() {
+        assert_eq!(PolicyConfig::Homt(2).with_granularity(16), PolicyConfig::Homt(16));
+        assert!(PolicyConfig::Homt(2).granularity_sensitive());
+        for p in [
+            PolicyConfig::Default,
+            PolicyConfig::HemtFromHints,
+            PolicyConfig::HemtStatic(vec![1.0, 0.4]),
+            PolicyConfig::HemtAdaptive { alpha: 0.5 },
+        ] {
+            assert_eq!(p.with_granularity(16), p);
+            assert!(!p.granularity_sensitive());
+        }
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let p = ProductSweepSpec::tiny_tasks_regimes();
+        let text = p.to_json().pretty();
+        let back = ProductSweepSpec::from_str(&text).unwrap();
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn json_errors_are_reported() {
+        // Granularities are validated first, then each axis in turn.
+        assert!(ProductSweepSpec::from_str("{}").unwrap_err().contains("granularities"));
+        let no_clusters = r#"{"granularities": [2, 8]}"#;
+        assert!(ProductSweepSpec::from_str(no_clusters).unwrap_err().contains("clusters"));
+        let empty_axis = r#"{"granularities": [2], "clusters": []}"#;
+        assert!(ProductSweepSpec::from_str(empty_axis)
+            .unwrap_err()
+            .contains("non-empty"));
+        assert!(ProductSweepSpec::from_str("not json").is_err());
+    }
+}

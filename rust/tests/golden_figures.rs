@@ -143,6 +143,67 @@ fn headline_is_bit_identical_across_thread_counts() {
 }
 
 #[test]
+fn fig5_is_bit_identical_across_thread_counts() {
+    // Fig 5 is the network-heavy case: 64 Mbps datanode uplinks are the
+    // universal bottleneck, so every trial leans on the (incremental)
+    // max-min engine far more than the CPU-bound figures do. Determinism
+    // here is the direct end-to-end check on the incremental solver.
+    let fig = assert_thread_count_invariant(experiments::fig5_spec, "fig5");
+
+    assert_eq!(fig.series.len(), 1);
+    assert_eq!(fig.series[0].name, "HomT (even partitioning)");
+    let xs: Vec<f64> = fig.series[0].points.iter().map(|p| p.x).collect();
+    assert_eq!(xs, vec![2.0, 4.0, 8.0, 16.0, 32.0, 64.0]);
+    assert!(fig.series[0].points.iter().all(|p| p.stats.n == 5));
+    // Physical sanity: uplink-bound stage times sit in a stable band and
+    // grow toward fine granularity (the paper's Claim-2 collision cost).
+    let first = fig.series[0].points.first().unwrap().stats.mean;
+    let last = fig.series[0].points.last().unwrap().stats.mean;
+    for p in &fig.series[0].points {
+        assert!(
+            p.stats.mean > 10.0 && p.stats.mean < 2000.0,
+            "fig5@{}: {}",
+            p.x,
+            p.stats.mean
+        );
+    }
+    assert!(last > first, "network-bound cost must rise with partitions");
+}
+
+#[test]
+fn product_sweep_is_bit_identical_across_thread_counts() {
+    // The whole-grid product expands to a plain SweepSpec, so it must
+    // inherit the thread-count invariance contract unchanged. Use a
+    // trimmed product (one cluster, one workload) to keep this fast.
+    use hemt::config::{ClusterConfig, PolicyConfig, WorkloadConfig};
+    use hemt::sweep::{Metric, Named, ProductSweepSpec};
+    let make_spec = || {
+        let mut wl = WorkloadConfig::wordcount_2gb();
+        wl.data_mb = 512;
+        wl.block_mb = 256;
+        ProductSweepSpec {
+            title: "golden product".to_string(),
+            clusters: vec![Named::new("static", ClusterConfig::containers_1_and_04())],
+            workloads: vec![Named::new("wc", wl)],
+            policies: vec![
+                Named::new("homt", PolicyConfig::Homt(2)),
+                Named::new("hemt", PolicyConfig::HemtFromHints),
+            ],
+            granularities: vec![2, 8, 32],
+            metric: Metric::MapStageTime,
+            trials: 2,
+            base_seed: 4242,
+        }
+        .to_spec()
+    };
+    let fig = assert_thread_count_invariant(make_spec, "product");
+    assert_eq!(fig.series.len(), 2);
+    assert_eq!(fig.series[0].name, "static/wc/homt");
+    assert_eq!(fig.series[0].points.len(), 3);
+    assert_eq!(fig.series[1].points.len(), 1);
+}
+
+#[test]
 fn repeated_runs_are_bit_identical() {
     // Same runner, run twice: the sweep derives all randomness from the
     // spec's seeds, so repetition is exact.

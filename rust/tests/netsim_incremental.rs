@@ -1,0 +1,194 @@
+//! Property tests for the incremental max-min network engine: under
+//! random add/remove/capacity-change sequences over mixed topologies,
+//! the incrementally maintained rates must be *bit-identical* to
+//!
+//! 1. the forced full solve on a clone of the same network
+//!    (`recompute_rates_full` — the dirty-set accounting check), and
+//! 2. a from-scratch rebuild holding only the currently-active flows
+//!    (the history-independence check: rates may not depend on the churn
+//!    path that led to the current state).
+//!
+//! Debug test builds additionally run the internal full-solve oracle on
+//! every `recompute_rates` call, so any divergence pinpoints itself.
+
+use hemt::netsim::NetSim;
+use hemt::util::{prop, Rng};
+
+const RACKS: usize = 4;
+/// Per rack: an uplink and a downlink; plus 2 shared backbone links that
+/// occasionally couple racks together into larger components.
+const BACKBONE: usize = 2;
+
+fn build_links(net: &mut NetSim, rng: &mut Rng) -> Vec<usize> {
+    let mut links = Vec::new();
+    for r in 0..RACKS {
+        links.push(net.add_link(&format!("up{r}"), rng.range_f64(50.0, 500.0)));
+        links.push(net.add_link(&format!("down{r}"), rng.range_f64(50.0, 500.0)));
+    }
+    for b in 0..BACKBONE {
+        links.push(net.add_link_with_eta(
+            &format!("bb{b}"),
+            rng.range_f64(100.0, 1000.0),
+            0.1,
+        ));
+    }
+    links
+}
+
+/// A random route: usually rack-local (up, down), sometimes crossing a
+/// backbone link so components merge and split as flows churn.
+fn random_route(rng: &mut Rng) -> Vec<usize> {
+    let rack = rng.below(RACKS);
+    let mut route = vec![2 * rack, 2 * rack + 1];
+    if rng.below(4) == 0 {
+        route.push(2 * RACKS + rng.below(BACKBONE));
+    }
+    if rng.below(8) == 0 {
+        // Cross-rack transfer: source uplink, destination downlink.
+        let dst = rng.below(RACKS);
+        route = vec![2 * rack, 2 * dst + 1];
+        route.sort_unstable();
+        route.dedup();
+    }
+    route
+}
+
+/// Assert every active flow's rate matches bit-for-bit between `a` and a
+/// network holding the same flows (paired in id order).
+fn assert_rates_bit_identical(a: &NetSim, b: &NetSim, what: &str) {
+    assert_eq!(a.num_flows(), b.num_flows(), "{what}: flow count");
+    for (fa, fb) in a.active_flows().zip(b.active_flows()) {
+        assert_eq!(
+            fa.rate.to_bits(),
+            fb.rate.to_bits(),
+            "{what}: flow {} rate {} vs {}",
+            fa.id,
+            fa.rate,
+            fb.rate
+        );
+    }
+}
+
+/// Rebuild a network containing only `net`'s current flows (same links,
+/// same capacities, fresh ids in the same relative order) and solve it
+/// from scratch.
+fn rebuild(net: &NetSim) -> NetSim {
+    let mut fresh = NetSim::new();
+    for l in 0..net.num_links() {
+        let link = net.link(l);
+        fresh.add_link_with_eta(&link.name, link.capacity_bps, link.concurrency_eta);
+    }
+    for f in net.active_flows() {
+        if f.limit.is_finite() {
+            fresh.add_flow_with_limit(f.route.clone(), f.remaining.max(1.0), f.tag, f.limit);
+        } else {
+            fresh.add_flow(f.route.clone(), f.remaining.max(1.0), f.tag);
+        }
+    }
+    fresh.recompute_rates_full();
+    fresh
+}
+
+#[test]
+fn incremental_matches_full_solve_under_random_churn() {
+    prop::check("netsim-incremental-vs-full", 0x1AC4E55, 40, |rng: &mut Rng| {
+        let mut net = NetSim::new();
+        let links = build_links(&mut net, rng);
+        let mut live: Vec<u64> = Vec::new();
+        for step in 0..120 {
+            match rng.below(10) {
+                // 0-5: add a flow (keep the network populated).
+                0..=5 => {
+                    let route = random_route(rng);
+                    let bits = rng.range_f64(1.0, 1e6);
+                    let id = if rng.below(3) == 0 {
+                        net.add_flow_with_limit(route, bits, step, rng.range_f64(1.0, 200.0))
+                    } else {
+                        net.add_flow(route, bits, step)
+                    };
+                    live.push(id);
+                }
+                // 6-8: remove a random live flow.
+                6..=8 if !live.is_empty() => {
+                    let id = live.swap_remove(rng.below(live.len()));
+                    net.remove_flow(id).expect("live flow");
+                }
+                // 9: change a link capacity.
+                _ => {
+                    let l = links[rng.below(links.len())];
+                    net.set_link_capacity(l, rng.range_f64(50.0, 1000.0));
+                }
+            }
+            net.recompute_rates();
+            // (1) Forced full solve on a clone must agree bitwise.
+            let mut full = net.clone();
+            full.recompute_rates_full();
+            assert_rates_bit_identical(&net, &full, "incremental vs full clone");
+            // (2) History independence: a from-scratch rebuild of only the
+            // current flows must agree bitwise too.
+            let fresh = rebuild(&net);
+            assert_rates_bit_identical(&net, &fresh, "incremental vs rebuild");
+        }
+    });
+}
+
+#[test]
+fn incremental_engine_takes_both_paths() {
+    // Construct the two regimes explicitly so both solver paths are
+    // provably exercised (the random property above checks correctness
+    // whatever path gets taken).
+    let mut net = NetSim::new();
+    let mut rng = Rng::new(7);
+    let _links = build_links(&mut net, &mut rng);
+    // Rack-disjoint population: 10 flows per rack, no backbone.
+    for r in 0..RACKS {
+        for t in 0..10u64 {
+            net.add_flow(vec![2 * r, 2 * r + 1], 1e6, (r as u64) * 100 + t);
+        }
+    }
+    net.recompute_rates();
+    net.stats = Default::default();
+    // Rack-local churn touches 1/RACKS of the flows — incremental.
+    for step in 0..8u64 {
+        let id = net.add_flow(vec![0, 1], 1e6, 1000 + step);
+        net.recompute_rates();
+        net.remove_flow(id);
+        net.recompute_rates();
+    }
+    assert_eq!(net.stats.full_solves, 0, "{:?}", net.stats);
+    assert!(net.stats.incremental_solves >= 16, "{:?}", net.stats);
+    // Couple every rack through one backbone-spanning flow per rack:
+    // churn now touches the single giant component — full fallback.
+    for r in 0..RACKS {
+        net.add_flow(vec![2 * r, 2 * RACKS], 1e6, 2000 + r as u64);
+    }
+    net.recompute_rates();
+    net.stats = Default::default();
+    let id = net.add_flow(vec![0, 1], 1e6, 3000);
+    net.recompute_rates();
+    net.remove_flow(id);
+    net.recompute_rates();
+    assert_eq!(net.stats.incremental_solves, 0, "{:?}", net.stats);
+    assert_eq!(net.stats.full_solves, 2, "{:?}", net.stats);
+}
+
+#[test]
+fn draining_to_empty_and_refilling_stays_consistent() {
+    let mut net = NetSim::new();
+    let mut rng = Rng::new(99);
+    let _links = build_links(&mut net, &mut rng);
+    let ids: Vec<u64> = (0..20).map(|t| net.add_flow(random_route(&mut rng), 1e6, t)).collect();
+    net.recompute_rates();
+    for id in ids {
+        net.remove_flow(id);
+        net.recompute_rates();
+    }
+    assert_eq!(net.num_flows(), 0);
+    let a = net.add_flow(vec![0, 1], 1e6, 0);
+    net.recompute_rates();
+    let fresh = rebuild(&net);
+    assert_eq!(
+        net.flow(a).unwrap().rate.to_bits(),
+        fresh.active_flows().next().unwrap().rate.to_bits()
+    );
+}
