@@ -1,0 +1,46 @@
+//! Dynamics-comparison bench: the `hemt dynamics` closed-loop figure
+//! (Adaptive-HeMT vs static-HeMT vs HomT across the capacity-program
+//! families) timed through the sweep runner, serial baseline vs the
+//! machine's full pool.
+//!
+//! Writes `BENCH_dynamics_sweep.json` (pooled) and
+//! `BENCH_dynamics_sweep_serial.json` for the CI trajectory gate. The
+//! units lean on the new per-node dirty-mark CPU re-level (every
+//! capacity event used to trigger a whole-engine water-fill rebuild) and
+//! on the session cache (the three arms of a family share one pristine
+//! session), so this bench is the end-to-end trajectory of both.
+
+use hemt::bench_harness::time_and_report;
+use hemt::dynamics::{comparison_spec, COMPARISON_BASE_SEED, COMPARISON_FAMILIES};
+use hemt::sweep::{session_cache_stats, SweepRunner};
+
+const ROUNDS: usize = 8;
+
+fn main() {
+    println!(
+        "== dynamics_sweep: {} families x 3 policies x {ROUNDS} rounds ==",
+        COMPARISON_FAMILIES.len()
+    );
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let serial = time_and_report("dynamics_sweep_serial", 0, 3, || {
+        std::hint::black_box(
+            SweepRunner::new(1).run(&comparison_spec(ROUNDS, COMPARISON_BASE_SEED)),
+        );
+    });
+    let mut last = None;
+    let pooled = time_and_report("dynamics_sweep", 0, 3, || {
+        last = Some(
+            SweepRunner::new(threads).run(&comparison_spec(ROUNDS, COMPARISON_BASE_SEED)),
+        );
+    });
+    let (hits, misses) = session_cache_stats();
+    println!(
+        "dynamics_sweep_serial:    {} s\ndynamics_sweep_pool({threads}): {} s  ({:.2}x)",
+        serial.pm(3),
+        pooled.pm(3),
+        serial.mean / pooled.mean
+    );
+    println!("session cache: {hits} hits / {misses} misses");
+    println!();
+    println!("{}", last.expect("pooled run happened").to_table());
+}

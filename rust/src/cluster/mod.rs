@@ -59,7 +59,7 @@ pub struct Executor {
 
 /// The cluster manager: tracks agents and unallocated resources, extends
 /// offers, launches executors.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct ClusterManager {
     agents: Vec<AgentSpec>,
     available: Vec<f64>,

@@ -53,7 +53,7 @@ impl Default for Speculation {
 /// are calibrated to Spark's observed costs (10-20 ms driver-side
 /// scheduling, tens of ms task launch) and produce the paper's U-shaped
 /// HomT curves.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SimParams {
     /// Serialized driver occupancy per dispatch.
     pub sched_overhead: f64,
@@ -179,12 +179,17 @@ impl SessionBuilder {
             params: self.params,
             rng: Rng::new(self.seed),
             manager: mgr,
+            dynamics: None,
         }
     }
 }
 
 /// A live driver session: executes jobs sequentially on one cluster,
-/// carrying node state (burstable credits, interference) across jobs.
+/// carrying node state (burstable credits, interference, dynamics)
+/// across jobs. `Clone` snapshots the whole world — the session cache
+/// ([`crate::sweep::cached_session`]) hands out clones of a pristine
+/// build instead of rebuilding per trial.
+#[derive(Clone)]
 pub struct Session {
     pub engine: Engine,
     pub hdfs: HdfsCluster,
@@ -194,6 +199,20 @@ pub struct Session {
     pub manager: ClusterManager,
     exec_uplinks: Vec<LinkId>,
     exec_downlinks: Vec<LinkId>,
+    dynamics: Option<DynamicsRuntime>,
+}
+
+/// Installed capacity-event schedule: `(time, node, multiplier)` triples,
+/// time-sorted, applied through [`Engine::set_node_capacity`] as
+/// simulated time reaches them. One chained timer is outstanding at a
+/// time (tag kind `KIND_CAPACITY`, task field = event index), so events
+/// fire *inside* running stages — mid-job throttling, spot outages and
+/// replacements happen at exact simulated times, not at stage
+/// boundaries.
+#[derive(Debug, Clone)]
+struct DynamicsRuntime {
+    events: Vec<(f64, usize, f64)>,
+    next: usize,
 }
 
 // Tag encoding: kind in the top byte, task index below.
@@ -201,6 +220,7 @@ const KIND_LAUNCH: u64 = 1 << 56;
 const KIND_FLOW: u64 = 2 << 56;
 const KIND_CPU: u64 = 3 << 56;
 const KIND_SPEC_CHECK: u64 = 4 << 56;
+const KIND_CAPACITY: u64 = 5 << 56;
 const KIND_MASK: u64 = 0xFF << 56;
 // Attempt index (0 = primary, 1 = speculative copy) in bit 48.
 const ATT_SHIFT: u64 = 48;
@@ -274,14 +294,62 @@ impl Session {
     }
 
     /// Advance simulated time with the cluster idle (e.g. to let burstable
-    /// credits replenish between jobs).
+    /// credits replenish between jobs). Installed capacity events whose
+    /// time falls inside the idle window are applied as they fire.
     pub fn idle_until(&mut self, t: f64) {
         assert!(t >= self.engine.now);
         self.engine.set_timer(t, u64::MAX);
         while let Some(ev) = self.engine.step() {
-            if matches!(ev, Event::Timer { tag: u64::MAX }) {
-                break;
+            match ev {
+                Event::Timer { tag: u64::MAX } => break,
+                Event::Timer { tag } if tag & KIND_MASK == KIND_CAPACITY => {
+                    let (_, _, idx) = untag(tag);
+                    self.apply_capacity_event(idx);
+                }
+                _ => {}
             }
+        }
+    }
+
+    /// Install a compiled capacity-event schedule (`(time, node, mult)`,
+    /// time-sorted — see [`crate::dynamics::DynamicsConfig::compile_events`]).
+    /// Events are applied through [`Engine::set_node_capacity`] at their
+    /// exact simulated times, including mid-stage. At most one schedule
+    /// per session; install before running jobs.
+    pub fn install_dynamics(&mut self, events: Vec<(f64, usize, f64)>) {
+        assert!(
+            self.dynamics.is_none(),
+            "dynamics already installed on this session"
+        );
+        for w in events.windows(2) {
+            assert!(w[0].0 <= w[1].0, "capacity events must be time-sorted");
+        }
+        for &(t, node, mult) in &events {
+            assert!(t >= self.engine.now, "capacity event at {t} is in the past");
+            assert!(node < self.engine.nodes.len(), "unknown node {node}");
+            assert!(mult > 0.0 && mult.is_finite(), "bad capacity multiplier {mult}");
+        }
+        if let Some(&(t, _, _)) = events.first() {
+            self.engine.set_timer(t, tag_of(KIND_CAPACITY, 0, 0));
+        }
+        self.dynamics = Some(DynamicsRuntime { events, next: 0 });
+    }
+
+    /// Fire capacity event `idx`: apply its multiplier and chain the
+    /// timer for the next event. Stale timer indices (already applied)
+    /// are ignored.
+    fn apply_capacity_event(&mut self, idx: usize) {
+        let Some(rt) = self.dynamics.as_mut() else { return };
+        if idx != rt.next {
+            return;
+        }
+        let (_, node, mult) = rt.events[idx];
+        rt.next += 1;
+        let next_idx = rt.next;
+        let next_at = rt.events.get(next_idx).map(|&(t, _, _)| t);
+        self.engine.set_node_capacity(node, mult);
+        if let Some(t) = next_at {
+            self.engine.set_timer(t, tag_of(KIND_CAPACITY, 0, next_idx));
         }
     }
 
@@ -443,6 +511,13 @@ impl Session {
                         self.engine
                             .set_timer(self.engine.now + spec.check_interval, KIND_SPEC_CHECK);
                     }
+                }
+                Event::Timer { tag } if tag & KIND_MASK == KIND_CAPACITY => {
+                    // A dynamics event landing mid-stage: apply it and
+                    // keep the stage loop going — the engine re-levels
+                    // only the touched node's rates.
+                    let idx = untag(tag).2;
+                    self.apply_capacity_event(idx);
                 }
                 other => panic!("unexpected event in stage: {other:?}"),
             }
@@ -944,6 +1019,65 @@ mod tests {
         let (mut s, _file) = fast_slow_session(zero_overheads());
         s.idle_until(42.0);
         assert!((s.engine.now - 42.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn capacity_event_fires_mid_stage() {
+        // One 1.0-core node, a 100 core-s map task; the node is throttled
+        // to 0.5 at t=40 *inside* the stage: 40 s at 1.0 + 120 s at 0.5
+        // -> ~160 s (plus a negligible read latency).
+        let mut s = SessionBuilder {
+            nodes: vec![Node::fixed("a", 1.0)],
+            exec_cpus: vec![1.0],
+            node_uplink_bps: 1e12,
+            node_downlink_bps: 1e12,
+            hdfs_datanodes: 1,
+            hdfs_replication: 1,
+            hdfs_uplink_bps: 1e12,
+            hdfs_serving_eta: 0.0,
+            params: zero_overheads(),
+            seed: 9,
+        }
+        .build();
+        let file = s.hdfs.upload(100 * MB, 100 * MB, &mut s.rng);
+        s.install_dynamics(vec![(40.0, 0, 0.5)]);
+        let rec = s.run_job(&map_only_job(file, PartitionPolicy::EvenTasks(1), CPB));
+        let t = rec.stages[0].completion_time();
+        assert!((t - 160.0).abs() < 0.5, "throttle mid-stage: {t}");
+    }
+
+    #[test]
+    fn capacity_events_apply_during_idle_and_persist() {
+        // Event at t=5 fires inside the idle window; the job launched at
+        // t=10 then runs at half speed throughout: 100 core-s -> ~200 s.
+        let mut s = SessionBuilder {
+            nodes: vec![Node::fixed("a", 1.0)],
+            exec_cpus: vec![1.0],
+            node_uplink_bps: 1e12,
+            node_downlink_bps: 1e12,
+            hdfs_datanodes: 1,
+            hdfs_replication: 1,
+            hdfs_uplink_bps: 1e12,
+            hdfs_serving_eta: 0.0,
+            params: zero_overheads(),
+            seed: 11,
+        }
+        .build();
+        let file = s.hdfs.upload(100 * MB, 100 * MB, &mut s.rng);
+        s.install_dynamics(vec![(5.0, 0, 0.5)]);
+        s.idle_until(10.0);
+        assert!((s.engine.nodes[0].available_cores(10.0) - 0.5).abs() < 1e-12);
+        let rec = s.run_job(&map_only_job(file, PartitionPolicy::EvenTasks(1), CPB));
+        let t = rec.stages[0].completion_time();
+        assert!((t - 200.0).abs() < 0.5, "half-speed stage: {t}");
+    }
+
+    #[test]
+    #[should_panic(expected = "already installed")]
+    fn double_dynamics_install_rejected() {
+        let (mut s, _file) = fast_slow_session(zero_overheads());
+        s.install_dynamics(vec![(1.0, 0, 0.5)]);
+        s.install_dynamics(vec![(2.0, 0, 0.5)]);
     }
 
     #[test]

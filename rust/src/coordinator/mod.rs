@@ -18,6 +18,7 @@
 //! microtasking: serialized driver dispatch, executor-side task launch,
 //! and per-task I/O setup (lost pipelining on small reads).
 
+pub mod adaptive;
 pub mod driver;
 
 use crate::hdfs::HdfsFile;

@@ -1,0 +1,767 @@
+//! Trace-driven time-varying capacity engine + closed-loop adaptive HeMT.
+//!
+//! The paper targets clouds whose node capacities are *dynamically
+//! changing* — burstable credit depletion, hypervisor throttling, spot
+//! revocation, co-tenant interference — and argues HeMT wins only when
+//! workload-specific capacity estimates are *learned*. This module
+//! supplies the missing dynamic half of that claim:
+//!
+//! * [`CapacityProgram`] — composable stochastic processes over a node's
+//!   capacity multiplier (Markov-modulated throttling, spot revocation
+//!   with delayed replacement, diurnal interference, credit-depletion
+//!   cliffs derived from the [`crate::estimator::credits`] curves),
+//!   compiled deterministically (seeded [`crate::util::Rng`]) into step
+//!   schedules;
+//! * [`DynamicsConfig`] — the per-node program assignment that forms the
+//!   `dynamics` axis of product sweeps ([`crate::sweep::product`]) and
+//!   JSON-round-trips like every other config;
+//! * the comparison drivers behind `hemt dynamics`: Adaptive-HeMT (the
+//!   closed [`AdaptiveDriver`] loop re-estimating speeds between rounds)
+//!   vs static-HeMT (weights frozen at launch hints) vs HomT, across the
+//!   program families.
+//!
+//! Compiled schedules are installed on a session
+//! ([`crate::coordinator::driver::Session::install_dynamics`]) and fire
+//! *inside* running stages through `Engine::set_node_capacity`, which
+//! re-levels only the touched node's CPU water-fill (the per-node
+//! dirty-mark path in [`crate::sim`]).
+
+use crate::config::{ClusterConfig, WorkloadConfig, WorkloadKind};
+use crate::coordinator::adaptive::AdaptiveDriver;
+use crate::coordinator::PartitionPolicy;
+use crate::estimator::credits::CreditCurve;
+use crate::sweep::{cached_session, Sample, SweepSpec, MB};
+use crate::util::json::{self, Value};
+use crate::util::Rng;
+use crate::workloads;
+
+/// Seed salt separating schedule compilation from every other consumer
+/// of a trial seed (session RNG, placement draws).
+pub const DYNAMICS_SEED_SALT: u64 = 0xD15E_A5ED;
+
+/// A compiled per-node capacity trace: sorted `(time, multiplier)`
+/// steps; the multiplier in force at `t` is the last entry with
+/// `time <= t` (1.0 before the first). Installed on the engine these
+/// become `set_node_capacity` events.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct CapacitySchedule {
+    pub steps: Vec<(f64, f64)>,
+}
+
+impl CapacitySchedule {
+    /// The multiplier in force at time `t`.
+    pub fn mult_at(&self, t: f64) -> f64 {
+        self.steps
+            .iter()
+            .rev()
+            .find(|(start, _)| *start <= t)
+            .map(|(_, m)| *m)
+            .unwrap_or(1.0)
+    }
+
+    /// Every step time sorted and every multiplier usable by the fluid
+    /// engine (positive, finite).
+    fn assert_valid(&self) {
+        for w in self.steps.windows(2) {
+            assert!(w[0].0 <= w[1].0, "schedule not time-sorted");
+        }
+        for &(t, m) in &self.steps {
+            assert!(t >= 0.0 && t.is_finite(), "bad step time {t}");
+            assert!(m > 0.0 && m.is_finite(), "bad step multiplier {m}");
+        }
+    }
+}
+
+/// Exponential draw with the given mean (inverse-CDF on the shared RNG).
+fn exp_sample(rng: &mut Rng, mean: f64) -> f64 {
+    -mean * (1.0 - rng.f64()).ln()
+}
+
+/// A declarative time-varying capacity process for one node. `compile`
+/// turns it into a [`CapacitySchedule`] deterministically: identical
+/// seeds give identical traces, which keeps every dynamics sweep
+/// replayable and bit-identical across thread counts.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CapacityProgram {
+    /// No dynamics: capacity stays at the node model's own value.
+    Steady,
+    /// Two-state Markov-modulated throttling (hypervisor caps, noisy
+    /// co-tenants): full speed for ~Exp(`mean_up`) seconds, then `mult`
+    /// for ~Exp(`mean_down`) seconds, repeating.
+    MarkovThrottle { mult: f64, mean_up: f64, mean_down: f64 },
+    /// Spot revocation with delayed replacement: after ~Exp(`mean_revoke`)
+    /// seconds the node collapses to `residual_mult` (a warm spare /
+    /// draining remnant — a true zero would deadlock the fluid model),
+    /// and a full-speed replacement arrives `outage` seconds later.
+    SpotOutage { mean_revoke: f64, outage: f64, residual_mult: f64 },
+    /// Diurnal/bursty interference: a cosine load wave of the given
+    /// `period` and `depth` (capacity dips to `1 - depth` at the peak),
+    /// discretized into `steps` steps per period, with a random phase.
+    Diurnal { period: f64, depth: f64, steps: usize },
+    /// Credit-depletion cliff (the Sec. 6.2 burstable curves, viewed as
+    /// an *external* trace): full speed until the
+    /// [`CreditCurve`]-predicted depletion time for flat-out use, then
+    /// `baseline / peak` of nominal capacity. Lets credit dynamics apply
+    /// to nodes whose own model is static.
+    CreditCliff { credits: f64, peak: f64, baseline: f64 },
+    /// Product composition: each part compiles independently and the
+    /// multipliers multiply (throttling on top of a diurnal wave, ...).
+    Compose(Vec<CapacityProgram>),
+}
+
+impl CapacityProgram {
+    /// Compile into a step schedule covering `[0, horizon]`. All
+    /// randomness comes from `rng`.
+    pub fn compile(&self, rng: &mut Rng, horizon: f64) -> CapacitySchedule {
+        assert!(horizon >= 0.0 && horizon.is_finite(), "bad horizon {horizon}");
+        let sched = match self {
+            CapacityProgram::Steady => CapacitySchedule::default(),
+            CapacityProgram::MarkovThrottle { mult, mean_up, mean_down } => {
+                assert!(*mult > 0.0 && *mult < 1.0, "throttle mult must be in (0,1)");
+                assert!(*mean_up > 0.0 && *mean_down > 0.0, "dwell means must be positive");
+                let mut steps = Vec::new();
+                let mut t = exp_sample(rng, *mean_up);
+                while t < horizon {
+                    steps.push((t, *mult));
+                    t += exp_sample(rng, *mean_down);
+                    // The recovery is pushed even when it lands past the
+                    // horizon: a trace truncated mid-throttle would
+                    // otherwise freeze the node degraded forever in runs
+                    // that outlive the horizon.
+                    steps.push((t, 1.0));
+                    t += exp_sample(rng, *mean_up);
+                }
+                CapacitySchedule { steps }
+            }
+            CapacityProgram::SpotOutage { mean_revoke, outage, residual_mult } => {
+                assert!(*mean_revoke > 0.0 && *outage > 0.0, "spot times must be positive");
+                assert!(
+                    *residual_mult > 0.0 && *residual_mult < 1.0,
+                    "residual mult must be in (0,1)"
+                );
+                let mut steps = Vec::new();
+                let mut t = exp_sample(rng, *mean_revoke);
+                while t < horizon {
+                    steps.push((t, *residual_mult));
+                    t += *outage;
+                    // Replacement always arrives, even past the horizon
+                    // (see the MarkovThrottle note).
+                    steps.push((t, 1.0));
+                    t += exp_sample(rng, *mean_revoke);
+                }
+                CapacitySchedule { steps }
+            }
+            CapacityProgram::Diurnal { period, depth, steps } => {
+                assert!(*period > 0.0, "period must be positive");
+                assert!(*depth > 0.0 && *depth < 1.0, "depth must be in (0,1)");
+                assert!(*steps >= 2, "need at least 2 steps per period");
+                let phase = rng.f64() * period;
+                let dt = period / *steps as f64;
+                let mut out = Vec::new();
+                let mut k = 0u64;
+                loop {
+                    let t = k as f64 * dt;
+                    if t >= horizon {
+                        break;
+                    }
+                    let angle = std::f64::consts::TAU * (t + phase) / period;
+                    let m = 1.0 - depth * 0.5 * (1.0 - angle.cos());
+                    out.push((t, m));
+                    k += 1;
+                }
+                // Past the horizon the wave restores to full capacity
+                // instead of freezing at an arbitrary mid-wave dip.
+                if !out.is_empty() {
+                    out.push((horizon, 1.0));
+                }
+                CapacitySchedule { steps: out }
+            }
+            CapacityProgram::CreditCliff { credits, peak, baseline } => {
+                assert!(*peak > 0.0 && *baseline > 0.0, "speeds must be positive");
+                assert!(*baseline < *peak, "baseline must be below peak");
+                let curve = CreditCurve { peak: *peak, baseline: *baseline, credits: *credits };
+                let td = curve.deplete_time();
+                let steps = if td.is_finite() && td < horizon {
+                    vec![(td, baseline / peak)]
+                } else {
+                    Vec::new()
+                };
+                CapacitySchedule { steps }
+            }
+            CapacityProgram::Compose(parts) => {
+                assert!(!parts.is_empty(), "compose needs at least one part");
+                let compiled: Vec<CapacitySchedule> =
+                    parts.iter().map(|p| p.compile(rng, horizon)).collect();
+                let mut times: Vec<f64> = compiled
+                    .iter()
+                    .flat_map(|c| c.steps.iter().map(|&(t, _)| t))
+                    .collect();
+                times.sort_by(f64::total_cmp);
+                times.dedup_by(|a, b| a == b);
+                let steps = times
+                    .into_iter()
+                    .map(|t| {
+                        let m: f64 = compiled.iter().map(|c| c.mult_at(t)).product();
+                        (t, m)
+                    })
+                    .collect();
+                CapacitySchedule { steps }
+            }
+        };
+        sched.assert_valid();
+        sched
+    }
+
+    pub fn is_steady(&self) -> bool {
+        match self {
+            CapacityProgram::Steady => true,
+            CapacityProgram::Compose(parts) => parts.iter().all(CapacityProgram::is_steady),
+            _ => false,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        match self {
+            CapacityProgram::Steady => json::obj(vec![("kind", json::s("steady"))]),
+            CapacityProgram::MarkovThrottle { mult, mean_up, mean_down } => json::obj(vec![
+                ("kind", json::s("markov")),
+                ("mult", json::num(*mult)),
+                ("mean_up", json::num(*mean_up)),
+                ("mean_down", json::num(*mean_down)),
+            ]),
+            CapacityProgram::SpotOutage { mean_revoke, outage, residual_mult } => {
+                json::obj(vec![
+                    ("kind", json::s("spot")),
+                    ("mean_revoke", json::num(*mean_revoke)),
+                    ("outage", json::num(*outage)),
+                    ("residual_mult", json::num(*residual_mult)),
+                ])
+            }
+            CapacityProgram::Diurnal { period, depth, steps } => json::obj(vec![
+                ("kind", json::s("diurnal")),
+                ("period", json::num(*period)),
+                ("depth", json::num(*depth)),
+                ("steps", json::num(*steps as f64)),
+            ]),
+            CapacityProgram::CreditCliff { credits, peak, baseline } => json::obj(vec![
+                ("kind", json::s("credit_cliff")),
+                ("credits", json::num(*credits)),
+                ("peak", json::num(*peak)),
+                ("baseline", json::num(*baseline)),
+            ]),
+            CapacityProgram::Compose(parts) => json::obj(vec![
+                ("kind", json::s("compose")),
+                ("parts", json::arr(parts.iter().map(CapacityProgram::to_json).collect())),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Value) -> Result<CapacityProgram, String> {
+        let f = |k: &str| {
+            v.get(k)
+                .and_then(Value::as_f64)
+                .ok_or_else(|| format!("program.{k} missing"))
+        };
+        match v.get("kind").and_then(Value::as_str).ok_or("program.kind missing")? {
+            "steady" => Ok(CapacityProgram::Steady),
+            "markov" => Ok(CapacityProgram::MarkovThrottle {
+                mult: f("mult")?,
+                mean_up: f("mean_up")?,
+                mean_down: f("mean_down")?,
+            }),
+            "spot" => Ok(CapacityProgram::SpotOutage {
+                mean_revoke: f("mean_revoke")?,
+                outage: f("outage")?,
+                residual_mult: f("residual_mult")?,
+            }),
+            "diurnal" => Ok(CapacityProgram::Diurnal {
+                period: f("period")?,
+                depth: f("depth")?,
+                steps: v.get("steps").and_then(Value::as_usize).ok_or("program.steps")?,
+            }),
+            "credit_cliff" => Ok(CapacityProgram::CreditCliff {
+                credits: f("credits")?,
+                peak: f("peak")?,
+                baseline: f("baseline")?,
+            }),
+            "compose" => Ok(CapacityProgram::Compose(
+                v.get("parts")
+                    .and_then(Value::as_arr)
+                    .ok_or("program.parts missing")?
+                    .iter()
+                    .map(CapacityProgram::from_json)
+                    .collect::<Result<_, _>>()?,
+            )),
+            other => Err(format!("unknown program kind '{other}'")),
+        }
+    }
+}
+
+/// Per-cluster dynamics: node `i` runs `programs[i % programs.len()]`
+/// (empty = every node steady), compiled over `[0, horizon]`.
+///
+/// Runs that outlive the horizon see *full* capacity from then on: the
+/// stochastic programs always emit their recovery step even when it
+/// lands past the horizon, and the diurnal wave appends an explicit
+/// restore — so a truncated trace never freezes a node degraded. The
+/// one deliberate exception is [`CapacityProgram::CreditCliff`], whose
+/// depletion is one-way by definition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DynamicsConfig {
+    pub programs: Vec<CapacityProgram>,
+    pub horizon: f64,
+}
+
+impl DynamicsConfig {
+    /// No dynamics — the implicit value of every pre-dynamics scenario.
+    pub fn steady() -> DynamicsConfig {
+        DynamicsConfig { programs: Vec::new(), horizon: 0.0 }
+    }
+
+    pub fn is_steady(&self) -> bool {
+        self.programs.iter().all(CapacityProgram::is_steady)
+    }
+
+    /// Preset: node 1 suffers Markov-modulated throttling (node 0 and
+    /// any further even-indexed nodes stay steady).
+    pub fn markov_throttle() -> DynamicsConfig {
+        DynamicsConfig {
+            programs: vec![
+                CapacityProgram::Steady,
+                CapacityProgram::MarkovThrottle { mult: 0.3, mean_up: 90.0, mean_down: 45.0 },
+            ],
+            horizon: 4000.0,
+        }
+    }
+
+    /// Preset: node 1 is spot-revoked and replaced after a fixed outage.
+    pub fn spot_replace() -> DynamicsConfig {
+        DynamicsConfig {
+            programs: vec![
+                CapacityProgram::Steady,
+                CapacityProgram::SpotOutage {
+                    mean_revoke: 150.0,
+                    outage: 60.0,
+                    residual_mult: 0.05,
+                },
+            ],
+            horizon: 4000.0,
+        }
+    }
+
+    /// Preset: every node rides an (independently phased) diurnal
+    /// interference wave.
+    pub fn diurnal() -> DynamicsConfig {
+        DynamicsConfig {
+            programs: vec![CapacityProgram::Diurnal { period: 240.0, depth: 0.6, steps: 12 }],
+            horizon: 4000.0,
+        }
+    }
+
+    /// Preset: node 1 falls off a burstable credit cliff early in the
+    /// run (the Sec. 6.2 depletion, as an external trace).
+    pub fn credit_cliff() -> DynamicsConfig {
+        DynamicsConfig {
+            programs: vec![
+                CapacityProgram::Steady,
+                CapacityProgram::CreditCliff { credits: 80.0, peak: 1.0, baseline: 0.3 },
+            ],
+            horizon: 4000.0,
+        }
+    }
+
+    /// Preset lookup by family name (the `hemt dynamics` families and the
+    /// product-sweep dynamics axis).
+    pub fn preset(name: &str) -> Option<DynamicsConfig> {
+        match name {
+            "steady" => Some(DynamicsConfig::steady()),
+            "markov" => Some(DynamicsConfig::markov_throttle()),
+            "spot" => Some(DynamicsConfig::spot_replace()),
+            "diurnal" => Some(DynamicsConfig::diurnal()),
+            "credit_cliff" => Some(DynamicsConfig::credit_cliff()),
+            _ => None,
+        }
+    }
+
+    /// Compile one schedule per node. Every node forks its own RNG
+    /// stream off the salted seed — deterministically, and independently
+    /// of the other nodes' programs, so editing one node's program never
+    /// reshuffles another's trace.
+    pub fn compile_for(&self, num_nodes: usize, seed: u64) -> Vec<CapacitySchedule> {
+        let mut root = Rng::new(seed ^ DYNAMICS_SEED_SALT);
+        (0..num_nodes)
+            .map(|node| {
+                let mut rng = root.fork();
+                if self.programs.is_empty() {
+                    return CapacitySchedule::default();
+                }
+                self.programs[node % self.programs.len()].compile(&mut rng, self.horizon)
+            })
+            .collect()
+    }
+
+    /// Compile and flatten into the `(time, node, mult)` event list
+    /// [`crate::coordinator::driver::Session::install_dynamics`] takes.
+    pub fn compile_events(&self, num_nodes: usize, seed: u64) -> Vec<(f64, usize, f64)> {
+        let mut events: Vec<(f64, usize, f64)> = Vec::new();
+        for (node, sched) in self.compile_for(num_nodes, seed).iter().enumerate() {
+            for &(t, m) in &sched.steps {
+                events.push((t, node, m));
+            }
+        }
+        events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        events
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            (
+                "programs",
+                json::arr(self.programs.iter().map(CapacityProgram::to_json).collect()),
+            ),
+            ("horizon", json::num(self.horizon)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<DynamicsConfig, String> {
+        Ok(DynamicsConfig {
+            programs: v
+                .get("programs")
+                .and_then(Value::as_arr)
+                .ok_or("dynamics.programs missing")?
+                .iter()
+                .map(CapacityProgram::from_json)
+                .collect::<Result<_, _>>()?,
+            horizon: v
+                .get("horizon")
+                .and_then(Value::as_f64)
+                .ok_or("dynamics.horizon missing")?,
+        })
+    }
+}
+
+// -------------------------------------------------- comparison drivers
+
+/// The non-steady program families `hemt dynamics` compares policies
+/// across.
+pub const COMPARISON_FAMILIES: &[&str] = &["markov", "spot", "diurnal", "credit_cliff"];
+
+/// Default closed-loop rounds per family arm.
+pub const DEFAULT_ROUNDS: usize = 12;
+
+/// Base seed of the `hemt dynamics` comparison (one stride per family;
+/// all three policy arms share their family's seed so they face the
+/// *identical* capacity trace and session).
+pub const COMPARISON_BASE_SEED: u64 = 77_000;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Arm {
+    Adaptive,
+    StaticHints,
+    Homt,
+}
+
+const ARMS: [(Arm, &str); 3] = [
+    (Arm::Adaptive, "Adaptive-HeMT (OA loop)"),
+    (Arm::StaticHints, "static HeMT (launch hints)"),
+    (Arm::Homt, "HomT (8 even tasks)"),
+];
+
+/// The comparison cluster: the paper's static-container pair — all
+/// heterogeneity beyond the 1:0.4 grant is injected by the dynamics.
+fn comparison_cluster() -> ClusterConfig {
+    ClusterConfig::containers_1_and_04()
+}
+
+/// A fig-7-sized WordCount round: big enough for the map stage to span
+/// several capacity events, small enough to run dozens of rounds.
+fn comparison_workload() -> WorkloadConfig {
+    WorkloadConfig {
+        kind: WorkloadKind::WordCount,
+        data_mb: 512,
+        block_mb: 256,
+        cpu_secs_per_mb: 42.0 / 1024.0,
+        iterations: 1,
+    }
+}
+
+/// Run `rounds` closed-loop WordCount rounds of one (family, arm) cell;
+/// returns the per-round map-stage times. All randomness derives from
+/// `seed`; the session comes from the shared cache, so the three arms of
+/// a family start from bit-identical worlds.
+fn run_family_arm(family: &str, arm: Arm, rounds: usize, seed: u64) -> Vec<f64> {
+    let cfg = DynamicsConfig::preset(family).expect("known family");
+    let cluster = comparison_cluster();
+    let wl = comparison_workload();
+    let mut s = cached_session(&cluster, seed);
+    let events = cfg.compile_events(s.engine.nodes.len(), seed);
+    s.install_dynamics(events);
+    let mut drv = AdaptiveDriver::new(0.25).with_hint_bootstrap();
+    let mut out = Vec::with_capacity(rounds);
+    for _ in 0..rounds {
+        let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
+        let cpb = wl.cpu_secs_per_mb;
+        let rec = match arm {
+            Arm::Adaptive => drv.run_round(&mut s, |pol| {
+                workloads::wordcount_job(file, pol.clone(), pol, cpb)
+            }),
+            Arm::StaticHints => {
+                let pol = PartitionPolicy::Hemt(s.capacity_hints());
+                s.run_job(&workloads::wordcount_job(file, pol.clone(), pol, cpb))
+            }
+            Arm::Homt => {
+                let pol = PartitionPolicy::EvenTasks(8);
+                s.run_job(&workloads::wordcount_job(file, pol.clone(), pol, cpb))
+            }
+        };
+        out.push(rec.map_stage_time());
+    }
+    out
+}
+
+/// The `hemt dynamics` figure: per program family (x), the per-round
+/// map-stage times of the three policy arms (series), aggregated into
+/// mean ± σ over rounds. One sequence unit per (family, arm) — the
+/// sweep runner fans them out with its usual bit-identity guarantee.
+pub fn comparison_spec(rounds: usize, base_seed: u64) -> SweepSpec {
+    assert!(rounds > 0, "need at least one round");
+    let mut spec = SweepSpec::new(
+        "Dynamics: Adaptive-HeMT vs static HeMT vs HomT under time-varying capacity",
+        "capacity-program family",
+        "map stage time (s), per round",
+    );
+    let series: Vec<usize> = ARMS.iter().map(|(_, name)| spec.series(name)).collect();
+    for (fi, family) in COMPARISON_FAMILIES.iter().enumerate() {
+        let seed = base_seed + fi as u64 * 10_000;
+        for (ai, &(arm, _)) in ARMS.iter().enumerate() {
+            let series = series[ai];
+            let family = family.to_string();
+            spec.sequence(move || {
+                run_family_arm(&family, arm, rounds, seed)
+                    .into_iter()
+                    .map(|t| Sample {
+                        series,
+                        x: fi as f64,
+                        label: family.clone(),
+                        value: t,
+                    })
+                    .collect()
+            });
+        }
+    }
+    spec
+}
+
+/// Round-by-round adaptation trajectory under one program family: x is
+/// the round index, one series per policy arm. The dynamics analogue of
+/// the paper's Fig. 7.
+pub fn trajectory_spec(family: &'static str, rounds: usize, base_seed: u64) -> SweepSpec {
+    assert!(DynamicsConfig::preset(family).is_some(), "unknown family '{family}'");
+    let fi = COMPARISON_FAMILIES.iter().position(|f| *f == family).unwrap_or(0);
+    let mut spec = SweepSpec::new(
+        &format!("Dynamics trajectory: per-round map time under '{family}'"),
+        "round",
+        "map stage time (s)",
+    );
+    let seed = base_seed + fi as u64 * 10_000;
+    for &(arm, name) in ARMS.iter() {
+        let series = spec.series(name);
+        spec.sequence(move || {
+            run_family_arm(family, arm, rounds, seed)
+                .into_iter()
+                .enumerate()
+                .map(|(round, t)| Sample {
+                    series,
+                    x: round as f64,
+                    label: String::new(),
+                    value: t,
+                })
+                .collect()
+        });
+    }
+    spec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::SweepRunner;
+
+    fn rng() -> Rng {
+        Rng::new(0xDA7A)
+    }
+
+    #[test]
+    fn compile_is_deterministic_per_seed() {
+        for name in COMPARISON_FAMILIES {
+            let cfg = DynamicsConfig::preset(name).unwrap();
+            let a = cfg.compile_for(2, 42);
+            let b = cfg.compile_for(2, 42);
+            assert_eq!(a, b, "{name}");
+        }
+        // Stochastic families draw fresh realizations per seed.
+        let m = DynamicsConfig::markov_throttle();
+        assert_ne!(m.compile_for(2, 42), m.compile_for(2, 43));
+    }
+
+    #[test]
+    fn markov_alternates_throttle_and_recovery() {
+        let p = CapacityProgram::MarkovThrottle { mult: 0.3, mean_up: 50.0, mean_down: 20.0 };
+        let sched = p.compile(&mut rng(), 5000.0);
+        assert!(sched.steps.len() >= 4, "expected several transitions");
+        for (i, &(_, m)) in sched.steps.iter().enumerate() {
+            let want = if i % 2 == 0 { 0.3 } else { 1.0 };
+            assert_eq!(m, want, "step {i}");
+        }
+        assert_eq!(sched.mult_at(0.0), 1.0);
+        // Every throttle has its recovery (possibly past the horizon):
+        // long runs end at full capacity, never frozen degraded.
+        assert_eq!(sched.steps.len() % 2, 0);
+        assert_eq!(sched.steps.last().unwrap().1, 1.0);
+        assert_eq!(sched.mult_at(f64::MAX), 1.0);
+    }
+
+    #[test]
+    fn spot_outage_recovers_after_fixed_delay() {
+        let p = CapacityProgram::SpotOutage {
+            mean_revoke: 100.0,
+            outage: 30.0,
+            residual_mult: 0.05,
+        };
+        let sched = p.compile(&mut rng(), 10_000.0);
+        assert!(sched.steps.len() >= 2);
+        // Revocations and replacements come in complete pairs — the last
+        // replacement may land past the horizon, so a truncated trace
+        // still ends recovered.
+        assert_eq!(sched.steps.len() % 2, 0);
+        for pair in sched.steps.chunks(2) {
+            assert_eq!(pair[0].1, 0.05);
+            assert_eq!(pair[1].1, 1.0);
+            assert!((pair[1].0 - pair[0].0 - 30.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn diurnal_wave_stays_in_band_and_dips() {
+        let p = CapacityProgram::Diurnal { period: 100.0, depth: 0.6, steps: 10 };
+        let sched = p.compile(&mut rng(), 1000.0);
+        // 100 wave steps plus the explicit full-capacity restore at the
+        // horizon (so truncated runs never freeze mid-dip).
+        assert_eq!(sched.steps.len(), 101);
+        assert_eq!(*sched.steps.last().unwrap(), (1000.0, 1.0));
+        let min = sched.steps.iter().map(|&(_, m)| m).fold(f64::INFINITY, f64::min);
+        let max = sched.steps.iter().map(|&(_, m)| m).fold(f64::NEG_INFINITY, f64::max);
+        assert!(min >= 0.4 - 1e-9, "floor is 1 - depth: {min}");
+        assert!(max <= 1.0 + 1e-9);
+        assert!(min < 0.45 && max > 0.95, "wave should span the band: {min}..{max}");
+    }
+
+    #[test]
+    fn credit_cliff_matches_curve_depletion() {
+        let p = CapacityProgram::CreditCliff { credits: 80.0, peak: 1.0, baseline: 0.3 };
+        let sched = p.compile(&mut rng(), 4000.0);
+        assert_eq!(sched.steps.len(), 1);
+        let (t, m) = sched.steps[0];
+        assert!((t - 80.0 / 0.7).abs() < 1e-9, "deplete at {t}");
+        assert!((m - 0.3).abs() < 1e-12);
+        // Horizon shorter than the cliff: no events.
+        let none = p.compile(&mut rng(), 50.0);
+        assert!(none.steps.is_empty());
+    }
+
+    #[test]
+    fn compose_multiplies_parts() {
+        let p = CapacityProgram::Compose(vec![
+            CapacityProgram::CreditCliff { credits: 70.0, peak: 1.0, baseline: 0.5 },
+            CapacityProgram::CreditCliff { credits: 140.0, peak: 1.0, baseline: 0.5 },
+        ]);
+        let sched = p.compile(&mut rng(), 4000.0);
+        assert_eq!(sched.steps.len(), 2);
+        assert!((sched.steps[0].1 - 0.5).abs() < 1e-12);
+        assert!((sched.steps[1].1 - 0.25).abs() < 1e-12, "both cliffs stack");
+    }
+
+    #[test]
+    fn per_node_streams_are_independent() {
+        let cfg = DynamicsConfig::diurnal();
+        let scheds = cfg.compile_for(2, 7);
+        assert_eq!(scheds.len(), 2);
+        // Same program on both nodes, independent phases: traces differ.
+        assert_ne!(scheds[0], scheds[1]);
+    }
+
+    #[test]
+    fn events_are_time_sorted_and_tagged_per_node() {
+        let cfg = DynamicsConfig::markov_throttle();
+        let events = cfg.compile_events(2, 5);
+        assert!(!events.is_empty());
+        for w in events.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+        }
+        // Program cycling: node 0 is Steady, so every event is node 1's.
+        assert!(events.iter().all(|&(_, node, _)| node == 1));
+    }
+
+    #[test]
+    fn json_round_trips_every_family_and_compose() {
+        for name in COMPARISON_FAMILIES {
+            let cfg = DynamicsConfig::preset(name).unwrap();
+            let back = DynamicsConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(cfg, back, "{name}");
+        }
+        let composed = DynamicsConfig {
+            programs: vec![CapacityProgram::Compose(vec![
+                CapacityProgram::Diurnal { period: 60.0, depth: 0.2, steps: 6 },
+                CapacityProgram::MarkovThrottle { mult: 0.5, mean_up: 10.0, mean_down: 5.0 },
+            ])],
+            horizon: 100.0,
+        };
+        let back = DynamicsConfig::from_json(&composed.to_json()).unwrap();
+        assert_eq!(composed, back);
+        assert!(DynamicsConfig::from_json(&json::obj(vec![])).is_err());
+    }
+
+    #[test]
+    fn steady_config_compiles_to_nothing() {
+        let cfg = DynamicsConfig::steady();
+        assert!(cfg.is_steady());
+        assert!(cfg.compile_events(4, 1).is_empty());
+        assert!(!DynamicsConfig::markov_throttle().is_steady());
+    }
+
+    #[test]
+    fn comparison_figure_has_expected_shape() {
+        // 2 rounds keep this fast; shape + physical sanity only.
+        let fig = SweepRunner::serial().run(&comparison_spec(2, COMPARISON_BASE_SEED));
+        assert_eq!(fig.series.len(), 3);
+        for s in &fig.series {
+            assert_eq!(s.points.len(), COMPARISON_FAMILIES.len(), "{}", s.name);
+            for (fi, p) in s.points.iter().enumerate() {
+                assert_eq!(p.x, fi as f64);
+                assert_eq!(p.label, COMPARISON_FAMILIES[fi]);
+                assert_eq!(p.stats.n, 2);
+                assert!(p.stats.mean > 1.0 && p.stats.mean < 10_000.0);
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_beats_static_under_sustained_throttle() {
+        // Under the credit-cliff family node 1 permanently drops to 0.3x
+        // at ~114 s (round ~7); the static hints keep over-assigning it
+        // forever while the adaptive loop re-learns the split within a
+        // round or two. The settled tail must favor the adaptive arm.
+        let rounds = 12;
+        let seed = COMPARISON_BASE_SEED + 3 * 10_000; // credit_cliff's seed
+        let adaptive = run_family_arm("credit_cliff", Arm::Adaptive, rounds, seed);
+        let static_ = run_family_arm("credit_cliff", Arm::StaticHints, rounds, seed);
+        let tail = rounds - 4;
+        let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len() as f64;
+        let a = mean(&adaptive[tail..]);
+        let s = mean(&static_[tail..]);
+        assert!(
+            a < s * 0.95,
+            "adaptive tail {a:.1}s should beat static tail {s:.1}s"
+        );
+    }
+}

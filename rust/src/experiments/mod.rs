@@ -16,7 +16,7 @@ use crate::analysis;
 use crate::config::{ClusterConfig, NodeConfig, PolicyConfig, WorkloadConfig};
 use crate::estimator::credits::CreditCurve;
 use crate::estimator::SpeedEstimator;
-use crate::metrics::{Figure, JobRecord};
+use crate::metrics::Figure;
 use crate::sweep::{Metric, Sample, Scenario, SweepRunner, SweepSpec};
 use crate::workloads;
 
@@ -33,22 +33,10 @@ pub fn default_runner() -> SweepRunner {
     SweepRunner::from_env()
 }
 
-/// Feed a finished map stage into the OA-HeMT estimator: per executor,
-/// observed `(bytes, busy seconds)`.
-pub fn observe_map_stage(est: &mut SpeedEstimator, rec: &JobRecord, num_executors: usize) {
-    let stage = &rec.stages[0];
-    let mut bytes = vec![0u64; num_executors];
-    let mut secs = vec![0f64; num_executors];
-    for t in &stage.tasks {
-        bytes[t.executor] += t.bytes;
-        secs[t.executor] += t.duration();
-    }
-    for e in 0..num_executors {
-        if bytes[e] > 0 && secs[e] > 0.0 {
-            est.observe(e, bytes[e] as f64, secs[e]);
-        }
-    }
-}
+/// Feed a finished map stage into the OA-HeMT estimator (moved to the
+/// closed-loop driver; re-exported here for the figure drivers,
+/// examples and tests that always imported it from `experiments`).
+pub use crate::coordinator::adaptive::observe_map_stage;
 
 /// Shorthand for the per-figure scenario grid cell: the named policy on
 /// the given cluster/workload, `TRIALS` trials, map-stage metric (for
@@ -63,6 +51,7 @@ fn scenario_of(
         cluster: cluster.clone(),
         workload: wl.clone(),
         policy,
+        dynamics: crate::dynamics::DynamicsConfig::steady(),
         metric: Metric::MapStageTime,
         trials: TRIALS,
         base_seed,
@@ -568,6 +557,29 @@ pub fn product_sweep_spec() -> SweepSpec {
     ProductSweepSpec::tiny_tasks_regimes().to_spec()
 }
 
+// ------------------------------------------------------------- dynamics
+
+/// `hemt dynamics` / `hemt figure dyn_compare`: Adaptive-HeMT vs static
+/// HeMT vs HomT per capacity-program family (mean ± σ over rounds).
+pub fn dynamics_comparison_spec() -> SweepSpec {
+    crate::dynamics::comparison_spec(
+        crate::dynamics::DEFAULT_ROUNDS,
+        crate::dynamics::COMPARISON_BASE_SEED,
+    )
+}
+
+/// Round-by-round adaptation trajectory under Markov-modulated
+/// throttling (the dynamics analogue of Fig. 7).
+pub fn dynamics_markov_spec() -> SweepSpec {
+    crate::dynamics::trajectory_spec("markov", 16, crate::dynamics::COMPARISON_BASE_SEED)
+}
+
+/// Round-by-round trajectory under spot revocation + delayed
+/// replacement.
+pub fn dynamics_spot_spec() -> SweepSpec {
+    crate::dynamics::trajectory_spec("spot", 16, crate::dynamics::COMPARISON_BASE_SEED)
+}
+
 /// Dispatch to a figure's sweep spec by CLI name.
 pub fn spec_by_name(name: &str) -> Option<SweepSpec> {
     match name {
@@ -585,6 +597,9 @@ pub fn spec_by_name(name: &str) -> Option<SweepSpec> {
         "headline" => Some(headline_spec()),
         "4node" | "extension" => Some(extension::four_node_spec()),
         "product" | "sweep" => Some(product_sweep_spec()),
+        "dynamics" | "dyn_compare" => Some(dynamics_comparison_spec()),
+        "dyn_markov" => Some(dynamics_markov_spec()),
+        "dyn_spot" => Some(dynamics_spot_spec()),
         _ => None,
     }
 }
@@ -597,7 +612,7 @@ pub fn by_name(name: &str) -> Option<Figure> {
 /// All figure names, for `hemt figure all`.
 pub const ALL_FIGURES: &[&str] = &[
     "fig4", "fig5", "fig7", "fig8", "fig9", "fig10_12", "fig13", "fig14", "fig15",
-    "fig17", "fig18", "headline", "extension",
+    "fig17", "fig18", "headline", "extension", "dyn_compare", "dyn_markov", "dyn_spot",
 ];
 
 #[cfg(test)]

@@ -38,6 +38,7 @@ pub mod bench_harness;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod dynamics;
 pub mod estimator;
 pub mod exec;
 pub mod experiments;

@@ -7,6 +7,9 @@
 //!   paper-shaped table (or JSON).
 //! * `hemt run --config <file.json> [--json]` — run a custom experiment
 //!   described by an [`hemt::config::ExperimentConfig`].
+//! * `hemt dynamics [--rounds N]` — closed-loop Adaptive-HeMT vs
+//!   static-HeMT vs HomT under time-varying node capacity
+//!   ([`hemt::dynamics`]).
 //! * `hemt analysis` — print the closed-form Claim 1 / Claim 2 numbers.
 //! * `hemt plan-credits --work <W> <credits...>` — the Sec. 6.2 burstable
 //!   credit planner: split `W` CPU-minutes across t2.small-like nodes.
@@ -28,10 +31,14 @@ fn usage() -> &'static str {
                                     design-choice ablations (alpha, speculation, rack, stale_credits)
   hemt run --config <file> [--json] [--threads N]
                                     run an experiment config
-  hemt sweep [--config <file>] [--json] [--threads N]
-                                    whole-grid product sweep (clusters x workloads x
-                                    policies x granularities); default: the built-in
-                                    tiny-tasks regime product
+  hemt sweep [--config <file>] [--preset <tiny_tasks|dynamics>] [--json] [--threads N]
+                                    whole-grid product sweep (dynamics x clusters x
+                                    workloads x policies x granularities); default:
+                                    the built-in tiny-tasks regime product
+  hemt dynamics [--rounds N] [--json] [--threads N]
+                                    closed-loop Adaptive-HeMT vs static-HeMT vs HomT
+                                    under time-varying capacity (Markov throttling,
+                                    spot outage, diurnal, credit cliff)
   hemt bench-diff --baseline <dir> --new <dir> [--threshold F] [--update]
                                     diff BENCH_*.json medians against a committed
                                     baseline; exit 1 past the threshold (default 0.15)
@@ -71,6 +78,7 @@ fn main() -> ExitCode {
         Some("ablation") => cmd_ablation(&args[1..]),
         Some("run") => cmd_run(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
+        Some("dynamics") => cmd_dynamics(&args[1..]),
         Some("bench-diff") => cmd_bench_diff(&args[1..]),
         Some("analysis") => cmd_analysis(),
         Some("plan-credits") => cmd_plan_credits(&args[1..]),
@@ -99,7 +107,7 @@ fn positional(args: &[String]) -> Option<&String> {
             skip_next = false;
             continue;
         }
-        if a == "--threads" || a == "--config" {
+        if a == "--threads" || a == "--config" || a == "--preset" || a == "--rounds" {
             skip_next = true;
             continue;
         }
@@ -181,7 +189,19 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
     let json = args.iter().any(|a| a == "--json");
     let runner = runner_from_args(args)?;
     let product = match args.iter().position(|a| a == "--config") {
-        None => hemt::sweep::ProductSweepSpec::tiny_tasks_regimes(),
+        None => match args.iter().position(|a| a == "--preset") {
+            None => hemt::sweep::ProductSweepSpec::tiny_tasks_regimes(),
+            Some(i) => match args.get(i + 1).map(String::as_str) {
+                Some("tiny_tasks") => hemt::sweep::ProductSweepSpec::tiny_tasks_regimes(),
+                Some("dynamics") => hemt::sweep::ProductSweepSpec::dynamic_regimes(),
+                Some(other) => {
+                    return Err(format!(
+                        "unknown preset '{other}' (expected tiny_tasks or dynamics)"
+                    ))
+                }
+                None => return Err("--preset needs a value".into()),
+            },
+        },
         Some(i) => {
             let path = args.get(i + 1).ok_or("--config needs a value")?;
             let text =
@@ -202,6 +222,61 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
         println!("{}", fig.to_json().pretty());
     } else {
         println!("{}", fig.to_table());
+    }
+    Ok(())
+}
+
+/// `hemt dynamics`: the closed-loop comparison — Adaptive-HeMT (the
+/// OA estimator loop re-partitioning between rounds) vs static-HeMT
+/// (weights frozen at launch hints) vs HomT, across the capacity-program
+/// families (Markov throttling, spot outage, diurnal interference,
+/// credit cliff). All three arms of a family share one seed, hence one
+/// capacity trace; output is bit-identical for any thread count.
+fn cmd_dynamics(args: &[String]) -> Result<(), String> {
+    let json = args.iter().any(|a| a == "--json");
+    let runner = runner_from_args(args)?;
+    let rounds = match args.iter().position(|a| a == "--rounds") {
+        None => hemt::dynamics::DEFAULT_ROUNDS,
+        Some(i) => {
+            let n: usize = args
+                .get(i + 1)
+                .ok_or("--rounds needs a value")?
+                .parse()
+                .map_err(|e| format!("bad --rounds: {e}"))?;
+            if n == 0 {
+                return Err("--rounds must be >= 1".into());
+            }
+            n
+        }
+    };
+    let spec =
+        hemt::dynamics::comparison_spec(rounds, hemt::dynamics::COMPARISON_BASE_SEED);
+    eprintln!(
+        "dynamics comparison: {} families x 3 policies x {rounds} rounds over {} thread(s)",
+        hemt::dynamics::COMPARISON_FAMILIES.len(),
+        runner.threads()
+    );
+    let fig = runner.run(&spec);
+    if json {
+        println!("{}", fig.to_json().pretty());
+        return Ok(());
+    }
+    println!("{}", fig.to_table());
+    // Per-family verdict: which policy's mean round time wins.
+    println!("per-family winners (mean map-stage time over {rounds} rounds):");
+    for (fi, family) in hemt::dynamics::COMPARISON_FAMILIES.iter().enumerate() {
+        let mut best: Option<(&str, f64)> = None;
+        for s in &fig.series {
+            if let Some(p) = s.points.iter().find(|p| p.x == fi as f64) {
+                match best {
+                    Some((_, b)) if b <= p.stats.mean => {}
+                    _ => best = Some((s.name.as_str(), p.stats.mean)),
+                }
+            }
+        }
+        if let Some((name, mean)) = best {
+            println!("  {family:<13} -> {name} ({mean:.1} s)");
+        }
     }
     Ok(())
 }
@@ -274,6 +349,7 @@ fn config_spec(cfg: &config::ExperimentConfig) -> hemt::sweep::SweepSpec {
             cluster: cfg.cluster.clone(),
             workload: cfg.workload.clone(),
             policy: cfg.policy.clone(),
+            dynamics: hemt::dynamics::DynamicsConfig::steady(),
             metric: hemt::sweep::Metric::JobTime,
             trials: cfg.trials,
             base_seed: cfg.base_seed,

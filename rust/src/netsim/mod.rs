@@ -120,10 +120,42 @@ struct RateScratch {
     comp_links: Vec<LinkId>,
     /// Lazy bottleneck min-heap of `(share, link)` candidates.
     heap: BinaryHeap<Reverse<(ShareOrd, LinkId)>>,
-    /// BFS worklists + visit marks for component discovery.
-    link_visited: Vec<bool>,
+    /// BFS worklists + epoch-stamped link visit marks for component
+    /// discovery: a link is "visited" iff its stamp equals the current
+    /// `epoch`, so starting a fresh BFS is an increment, not an O(links)
+    /// clear.
+    link_epoch: Vec<u32>,
+    epoch: u32,
     flow_stack: Vec<FlowId>,
     link_stack: Vec<LinkId>,
+    /// Affected-closure membership + its sorted id list (scratch-owned so
+    /// the incremental path allocates nothing per solve; the set's
+    /// iteration order never escapes — the list is sorted before use).
+    affected: std::collections::HashSet<FlowId>,
+    affected_list: Vec<FlowId>,
+    /// Component partitioning worklists shared by both solve paths.
+    comp_seen: Vec<bool>,
+    comp_buf: Vec<FlowId>,
+    all_ids: Vec<FlowId>,
+}
+
+impl RateScratch {
+    /// Begin a fresh link-visit generation; returns the stamp marking
+    /// "visited in this BFS". Handles stamp wrap-around by resetting the
+    /// whole vec (once every 2^32 BFSes).
+    fn next_epoch(&mut self, num_links: usize) -> u32 {
+        if self.link_epoch.len() < num_links {
+            self.link_epoch.resize(num_links, 0);
+        }
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            for e in &mut self.link_epoch {
+                *e = 0;
+            }
+            self.epoch = 1;
+        }
+        self.epoch
+    }
 }
 
 /// Total-order wrapper so shares can live in a `BinaryHeap`. Shares are
@@ -303,18 +335,19 @@ impl NetSim {
         // crosses the fallback threshold, so a fully-coupled network
         // never pays for building a near-complete closure first.
         // Underscore-named: only read under cfg(debug_assertions) below.
-        let _took_incremental_path = match self.collect_affected_flows() {
-            None => {
-                self.stats.full_solves += 1;
-                self.solve_all_components();
-                false
-            }
-            Some(affected) => {
-                self.stats.incremental_solves += 1;
-                self.stats.flows_relevelled += affected.len() as u64;
-                self.solve_flow_set(&affected);
-                true
-            }
+        let _took_incremental_path = if self.collect_affected_flows() {
+            self.stats.incremental_solves += 1;
+            // Take the scratch-owned closure list so `solve_flow_set` can
+            // borrow self mutably; restored (capacity kept) afterwards.
+            let affected = std::mem::take(&mut self.scratch.affected_list);
+            self.stats.flows_relevelled += affected.len() as u64;
+            self.solve_flow_set(&affected);
+            self.scratch.affected_list = affected;
+            true
+        } else {
+            self.stats.full_solves += 1;
+            self.solve_all_components();
+            false
         };
 
         for &l in &self.dirty_links {
@@ -345,42 +378,47 @@ impl NetSim {
     }
 
     /// Flows whose rate may have changed: everything connected (through
-    /// shared links, transitively) to a dirty link. Returns the sorted
-    /// id list, or `None` as soon as the closure crosses the full-solve
+    /// shared links, transitively) to a dirty link. On success, leaves
+    /// the sorted id list in `scratch.affected_list` and returns `true`;
+    /// returns `false` as soon as the closure crosses the full-solve
     /// threshold (`affected/flows >= FULL_SOLVE_NUMER/FULL_SOLVE_DENOM`)
     /// — the caller then solves everything without finishing the BFS.
-    fn collect_affected_flows(&mut self) -> Option<Vec<FlowId>> {
+    /// Allocation-free after warm-up: membership marks are an epoch stamp
+    /// (links) and a capacity-retaining scratch set (flows).
+    fn collect_affected_flows(&mut self) -> bool {
         let total = self.flows.len();
         if total == 0 {
-            return None;
+            return false;
         }
+        let epoch = self.scratch.next_epoch(self.links.len());
         let s = &mut self.scratch;
-        s.link_visited.clear();
-        s.link_visited.resize(self.links.len(), false);
+        s.affected.clear();
+        s.affected_list.clear();
         s.link_stack.clear();
-        let mut affected: std::collections::BTreeSet<FlowId> = std::collections::BTreeSet::new();
         for &l in &self.dirty_links {
-            if !s.link_visited[l] {
-                s.link_visited[l] = true;
+            if s.link_epoch[l] != epoch {
+                s.link_epoch[l] = epoch;
                 s.link_stack.push(l);
             }
         }
         while let Some(l) = s.link_stack.pop() {
             for &fid in &self.flows_on_link[l] {
-                if affected.insert(fid) {
-                    if affected.len() * FULL_SOLVE_DENOM >= total * FULL_SOLVE_NUMER {
-                        return None;
+                if s.affected.insert(fid) {
+                    if s.affected.len() * FULL_SOLVE_DENOM >= total * FULL_SOLVE_NUMER {
+                        return false;
                     }
                     for &rl in &self.flows[&fid].route {
-                        if !s.link_visited[rl] {
-                            s.link_visited[rl] = true;
+                        if s.link_epoch[rl] != epoch {
+                            s.link_epoch[rl] = epoch;
                             s.link_stack.push(rl);
                         }
                     }
                 }
             }
         }
-        Some(affected.into_iter().collect())
+        s.affected_list.extend(s.affected.iter().copied());
+        s.affected_list.sort_unstable();
+        true
     }
 
     /// Re-level every component intersecting `flow_ids` (sorted). Flows
@@ -388,55 +426,59 @@ impl NetSim {
     fn solve_flow_set(&mut self, flow_ids: &[FlowId]) {
         // Partition the affected set into its connected components and
         // run the shared filler on each. `comp_seen` marks flows already
-        // assigned to an earlier component.
-        let mut comp_seen: Vec<bool> = vec![false; flow_ids.len()];
+        // assigned to an earlier component. Both worklists are scratch-
+        // owned (taken/restored around the `&mut self` calls).
+        let mut comp_seen = std::mem::take(&mut self.scratch.comp_seen);
+        comp_seen.clear();
+        comp_seen.resize(flow_ids.len(), false);
+        let mut comp = std::mem::take(&mut self.scratch.comp_buf);
         for start in 0..flow_ids.len() {
             if comp_seen[start] {
                 continue;
             }
-            let comp = self.component_of(flow_ids[start], flow_ids, &mut comp_seen);
+            comp.clear();
+            self.component_of(flow_ids[start], flow_ids, &mut comp_seen, &mut comp);
             self.fill_component(&comp);
         }
+        comp.clear();
+        self.scratch.comp_buf = comp;
+        self.scratch.comp_seen = comp_seen;
     }
 
     /// All components of the whole network, each solved independently.
     fn solve_all_components(&mut self) {
-        let ids: Vec<FlowId> = self.flows.keys().copied().collect();
-        let mut comp_seen: Vec<bool> = vec![false; ids.len()];
-        for start in 0..ids.len() {
-            if comp_seen[start] {
-                continue;
-            }
-            let comp = self.component_of(ids[start], &ids, &mut comp_seen);
-            self.fill_component(&comp);
-        }
+        let mut ids = std::mem::take(&mut self.scratch.all_ids);
+        ids.clear();
+        ids.extend(self.flows.keys().copied());
+        self.solve_flow_set(&ids);
+        ids.clear();
+        self.scratch.all_ids = ids;
     }
 
-    /// BFS one connected component from `seed`, marking members in
-    /// `comp_seen` (parallel to the sorted `universe` id list). Returns
-    /// the component's flow ids, sorted ascending — the canonical
-    /// snapshot order both solve paths share.
+    /// BFS one connected component from `seed` into `comp`, marking
+    /// members in `comp_seen` (parallel to the sorted `universe` id
+    /// list). `comp` ends sorted ascending — the canonical snapshot order
+    /// both solve paths share.
     fn component_of(
         &mut self,
         seed: FlowId,
         universe: &[FlowId],
         comp_seen: &mut [bool],
-    ) -> Vec<FlowId> {
+        comp: &mut Vec<FlowId>,
+    ) {
+        let epoch = self.scratch.next_epoch(self.links.len());
         let s = &mut self.scratch;
-        s.link_visited.clear();
-        s.link_visited.resize(self.links.len(), false);
         s.flow_stack.clear();
-        let mut comp: Vec<FlowId> = Vec::new();
         let seed_pos = universe.binary_search(&seed).expect("seed in universe");
         comp_seen[seed_pos] = true;
         s.flow_stack.push(seed);
         while let Some(fid) = s.flow_stack.pop() {
             comp.push(fid);
             for &l in &self.flows[&fid].route {
-                if s.link_visited[l] {
+                if s.link_epoch[l] == epoch {
                     continue;
                 }
-                s.link_visited[l] = true;
+                s.link_epoch[l] = epoch;
                 for &nfid in &self.flows_on_link[l] {
                     // Every flow on a component link is in the same
                     // component; on the incremental path the universe is
@@ -450,7 +492,6 @@ impl NetSim {
             }
         }
         comp.sort_unstable();
-        comp
     }
 
     /// Progressive filling over one connected component: repeatedly pull

@@ -96,6 +96,11 @@ pub struct Node {
     /// the multiplier in force at `t` is the last entry with start <= t
     /// (1.0 before the first entry). Models sysbench-style co-located load.
     pub interference: Vec<(f64, f64)>,
+    /// Externally driven capacity multiplier (the [`crate::dynamics`]
+    /// event path via `Engine::set_node_capacity`): composes
+    /// multiplicatively with the capacity model and the interference
+    /// schedule. 1.0 = no dynamics in force.
+    dynamic_mult: f64,
 }
 
 impl Node {
@@ -104,6 +109,7 @@ impl Node {
             name: name.to_string(),
             capacity: Capacity::Static { cores },
             interference: Vec::new(),
+            dynamic_mult: 1.0,
         }
     }
 
@@ -112,6 +118,7 @@ impl Node {
             name: name.to_string(),
             capacity: Capacity::Burstable(b),
             interference: Vec::new(),
+            dynamic_mult: 1.0,
         }
     }
 
@@ -134,6 +141,24 @@ impl Node {
         self.interference.iter().map(|(t, _)| *t).find(|&t| t > now)
     }
 
+    /// The externally driven capacity multiplier currently in force.
+    pub fn dynamic_mult(&self) -> f64 {
+        self.dynamic_mult
+    }
+
+    /// Set the external capacity multiplier (spot outages, Markov
+    /// throttling, diurnal interference — see [`crate::dynamics`]). Must
+    /// be positive: a true zero would deadlock the fluid engine (a job
+    /// with rate 0 and no other pending event can never finish); model
+    /// revocations with a small residual multiplier instead.
+    pub fn set_dynamic_mult(&mut self, mult: f64) {
+        assert!(
+            mult > 0.0 && mult.is_finite(),
+            "dynamic capacity multiplier must be positive and finite: {mult}"
+        );
+        self.dynamic_mult = mult;
+    }
+
     /// Cores available to work at time `now` given current credit state.
     pub fn available_cores(&self, now: f64) -> f64 {
         let base = match &self.capacity {
@@ -146,7 +171,7 @@ impl Node {
                 }
             }
         };
-        base * self.interference_mult(now)
+        base * self.interference_mult(now) * self.dynamic_mult
     }
 
     /// CPU occupancy (cores of wall-clock CPU time consumed) for a given
@@ -320,6 +345,23 @@ mod tests {
         assert_eq!(n.next_state_change(0.0, 0.4), None);
         n.advance(0.0, 100.0, 0.4);
         assert!((n.available_cores(100.0) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dynamic_mult_composes_with_model_and_interference() {
+        let mut n = Node::fixed("a", 1.0).with_interference(vec![(10.0, 0.5)]);
+        assert_eq!(n.dynamic_mult(), 1.0);
+        n.set_dynamic_mult(0.4);
+        assert!((n.available_cores(0.0) - 0.4).abs() < 1e-12);
+        assert!((n.available_cores(10.0) - 0.2).abs() < 1e-12);
+        n.set_dynamic_mult(1.0);
+        assert_eq!(n.available_cores(0.0), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be positive")]
+    fn zero_dynamic_mult_rejected() {
+        Node::fixed("a", 1.0).set_dynamic_mult(0.0);
     }
 
     #[test]

@@ -37,6 +37,16 @@ pub struct CpuJob {
     pub remaining: f64,
     pub tag: u64,
     rate: f64,
+    /// Rate generation: bumped every time this job's rate is reassigned,
+    /// so stale completion candidates in the heap are recognizable.
+    gen: u64,
+}
+
+impl CpuJob {
+    /// Current water-filled rate (cores); valid between engine steps.
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -64,14 +74,16 @@ impl Ord for Timer {
 }
 
 /// Indexed CPU-completion candidate: the absolute time job `id` finishes
-/// at its current rate. The heap is rebuilt whenever rates change (job
-/// set or node capacity — the `cpu_rates_dirty` machinery), so between
-/// rebuilds the head is the exact next completion without scanning jobs.
-/// Entries for cancelled jobs are dropped lazily at the head.
+/// at the rate of generation `gen`. Candidates are pushed whenever a
+/// node's rates are re-levelled (the per-node dirty-mark machinery);
+/// entries whose job is gone or whose generation is stale are dropped
+/// lazily at the head, so between re-levels the first *valid* entry is
+/// the exact next completion without scanning jobs.
 #[derive(Debug, Clone, Copy, PartialEq)]
 struct CpuCandidate {
     time: f64,
     id: JobId,
+    gen: u64,
 }
 
 impl Eq for CpuCandidate {}
@@ -84,7 +96,10 @@ impl PartialOrd for CpuCandidate {
 
 impl Ord for CpuCandidate {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.time.total_cmp(&other.time).then(self.id.cmp(&other.id))
+        self.time
+            .total_cmp(&other.time)
+            .then(self.id.cmp(&other.id))
+            .then(self.gen.cmp(&other.gen))
     }
 }
 
@@ -100,6 +115,15 @@ pub enum Event {
 }
 
 /// The simulation world: clock + network + nodes + CPU jobs + timers.
+///
+/// CPU rates are maintained *per node*, mirroring the netsim dirty-set
+/// pattern: a job-set change or a capacity change marks only its node
+/// dirty, and `recompute_cpu_rates` re-levels the water-fill of dirty
+/// nodes alone — every other node's rates, usage and completion
+/// candidates stay untouched (and provably valid: a node's water-fill
+/// depends only on its own capacity and its own jobs' caps). Debug builds
+/// cross-check every re-level against the from-scratch rebuild.
+#[derive(Clone)]
 pub struct Engine {
     pub now: f64,
     pub net: NetSim,
@@ -108,17 +132,23 @@ pub struct Engine {
     timers: BinaryHeap<Reverse<Timer>>,
     next_job: JobId,
     next_seq: u64,
-    /// CPU-rate cache invalidation: set when the job set changes; node
-    /// capacity changes are detected by comparing `capacity_cache`.
-    cpu_rates_dirty: bool,
+    /// Active job ids per node, ascending (the canonical water-fill
+    /// order, same as the old whole-engine rebuild used).
+    jobs_by_node: Vec<Vec<JobId>>,
+    /// Per-node dirty marks + worklist: nodes whose job set changed since
+    /// the last re-level. Capacity changes are detected against
+    /// `capacity_cache` and marked the same way.
+    node_dirty: Vec<bool>,
+    dirty_nodes: Vec<NodeId>,
     capacity_cache: Vec<f64>,
-    /// Min-heap of absolute job-completion candidates, valid between rate
-    /// recomputations (rebuilt alongside the rates).
+    /// Min-heap of absolute job-completion candidates; stale entries
+    /// (gone job or outdated generation) are dropped lazily at the head.
     cpu_heap: BinaryHeap<Reverse<CpuCandidate>>,
-    /// Per-node CPU usage (cores) at current rates, maintained
-    /// incrementally by `recompute_cpu_rates` instead of re-summed from
-    /// every job on every step.
+    /// Per-node CPU usage (cores) at current rates, maintained per dirty
+    /// node instead of re-summed from every job on every change.
     usage_cache: Vec<f64>,
+    /// Scratch for the per-node water-fill (avoids a per-call caps vec).
+    caps_scratch: Vec<f64>,
 }
 
 impl Engine {
@@ -132,10 +162,20 @@ impl Engine {
             timers: BinaryHeap::new(),
             next_job: 0,
             next_seq: 0,
-            cpu_rates_dirty: true,
+            jobs_by_node: vec![Vec::new(); num_nodes],
+            node_dirty: vec![false; num_nodes],
+            dirty_nodes: Vec::new(),
             capacity_cache: Vec::new(),
             cpu_heap: BinaryHeap::new(),
             usage_cache: vec![0.0; num_nodes],
+            caps_scratch: Vec::new(),
+        }
+    }
+
+    fn mark_node_dirty(&mut self, node: NodeId) {
+        if !self.node_dirty[node] {
+            self.node_dirty[node] = true;
+            self.dirty_nodes.push(node);
         }
     }
 
@@ -156,8 +196,10 @@ impl Engine {
         let id = self.next_job;
         self.next_job += 1;
         self.jobs
-            .insert(id, CpuJob { id, node, cap, remaining: work, tag, rate: 0.0 });
-        self.cpu_rates_dirty = true;
+            .insert(id, CpuJob { id, node, cap, remaining: work, tag, rate: 0.0, gen: 0 });
+        // Ids are handed out ascending, so pushing keeps the index sorted.
+        self.jobs_by_node[node].push(id);
+        self.mark_node_dirty(node);
         id
     }
 
@@ -184,11 +226,31 @@ impl Engine {
 
     /// Cancel a running CPU job (speculative-execution loser kill).
     pub fn cancel_cpu_job(&mut self, id: JobId) -> Option<CpuJob> {
-        let j = self.jobs.remove(&id);
-        if j.is_some() {
-            self.cpu_rates_dirty = true;
+        let j = self.jobs.remove(&id)?;
+        self.unindex_job(id, j.node);
+        Some(j)
+    }
+
+    /// Remove `id` from its node's job index and mark the node dirty
+    /// (its water-fill must be re-levelled).
+    fn unindex_job(&mut self, id: JobId, node: NodeId) {
+        let list = &mut self.jobs_by_node[node];
+        if let Some(pos) = list.iter().position(|&x| x == id) {
+            list.remove(pos);
         }
-        j
+        self.mark_node_dirty(node);
+    }
+
+    /// Apply an external capacity multiplier to a node (the
+    /// [`crate::dynamics`] event path: Markov throttling, spot outages,
+    /// diurnal interference). Takes effect at the next step's rate
+    /// re-level; only the touched node's water-fill is recomputed.
+    pub fn set_node_capacity(&mut self, node: NodeId, mult: f64) {
+        assert!(node < self.nodes.len(), "unknown node {node}");
+        if self.nodes[node].dynamic_mult() != mult {
+            self.nodes[node].set_dynamic_mult(mult);
+            self.mark_node_dirty(node);
+        }
     }
 
     /// Cancel a flow (speculative-execution loser kill).
@@ -200,55 +262,122 @@ impl Engine {
         self.jobs.len()
     }
 
-    /// Recompute CPU job rates if the job set or any node's capacity
-    /// changed since the last computation (the hot-path fast-out: steady
-    /// intervals between events skip the water-fill entirely). A real
-    /// recomputation also rebuilds the completion-candidate heap and the
-    /// per-node usage cache, which stay valid until the next change.
+    /// Re-level the water-fill of every *dirty* node: nodes whose job set
+    /// changed since the last call, plus nodes whose available capacity
+    /// moved (detected here against `capacity_cache` — burstable credit
+    /// transitions, interference boundaries, dynamics events). Clean
+    /// nodes are skipped entirely: their rates, usage-cache entry and
+    /// completion candidates are still exact, because a node's water-fill
+    /// depends only on its own capacity and its own jobs' caps. This is
+    /// the CPU-side analogue of the netsim dirty-link incremental solve,
+    /// and like it is cross-checked against the from-scratch rebuild in
+    /// debug builds.
     fn recompute_cpu_rates(&mut self) {
-        let changed = self.cpu_rates_dirty
-            || self.capacity_cache.len() != self.nodes.len()
-            || self
-                .nodes
-                .iter()
-                .zip(self.capacity_cache.iter())
-                .any(|(n, &c)| n.available_cores(self.now) != c);
-        if !changed {
+        // O(nodes) capacity scan — the steady-state fast path (no marks,
+        // no capacity movement) ends here without touching any job.
+        if self.capacity_cache.len() != self.nodes.len() {
+            // First call: NaN never compares equal, so every node below
+            // is marked and levelled.
+            self.capacity_cache.clear();
+            self.capacity_cache.resize(self.nodes.len(), f64::NAN);
+            self.usage_cache.resize(self.nodes.len(), 0.0);
+        }
+        for i in 0..self.nodes.len() {
+            let cap = self.nodes[i].available_cores(self.now);
+            if cap != self.capacity_cache[i] {
+                self.capacity_cache[i] = cap;
+                self.mark_node_dirty(i);
+            }
+        }
+        if self.dirty_nodes.is_empty() {
             return;
         }
-        self.cpu_rates_dirty = false;
-        self.capacity_cache.clear();
-        self.capacity_cache
-            .extend(self.nodes.iter().map(|n| n.available_cores(self.now)));
-        let mut per_node: BTreeMap<NodeId, Vec<JobId>> = BTreeMap::new();
-        for j in self.jobs.values() {
-            per_node.entry(j.node).or_default().push(j.id);
-        }
-        for (node, ids) in per_node {
+
+        let mut dirty = std::mem::take(&mut self.dirty_nodes);
+        dirty.sort_unstable();
+        for &node in &dirty {
+            self.node_dirty[node] = false;
             let capacity = self.capacity_cache[node];
+            self.caps_scratch.clear();
+            for id in &self.jobs_by_node[node] {
+                self.caps_scratch.push(self.jobs[id].cap);
+            }
+            let rates = water_fill(capacity, &self.caps_scratch);
+            let mut usage = 0.0;
+            for slot in 0..rates.len() {
+                let id = self.jobs_by_node[node][slot];
+                let (remaining, rate, gen) = {
+                    let j = self.jobs.get_mut(&id).unwrap();
+                    j.rate = rates[slot];
+                    j.gen = j.gen.wrapping_add(1);
+                    (j.remaining, j.rate, j.gen)
+                };
+                usage += rate;
+                if remaining <= 1e-9 {
+                    // Born-finished (sub-epsilon work): completes now.
+                    self.cpu_heap.push(Reverse(CpuCandidate { time: self.now, id, gen }));
+                } else if rate > 0.0 {
+                    self.cpu_heap.push(Reverse(CpuCandidate {
+                        time: self.now + remaining / rate,
+                        id,
+                        gen,
+                    }));
+                }
+                // rate == 0 with work left: no candidate — the job cannot
+                // finish until a rate change re-levels its node.
+            }
+            self.usage_cache[node] = usage;
+        }
+        dirty.clear();
+        self.dirty_nodes = dirty;
+
+        // Stale candidates shed only lazily at the head; compact when the
+        // backlog clearly dominates the live set. Pop order is a total
+        // order over (time, id, gen), so rebuilding from the retained
+        // multiset cannot change event order.
+        if self.cpu_heap.len() > 64 + 4 * self.jobs.len() {
+            let live: Vec<Reverse<CpuCandidate>> = self
+                .cpu_heap
+                .drain()
+                .filter(|Reverse(c)| {
+                    self.jobs.get(&c.id).map(|j| j.gen) == Some(c.gen)
+                })
+                .collect();
+            self.cpu_heap = BinaryHeap::from(live);
+        }
+
+        #[cfg(debug_assertions)]
+        self.assert_cpu_matches_full_rebuild();
+    }
+
+    /// Debug oracle (the netsim pattern): recompute every node's
+    /// water-fill from scratch and assert the incrementally maintained
+    /// rates and usage cache match to the last mantissa bit.
+    #[cfg(debug_assertions)]
+    fn assert_cpu_matches_full_rebuild(&self) {
+        let indexed: usize = self.jobs_by_node.iter().map(Vec::len).sum();
+        assert_eq!(indexed, self.jobs.len(), "job index out of sync");
+        for node in 0..self.nodes.len() {
+            let capacity = self.nodes[node].available_cores(self.now);
+            let ids = &self.jobs_by_node[node];
             let caps: Vec<f64> = ids.iter().map(|i| self.jobs[i].cap).collect();
             let rates = water_fill(capacity, &caps);
-            for (i, id) in ids.iter().enumerate() {
-                self.jobs.get_mut(id).unwrap().rate = rates[i];
+            let mut usage = 0.0;
+            for (slot, id) in ids.iter().enumerate() {
+                let stored = self.jobs[id].rate;
+                assert!(
+                    stored.to_bits() == rates[slot].to_bits(),
+                    "incremental water-fill diverged on node {node} job {id}: \
+                     {stored} (incremental) vs {} (full)",
+                    rates[slot]
+                );
+                usage += stored;
             }
-        }
-        self.usage_cache.clear();
-        self.usage_cache.resize(self.nodes.len(), 0.0);
-        self.cpu_heap.clear();
-        for j in self.jobs.values() {
-            self.usage_cache[j.node] += j.rate;
-            if j.remaining <= 1e-9 {
-                // Born-finished (sub-epsilon work): completes immediately.
-                self.cpu_heap
-                    .push(Reverse(CpuCandidate { time: self.now, id: j.id }));
-            } else if j.rate > 0.0 {
-                self.cpu_heap.push(Reverse(CpuCandidate {
-                    time: self.now + j.remaining / j.rate,
-                    id: j.id,
-                }));
-            }
-            // rate == 0 with work left: no candidate — the job cannot
-            // finish until a rate change rebuilds the heap.
+            assert!(
+                usage.to_bits() == self.usage_cache[node].to_bits(),
+                "usage cache diverged on node {node}: {} vs {usage}",
+                self.usage_cache[node]
+            );
         }
     }
 
@@ -295,13 +424,15 @@ impl Engine {
                 dt = dt.min(d);
             }
             // Earliest CPU completion from the indexed candidates (fresh
-            // after recompute); skim any lazily-invalidated head entries.
+            // after recompute); skim any lazily-invalidated head entries
+            // (cancelled jobs, or candidates from a superseded rate
+            // generation).
             loop {
                 let head = match self.cpu_heap.peek() {
-                    Some(Reverse(c)) => (c.time, c.id),
+                    Some(Reverse(c)) => (c.time, c.id, c.gen),
                     None => break,
                 };
-                if self.jobs.contains_key(&head.1) {
+                if self.jobs.get(&head.1).map(|j| j.gen) == Some(head.2) {
                     dt = dt.min(head.0 - self.now);
                     break;
                 }
@@ -355,16 +486,18 @@ impl Engine {
             return Some(Event::FlowDone { id, tag: f.tag });
         }
         // CPU jobs complete in candidate order (time, then id). Entries
-        // whose job was cancelled are dropped here; an unfinished head
-        // means no job is due (candidate times are consistent with the
-        // rates that produced the current `remaining` values).
+        // whose job was cancelled or re-levelled (stale generation) are
+        // dropped here; an unfinished valid head means no job is due
+        // (candidate times are consistent with the rates that produced
+        // the current `remaining` values).
         loop {
-            let head_id = match self.cpu_heap.peek() {
-                Some(Reverse(c)) => c.id,
+            let (head_id, head_gen) = match self.cpu_heap.peek() {
+                Some(Reverse(c)) => (c.id, c.gen),
                 None => break,
             };
             let finished = match self.jobs.get(&head_id) {
                 None => None, // cancelled — drop the stale entry below
+                Some(j) if j.gen != head_gen => None, // superseded rate
                 Some(j) => Some(j.remaining <= 1e-9),
             };
             match finished {
@@ -374,7 +507,7 @@ impl Engine {
                 Some(true) => {
                     self.cpu_heap.pop();
                     let j = self.jobs.remove(&head_id).unwrap();
-                    self.cpu_rates_dirty = true;
+                    self.unindex_job(head_id, j.node);
                     return Some(Event::JobDone { id: head_id, tag: j.tag });
                 }
                 Some(false) => break,
@@ -620,6 +753,145 @@ mod tests {
         let mut e = Engine::new(vec![Node::burstable("z", b)], NetSim::new());
         e.set_timer(1000.0, 1);
         while e.step().is_some() {}
+    }
+
+    #[test]
+    fn set_node_capacity_slows_job_mid_run() {
+        // 10 core-s at rate 1.0 until t=4 (6 left), then the node is
+        // throttled to 0.5: 12 more seconds -> done at t=16. Mirrors the
+        // interference-schedule test, but through the dynamics path.
+        let mut e = Engine::new(one_node(), NetSim::new());
+        e.add_cpu_job(0, 1.0, 10.0, 7);
+        e.set_timer(4.0, 99);
+        let ev = e.step().unwrap();
+        assert_eq!(ev, Event::Timer { tag: 99 });
+        e.set_node_capacity(0, 0.5);
+        let evs = e.run_to_end();
+        assert_eq!(evs.len(), 1);
+        assert!((evs[0].0 - 16.0).abs() < 1e-9, "got {}", evs[0].0);
+    }
+
+    #[test]
+    fn set_node_capacity_relevels_only_that_node() {
+        // Two nodes, one job each. Throttling node 1 must leave node 0's
+        // rate (and its completion candidate) untouched bit-for-bit.
+        let nodes = vec![Node::fixed("a", 1.0), Node::fixed("b", 1.0)];
+        let mut e = Engine::new(nodes, NetSim::new());
+        let a = e.add_cpu_job(0, 1.0, 100.0, 1);
+        let b = e.add_cpu_job(1, 1.0, 100.0, 2);
+        e.set_timer(1.0, 99);
+        e.step().unwrap(); // rates levelled, t=1
+        let rate_a = e.cpu_job(a).unwrap().rate().to_bits();
+        e.set_node_capacity(1, 0.25);
+        e.set_timer(2.0, 98);
+        e.step().unwrap();
+        assert_eq!(e.cpu_job(a).unwrap().rate().to_bits(), rate_a);
+        assert!((e.cpu_job(b).unwrap().rate() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn set_node_capacity_restores_and_finishes_exactly() {
+        // Throttle to 0.25 over [5, 10): work done = 5 + 1.25 + then full
+        // speed. 10 core-s total -> 3.75 left at t=10 -> done at 13.75.
+        let mut e = Engine::new(one_node(), NetSim::new());
+        e.add_cpu_job(0, 1.0, 10.0, 0);
+        e.set_timer(5.0, 1);
+        e.set_timer(10.0, 2);
+        assert_eq!(e.step().unwrap(), Event::Timer { tag: 1 });
+        e.set_node_capacity(0, 0.25);
+        assert_eq!(e.step().unwrap(), Event::Timer { tag: 2 });
+        e.set_node_capacity(0, 1.0);
+        let evs = e.run_to_end();
+        assert!((evs[0].0 - 13.75).abs() < 1e-9, "got {}", evs[0].0);
+    }
+
+    #[test]
+    fn capacity_churn_matches_shadow_water_fill() {
+        // Random interleaving of job arrivals, cancellations, capacity
+        // events and steps: after every mutation the engine's per-job
+        // rates must equal an independently computed from-scratch
+        // water-fill (the debug oracle also cross-checks internally on
+        // every re-level).
+        use crate::util::{prop, Rng};
+        prop::check("cpu-churn", 0xD1CE, 60, |rng: &mut Rng| {
+            let n_nodes = rng.range(1, 5);
+            let nodes: Vec<Node> = (0..n_nodes)
+                .map(|i| Node::fixed(&format!("n{i}"), rng.range_f64(0.2, 2.0)))
+                .collect();
+            let mut e = Engine::new(nodes, NetSim::new());
+            let mut live: Vec<JobId> = Vec::new();
+            for op in 0..40 {
+                match rng.below(4) {
+                    0 => {
+                        let node = rng.below(n_nodes);
+                        let id = e.add_cpu_job(
+                            node,
+                            rng.range_f64(0.1, 1.5),
+                            rng.range_f64(0.5, 20.0),
+                            op,
+                        );
+                        live.push(id);
+                    }
+                    1 if !live.is_empty() => {
+                        let id = live.remove(rng.below(live.len()));
+                        e.cancel_cpu_job(id);
+                    }
+                    2 => {
+                        e.set_node_capacity(rng.below(n_nodes), rng.range_f64(0.05, 1.0));
+                    }
+                    _ => {
+                        let horizon = e.now + rng.range_f64(0.01, 3.0);
+                        e.set_timer(horizon, 1_000_000 + op);
+                        while let Some(ev) = e.step() {
+                            match ev {
+                                Event::Timer { tag } if tag == 1_000_000 + op => break,
+                                Event::JobDone { id, .. } => live.retain(|&x| x != id),
+                                _ => {}
+                            }
+                        }
+                    }
+                }
+                // Shadow solve: per node, water-fill capacity over the
+                // live jobs' caps in ascending-id order. The epsilon
+                // timer forces a full step (hence a rate re-level) first;
+                // rates do not depend on `remaining`, so the tiny advance
+                // cannot skew the comparison.
+                e.set_timer(e.now + 1e-6, 2_000_000 + op);
+                while let Some(ev) = e.step() {
+                    match ev {
+                        Event::Timer { tag } if tag == 2_000_000 + op => break,
+                        Event::JobDone { id, .. } => live.retain(|&x| x != id),
+                        _ => {}
+                    }
+                }
+                let mut sorted = live.clone();
+                sorted.sort_unstable();
+                for node in 0..n_nodes {
+                    let ids: Vec<JobId> = sorted
+                        .iter()
+                        .copied()
+                        .filter(|&id| e.cpu_job(id).unwrap().node == node)
+                        .collect();
+                    let caps: Vec<f64> =
+                        ids.iter().map(|id| e.cpu_job(*id).unwrap().cap).collect();
+                    let expect = water_fill(e.nodes[node].available_cores(e.now), &caps);
+                    for (slot, id) in ids.iter().enumerate() {
+                        let got = e.cpu_job(*id).unwrap().rate();
+                        assert!(
+                            got.to_bits() == expect[slot].to_bits(),
+                            "node {node} job {id}: {got} vs {}",
+                            expect[slot]
+                        );
+                    }
+                }
+            }
+            // Drain cleanly: no livelock, no stranded jobs.
+            for &id in &live {
+                e.cancel_cpu_job(id);
+            }
+            assert_eq!(e.num_cpu_jobs(), 0);
+            assert!(e.step().is_none());
+        });
     }
 
     #[test]

@@ -20,14 +20,16 @@
 
 pub mod product;
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 pub use product::{Named, ProductSweepSpec};
 
 use crate::config::{ClusterConfig, PolicyConfig, WorkloadConfig, WorkloadKind};
 use crate::coordinator::driver::{Session, SimParams};
 use crate::coordinator::PartitionPolicy;
+use crate::dynamics::DynamicsConfig;
 use crate::estimator::SpeedEstimator;
 use crate::metrics::{Figure, Series};
 use crate::workloads;
@@ -67,13 +69,17 @@ pub enum Metric {
     JobTime,
 }
 
-/// A declarative grid cell: cluster × workload × policy, plus the trial
-/// plan. [`SweepSpec::scenario`] expands it into per-trial units.
+/// A declarative grid cell: cluster × workload × policy (× dynamics),
+/// plus the trial plan. [`SweepSpec::scenario`] expands it into
+/// per-trial units.
 #[derive(Debug, Clone)]
 pub struct Scenario {
     pub cluster: ClusterConfig,
     pub workload: WorkloadConfig,
     pub policy: PolicyConfig,
+    /// Time-varying capacity programs applied to the cluster's nodes
+    /// ([`DynamicsConfig::steady`] = the classic static scenario).
+    pub dynamics: DynamicsConfig,
     pub metric: Metric,
     pub trials: usize,
     pub base_seed: u64,
@@ -268,6 +274,73 @@ impl SweepRunner {
     }
 }
 
+// --------------------------------------------------------- session cache
+
+/// Cap on distinct `(cluster, seed)` entries; past it the cache resets
+/// (the keys are tiny but sessions hold a full engine each).
+const SESSION_CACHE_CAP: usize = 512;
+
+struct SessionCache {
+    /// `Arc` values so lookups clone a pointer under the lock and do the
+    /// deep `Session` clone *outside* it — workers sharing a key (the
+    /// dynamics arms, pooled bench iterations) never serialize behind a
+    /// full engine copy.
+    map: Mutex<HashMap<(String, u64), Arc<Session>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+fn session_cache() -> &'static SessionCache {
+    static CACHE: OnceLock<SessionCache> = OnceLock::new();
+    CACHE.get_or_init(|| SessionCache {
+        map: Mutex::new(HashMap::new()),
+        hits: AtomicU64::new(0),
+        misses: AtomicU64::new(0),
+    })
+}
+
+/// A pristine session for `(cluster, seed)` under default [`SimParams`]
+/// — cloned from a process-wide cache instead of rebuilt. A clone of a
+/// pristine build is field-wise identical to a fresh build (same RNG
+/// state, same link ids), so cached and uncached runs are bit-identical.
+/// The key is the cluster's canonical JSON (exact: the writer
+/// round-trips every f64) plus the seed.
+///
+/// Hits come from *repeated* `(cluster, seed)` uses in one process: the
+/// three policy arms of each `hemt dynamics` family, the 1/2/8-thread
+/// golden runs, bench iterations, and `kmeans_total_time`-style repeated
+/// figure probes. Ordinary product-sweep trials each carry a unique seed
+/// by design (their values are pinned by the seed ladder), so for them
+/// the cache is a small constant overhead (key string + one pristine
+/// clone), not a win — the wall-clock payoff is in the repeated-run
+/// paths above.
+pub fn cached_session(cluster: &ClusterConfig, seed: u64) -> Session {
+    let cache = session_cache();
+    let key = (cluster.to_json().pretty(), seed);
+    let hit = cache.map.lock().unwrap().get(&key).cloned();
+    if let Some(arc) = hit {
+        cache.hits.fetch_add(1, Ordering::Relaxed);
+        return (*arc).clone();
+    }
+    cache.misses.fetch_add(1, Ordering::Relaxed);
+    let arc = Arc::new(cluster.build_session(SimParams::default(), seed));
+    {
+        let mut map = cache.map.lock().unwrap();
+        if map.len() >= SESSION_CACHE_CAP {
+            map.clear();
+        }
+        map.insert(key, Arc::clone(&arc));
+    }
+    (*arc).clone()
+}
+
+/// `(hits, misses)` of the process-wide session cache, for benches and
+/// diagnostics.
+pub fn session_cache_stats() -> (u64, u64) {
+    let cache = session_cache();
+    (cache.hits.load(Ordering::Relaxed), cache.misses.load(Ordering::Relaxed))
+}
+
 // ------------------------------------------------------- scenario trials
 
 /// Resolve a policy description into a concrete partitioning for a
@@ -293,26 +366,29 @@ pub fn resolve_policy(
     }
 }
 
-/// Execute one trial of a [`Scenario`] at the given seed.
+/// Execute one trial of a [`Scenario`] at the given seed: a cached
+/// pristine session, the scenario's capacity dynamics installed (events
+/// compiled from the same trial seed), then the workload.
 pub fn run_scenario_trial(sc: &Scenario, seed: u64) -> f64 {
+    let mut s = cached_session(&sc.cluster, seed);
+    if !sc.dynamics.is_steady() {
+        let events = sc.dynamics.compile_events(s.engine.nodes.len(), seed);
+        s.install_dynamics(events);
+    }
     match sc.workload.kind {
-        WorkloadKind::WordCount => wordcount_trial(sc, seed),
-        WorkloadKind::KMeans => {
-            kmeans_total_time(&sc.cluster, &sc.workload, &sc.policy, seed)
-        }
-        WorkloadKind::PageRank => {
-            pagerank_total_time(&sc.cluster, &sc.workload, &sc.policy, seed)
-        }
+        WorkloadKind::WordCount => wordcount_trial_in(&mut s, sc),
+        WorkloadKind::KMeans => kmeans_in_session(&mut s, &sc.workload, &sc.policy),
+        WorkloadKind::PageRank => pagerank_in_session(&mut s, &sc.workload, &sc.policy),
     }
 }
 
-/// One WordCount job; reports the scenario's metric.
-fn wordcount_trial(sc: &Scenario, seed: u64) -> f64 {
-    let mut s = sc.cluster.build_session(SimParams::default(), seed);
+/// One WordCount job on an existing session; reports the scenario's
+/// metric.
+fn wordcount_trial_in(s: &mut Session, sc: &Scenario) -> f64 {
     let file = s
         .hdfs
         .upload(sc.workload.data_mb * MB, sc.workload.block_mb * MB, &mut s.rng);
-    let map = resolve_policy(&sc.policy, &s, None);
+    let map = resolve_policy(&sc.policy, s, None);
     let reduce = match (&map, sc.metric) {
         (PartitionPolicy::Hemt(w), _) => PartitionPolicy::Hemt(w.clone()),
         (_, Metric::MapStageTime) => PartitionPolicy::EvenTasks(s.executors.len()),
@@ -326,18 +402,12 @@ fn wordcount_trial(sc: &Scenario, seed: u64) -> f64 {
     }
 }
 
-/// One full K-Means run (`wl.iterations` iterations): the first iteration
-/// reads HDFS and fixes the cached partition; the rest compute on the
-/// cache. Returns the total time.
-pub fn kmeans_total_time(
-    cluster: &ClusterConfig,
-    wl: &WorkloadConfig,
-    policy: &PolicyConfig,
-    seed: u64,
-) -> f64 {
-    let mut s = cluster.build_session(SimParams::default(), seed);
+/// One full K-Means run on an existing session (`wl.iterations`
+/// iterations): the first iteration reads HDFS and fixes the cached
+/// partition; the rest compute on the cache. Returns the total time.
+fn kmeans_in_session(s: &mut Session, wl: &WorkloadConfig, policy: &PolicyConfig) -> f64 {
     let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
-    let map = resolve_policy(policy, &s, None);
+    let map = resolve_policy(policy, s, None);
     let start = s.engine.now;
     let first = s.run_job(&workloads::kmeans_first_job(file, map, wl.cpu_secs_per_mb));
     let parts = workloads::cached_partitions_of(&first.stages[0]);
@@ -347,17 +417,12 @@ pub fn kmeans_total_time(
     s.engine.now - start
 }
 
-/// One PageRank run: a single job with 1 + iterations shuffle-chained
-/// stages. Returns the job completion time.
-pub fn pagerank_total_time(
-    cluster: &ClusterConfig,
-    wl: &WorkloadConfig,
-    policy: &PolicyConfig,
-    seed: u64,
-) -> f64 {
-    let mut s = cluster.build_session(SimParams::default(), seed);
+/// One PageRank run on an existing session: a single job with
+/// 1 + iterations shuffle-chained stages. Returns the job completion
+/// time.
+fn pagerank_in_session(s: &mut Session, wl: &WorkloadConfig, policy: &PolicyConfig) -> f64 {
     let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
-    let pol = resolve_policy(policy, &s, None);
+    let pol = resolve_policy(policy, s, None);
     let rec = s.run_job(&workloads::pagerank_job(
         file,
         pol,
@@ -365,6 +430,30 @@ pub fn pagerank_total_time(
         wl.cpu_secs_per_mb,
     ));
     rec.completion_time()
+}
+
+/// One full K-Means run on a fresh (cached) session — the historic
+/// figure-driver entry point.
+pub fn kmeans_total_time(
+    cluster: &ClusterConfig,
+    wl: &WorkloadConfig,
+    policy: &PolicyConfig,
+    seed: u64,
+) -> f64 {
+    let mut s = cached_session(cluster, seed);
+    kmeans_in_session(&mut s, wl, policy)
+}
+
+/// One PageRank run on a fresh (cached) session — the historic
+/// figure-driver entry point.
+pub fn pagerank_total_time(
+    cluster: &ClusterConfig,
+    wl: &WorkloadConfig,
+    policy: &PolicyConfig,
+    seed: u64,
+) -> f64 {
+    let mut s = cached_session(cluster, seed);
+    pagerank_in_session(&mut s, wl, policy)
 }
 
 #[cfg(test)]
@@ -454,6 +543,7 @@ mod tests {
             cluster: ClusterConfig::containers_1_and_04(),
             workload: WorkloadConfig::wordcount_2gb(),
             policy: PolicyConfig::Homt(8),
+            dynamics: DynamicsConfig::steady(),
             metric: Metric::MapStageTime,
             trials: 2,
             base_seed: 108,
@@ -481,6 +571,59 @@ mod tests {
         assert_eq!(fig.series[0].points.len(), 2);
         assert_eq!(fig.series[0].points[0].label, "default");
         assert_eq!(fig.series[0].points[1].label, "hemt");
+    }
+
+    #[test]
+    fn cached_sessions_are_pristine_clones() {
+        // An unusual seed keeps this test's keys disjoint from any other
+        // concurrently running test; the second lookup must be a hit and
+        // the clone must carry the identical RNG stream.
+        let cluster = ClusterConfig::containers_1_and_04();
+        let seed = 0xCAC4E_u64;
+        let (_, miss0) = session_cache_stats();
+        let mut a = cached_session(&cluster, seed);
+        let (hit1, miss1) = session_cache_stats();
+        assert!(miss1 > miss0, "first lookup misses");
+        let mut b = cached_session(&cluster, seed);
+        let (hit2, _) = session_cache_stats();
+        assert!(hit2 > hit1, "second lookup hits");
+        assert_eq!(a.engine.now, 0.0);
+        assert_eq!(a.rng.next_u64(), b.rng.next_u64());
+        assert_eq!(a.capacity_hints(), b.capacity_hints());
+    }
+
+    #[test]
+    fn dynamic_scenario_differs_from_steady_and_is_deterministic() {
+        let mut sc = Scenario {
+            cluster: ClusterConfig::containers_1_and_04(),
+            workload: WorkloadConfig::wordcount_2gb(),
+            policy: PolicyConfig::Homt(8),
+            dynamics: DynamicsConfig::steady(),
+            metric: Metric::MapStageTime,
+            trials: 1,
+            base_seed: 5150,
+        };
+        let steady = run_scenario_trial(&sc, 5150);
+        // A deterministic early cliff: node 1 collapses to 0.1x at ~7.8 s,
+        // guaranteed to land inside the map stage.
+        sc.dynamics = DynamicsConfig {
+            programs: vec![
+                crate::dynamics::CapacityProgram::Steady,
+                crate::dynamics::CapacityProgram::CreditCliff {
+                    credits: 7.0,
+                    peak: 1.0,
+                    baseline: 0.1,
+                },
+            ],
+            horizon: 4000.0,
+        };
+        let dynamic_a = run_scenario_trial(&sc, 5150);
+        let dynamic_b = run_scenario_trial(&sc, 5150);
+        assert_eq!(dynamic_a.to_bits(), dynamic_b.to_bits(), "trials replay exactly");
+        assert!(
+            dynamic_a > steady,
+            "throttling must slow the stage: {steady} -> {dynamic_a}"
+        );
     }
 
     #[test]

@@ -1,23 +1,28 @@
-//! Whole-grid scenario *product* sweeps: clusters × workloads × policies
-//! × granularities in one declarative spec, à la the Tiny-Tasks
-//! granularity-regime studies (arXiv:2202.11464).
+//! Whole-grid scenario *product* sweeps: dynamics × clusters × workloads
+//! × policies × granularities in one declarative spec, à la the
+//! Tiny-Tasks granularity-regime studies (arXiv:2202.11464).
 //!
 //! A [`ProductSweepSpec`] names each axis value and expands the full
 //! cartesian product into an ordinary [`SweepSpec`] (one series per
-//! cluster × workload × policy, one point per granularity), which the
-//! existing [`SweepRunner`] executes with the same any-thread-count
-//! bit-identity guarantee every figure already has. Granularity maps onto
-//! the policy under test via [`PolicyConfig::with_granularity`]: HomT
-//! takes the granularity as its task count; granularity-insensitive
-//! policies (default, HeMT variants) are swept once, at the first
-//! granularity, instead of being duplicated along the axis.
+//! dynamics × cluster × workload × policy, one point per granularity),
+//! which the existing [`SweepRunner`] executes with the same
+//! any-thread-count bit-identity guarantee every figure already has.
+//! Granularity maps onto the policy under test via
+//! [`PolicyConfig::with_granularity`]: HomT takes the granularity as its
+//! task count; granularity-insensitive policies (default, HeMT variants)
+//! are swept once, at the first granularity, instead of being duplicated
+//! along the axis. The dynamics axis assigns a [`DynamicsConfig`]
+//! (time-varying capacity programs, [`crate::dynamics`]) per value; the
+//! canonical steady singleton reproduces the pre-dynamics grid exactly.
 //!
 //! Seeds are derived structurally from each cell's axis coordinates
-//! (`base_seed + ci·CLUSTER_STRIDE + wi·WORKLOAD_STRIDE + pi·POLICY_STRIDE
-//! + gi·CELL_SEED_STRIDE`), so extending any axis never reshuffles the
-//! seeds — hence the values — of the cells that already existed.
+//! (`base_seed + di·DYNAMICS_STRIDE + ci·CLUSTER_STRIDE +
+//! wi·WORKLOAD_STRIDE + pi·POLICY_STRIDE + gi·CELL_SEED_STRIDE`), so
+//! extending any axis never reshuffles the seeds — hence the values — of
+//! the cells that already existed.
 
 use crate::config::{ClusterConfig, PolicyConfig, WorkloadConfig};
+use crate::dynamics::DynamicsConfig;
 use crate::util::json::{self, Value};
 
 use super::{Metric, Scenario, SweepSpec};
@@ -32,6 +37,7 @@ pub const CELL_SEED_STRIDE: u64 = 1_000_000;
 pub const POLICY_SEED_STRIDE: u64 = 100 * CELL_SEED_STRIDE;
 pub const WORKLOAD_SEED_STRIDE: u64 = 100 * POLICY_SEED_STRIDE;
 pub const CLUSTER_SEED_STRIDE: u64 = 100 * WORKLOAD_SEED_STRIDE;
+pub const DYNAMICS_SEED_STRIDE: u64 = 100 * CLUSTER_SEED_STRIDE;
 
 impl PolicyConfig {
     /// Instantiate this policy at task-granularity `m` (the Tiny-Tasks
@@ -64,11 +70,16 @@ impl<T> Named<T> {
     }
 }
 
-/// The declarative whole-grid product: every combination of the four
+/// The declarative whole-grid product: every combination of the five
 /// axes becomes one trial-grid cell.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ProductSweepSpec {
     pub title: String,
+    /// Capacity-dynamics axis ([`DynamicsConfig`] per value). The
+    /// canonical "no dynamics" axis is a single entry named `steady`
+    /// (what every pre-dynamics product implicitly had); with exactly
+    /// that, series keep their historic `cluster/workload/policy` names.
+    pub dynamics: Vec<Named<DynamicsConfig>>,
     pub clusters: Vec<Named<ClusterConfig>>,
     pub workloads: Vec<Named<WorkloadConfig>>,
     pub policies: Vec<Named<PolicyConfig>>,
@@ -80,6 +91,17 @@ pub struct ProductSweepSpec {
 }
 
 impl ProductSweepSpec {
+    /// The canonical no-dynamics axis.
+    pub fn steady_axis() -> Vec<Named<DynamicsConfig>> {
+        vec![Named::new("steady", DynamicsConfig::steady())]
+    }
+
+    /// Whether the dynamics axis is exactly the canonical steady
+    /// singleton (series then keep their historic three-part names).
+    fn dynamics_axis_is_trivial(&self) -> bool {
+        self.dynamics.len() == 1 && self.dynamics[0].value.is_steady()
+    }
+
     /// Number of scenario cells the product expands to (granularity-
     /// insensitive policies count once, not per granularity).
     pub fn num_cells(&self) -> usize {
@@ -89,13 +111,16 @@ impl ProductSweepSpec {
             .iter()
             .map(|p| if p.value.granularity_sensitive() { g } else { 1 })
             .sum();
-        self.clusters.len() * self.workloads.len() * per_policy
+        self.dynamics.len() * self.clusters.len() * self.workloads.len() * per_policy
     }
 
     /// Expand the product into a flat [`SweepSpec`]: one series per
-    /// cluster × workload × policy (named `cluster/workload/policy`),
-    /// one point per granularity, `trials` units per point.
+    /// dynamics × cluster × workload × policy (named
+    /// `dynamics/cluster/workload/policy`, or the historic
+    /// `cluster/workload/policy` when the dynamics axis is the steady
+    /// singleton), one point per granularity, `trials` units per point.
     pub fn to_spec(&self) -> SweepSpec {
+        assert!(!self.dynamics.is_empty(), "product needs at least one dynamics value");
         assert!(!self.clusters.is_empty(), "product needs at least one cluster");
         assert!(!self.workloads.is_empty(), "product needs at least one workload");
         assert!(!self.policies.is_empty(), "product needs at least one policy");
@@ -104,6 +129,7 @@ impl ProductSweepSpec {
             "product needs at least one granularity"
         );
         for (axis, len) in [
+            ("dynamics", self.dynamics.len()),
             ("clusters", self.clusters.len()),
             ("workloads", self.workloads.len()),
             ("policies", self.policies.len()),
@@ -111,43 +137,54 @@ impl ProductSweepSpec {
         ] {
             assert!(len <= 100, "product axis '{axis}' exceeds 100 values ({len})");
         }
+        let trivial_dynamics = self.dynamics_axis_is_trivial();
         let mut spec = SweepSpec::new(&self.title, "granularity (tasks)", "time (s)");
-        for (ci, cl) in self.clusters.iter().enumerate() {
-            for (wi, wl) in self.workloads.iter().enumerate() {
-                for (pi, pol) in self.policies.iter().enumerate() {
-                    let series = spec
-                        .series(&format!("{}/{}/{}", cl.name, wl.name, pol.name));
-                    let sensitive = pol.value.granularity_sensitive();
-                    for (gi, &g) in self.granularities.iter().enumerate() {
-                        // Structural seed: a cell's seed depends only on
-                        // its own axis coordinates, never on which other
-                        // cells exist.
-                        let seed = self.base_seed
-                            + ci as u64 * CLUSTER_SEED_STRIDE
-                            + wi as u64 * WORKLOAD_SEED_STRIDE
-                            + pi as u64 * POLICY_SEED_STRIDE
-                            + gi as u64 * CELL_SEED_STRIDE;
-                        if gi > 0 && !sensitive {
-                            continue; // one point is enough — same policy
-                        }
-                        let label = if sensitive {
-                            String::new()
+        for (di, dy) in self.dynamics.iter().enumerate() {
+            for (ci, cl) in self.clusters.iter().enumerate() {
+                for (wi, wl) in self.workloads.iter().enumerate() {
+                    for (pi, pol) in self.policies.iter().enumerate() {
+                        let name = if trivial_dynamics {
+                            format!("{}/{}/{}", cl.name, wl.name, pol.name)
                         } else {
-                            format!("fixed ({})", pol.name)
+                            format!("{}/{}/{}/{}", dy.name, cl.name, wl.name, pol.name)
                         };
-                        spec.scenario(
-                            series,
-                            g as f64,
-                            &label,
-                            Scenario {
-                                cluster: cl.value.clone(),
-                                workload: wl.value.clone(),
-                                policy: pol.value.with_granularity(g),
-                                metric: self.metric,
-                                trials: self.trials,
-                                base_seed: seed,
-                            },
-                        );
+                        let series = spec.series(&name);
+                        let sensitive = pol.value.granularity_sensitive();
+                        for (gi, &g) in self.granularities.iter().enumerate() {
+                            // Structural seed: a cell's seed depends only
+                            // on its own axis coordinates, never on which
+                            // other cells exist — the steady value at
+                            // di=0 contributes nothing, so pre-dynamics
+                            // cells keep their historic seeds.
+                            let seed = self.base_seed
+                                + di as u64 * DYNAMICS_SEED_STRIDE
+                                + ci as u64 * CLUSTER_SEED_STRIDE
+                                + wi as u64 * WORKLOAD_SEED_STRIDE
+                                + pi as u64 * POLICY_SEED_STRIDE
+                                + gi as u64 * CELL_SEED_STRIDE;
+                            if gi > 0 && !sensitive {
+                                continue; // one point is enough — same policy
+                            }
+                            let label = if sensitive {
+                                String::new()
+                            } else {
+                                format!("fixed ({})", pol.name)
+                            };
+                            spec.scenario(
+                                series,
+                                g as f64,
+                                &label,
+                                Scenario {
+                                    cluster: cl.value.clone(),
+                                    workload: wl.value.clone(),
+                                    policy: pol.value.with_granularity(g),
+                                    dynamics: dy.value.clone(),
+                                    metric: self.metric,
+                                    trials: self.trials,
+                                    base_seed: seed,
+                                },
+                            );
+                        }
                     }
                 }
             }
@@ -162,6 +199,7 @@ impl ProductSweepSpec {
     pub fn tiny_tasks_regimes() -> ProductSweepSpec {
         ProductSweepSpec {
             title: "Product sweep: cluster x workload x policy x granularity".to_string(),
+            dynamics: Self::steady_axis(),
             clusters: vec![
                 Named::new("static", ClusterConfig::containers_1_and_04()),
                 Named::new("burstable", ClusterConfig::burstable_pair(600.0)),
@@ -182,9 +220,51 @@ impl ProductSweepSpec {
         }
     }
 
+    /// The dynamics-axis demo product: every capacity-program family
+    /// (plus the steady control) × the static-container pair ×
+    /// WordCount × HomT/HeMT × a granularity ladder — what
+    /// `hemt sweep --preset dynamics` runs.
+    pub fn dynamic_regimes() -> ProductSweepSpec {
+        ProductSweepSpec {
+            title: "Product sweep: dynamics x cluster x workload x policy x granularity"
+                .to_string(),
+            dynamics: vec![
+                Named::new("steady", DynamicsConfig::steady()),
+                Named::new("markov", DynamicsConfig::markov_throttle()),
+                Named::new("spot", DynamicsConfig::spot_replace()),
+                Named::new("diurnal", DynamicsConfig::diurnal()),
+                Named::new("credit_cliff", DynamicsConfig::credit_cliff()),
+            ],
+            clusters: vec![Named::new("static", ClusterConfig::containers_1_and_04())],
+            workloads: vec![Named::new("wordcount", WorkloadConfig::wordcount_2gb())],
+            policies: vec![
+                Named::new("homt", PolicyConfig::Homt(2)),
+                Named::new("hemt", PolicyConfig::HemtFromHints),
+            ],
+            granularities: vec![2, 8, 32],
+            metric: Metric::MapStageTime,
+            trials: 3,
+            base_seed: 30_000,
+        }
+    }
+
     pub fn to_json(&self) -> Value {
         json::obj(vec![
             ("title", json::s(&self.title)),
+            (
+                "dynamics",
+                json::arr(
+                    self.dynamics
+                        .iter()
+                        .map(|d| {
+                            json::obj(vec![
+                                ("name", json::s(&d.name)),
+                                ("dynamics", d.value.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             (
                 "clusters",
                 json::arr(
@@ -303,12 +383,20 @@ impl ProductSweepSpec {
             "job_time" => Metric::JobTime,
             other => return Err(format!("unknown metric '{other}'")),
         };
+        // The dynamics axis is optional (pre-dynamics configs): absent
+        // means the canonical steady singleton.
+        let dynamics = if v.get("dynamics").is_some() {
+            axis(v, "dynamics", "dynamics", DynamicsConfig::from_json)?
+        } else {
+            Self::steady_axis()
+        };
         Ok(ProductSweepSpec {
             title: v
                 .get("title")
                 .and_then(Value::as_str)
                 .unwrap_or("product sweep")
                 .to_string(),
+            dynamics,
             clusters: axis(v, "clusters", "cluster", ClusterConfig::from_json)?,
             workloads: axis(v, "workloads", "workload", WorkloadConfig::from_json)?,
             policies: axis(v, "policies", "policy", PolicyConfig::from_json)?,
@@ -341,6 +429,7 @@ mod tests {
         wl.block_mb = 128;
         ProductSweepSpec {
             title: "test product".to_string(),
+            dynamics: ProductSweepSpec::steady_axis(),
             clusters: vec![Named::new("static", ClusterConfig::containers_1_and_04())],
             workloads: vec![Named::new("wc", wl)],
             policies: vec![
@@ -441,10 +530,62 @@ mod tests {
 
     #[test]
     fn json_round_trips() {
-        let p = ProductSweepSpec::tiny_tasks_regimes();
-        let text = p.to_json().pretty();
-        let back = ProductSweepSpec::from_str(&text).unwrap();
-        assert_eq!(p, back);
+        for p in [
+            ProductSweepSpec::tiny_tasks_regimes(),
+            ProductSweepSpec::dynamic_regimes(),
+        ] {
+            let text = p.to_json().pretty();
+            let back = ProductSweepSpec::from_str(&text).unwrap();
+            assert_eq!(p, back);
+        }
+    }
+
+    #[test]
+    fn missing_dynamics_axis_defaults_to_steady() {
+        let mut v = ProductSweepSpec::tiny_tasks_regimes().to_json();
+        if let crate::util::json::Value::Obj(m) = &mut v {
+            m.remove("dynamics");
+        }
+        let back = ProductSweepSpec::from_json(&v).unwrap();
+        assert_eq!(back.dynamics, ProductSweepSpec::steady_axis());
+    }
+
+    #[test]
+    fn dynamics_axis_prefixes_series_and_scales_cells() {
+        use crate::dynamics::{CapacityProgram, DynamicsConfig};
+        let mut p = small_product();
+        assert_eq!(p.num_cells(), 3);
+        // Deterministic early cliff (node 1 to 0.1x at ~2.2 s) so the
+        // short test stages are guaranteed to feel it.
+        let cliff = DynamicsConfig {
+            programs: vec![
+                CapacityProgram::Steady,
+                CapacityProgram::CreditCliff { credits: 2.0, peak: 1.0, baseline: 0.1 },
+            ],
+            horizon: 1000.0,
+        };
+        p.dynamics = vec![
+            Named::new("steady", DynamicsConfig::steady()),
+            Named::new("cliff", cliff),
+        ];
+        assert_eq!(p.num_cells(), 6);
+        let spec = p.to_spec();
+        assert_eq!(spec.num_series(), 4);
+        let fig = SweepRunner::serial().run(&spec);
+        assert_eq!(fig.series[0].name, "steady/static/wc/homt");
+        assert_eq!(fig.series[2].name, "cliff/static/wc/homt");
+        // The steady half keeps the exact values of the dynamics-free
+        // product (di = 0 contributes no seed offset, steady installs no
+        // events).
+        let plain = SweepRunner::serial().run(&small_product().to_spec());
+        for (a, b) in fig.series[0].points.iter().zip(plain.series[0].points.iter()) {
+            assert_eq!(a.stats.mean.to_bits(), b.stats.mean.to_bits());
+        }
+        // The cliff family must actually move the numbers.
+        assert_ne!(
+            fig.series[2].points[0].stats.mean.to_bits(),
+            fig.series[0].points[0].stats.mean.to_bits()
+        );
     }
 
     #[test]

@@ -1,0 +1,192 @@
+//! Dynamics-subsystem integration tests: golden bit-identity of the
+//! `hemt dynamics` figure across sweep thread counts, and end-to-end
+//! properties of the incremental capacity path (the per-node dirty-mark
+//! water-fill is additionally cross-checked against the from-scratch
+//! rebuild inside the engine on every re-level in these debug builds).
+
+use hemt::dynamics::{
+    comparison_spec, CapacityProgram, DynamicsConfig, COMPARISON_BASE_SEED,
+    COMPARISON_FAMILIES,
+};
+use hemt::metrics::Figure;
+use hemt::sweep::{ProductSweepSpec, SweepRunner};
+
+fn figure_bits(fig: &Figure) -> Vec<(String, Vec<(u64, String, u64, u64, usize)>)> {
+    fig.series
+        .iter()
+        .map(|s| {
+            (
+                s.name.clone(),
+                s.points
+                    .iter()
+                    .map(|p| {
+                        (
+                            p.x.to_bits(),
+                            p.label.clone(),
+                            p.stats.mean.to_bits(),
+                            p.stats.std.to_bits(),
+                            p.stats.n,
+                        )
+                    })
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn dynamics_comparison_is_bit_identical_across_thread_counts() {
+    // The acceptance gate: the Adaptive-HeMT vs static-HeMT vs HomT
+    // comparison over the program families must not depend on how the
+    // sweep units are scheduled. 3 rounds keep the golden run fast while
+    // still spanning several capacity events per family.
+    let make = || comparison_spec(3, COMPARISON_BASE_SEED);
+    let baseline = figure_bits(&SweepRunner::new(1).run(&make()));
+    for threads in [2usize, 8] {
+        let fig = SweepRunner::new(threads).run(&make());
+        assert_eq!(figure_bits(&fig), baseline, "threads={threads}");
+    }
+    // Structural golden: three policy arms, one point per family, n =
+    // rounds, labels = family names.
+    let fig = SweepRunner::new(1).run(&make());
+    assert_eq!(fig.series.len(), 3);
+    for s in &fig.series {
+        assert_eq!(s.points.len(), COMPARISON_FAMILIES.len(), "{}", s.name);
+        for (fi, p) in s.points.iter().enumerate() {
+            assert_eq!(p.label, COMPARISON_FAMILIES[fi]);
+            assert_eq!(p.stats.n, 3);
+        }
+    }
+}
+
+#[test]
+fn dynamics_product_sweep_is_bit_identical_across_thread_counts() {
+    // A dynamics-heavy product grid through the generic runner: the
+    // same invariance must hold when capacity events ride inside
+    // ordinary scenario trials.
+    use hemt::config::{ClusterConfig, PolicyConfig, WorkloadConfig};
+    use hemt::sweep::{Metric, Named};
+    let make = || {
+        let mut wl = WorkloadConfig::wordcount_2gb();
+        wl.data_mb = 256;
+        wl.block_mb = 128;
+        ProductSweepSpec {
+            title: "golden dynamics product".to_string(),
+            dynamics: vec![
+                Named::new("steady", DynamicsConfig::steady()),
+                Named::new(
+                    "cliff",
+                    DynamicsConfig {
+                        programs: vec![
+                            CapacityProgram::Steady,
+                            CapacityProgram::CreditCliff {
+                                credits: 2.0,
+                                peak: 1.0,
+                                baseline: 0.1,
+                            },
+                        ],
+                        horizon: 1000.0,
+                    },
+                ),
+                Named::new("markov", DynamicsConfig::markov_throttle()),
+            ],
+            clusters: vec![Named::new("static", ClusterConfig::containers_1_and_04())],
+            workloads: vec![Named::new("wc", wl)],
+            policies: vec![
+                Named::new("homt", PolicyConfig::Homt(4)),
+                Named::new("hemt", PolicyConfig::HemtFromHints),
+            ],
+            granularities: vec![4, 16],
+            metric: Metric::MapStageTime,
+            trials: 2,
+            base_seed: 64_000,
+        }
+        .to_spec()
+    };
+    let baseline = figure_bits(&SweepRunner::new(1).run(&make()));
+    for threads in [2usize, 8] {
+        assert_eq!(
+            figure_bits(&SweepRunner::new(threads).run(&make())),
+            baseline,
+            "threads={threads}"
+        );
+    }
+}
+
+#[test]
+fn compiled_schedules_drive_sessions_identically_to_node_interference() {
+    // The same step trace expressed two ways — a dynamics event schedule
+    // vs the node's own interference schedule — must produce identical
+    // stage times: `set_node_capacity` is exactly an externally driven
+    // interference multiplier.
+    use hemt::coordinator::driver::{SessionBuilder, SimParams};
+    use hemt::coordinator::{JobPlan, PartitionPolicy, StageInput, StagePlan};
+    use hemt::nodes::Node;
+
+    let steps = [(20.0, 0.5), (60.0, 0.25), (90.0, 1.0)];
+    let mb = 1u64 << 20;
+    let params = SimParams {
+        sched_overhead: 0.0,
+        launch_latency: 0.0,
+        io_setup: 0.0,
+        ..Default::default()
+    };
+    let run = |use_dynamics: bool| -> f64 {
+        let node = if use_dynamics {
+            Node::fixed("n", 1.0)
+        } else {
+            Node::fixed("n", 1.0).with_interference(steps.to_vec())
+        };
+        let mut s = SessionBuilder {
+            nodes: vec![node],
+            exec_cpus: vec![1.0],
+            node_uplink_bps: 1e12,
+            node_downlink_bps: 1e12,
+            hdfs_datanodes: 1,
+            hdfs_replication: 1,
+            hdfs_uplink_bps: 1e12,
+            hdfs_serving_eta: 0.0,
+            params,
+            seed: 21,
+        }
+        .build();
+        let file = s.hdfs.upload(200 * mb, 200 * mb, &mut s.rng);
+        if use_dynamics {
+            s.install_dynamics(steps.iter().map(|&(t, m)| (t, 0, m)).collect());
+        }
+        let job = JobPlan {
+            name: "map".into(),
+            stages: vec![StagePlan {
+                input: StageInput::Hdfs { file },
+                policy: PartitionPolicy::EvenTasks(1),
+                cpu_secs_per_byte: 1.0 / mb as f64,
+                output_ratio: 0.0,
+            }],
+        };
+        s.run_job(&job).stages[0].completion_time()
+    };
+    let via_interference = run(false);
+    let via_dynamics = run(true);
+    assert!(
+        (via_interference - via_dynamics).abs() < 1e-6,
+        "{via_interference} vs {via_dynamics}"
+    );
+    // Sanity: the trace actually bit (200 core-s at full speed would be
+    // 200 s; the throttled run must take longer).
+    assert!(via_dynamics > 210.0, "trace had no effect: {via_dynamics}");
+}
+
+#[test]
+fn session_cache_reuse_matches_fresh_builds_under_dynamics() {
+    // Three consecutive runs of the same (family, arm) unit hit the
+    // session cache after the first; all must agree bit-for-bit.
+    let unit = || {
+        let fig = SweepRunner::new(1).run(&comparison_spec(2, COMPARISON_BASE_SEED));
+        figure_bits(&fig)
+    };
+    let a = unit();
+    let b = unit();
+    let c = unit();
+    assert_eq!(a, b);
+    assert_eq!(b, c);
+}

@@ -183,6 +183,7 @@ fn product_sweep_is_bit_identical_across_thread_counts() {
         wl.block_mb = 256;
         ProductSweepSpec {
             title: "golden product".to_string(),
+            dynamics: ProductSweepSpec::steady_axis(),
             clusters: vec![Named::new("static", ClusterConfig::containers_1_and_04())],
             workloads: vec![Named::new("wc", wl)],
             policies: vec![
