@@ -1,0 +1,46 @@
+//! Work-stealing comparison bench: the `hemt steal` four-arm figure
+//! (Steal-HeMT vs Adaptive-HeMT vs static-HeMT vs HomT across the
+//! capacity-program families) timed through the sweep runner, serial
+//! baseline vs the machine's full pool.
+//!
+//! Writes `BENCH_steal_sweep.json` (pooled) and
+//! `BENCH_steal_sweep_serial.json` for the CI trajectory gate. The
+//! steal arm exercises the whole new path — the engine split primitive,
+//! the capacity tap, and the stage-loop steal scans — so this bench is
+//! the end-to-end wall-clock trajectory of the stealing subsystem.
+
+use hemt::bench_harness::time_and_report;
+use hemt::dynamics::{steal_comparison_spec, COMPARISON_BASE_SEED, COMPARISON_FAMILIES};
+use hemt::sweep::{session_cache_stats, SweepRunner};
+
+const ROUNDS: usize = 8;
+
+fn main() {
+    println!(
+        "== steal_sweep: {} families x 4 policies x {ROUNDS} rounds ==",
+        COMPARISON_FAMILIES.len()
+    );
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let serial = time_and_report("steal_sweep_serial", 0, 3, || {
+        std::hint::black_box(
+            SweepRunner::new(1).run(&steal_comparison_spec(ROUNDS, COMPARISON_BASE_SEED)),
+        );
+    });
+    let mut last = None;
+    let pooled = time_and_report("steal_sweep", 0, 3, || {
+        last = Some(
+            SweepRunner::new(threads)
+                .run(&steal_comparison_spec(ROUNDS, COMPARISON_BASE_SEED)),
+        );
+    });
+    let (hits, misses) = session_cache_stats();
+    println!(
+        "steal_sweep_serial:    {} s\nsteal_sweep_pool({threads}): {} s  ({:.2}x)",
+        serial.pm(3),
+        pooled.pm(3),
+        serial.mean / pooled.mean
+    );
+    println!("session cache: {hits} hits / {misses} misses");
+    println!();
+    println!("{}", last.expect("pooled run happened").to_table());
+}

@@ -8,6 +8,7 @@
 //! (seeds). `ExperimentConfig::from_json` round-trips with `to_json`.
 
 use crate::coordinator::driver::{SessionBuilder, SimParams};
+use crate::coordinator::stealing::StealPolicy;
 use crate::nodes::{Burstable, Node};
 use crate::util::json::{self, Value};
 
@@ -381,6 +382,11 @@ pub enum PolicyConfig {
     HemtFromHints,
     /// OA-HeMT: adaptive weights with forgetting factor alpha.
     HemtAdaptive { alpha: f64 },
+    /// Steal-HeMT: capacity-hint weights plus mid-stage work stealing —
+    /// running tasks are split and their remainder re-homed on idle
+    /// executors per the [`StealPolicy`]
+    /// ([`crate::coordinator::stealing`]).
+    HemtSteal(StealPolicy),
 }
 
 impl PolicyConfig {
@@ -399,6 +405,10 @@ impl PolicyConfig {
             PolicyConfig::HemtAdaptive { alpha } => json::obj(vec![
                 ("kind", json::s("hemt_adaptive")),
                 ("alpha", json::num(*alpha)),
+            ]),
+            PolicyConfig::HemtSteal(pol) => json::obj(vec![
+                ("kind", json::s("hemt_steal")),
+                ("steal", pol.to_json()),
             ]),
         }
     }
@@ -421,6 +431,10 @@ impl PolicyConfig {
             "hemt_adaptive" => Ok(PolicyConfig::HemtAdaptive {
                 alpha: v.get("alpha").and_then(Value::as_f64).unwrap_or(0.0),
             }),
+            "hemt_steal" => Ok(PolicyConfig::HemtSteal(match v.get("steal") {
+                Some(s) => StealPolicy::from_json(s)?,
+                None => StealPolicy::default(),
+            })),
             other => Err(format!("unknown policy kind '{other}'")),
         }
     }
@@ -504,6 +518,26 @@ mod tests {
         c.cluster.interference[0] = vec![(10.0, 0.5), (20.0, 1.0)];
         let back = ExperimentConfig::from_str(&c.to_json().pretty()).unwrap();
         assert_eq!(c, back);
+    }
+
+    #[test]
+    fn steal_policy_config_roundtrips() {
+        let mut c = sample();
+        c.policy = PolicyConfig::HemtSteal(StealPolicy {
+            max_frac: 0.8,
+            min_split_work: 0.5,
+            threshold_secs: 2.0,
+            io_penalty: 0.25,
+            cooldown: 0.1,
+        });
+        let back = ExperimentConfig::from_str(&c.to_json().pretty()).unwrap();
+        assert_eq!(c, back);
+        // A bare kind takes the default policy.
+        let bare = json::obj(vec![("kind", json::s("hemt_steal"))]);
+        assert_eq!(
+            PolicyConfig::from_json(&bare).unwrap(),
+            PolicyConfig::HemtSteal(StealPolicy::default())
+        );
     }
 
     #[test]

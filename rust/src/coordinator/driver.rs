@@ -19,6 +19,7 @@
 //!   per-executor outputs and the (possibly skewed) bucket fractions.
 
 use crate::cluster::{launch_one_executor_per_agent, AgentSpec, ClusterManager, Executor};
+use crate::coordinator::stealing::StealPolicy;
 use crate::coordinator::{plan_tasks, JobPlan, StageInput, StageTasks};
 use crate::hdfs::HdfsCluster;
 use crate::metrics::{JobRecord, StageRecord, TaskRecord};
@@ -221,6 +222,7 @@ const KIND_FLOW: u64 = 2 << 56;
 const KIND_CPU: u64 = 3 << 56;
 const KIND_SPEC_CHECK: u64 = 4 << 56;
 const KIND_CAPACITY: u64 = 5 << 56;
+const KIND_STEAL_CHECK: u64 = 6 << 56;
 const KIND_MASK: u64 = 0xFF << 56;
 // Attempt index (0 = primary, 1 = speculative copy) in bit 48.
 const ATT_SHIFT: u64 = 48;
@@ -270,6 +272,20 @@ struct TaskState {
     /// Task-intrinsic difficulty multiplier (Sec. 5.1's "same size,
     /// different time"): shared by both attempts.
     work_noise: f64,
+    /// `Some(core_secs)`: this task was carved off a running victim
+    /// mid-stage ([`Session::run_job_stealing`]). It has no input of its
+    /// own — the victim already read the bytes — and runs exactly this
+    /// much CPU work.
+    stolen_work: Option<f64>,
+    /// The task's currently assigned CPU work (core-seconds): set at
+    /// launch, reduced by every carve stolen from it. The denominator
+    /// for byte attribution on a steal — the thief is credited with the
+    /// bytes whose processing it actually takes over, not with a share
+    /// of the shrinking remainder.
+    assigned_work: f64,
+    /// Extra setup seconds before launch (the steal policy's re-home
+    /// I/O penalty; 0 for ordinary tasks).
+    extra_setup: f64,
     /// Executor of the *winning* attempt (for records/caching/shuffle).
     executor: usize,
     dispatched: f64,
@@ -355,6 +371,24 @@ impl Session {
 
     /// Execute a job to completion and return its record.
     pub fn run_job(&mut self, plan: &JobPlan) -> JobRecord {
+        self.run_job_stealing(plan, None)
+    }
+
+    /// Execute a job with mid-stage work stealing: on capacity events
+    /// (via the engine's capacity tap), on executors going idle, and on
+    /// input streams draining, the policy may split a running task's
+    /// remaining CPU work and re-home the carve on an idle executor —
+    /// see [`crate::coordinator::stealing`]. `None` is exactly
+    /// [`Session::run_job`].
+    pub fn run_job_stealing(
+        &mut self,
+        plan: &JobPlan,
+        steal: Option<&StealPolicy>,
+    ) -> JobRecord {
+        if let Some(pol) = steal {
+            pol.assert_valid();
+            self.engine.set_capacity_tap(true);
+        }
         let job_start = self.engine.now;
         let mut stages = Vec::new();
         // Per-executor output bytes of the previous stage (shuffle input).
@@ -362,7 +396,7 @@ impl Session {
         for stage in &plan.stages {
             let prev_total: u64 = prev_exec_output.iter().sum();
             let tasks = plan_tasks(stage, self.executors.len(), prev_total);
-            let record = self.run_stage(stage, &tasks, &prev_exec_output);
+            let record = self.run_stage(stage, &tasks, &prev_exec_output, steal);
             // Outputs for the next stage's shuffle.
             let mut out = vec![0u64; self.executors.len()];
             for t in &record.tasks {
@@ -370,6 +404,9 @@ impl Session {
             }
             prev_exec_output = out;
             stages.push(record);
+        }
+        if steal.is_some() {
+            self.engine.set_capacity_tap(false);
         }
         JobRecord { stages, start: job_start, end: self.engine.now }
     }
@@ -394,6 +431,7 @@ impl Session {
         stage: &crate::coordinator::StagePlan,
         tasks: &StageTasks,
         prev_exec_output: &[u64],
+        steal: Option<&StealPolicy>,
     ) -> StageRecord {
         let stage_start = self.engine.now;
         let n = tasks.bytes.len();
@@ -411,6 +449,9 @@ impl Session {
                 } else {
                     1.0
                 },
+                stolen_work: None,
+                assigned_work: 0.0,
+                extra_setup: 0.0,
                 executor: usize::MAX,
                 dispatched: 0.0,
                 started: 0.0,
@@ -421,6 +462,13 @@ impl Session {
         let mut driver_free = self.engine.now;
         let mut done = 0usize;
         let mut completed_durations: Vec<f64> = Vec::new();
+        let mut last_steal = f64::NEG_INFINITY;
+        let mut steal_recheck_pending = false;
+        if steal.is_some() {
+            // Capacity events from before this stage are not steal
+            // signals; start the tap window fresh.
+            let _ = self.engine.take_capacity_events();
+        }
 
         // Initial dispatch round.
         self.try_dispatch(stage, &mut st, &mut free_slots, &mut driver_free);
@@ -430,12 +478,15 @@ impl Session {
                 .set_timer(self.engine.now + spec.check_interval, KIND_SPEC_CHECK);
         }
 
-        while done < n {
+        // `st.len()` rather than `n`: steals append carved tasks
+        // mid-stage, and the barrier holds until those finish too.
+        while done < st.len() {
             let ev = self
                 .engine
                 .step()
                 .expect("engine drained with tasks outstanding");
             let mut completed: Option<usize> = None;
+            let mut steal_check = false;
             match ev {
                 Event::Timer { tag } if tag & KIND_MASK == KIND_LAUNCH => {
                     let (_, att, i) = untag(tag);
@@ -450,6 +501,11 @@ impl Session {
                         if st[i].phase == TaskPhase::Done {
                             completed = Some(i);
                         }
+                        // A task just started running: it is now a
+                        // potential victim, and an executor left without
+                        // work by the stage's own layout (fewer tasks
+                        // than slots) may already be idle.
+                        steal_check = true;
                     }
                 }
                 Event::FlowDone { id, tag } if tag & KIND_MASK == KIND_FLOW => {
@@ -483,6 +539,10 @@ impl Session {
                         }
                         continue;
                     }
+                    // The attempt's input stream just drained: its
+                    // remainder is now pure CPU, so it may have become a
+                    // steal victim.
+                    steal_check = true;
                     if Self::complete_part(&mut st[i], att, self.engine.now) {
                         completed = Some(i);
                     }
@@ -498,15 +558,16 @@ impl Session {
                     }
                 }
                 Event::Timer { tag } if tag & KIND_MASK == KIND_SPEC_CHECK => {
+                    let live = st.len();
                     self.try_speculate(
                         stage,
                         &mut st,
                         &mut free_slots,
                         &mut driver_free,
                         &completed_durations,
-                        n,
+                        live,
                     );
-                    if done < n {
+                    if done < st.len() {
                         let spec = self.params.speculation.expect("check implies policy");
                         self.engine
                             .set_timer(self.engine.now + spec.check_interval, KIND_SPEC_CHECK);
@@ -519,6 +580,14 @@ impl Session {
                     let idx = untag(tag).2;
                     self.apply_capacity_event(idx);
                 }
+                Event::Timer { tag } if tag & KIND_MASK == KIND_STEAL_CHECK => {
+                    // Deferred steal re-check: a wake landed inside the
+                    // cooldown window and was parked on this timer
+                    // instead of being dropped. (A stale timer from a
+                    // previous stage is a harmless no-op re-scan.)
+                    steal_recheck_pending = false;
+                    steal_check = true;
+                }
                 other => panic!("unexpected event in stage: {other:?}"),
             }
 
@@ -527,14 +596,41 @@ impl Session {
                 completed_durations.push(st[i].finished - st[i].started);
                 self.finish_task(&mut st[i], &mut free_slots);
                 self.try_dispatch(stage, &mut st, &mut free_slots, &mut driver_free);
+                let live = st.len();
                 self.try_speculate(
                     stage,
                     &mut st,
                     &mut free_slots,
                     &mut driver_free,
                     &completed_durations,
-                    n,
+                    live,
                 );
+            }
+
+            if let Some(pol) = steal {
+                // Steal wake signals: a task completed (an executor may
+                // now be idle), the engine capacity tap fired (spot
+                // revocation, throttle, upgrade — mid-stage), an input
+                // stream drained (a new pure-CPU victim), or a task
+                // launched (layout-idle executors). A wake landing
+                // inside the cooldown window is parked on a deferred
+                // re-check timer, never dropped.
+                let capacity_fired = !self.engine.take_capacity_events().is_empty();
+                if completed.is_some() || capacity_fired || steal_check {
+                    let blocked = self.try_steal(
+                        stage,
+                        &mut st,
+                        &mut free_slots,
+                        &mut driver_free,
+                        pol,
+                        &mut last_steal,
+                    );
+                    if blocked && !steal_recheck_pending {
+                        self.engine
+                            .set_timer(last_steal + pol.cooldown, KIND_STEAL_CHECK);
+                        steal_recheck_pending = true;
+                    }
+                }
             }
         }
 
@@ -609,7 +705,7 @@ impl Session {
                 st[i].phase = TaskPhase::Dispatched;
                 st[i].dispatched = self.engine.now;
                 st[i].attempts[0] = Some(Attempt { executor: exec, ..Default::default() });
-                self.schedule_launch(stage, driver_free, 0, i);
+                self.schedule_launch(stage, driver_free, 0, i, &st[i]);
                 dispatched_any = true;
             }
             if !dispatched_any {
@@ -652,7 +748,7 @@ impl Session {
             let Some(exec) = target else { return };
             free_slots[exec] -= 1;
             st[i].attempts[1] = Some(Attempt { executor: exec, ..Default::default() });
-            self.schedule_launch(stage, driver_free, 1, i);
+            self.schedule_launch(stage, driver_free, 1, i, &st[i]);
         }
     }
 
@@ -663,13 +759,163 @@ impl Session {
         driver_free: &mut f64,
         att: usize,
         i: usize,
+        task: &TaskState,
     ) {
         *driver_free = driver_free.max(self.engine.now) + self.params.sched_overhead;
         let mut start_at = *driver_free + self.params.launch_latency;
-        if matches!(stage.input, StageInput::Hdfs { .. }) {
+        if task.stolen_work.is_some() {
+            // A stolen task reads no input of its own; it pays the steal
+            // policy's re-home penalty instead of the HDFS setup.
+            start_at += task.extra_setup;
+        } else if matches!(stage.input, StageInput::Hdfs { .. }) {
             start_at += self.params.io_setup;
         }
         self.engine.set_timer(start_at, tag_of(KIND_LAUNCH, att, i));
+    }
+
+    /// The executor's effective CPU rate were it running one task alone
+    /// right now: its CFS cap against its node's currently available
+    /// cores. This is the steal projections' rate estimate — exact in
+    /// the one-macrotask-per-executor regime stealing targets, and
+    /// optimistic (hence steal-averse, the safe direction) when tasks
+    /// share a node.
+    fn effective_rate(&self, exec: usize) -> f64 {
+        let node = self.executors[exec].node;
+        self.executors[exec]
+            .cpu_limit
+            .min(self.engine.nodes[node].available_cores(self.engine.now))
+    }
+
+    /// Mid-stage work stealing (see [`crate::coordinator::stealing`]):
+    /// while an executor is idle — a free slot and nothing pending it
+    /// could run — pick the most-behind running task whose remainder is
+    /// pure CPU, split its engine job under the policy (conserving work
+    /// exactly), and dispatch the carve as a new task bound to the
+    /// thief. Entirely deterministic: thieves are scanned in executor
+    /// order, victims tried in descending projected-tail order (index
+    /// tie-break), and every quantity derives from engine state.
+    ///
+    /// Returns `true` when the cooldown window blocked a scan — the
+    /// caller parks the wake on a deferred re-check timer so the signal
+    /// is never dropped.
+    fn try_steal(
+        &mut self,
+        stage: &crate::coordinator::StagePlan,
+        st: &mut Vec<TaskState>,
+        free_slots: &mut [usize],
+        driver_free: &mut f64,
+        pol: &StealPolicy,
+        last_steal: &mut f64,
+    ) -> bool {
+        'steals: loop {
+            // Epsilon-slack comparison: the deferred re-check timer
+            // fires at exactly `last_steal + cooldown`, and fp must not
+            // push that instant back inside the window.
+            if self.engine.now + 1e-9 < *last_steal + pol.cooldown {
+                return true;
+            }
+            // Every idle executor — a free slot and nothing pending it
+            // could run — gets a chance: a thief whose rate makes the
+            // carve infeasible (or unprofitable) must not mask a
+            // healthier idle executor behind it.
+            for thief in 0..self.executors.len() {
+                let idle = free_slots[thief] > 0
+                    && !st.iter().any(|t| {
+                        t.phase == TaskPhase::Pending
+                            && match t.bound_to {
+                                Some(b) => b == thief,
+                                None => true,
+                            }
+                    });
+                if !idle {
+                    continue;
+                }
+                let thief_rate = self.effective_rate(thief);
+                // Victims: every running, single-attempt, input-drained
+                // task (not on the thief) past the tail threshold, tried
+                // most-behind first — one extreme victim too small to
+                // split must not mask a splittable straggler behind it.
+                let mut victims: Vec<(f64, usize, crate::sim::JobId, f64, f64)> = Vec::new();
+                for (i, t) in st.iter().enumerate() {
+                    if t.phase != TaskPhase::Running || t.running_attempts() != 1 {
+                        continue;
+                    }
+                    let Some(a) = t.attempts[0].as_ref() else { continue };
+                    if !a.launched
+                        || a.executor == thief
+                        || !a.flow_ids.is_empty()
+                        || !a.pending_pieces.is_empty()
+                    {
+                        continue;
+                    }
+                    let Some(jid) = a.job_id else { continue };
+                    let Some(job) = self.engine.cpu_job(jid) else { continue };
+                    let remaining = job.remaining;
+                    let victim_rate = self.effective_rate(a.executor);
+                    let tail = if victim_rate > 0.0 {
+                        remaining / victim_rate
+                    } else {
+                        f64::INFINITY
+                    };
+                    if tail > pol.threshold_secs {
+                        victims.push((tail, i, jid, remaining, victim_rate));
+                    }
+                }
+                victims.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+                for &(_, vi, jid, remaining, victim_rate) in &victims {
+                    let Some((keep, stolen)) = pol.carve(remaining, victim_rate, thief_rate)
+                    else {
+                        continue;
+                    };
+                    if !pol.profitable(remaining, victim_rate, stolen, thief_rate) {
+                        continue;
+                    }
+                    let carved =
+                        self.engine.split_cpu_job(jid, keep).expect("victim job is live");
+                    debug_assert!(
+                        carved.to_bits() == stolen.to_bits(),
+                        "engine carve must match the policy's: {carved} vs {stolen}"
+                    );
+                    // Bytes ride along in proportion to the carved share
+                    // of the task's *assigned* work — not of the
+                    // shrinking remainder — so the thief is credited
+                    // only with the bytes whose processing it actually
+                    // takes over (estimator observations and downstream
+                    // shuffle volumes stay honest; the u64 move is
+                    // exactly conserved).
+                    let assigned = st[vi].assigned_work.max(carved);
+                    let bytes_stolen =
+                        ((st[vi].bytes as f64) * (carved / assigned).min(1.0)).round() as u64;
+                    let bytes_stolen = bytes_stolen.min(st[vi].bytes);
+                    st[vi].bytes -= bytes_stolen;
+                    st[vi].assigned_work = (st[vi].assigned_work - carved).max(0.0);
+                    st.push(TaskState {
+                        bytes: bytes_stolen,
+                        bound_to: Some(thief),
+                        range: None,
+                        phase: TaskPhase::Pending,
+                        attempts: [None, None],
+                        work_noise: 1.0,
+                        stolen_work: Some(carved),
+                        assigned_work: carved,
+                        extra_setup: pol.io_penalty,
+                        executor: usize::MAX,
+                        dispatched: 0.0,
+                        started: 0.0,
+                        finished: 0.0,
+                    });
+                    *last_steal = self.engine.now;
+                    self.try_dispatch(stage, st, free_slots, driver_free);
+                    // With this thief now busy another executor may
+                    // still be idle: rescan from the top (cooldown
+                    // permitting). Every successful steal consumes a
+                    // slot, so this terminates.
+                    continue 'steals;
+                }
+            }
+            // No idle executor could steal anything.
+            return false;
+        }
     }
 
     /// Launch an attempt's flows and CPU work.
@@ -692,8 +938,10 @@ impl Session {
         let mut pending_pieces = Vec::new();
         let mut job_id = None;
 
-        // Input flows.
+        // Input flows. A stolen task has none: the victim already read
+        // its bytes, and the re-home cost was paid as launch setup.
         match &stage.input {
+            _ if st[i].stolen_work.is_some() => {}
             StageInput::Hdfs { file } => {
                 let (off, len) = st[i].range.expect("hdfs task has a range");
                 if len > 0 {
@@ -745,8 +993,16 @@ impl Session {
             StageInput::Cached { .. } => {}
         }
 
-        // CPU work (task-intrinsic noise applies to every attempt alike).
-        let work = st[i].bytes as f64 * stage.cpu_secs_per_byte * st[i].work_noise;
+        // CPU work (task-intrinsic noise applies to every attempt
+        // alike). A stolen task's work is exactly the carve — the
+        // victim's noise is already baked into the split remainder.
+        let work = match st[i].stolen_work {
+            Some(w) => w,
+            None => st[i].bytes as f64 * stage.cpu_secs_per_byte * st[i].work_noise,
+        };
+        if att == 0 {
+            st[i].assigned_work = work;
+        }
         if work > 0.0 {
             let node = self.executors[exec].node;
             let cap = self.executors[exec].cpu_limit;
@@ -1167,6 +1423,172 @@ mod tests {
         // Engine fully drained: no leaked flows or jobs from losers.
         assert_eq!(s.engine.num_cpu_jobs(), 0);
         assert_eq!(s.engine.net.num_flows(), 0);
+    }
+
+    /// A single-stage cached-input job (no network): `partitions` are
+    /// `(mb, executor)` pairs at `CPB` compute intensity.
+    fn cached_job(partitions: Vec<(u64, usize)>) -> JobPlan {
+        JobPlan {
+            name: "cached".into(),
+            stages: vec![StagePlan {
+                input: StageInput::Cached {
+                    partitions: partitions.into_iter().map(|(mb, e)| (mb * MB, e)).collect(),
+                },
+                policy: PartitionPolicy::EvenTasks(1), // ignored for cached
+                cpu_secs_per_byte: CPB,
+                output_ratio: 0.0,
+            }],
+        }
+    }
+
+    fn steal_policy(threshold_secs: f64, io_penalty: f64) -> StealPolicy {
+        StealPolicy {
+            max_frac: 0.95,
+            min_split_work: 0.25,
+            threshold_secs,
+            io_penalty,
+            cooldown: 0.0,
+        }
+    }
+
+    #[test]
+    fn idle_executor_steals_from_most_behind_node() {
+        // Misweighted 50/50 split on a 1.0 : 0.4 pair: the fast executor
+        // finishes at t=50 and steals most of the slow node's remainder
+        // (rate-proportional), pulling the stage from ~125 s to ~72 s.
+        let (mut s, _file) = fast_slow_session(zero_overheads());
+        let job = cached_job(vec![(50, 0), (50, 1)]);
+        let rec = s.run_job_stealing(&job, Some(&steal_policy(4.0, 0.5)));
+        let t = rec.stages[0].completion_time();
+        assert!(t < 80.0, "steal must rescue the stranded half: {t}");
+        assert!(t > 65.0, "the carve still has to be computed somewhere: {t}");
+        let stage = &rec.stages[0];
+        assert!(stage.tasks.len() >= 3, "a stolen task must appear in the record");
+        // Byte conservation across the split.
+        let total: u64 = stage.tasks.iter().map(|t| t.bytes).sum();
+        assert_eq!(total, 100 * MB);
+        assert_eq!(s.engine.num_cpu_jobs(), 0);
+        assert_eq!(s.engine.net.num_flows(), 0);
+        // Without stealing the same job is slow-node-bound (~125 s).
+        let (mut s2, _f2) = fast_slow_session(zero_overheads());
+        let plain = s2.run_job(&cached_job(vec![(50, 0), (50, 1)]));
+        assert!(plain.stages[0].completion_time() > 120.0);
+    }
+
+    #[test]
+    fn capacity_event_triggers_steal_onto_idle_executor() {
+        // Equal nodes; executor 0's tiny task frees it at t=2, but the
+        // 100 s victim is healthy against the high threshold — no steal.
+        // The spot revocation at t=10 (via the capacity tap) makes the
+        // victim's tail ~800 s and the idle executor takes ~95% of it.
+        let mut s = SessionBuilder::two_node(
+            Node::fixed("a", 1.0),
+            1.0,
+            Node::fixed("b", 1.0),
+            1.0,
+        )
+        .with_params(zero_overheads())
+        .with_hdfs_uplink_bps(1e12)
+        .build();
+        s.install_dynamics(vec![(10.0, 1, 0.05)]);
+        let job = cached_job(vec![(2, 0), (50, 1)]);
+        let rec = s.run_job_stealing(&job, Some(&steal_policy(100.0, 0.0)));
+        let t = rec.stages[0].completion_time();
+        // keep = 0.05 * 40 = 2 core-s at 0.05 -> victim ends at ~50;
+        // thief runs the 38 core-s carve from t=10 -> ~48.
+        assert!((45.0..60.0).contains(&t), "steal-on-capacity-event: {t}");
+        // The no-steal run strands 40 core-s on a 0.05x node: ~810 s.
+        let mut s2 = SessionBuilder::two_node(
+            Node::fixed("a", 1.0),
+            1.0,
+            Node::fixed("b", 1.0),
+            1.0,
+        )
+        .with_params(zero_overheads())
+        .with_hdfs_uplink_bps(1e12)
+        .build();
+        s2.install_dynamics(vec![(10.0, 1, 0.05)]);
+        let plain = s2.run_job(&cached_job(vec![(2, 0), (50, 1)]));
+        assert!(plain.stages[0].completion_time() > 700.0);
+    }
+
+    #[test]
+    fn cooldown_parks_wakes_on_deferred_recheck_instead_of_dropping() {
+        // max_frac 0.1 keeps each carve small, so the thief idles again
+        // well inside the 20 s cooldown window; without the deferred
+        // re-check timer that wake would be dropped and no second steal
+        // could ever fire (the victim's own completion is the only
+        // later engine event). With parking, stealing resumes at
+        // exactly t=25: steal #1 at t=5, steal #2 at t=25, stage ends
+        // at 43.45 instead of the single-steal 45.5.
+        let mut s = SessionBuilder::two_node(
+            Node::fixed("a", 1.0),
+            1.0,
+            Node::fixed("b", 1.0),
+            1.0,
+        )
+        .with_params(zero_overheads())
+        .with_hdfs_uplink_bps(1e12)
+        .build();
+        let pol = StealPolicy {
+            max_frac: 0.1,
+            min_split_work: 0.25,
+            threshold_secs: 4.0,
+            io_penalty: 0.0,
+            cooldown: 20.0,
+        };
+        let rec = s.run_job_stealing(&cached_job(vec![(5, 0), (50, 1)]), Some(&pol));
+        let stage = &rec.stages[0];
+        assert_eq!(stage.tasks.len(), 4, "the parked wake must yield a second steal");
+        let t = stage.completion_time();
+        assert!((42.0..45.0).contains(&t), "got {t}");
+    }
+
+    #[test]
+    fn layout_idle_executor_steals_without_any_event() {
+        // A single cached macrotask on the slow executor leaves executor
+        // 0 idle from t=0, with no completion or capacity event ever
+        // firing: the launch wake must still trigger the steal.
+        let (mut s, _f) = fast_slow_session(zero_overheads());
+        let rec = s.run_job_stealing(&cached_job(vec![(50, 1)]), Some(&steal_policy(4.0, 0.0)));
+        let t = rec.stages[0].completion_time();
+        // Unstolen: 50 core-s at 0.4 -> 125 s. Stolen at launch, the
+        // rate-proportional carve lets both finish together at ~36 s.
+        assert!(t < 60.0, "launch-wake steal must fire: {t}");
+        assert_eq!(rec.stages[0].tasks.len(), 2);
+        let total: u64 = rec.stages[0].tasks.iter().map(|t| t.bytes).sum();
+        assert_eq!(total, 50 * MB);
+    }
+
+    #[test]
+    fn balanced_stage_never_steals_and_matches_plain_run() {
+        // A properly weighted HeMT split finishes together: no task ever
+        // shows a tail past the threshold, so the stealing run must be
+        // byte-for-byte the plain schedule.
+        let (mut s, file) = fast_slow_session(zero_overheads());
+        let job = map_only_job(file, PartitionPolicy::Hemt(vec![1.0, 0.4]), CPB);
+        let rec = s.run_job_stealing(&job, Some(&steal_policy(4.0, 0.5)));
+        let (mut s2, file2) = fast_slow_session(zero_overheads());
+        let job2 = map_only_job(file2, PartitionPolicy::Hemt(vec![1.0, 0.4]), CPB);
+        let plain = s2.run_job(&job2);
+        assert_eq!(rec.stages[0].tasks.len(), plain.stages[0].tasks.len());
+        assert_eq!(
+            rec.stages[0].completion_time().to_bits(),
+            plain.stages[0].completion_time().to_bits(),
+            "no-steal run must be bit-identical to run_job"
+        );
+    }
+
+    #[test]
+    fn stealing_runs_are_deterministic() {
+        let run = || {
+            let (mut s, _f) = fast_slow_session(zero_overheads());
+            s.install_dynamics(vec![(5.0, 1, 0.1), (40.0, 1, 1.0)]);
+            let pol = steal_policy(2.0, 0.25);
+            let rec = s.run_job_stealing(&cached_job(vec![(30, 0), (30, 1)]), Some(&pol));
+            rec.stages[0].completion_time()
+        };
+        assert_eq!(run().to_bits(), run().to_bits());
     }
 
     #[test]

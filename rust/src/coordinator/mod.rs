@@ -20,6 +20,7 @@
 
 pub mod adaptive;
 pub mod driver;
+pub mod stealing;
 
 use crate::hdfs::HdfsFile;
 use crate::partition::{Partitioning, SkewedHashPartitioner};

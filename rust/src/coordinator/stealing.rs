@@ -1,0 +1,311 @@
+//! Mid-stage work stealing: split a *running* macrotask's remaining
+//! work and re-home the carve on an idle (or freshly upgraded) executor.
+//!
+//! HomT's one structural advantage over HeMT is automatic pull-based
+//! balancing: when a node degrades mid-stage, its small tasks simply
+//! stop being pulled. A macrotask, once bound, strands its whole
+//! remainder on the degraded node — PR 3's Adaptive-HeMT only
+//! re-partitions *between* rounds. This module closes that gap at
+//! runtime:
+//!
+//! * [`StealPolicy`] — the declarative knobs: how much of a victim's
+//!   remainder one steal may carve (rate-proportional, capped), the
+//!   min-split floor both halves must respect, the projected-tail
+//!   threshold that makes a task a victim, the per-split I/O penalty the
+//!   stolen task pays (the data was read by the victim — re-homing it is
+//!   not free), and a steal cooldown;
+//! * the split primitive itself lives in the engine
+//!   ([`crate::sim::Engine::split_cpu_job`]): work is conserved exactly
+//!   and only the victim's node is re-levelled;
+//! * [`Session::run_job_stealing`](crate::coordinator::driver::Session::run_job_stealing)
+//!   evaluates the policy inside the stage loop, waking on task
+//!   completions (idle-node detection), on drained engine capacity-tap
+//!   events (steal-on-capacity-event — spot revocation, throttling,
+//!   upgrades), and on input streams finishing (a task becomes
+//!   stealable only once its remainder is pure CPU);
+//! * [`StealingDriver`] — the closed-loop comparison arm: the OA-HeMT
+//!   between-rounds estimator loop of
+//!   [`AdaptiveDriver`](crate::coordinator::adaptive::AdaptiveDriver)
+//!   *plus* mid-stage stealing, what `hemt steal` runs as Steal-HeMT.
+
+use crate::coordinator::adaptive::AdaptiveDriver;
+use crate::coordinator::driver::Session;
+use crate::coordinator::{JobPlan, PartitionPolicy};
+use crate::metrics::JobRecord;
+use crate::util::json::{self, Value};
+
+/// Declarative mid-stage work-stealing policy. All quantities are in
+/// the fluid model's units: work in core-seconds, times in seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StealPolicy {
+    /// Ceiling on the fraction of a victim's remaining work one steal
+    /// may carve. The carve itself is rate-proportional — the thief
+    /// takes `thief_rate / (thief_rate + victim_rate)` of the remainder,
+    /// so both sides project to finish together — and this cap keeps a
+    /// fully revoked victim (rate ~0) from being emptied below the
+    /// min-split floor in one bite.
+    pub max_frac: f64,
+    /// Neither side of a split may fall below this many core-seconds
+    /// (the granularity floor: past it, per-split overhead dominates —
+    /// the Tiny-Tasks regime the paper argues against).
+    pub min_split_work: f64,
+    /// Steal only from victims whose projected remaining time (at their
+    /// current effective rate) exceeds this many seconds.
+    pub threshold_secs: f64,
+    /// Extra setup seconds the stolen task pays before starting (the
+    /// re-read / transfer cost of re-homing data the victim already
+    /// holds).
+    pub io_penalty: f64,
+    /// Minimum simulated seconds between consecutive steals within one
+    /// stage (thrash guard).
+    pub cooldown: f64,
+}
+
+impl Default for StealPolicy {
+    fn default() -> StealPolicy {
+        StealPolicy {
+            max_frac: 0.95,
+            min_split_work: 0.25,
+            threshold_secs: 4.0,
+            io_penalty: 0.5,
+            cooldown: 1.0,
+        }
+    }
+}
+
+impl StealPolicy {
+    /// Panic on physically meaningless knob values (checked once when a
+    /// stealing run starts, so a bad JSON config fails loudly).
+    pub fn assert_valid(&self) {
+        assert!(
+            self.max_frac > 0.0 && self.max_frac < 1.0,
+            "max_frac must be in (0,1): {}",
+            self.max_frac
+        );
+        assert!(
+            self.min_split_work > 0.0 && self.min_split_work.is_finite(),
+            "min_split_work must be positive: {}",
+            self.min_split_work
+        );
+        assert!(
+            self.threshold_secs >= 0.0 && self.threshold_secs.is_finite(),
+            "threshold_secs must be non-negative: {}",
+            self.threshold_secs
+        );
+        assert!(
+            self.io_penalty >= 0.0 && self.io_penalty.is_finite(),
+            "io_penalty must be non-negative: {}",
+            self.io_penalty
+        );
+        assert!(
+            self.cooldown >= 0.0 && self.cooldown.is_finite(),
+            "cooldown must be non-negative: {}",
+            self.cooldown
+        );
+    }
+
+    /// Split `remaining` core-seconds between the victim (`keep`) and
+    /// the thief (`stolen`), rate-proportionally: the thief takes (up to
+    /// `max_frac` of) the share its effective rate earns, so both sides
+    /// project to finish together. The min-split floor is enforced
+    /// *exactly*: `keep` is clamped up to `min_split_work` when the
+    /// proportional share would undercut it, and the carve is refused
+    /// (`None`) when the stolen side cannot reach the floor. Work is
+    /// conserved by construction (`stolen` is computed once as
+    /// `remaining - keep`, and the engine keeps exactly `keep`).
+    pub fn carve(&self, remaining: f64, victim_rate: f64, thief_rate: f64) -> Option<(f64, f64)> {
+        if remaining.is_nan() || remaining <= 0.0 {
+            return None;
+        }
+        let total = victim_rate.max(0.0) + thief_rate.max(0.0);
+        let frac = if total > 0.0 {
+            (thief_rate.max(0.0) / total).min(self.max_frac)
+        } else {
+            self.max_frac
+        };
+        if frac <= 0.0 {
+            return None; // a rate-0 thief earns nothing
+        }
+        let mut keep = remaining * (1.0 - frac);
+        if keep < self.min_split_work {
+            keep = self.min_split_work;
+        }
+        if keep >= remaining {
+            return None; // nothing left to carve above the floor
+        }
+        let stolen = remaining - keep;
+        if stolen < self.min_split_work {
+            return None;
+        }
+        Some((keep, stolen))
+    }
+
+    /// Whether re-homing `stolen` work onto a thief running at
+    /// `thief_rate` (paying the split's I/O penalty) projects to finish
+    /// before the victim would have finished the *whole* remainder at
+    /// its own rate — the profitability guard that keeps healthy stages
+    /// from thrashing.
+    pub fn profitable(&self, remaining: f64, victim_rate: f64, stolen: f64, thief_rate: f64) -> bool {
+        if thief_rate <= 0.0 {
+            return false;
+        }
+        let victim_alone = if victim_rate > 0.0 { remaining / victim_rate } else { f64::INFINITY };
+        stolen / thief_rate + self.io_penalty < victim_alone
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("max_frac", json::num(self.max_frac)),
+            ("min_split_work", json::num(self.min_split_work)),
+            ("threshold_secs", json::num(self.threshold_secs)),
+            ("io_penalty", json::num(self.io_penalty)),
+            ("cooldown", json::num(self.cooldown)),
+        ])
+    }
+
+    /// Parse from JSON; absent fields take the default policy's values,
+    /// so configs only name the knobs they tune.
+    pub fn from_json(v: &Value) -> Result<StealPolicy, String> {
+        let d = StealPolicy::default();
+        let f = |k: &str, dflt: f64| -> Result<f64, String> {
+            match v.get(k) {
+                None => Ok(dflt),
+                Some(x) => x.as_f64().ok_or_else(|| format!("steal.{k} must be a number")),
+            }
+        };
+        Ok(StealPolicy {
+            max_frac: f("max_frac", d.max_frac)?,
+            min_split_work: f("min_split_work", d.min_split_work)?,
+            threshold_secs: f("threshold_secs", d.threshold_secs)?,
+            io_penalty: f("io_penalty", d.io_penalty)?,
+            cooldown: f("cooldown", d.cooldown)?,
+        })
+    }
+}
+
+/// Steal-HeMT: the closed-loop OA estimator across rounds *plus*
+/// mid-stage work stealing within each round — the fully reactive stack
+/// the dynamics comparison pits against Adaptive-HeMT (between-rounds
+/// adaptation only), static HeMT and HomT.
+#[derive(Debug, Clone)]
+pub struct StealingDriver {
+    pub inner: AdaptiveDriver,
+    pub policy: StealPolicy,
+}
+
+impl StealingDriver {
+    pub fn new(alpha: f64, policy: StealPolicy) -> StealingDriver {
+        policy.assert_valid();
+        StealingDriver { inner: AdaptiveDriver::new(alpha), policy }
+    }
+
+    pub fn with_hint_bootstrap(mut self) -> StealingDriver {
+        self.inner = self.inner.with_hint_bootstrap();
+        self
+    }
+
+    /// The partition policy for the next round (the inner OA loop's
+    /// current weights).
+    pub fn policy_for(&self, session: &Session) -> PartitionPolicy {
+        self.inner.policy(session)
+    }
+
+    /// Run one closed-loop round with stealing enabled: build the plan
+    /// from the current estimates, execute it (splitting/stealing
+    /// mid-stage per the policy), fold the finished map stage back into
+    /// the estimator, and return the record.
+    pub fn run_round(
+        &mut self,
+        session: &mut Session,
+        plan_of: impl FnOnce(PartitionPolicy) -> JobPlan,
+    ) -> JobRecord {
+        let plan = plan_of(self.policy_for(session));
+        let rec = session.run_job_stealing(&plan, Some(&self.policy));
+        crate::coordinator::adaptive::observe_map_stage(
+            &mut self.inner.estimator,
+            &rec,
+            session.executors.len(),
+        );
+        rec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn carve_is_rate_proportional_and_capped() {
+        let pol = StealPolicy { max_frac: 0.9, min_split_work: 0.1, ..Default::default() };
+        // Equal rates: a half/half split.
+        let (keep, stolen) = pol.carve(10.0, 1.0, 1.0).unwrap();
+        assert!((keep - 5.0).abs() < 1e-12);
+        assert!((stolen - 5.0).abs() < 1e-12);
+        // Starved victim: the thief's share hits the cap, not 100%.
+        let (keep, stolen) = pol.carve(10.0, 0.0, 1.0).unwrap();
+        assert!((keep - 1.0).abs() < 1e-12, "keep = (1 - max_frac) * remaining: {keep}");
+        assert!((stolen - 9.0).abs() < 1e-12);
+        // Work conserved by construction.
+        assert_eq!((keep + stolen).to_bits(), (keep + (10.0 - keep)).to_bits());
+    }
+
+    #[test]
+    fn carve_enforces_min_split_floor_exactly() {
+        let pol = StealPolicy { max_frac: 0.95, min_split_work: 1.0, ..Default::default() };
+        // Proportional keep (0.05 * 3.0 = 0.15) would undercut the floor:
+        // clamped to exactly min_split_work.
+        let (keep, stolen) = pol.carve(3.0, 0.0, 1.0).unwrap();
+        assert_eq!(keep.to_bits(), 1.0f64.to_bits());
+        assert!((stolen - 2.0).abs() < 1e-12);
+        // Too small to split at all: both halves cannot reach the floor.
+        assert!(pol.carve(1.5, 0.0, 1.0).is_none());
+        assert!(pol.carve(0.5, 0.0, 1.0).is_none());
+    }
+
+    #[test]
+    fn carve_refuses_zero_rate_thief_and_zero_remainder() {
+        let pol = StealPolicy::default();
+        assert!(pol.carve(10.0, 1.0, 0.0).is_none());
+        assert!(pol.carve(0.0, 0.0, 1.0).is_none());
+        assert!(pol.carve(-1.0, 0.0, 1.0).is_none());
+    }
+
+    #[test]
+    fn profitability_guards_healthy_victims() {
+        let pol = StealPolicy { io_penalty: 0.5, ..Default::default() };
+        // Victim crawling at 0.05: any re-home wins.
+        assert!(pol.profitable(5.0, 0.05, 4.0, 1.0));
+        // Healthy victim: moving half the work and paying the penalty
+        // loses to just letting it finish.
+        assert!(!pol.profitable(2.0, 1.0, 1.8, 1.0));
+        // Dead thief never profits.
+        assert!(!pol.profitable(5.0, 0.05, 4.0, 0.0));
+    }
+
+    #[test]
+    fn json_round_trips_and_defaults_fill_gaps() {
+        let pol = StealPolicy {
+            max_frac: 0.8,
+            min_split_work: 0.5,
+            threshold_secs: 2.0,
+            io_penalty: 0.1,
+            cooldown: 0.25,
+        };
+        let back = StealPolicy::from_json(&pol.to_json()).unwrap();
+        assert_eq!(pol, back);
+        // Partial JSON: unnamed knobs take the defaults.
+        let partial = json::obj(vec![("io_penalty", json::num(0.0))]);
+        let got = StealPolicy::from_json(&partial).unwrap();
+        assert_eq!(got.io_penalty, 0.0);
+        assert_eq!(got.max_frac, StealPolicy::default().max_frac);
+        // Bad field type is an error, not a silent default.
+        let bad = json::obj(vec![("cooldown", json::s("soon"))]);
+        assert!(StealPolicy::from_json(&bad).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "max_frac must be in (0,1)")]
+    fn invalid_policy_fails_loudly() {
+        StealPolicy { max_frac: 1.5, ..Default::default() }.assert_valid();
+    }
+}

@@ -28,6 +28,7 @@
 
 use crate::config::{ClusterConfig, WorkloadConfig, WorkloadKind};
 use crate::coordinator::adaptive::AdaptiveDriver;
+use crate::coordinator::stealing::{StealPolicy, StealingDriver};
 use crate::coordinator::PartitionPolicy;
 use crate::estimator::credits::CreditCurve;
 use crate::sweep::{cached_session, Sample, SweepSpec, MB};
@@ -459,9 +460,21 @@ enum Arm {
     Adaptive,
     StaticHints,
     Homt,
+    /// Steal-HeMT: the OA loop *plus* mid-stage work stealing
+    /// ([`crate::coordinator::stealing`]).
+    Steal,
 }
 
 const ARMS: [(Arm, &str); 3] = [
+    (Arm::Adaptive, "Adaptive-HeMT (OA loop)"),
+    (Arm::StaticHints, "static HeMT (launch hints)"),
+    (Arm::Homt, "HomT (8 even tasks)"),
+];
+
+/// The `hemt steal` / `dyn_steal` arm set: the three historic policies
+/// plus Steal-HeMT, every arm of a family sharing one seed/trace.
+const STEAL_ARMS: [(Arm, &str); 4] = [
+    (Arm::Steal, "Steal-HeMT (split + steal)"),
     (Arm::Adaptive, "Adaptive-HeMT (OA loop)"),
     (Arm::StaticHints, "static HeMT (launch hints)"),
     (Arm::Homt, "HomT (8 even tasks)"),
@@ -497,12 +510,16 @@ fn run_family_arm(family: &str, arm: Arm, rounds: usize, seed: u64) -> Vec<f64> 
     let events = cfg.compile_events(s.engine.nodes.len(), seed);
     s.install_dynamics(events);
     let mut drv = AdaptiveDriver::new(0.25).with_hint_bootstrap();
+    let mut steal_drv = StealingDriver::new(0.25, StealPolicy::default()).with_hint_bootstrap();
     let mut out = Vec::with_capacity(rounds);
     for _ in 0..rounds {
         let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
         let cpb = wl.cpu_secs_per_mb;
         let rec = match arm {
             Arm::Adaptive => drv.run_round(&mut s, |pol| {
+                workloads::wordcount_job(file, pol.clone(), pol, cpb)
+            }),
+            Arm::Steal => steal_drv.run_round(&mut s, |pol| {
                 workloads::wordcount_job(file, pol.clone(), pol, cpb)
             }),
             Arm::StaticHints => {
@@ -550,6 +567,58 @@ pub fn comparison_spec(rounds: usize, base_seed: u64) -> SweepSpec {
         }
     }
     spec
+}
+
+/// The `hemt steal` figure (`dyn_steal`): Steal-HeMT (mid-stage
+/// split + steal, [`crate::coordinator::stealing`]) vs Adaptive-HeMT vs
+/// static HeMT vs HomT per capacity-program family. Same shape and
+/// guarantees as [`comparison_spec`] — all four arms of a family share
+/// one seed, hence one capacity trace and one pristine session — with
+/// the steal arm attacking the mid-stage straggler regime the others
+/// can only absorb.
+pub fn steal_comparison_spec(rounds: usize, base_seed: u64) -> SweepSpec {
+    assert!(rounds > 0, "need at least one round");
+    let mut spec = SweepSpec::new(
+        "Work stealing: Steal-HeMT vs Adaptive-HeMT vs static HeMT vs HomT \
+         under time-varying capacity",
+        "capacity-program family",
+        "map stage time (s), per round",
+    );
+    let series: Vec<usize> = STEAL_ARMS.iter().map(|(_, name)| spec.series(name)).collect();
+    for (fi, family) in COMPARISON_FAMILIES.iter().enumerate() {
+        let seed = base_seed + fi as u64 * 10_000;
+        for (ai, &(arm, _)) in STEAL_ARMS.iter().enumerate() {
+            let series = series[ai];
+            let family = family.to_string();
+            spec.sequence(move || {
+                run_family_arm(&family, arm, rounds, seed)
+                    .into_iter()
+                    .map(|t| Sample {
+                        series,
+                        x: fi as f64,
+                        label: family.clone(),
+                        value: t,
+                    })
+                    .collect()
+            });
+        }
+    }
+    spec
+}
+
+/// Per-family mean map-stage times of one series of a comparison
+/// figure, keyed by family name — the `hemt steal` verdict helper.
+pub fn family_means(fig: &crate::metrics::Figure, series_name: &str) -> Vec<(String, f64)> {
+    fig.series
+        .iter()
+        .find(|s| s.name == series_name)
+        .map(|s| {
+            s.points
+                .iter()
+                .map(|p| (p.label.clone(), p.stats.mean))
+                .collect()
+        })
+        .unwrap_or_default()
 }
 
 /// Round-by-round adaptation trajectory under one program family: x is

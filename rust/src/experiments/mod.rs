@@ -568,6 +568,16 @@ pub fn dynamics_comparison_spec() -> SweepSpec {
     )
 }
 
+/// `hemt steal` / `hemt figure dyn_steal`: Steal-HeMT (mid-stage
+/// split + steal) vs Adaptive-HeMT vs static HeMT vs HomT per
+/// capacity-program family.
+pub fn dynamics_steal_spec() -> SweepSpec {
+    crate::dynamics::steal_comparison_spec(
+        crate::dynamics::DEFAULT_ROUNDS,
+        crate::dynamics::COMPARISON_BASE_SEED,
+    )
+}
+
 /// Round-by-round adaptation trajectory under Markov-modulated
 /// throttling (the dynamics analogue of Fig. 7).
 pub fn dynamics_markov_spec() -> SweepSpec {
@@ -600,6 +610,7 @@ pub fn spec_by_name(name: &str) -> Option<SweepSpec> {
         "dynamics" | "dyn_compare" => Some(dynamics_comparison_spec()),
         "dyn_markov" => Some(dynamics_markov_spec()),
         "dyn_spot" => Some(dynamics_spot_spec()),
+        "steal" | "dyn_steal" => Some(dynamics_steal_spec()),
         _ => None,
     }
 }
@@ -613,6 +624,7 @@ pub fn by_name(name: &str) -> Option<Figure> {
 pub const ALL_FIGURES: &[&str] = &[
     "fig4", "fig5", "fig7", "fig8", "fig9", "fig10_12", "fig13", "fig14", "fig15",
     "fig17", "fig18", "headline", "extension", "dyn_compare", "dyn_markov", "dyn_spot",
+    "dyn_steal",
 ];
 
 #[cfg(test)]

@@ -39,6 +39,11 @@ fn usage() -> &'static str {
                                     closed-loop Adaptive-HeMT vs static-HeMT vs HomT
                                     under time-varying capacity (Markov throttling,
                                     spot outage, diurnal, credit cliff)
+  hemt steal [--rounds N] [--json] [--threads N]
+                                    mid-stage work stealing: Steal-HeMT (running
+                                    tasks split, remainder re-homed on idle nodes)
+                                    vs Adaptive-HeMT vs static-HeMT vs HomT across
+                                    the same capacity-program families
   hemt bench-diff --baseline <dir> --new <dir> [--threshold F] [--update]
                                     diff BENCH_*.json medians against a committed
                                     baseline; exit 1 past the threshold (default 0.15)
@@ -79,6 +84,7 @@ fn main() -> ExitCode {
         Some("run") => cmd_run(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("dynamics") => cmd_dynamics(&args[1..]),
+        Some("steal") => cmd_steal(&args[1..]),
         Some("bench-diff") => cmd_bench_diff(&args[1..]),
         Some("analysis") => cmd_analysis(),
         Some("plan-credits") => cmd_plan_credits(&args[1..]),
@@ -233,26 +239,39 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
 /// credit cliff). All three arms of a family share one seed, hence one
 /// capacity trace; output is bit-identical for any thread count.
 fn cmd_dynamics(args: &[String]) -> Result<(), String> {
+    run_family_comparison(args, "dynamics comparison", 3, hemt::dynamics::comparison_spec)
+}
+
+/// `hemt steal`: the mid-stage work-stealing comparison — Steal-HeMT
+/// (running tasks split on capacity events / idle nodes, the carved
+/// remainder re-homed — [`hemt::coordinator::stealing`]) vs
+/// Adaptive-HeMT vs static-HeMT vs HomT across the capacity-program
+/// families. All four arms of a family share one seed, hence one
+/// capacity trace; output is bit-identical for any thread count.
+fn cmd_steal(args: &[String]) -> Result<(), String> {
+    run_family_comparison(
+        args,
+        "steal comparison",
+        4,
+        hemt::dynamics::steal_comparison_spec,
+    )
+}
+
+/// Shared skeleton of the per-family policy comparisons (`hemt
+/// dynamics`, `hemt steal`): parse flags, run the spec, print the
+/// figure and the per-family winners.
+fn run_family_comparison(
+    args: &[String],
+    banner: &str,
+    arms: usize,
+    spec_of: impl Fn(usize, u64) -> hemt::sweep::SweepSpec,
+) -> Result<(), String> {
     let json = args.iter().any(|a| a == "--json");
     let runner = runner_from_args(args)?;
-    let rounds = match args.iter().position(|a| a == "--rounds") {
-        None => hemt::dynamics::DEFAULT_ROUNDS,
-        Some(i) => {
-            let n: usize = args
-                .get(i + 1)
-                .ok_or("--rounds needs a value")?
-                .parse()
-                .map_err(|e| format!("bad --rounds: {e}"))?;
-            if n == 0 {
-                return Err("--rounds must be >= 1".into());
-            }
-            n
-        }
-    };
-    let spec =
-        hemt::dynamics::comparison_spec(rounds, hemt::dynamics::COMPARISON_BASE_SEED);
+    let rounds = rounds_arg(args)?;
+    let spec = spec_of(rounds, hemt::dynamics::COMPARISON_BASE_SEED);
     eprintln!(
-        "dynamics comparison: {} families x 3 policies x {rounds} rounds over {} thread(s)",
+        "{banner}: {} families x {arms} policies x {rounds} rounds over {} thread(s)",
         hemt::dynamics::COMPARISON_FAMILIES.len(),
         runner.threads()
     );
@@ -262,7 +281,30 @@ fn cmd_dynamics(args: &[String]) -> Result<(), String> {
         return Ok(());
     }
     println!("{}", fig.to_table());
-    // Per-family verdict: which policy's mean round time wins.
+    print_family_winners(&fig, rounds);
+    Ok(())
+}
+
+/// Parse `--rounds N` (default: the dynamics comparison's round count).
+fn rounds_arg(args: &[String]) -> Result<usize, String> {
+    match args.iter().position(|a| a == "--rounds") {
+        None => Ok(hemt::dynamics::DEFAULT_ROUNDS),
+        Some(i) => {
+            let n: usize = args
+                .get(i + 1)
+                .ok_or("--rounds needs a value")?
+                .parse()
+                .map_err(|e| format!("bad --rounds: {e}"))?;
+            if n == 0 {
+                return Err("--rounds must be >= 1".into());
+            }
+            Ok(n)
+        }
+    }
+}
+
+/// Per-family verdict: which policy's mean round time wins.
+fn print_family_winners(fig: &hemt::metrics::Figure, rounds: usize) {
     println!("per-family winners (mean map-stage time over {rounds} rounds):");
     for (fi, family) in hemt::dynamics::COMPARISON_FAMILIES.iter().enumerate() {
         let mut best: Option<(&str, f64)> = None;
@@ -278,7 +320,6 @@ fn cmd_dynamics(args: &[String]) -> Result<(), String> {
             println!("  {family:<13} -> {name} ({mean:.1} s)");
         }
     }
-    Ok(())
 }
 
 /// `hemt bench-diff`: the CI bench-trajectory gate. Compares medians of

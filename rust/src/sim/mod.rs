@@ -149,6 +149,12 @@ pub struct Engine {
     usage_cache: Vec<f64>,
     /// Scratch for the per-node water-fill (avoids a per-call caps vec).
     caps_scratch: Vec<f64>,
+    /// Capacity-event tap: when enabled, every *effective*
+    /// `set_node_capacity` change is recorded as `(time, node, mult)`
+    /// for a driver to drain — the work-stealing driver's wake signal
+    /// (session-level dynamics playback is otherwise invisible to the
+    /// stage loop reacting to it).
+    capacity_tap: Option<Vec<(f64, NodeId, f64)>>,
 }
 
 impl Engine {
@@ -169,6 +175,7 @@ impl Engine {
             cpu_heap: BinaryHeap::new(),
             usage_cache: vec![0.0; num_nodes],
             caps_scratch: Vec::new(),
+            capacity_tap: None,
         }
     }
 
@@ -250,7 +257,52 @@ impl Engine {
         if self.nodes[node].dynamic_mult() != mult {
             self.nodes[node].set_dynamic_mult(mult);
             self.mark_node_dirty(node);
+            if let Some(tap) = self.capacity_tap.as_mut() {
+                tap.push((self.now, node, mult));
+            }
         }
+    }
+
+    /// Enable or disable the capacity-event tap. Enabling starts with an
+    /// empty buffer; disabling discards whatever was not drained.
+    pub fn set_capacity_tap(&mut self, enabled: bool) {
+        self.capacity_tap = if enabled { Some(Vec::new()) } else { None };
+    }
+
+    /// Drain the recorded capacity events (empty when the tap is off or
+    /// nothing fired since the last drain).
+    pub fn take_capacity_events(&mut self) -> Vec<(f64, NodeId, f64)> {
+        match self.capacity_tap.as_mut() {
+            Some(tap) => std::mem::take(tap),
+            None => Vec::new(),
+        }
+    }
+
+    /// Split a *running* CPU job mid-flight: keep `keep` core-seconds of
+    /// its remaining work on the job and carve off the rest, returned as
+    /// the stolen work (the work-stealing primitive — the caller turns
+    /// the carved work into a new task/job wherever it likes, typically
+    /// via [`Engine::add_cpu_job`] on another node).
+    ///
+    /// Work is conserved by construction: the job's remaining work is
+    /// set to exactly `keep` and the returned carve is computed once as
+    /// `remaining - keep`. The job's node is marked dirty, so the next
+    /// step re-levels only that node's water-fill and replaces the job's
+    /// completion candidate (generation bump) — event order stays a
+    /// deterministic function of the post-split state. `None` when the
+    /// job is unknown (already completed or cancelled).
+    pub fn split_cpu_job(&mut self, id: JobId, keep: f64) -> Option<f64> {
+        let j = self.jobs.get_mut(&id)?;
+        assert!(
+            keep > 0.0 && keep < j.remaining,
+            "split must keep work in (0, remaining): keep {keep} of {}",
+            j.remaining
+        );
+        let stolen = j.remaining - keep;
+        j.remaining = keep;
+        let node = j.node;
+        self.mark_node_dirty(node);
+        Some(stolen)
     }
 
     /// Cancel a flow (speculative-execution loser kill).
@@ -821,7 +873,7 @@ mod tests {
             let mut e = Engine::new(nodes, NetSim::new());
             let mut live: Vec<JobId> = Vec::new();
             for op in 0..40 {
-                match rng.below(4) {
+                match rng.below(5) {
                     0 => {
                         let node = rng.below(n_nodes);
                         let id = e.add_cpu_job(
@@ -838,6 +890,28 @@ mod tests {
                     }
                     2 => {
                         e.set_node_capacity(rng.below(n_nodes), rng.range_f64(0.05, 1.0));
+                    }
+                    4 if !live.is_empty() => {
+                        // Mid-flight split: carve off part of a running
+                        // job and re-home it on a random node — exactly
+                        // conserving work, never invalidating the
+                        // incremental rates (checked by the shadow solve
+                        // and, in debug, the engine's own oracle).
+                        let victim = *rng.choose(&live);
+                        let before = e.cpu_job(victim).unwrap().remaining;
+                        if before > 0.2 {
+                            let keep = before * rng.range_f64(0.1, 0.9);
+                            let stolen = e.split_cpu_job(victim, keep).unwrap();
+                            assert_eq!(
+                                stolen.to_bits(),
+                                (before - keep).to_bits(),
+                                "carve must be remaining - keep exactly"
+                            );
+                            assert_eq!(e.cpu_job(victim).unwrap().remaining.to_bits(), keep.to_bits());
+                            let node = rng.below(n_nodes);
+                            let id = e.add_cpu_job(node, rng.range_f64(0.1, 1.5), stolen, 500 + op);
+                            live.push(id);
+                        }
                     }
                     _ => {
                         let horizon = e.now + rng.range_f64(0.01, 3.0);
@@ -892,6 +966,74 @@ mod tests {
             assert_eq!(e.num_cpu_jobs(), 0);
             assert!(e.step().is_none());
         });
+    }
+
+    #[test]
+    fn split_moves_completion_to_kept_work() {
+        // 10 core-s at 1.0 would finish at t=10; at t=2 we keep 3 of the
+        // remaining 8 core-s: the job now finishes at t=5, and the carve
+        // is exactly 5 core-s.
+        let mut e = Engine::new(one_node(), NetSim::new());
+        let id = e.add_cpu_job(0, 1.0, 10.0, 7);
+        e.set_timer(2.0, 99);
+        assert_eq!(e.step().unwrap(), Event::Timer { tag: 99 });
+        let stolen = e.split_cpu_job(id, 3.0).unwrap();
+        assert!((stolen - 5.0).abs() < 1e-12);
+        assert!((e.cpu_job(id).unwrap().remaining - 3.0).abs() < 1e-12);
+        let evs = e.run_to_end();
+        assert_eq!(evs.len(), 1);
+        assert!((evs[0].0 - 5.0).abs() < 1e-9, "got {}", evs[0].0);
+    }
+
+    #[test]
+    fn split_onto_same_node_preserves_drain_time() {
+        // Re-homing the carve onto the same (uncapped) node cannot change
+        // the node's drain time: total work and capacity are unchanged.
+        let mut e = Engine::new(one_node(), NetSim::new());
+        let id = e.add_cpu_job(0, 1.0, 12.0, 1);
+        e.set_timer(2.0, 99);
+        e.step().unwrap();
+        let stolen = e.split_cpu_job(id, 4.0).unwrap();
+        e.add_cpu_job(0, 1.0, stolen, 2);
+        let evs = e.run_to_end();
+        let last = evs.last().unwrap().0;
+        assert!((last - 12.0).abs() < 1e-9, "drain moved: {last}");
+    }
+
+    #[test]
+    fn split_of_unknown_job_returns_none() {
+        let mut e = Engine::new(one_node(), NetSim::new());
+        let id = e.add_cpu_job(0, 1.0, 1.0, 0);
+        e.run_to_end();
+        assert!(e.split_cpu_job(id, 0.5).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "split must keep work in (0, remaining)")]
+    fn split_rejects_keep_at_or_above_remaining() {
+        let mut e = Engine::new(one_node(), NetSim::new());
+        let id = e.add_cpu_job(0, 1.0, 2.0, 0);
+        e.split_cpu_job(id, 2.0);
+    }
+
+    #[test]
+    fn capacity_tap_records_only_effective_changes() {
+        let mut e = Engine::new(
+            vec![Node::fixed("a", 1.0), Node::fixed("b", 1.0)],
+            NetSim::new(),
+        );
+        assert!(e.take_capacity_events().is_empty(), "tap off: nothing recorded");
+        e.set_node_capacity(0, 0.5);
+        assert!(e.take_capacity_events().is_empty());
+        e.set_capacity_tap(true);
+        e.set_node_capacity(0, 0.5); // no-op: already 0.5
+        e.set_node_capacity(1, 0.25);
+        e.set_node_capacity(1, 1.0);
+        assert_eq!(e.take_capacity_events(), vec![(0.0, 1, 0.25), (0.0, 1, 1.0)]);
+        assert!(e.take_capacity_events().is_empty(), "drain empties the tap");
+        e.set_capacity_tap(false);
+        e.set_node_capacity(0, 0.75);
+        assert!(e.take_capacity_events().is_empty());
     }
 
     #[test]

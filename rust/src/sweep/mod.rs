@@ -28,6 +28,7 @@ pub use product::{Named, ProductSweepSpec};
 
 use crate::config::{ClusterConfig, PolicyConfig, WorkloadConfig, WorkloadKind};
 use crate::coordinator::driver::{Session, SimParams};
+use crate::coordinator::stealing::StealPolicy;
 use crate::coordinator::PartitionPolicy;
 use crate::dynamics::DynamicsConfig;
 use crate::estimator::SpeedEstimator;
@@ -363,6 +364,19 @@ pub fn resolve_policy(
             };
             PartitionPolicy::Hemt(weights)
         }
+        // Steal-HeMT partitions like hint-driven HeMT; the stealing
+        // itself happens mid-stage (see [`steal_policy_of`]).
+        PolicyConfig::HemtSteal(_) => PartitionPolicy::Hemt(session.capacity_hints()),
+    }
+}
+
+/// The mid-stage work-stealing policy a scenario policy carries (`None`
+/// for every non-stealing policy) — what the trial runners pass to
+/// [`Session::run_job_stealing`].
+pub fn steal_policy_of(policy: &PolicyConfig) -> Option<&StealPolicy> {
+    match policy {
+        PolicyConfig::HemtSteal(p) => Some(p),
+        _ => None,
     }
 }
 
@@ -395,7 +409,7 @@ fn wordcount_trial_in(s: &mut Session, sc: &Scenario) -> f64 {
         (other, Metric::JobTime) => other.clone(),
     };
     let job = workloads::wordcount_job(file, map, reduce, sc.workload.cpu_secs_per_mb);
-    let rec = s.run_job(&job);
+    let rec = s.run_job_stealing(&job, steal_policy_of(&sc.policy));
     match sc.metric {
         Metric::MapStageTime => rec.map_stage_time(),
         Metric::JobTime => rec.completion_time(),
@@ -408,11 +422,13 @@ fn wordcount_trial_in(s: &mut Session, sc: &Scenario) -> f64 {
 fn kmeans_in_session(s: &mut Session, wl: &WorkloadConfig, policy: &PolicyConfig) -> f64 {
     let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
     let map = resolve_policy(policy, s, None);
+    let steal = steal_policy_of(policy);
     let start = s.engine.now;
-    let first = s.run_job(&workloads::kmeans_first_job(file, map, wl.cpu_secs_per_mb));
+    let first =
+        s.run_job_stealing(&workloads::kmeans_first_job(file, map, wl.cpu_secs_per_mb), steal);
     let parts = workloads::cached_partitions_of(&first.stages[0]);
     for _ in 1..wl.iterations {
-        s.run_job(&workloads::kmeans_cached_job(parts.clone(), wl.cpu_secs_per_mb));
+        s.run_job_stealing(&workloads::kmeans_cached_job(parts.clone(), wl.cpu_secs_per_mb), steal);
     }
     s.engine.now - start
 }
@@ -423,12 +439,10 @@ fn kmeans_in_session(s: &mut Session, wl: &WorkloadConfig, policy: &PolicyConfig
 fn pagerank_in_session(s: &mut Session, wl: &WorkloadConfig, policy: &PolicyConfig) -> f64 {
     let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
     let pol = resolve_policy(policy, s, None);
-    let rec = s.run_job(&workloads::pagerank_job(
-        file,
-        pol,
-        wl.iterations,
-        wl.cpu_secs_per_mb,
-    ));
+    let rec = s.run_job_stealing(
+        &workloads::pagerank_job(file, pol, wl.iterations, wl.cpu_secs_per_mb),
+        steal_policy_of(policy),
+    );
     rec.completion_time()
 }
 

@@ -240,6 +240,13 @@ impl ProductSweepSpec {
             policies: vec![
                 Named::new("homt", PolicyConfig::Homt(2)),
                 Named::new("hemt", PolicyConfig::HemtFromHints),
+                // Appended after the original pair: the policy axis is
+                // seed-strided by index, so the historic homt/hemt cells
+                // keep their exact values.
+                Named::new(
+                    "steal",
+                    PolicyConfig::HemtSteal(crate::coordinator::stealing::StealPolicy::default()),
+                ),
             ],
             granularities: vec![2, 8, 32],
             metric: Metric::MapStageTime,
@@ -522,6 +529,7 @@ mod tests {
             PolicyConfig::HemtFromHints,
             PolicyConfig::HemtStatic(vec![1.0, 0.4]),
             PolicyConfig::HemtAdaptive { alpha: 0.5 },
+            PolicyConfig::HemtSteal(crate::coordinator::stealing::StealPolicy::default()),
         ] {
             assert_eq!(p.with_granularity(16), p);
             assert!(!p.granularity_sensitive());

@@ -5,8 +5,8 @@
 //! rebuild inside the engine on every re-level in these debug builds).
 
 use hemt::dynamics::{
-    comparison_spec, CapacityProgram, DynamicsConfig, COMPARISON_BASE_SEED,
-    COMPARISON_FAMILIES,
+    comparison_spec, steal_comparison_spec, CapacityProgram, DynamicsConfig,
+    COMPARISON_BASE_SEED, COMPARISON_FAMILIES,
 };
 use hemt::metrics::Figure;
 use hemt::sweep::{ProductSweepSpec, SweepRunner};
@@ -56,6 +56,85 @@ fn dynamics_comparison_is_bit_identical_across_thread_counts() {
             assert_eq!(p.label, COMPARISON_FAMILIES[fi]);
             assert_eq!(p.stats.n, 3);
         }
+    }
+}
+
+#[test]
+fn steal_comparison_is_bit_identical_across_thread_counts() {
+    // The dyn_steal acceptance gate: the four-arm comparison (Steal-HeMT
+    // vs Adaptive-HeMT vs static-HeMT vs HomT) must not depend on sweep
+    // scheduling. 3 rounds keep the golden run fast while spanning
+    // several capacity (and steal) events per family.
+    let make = || steal_comparison_spec(3, COMPARISON_BASE_SEED);
+    let baseline = figure_bits(&SweepRunner::new(1).run(&make()));
+    for threads in [2usize, 8] {
+        let fig = SweepRunner::new(threads).run(&make());
+        assert_eq!(figure_bits(&fig), baseline, "threads={threads}");
+    }
+    // Structural golden: four policy arms, Steal-HeMT leading, one point
+    // per family, n = rounds, labels = family names.
+    let fig = SweepRunner::new(1).run(&make());
+    assert_eq!(fig.series.len(), 4);
+    assert!(
+        fig.series[0].name.starts_with("Steal-HeMT"),
+        "lead series is the steal arm: {}",
+        fig.series[0].name
+    );
+    for s in &fig.series {
+        assert_eq!(s.points.len(), COMPARISON_FAMILIES.len(), "{}", s.name);
+        for (fi, p) in s.points.iter().enumerate() {
+            assert_eq!(p.label, COMPARISON_FAMILIES[fi]);
+            assert_eq!(p.stats.n, 3);
+            assert!(p.stats.mean > 1.0 && p.stats.mean < 10_000.0);
+        }
+    }
+    // The non-steal arms re-run the exact sequences of the historic
+    // 3-arm figure (same seeds, same sessions): their values must match
+    // it bit-for-bit.
+    let three = SweepRunner::new(1).run(&comparison_spec(3, COMPARISON_BASE_SEED));
+    for s3 in &three.series {
+        let s4 = fig
+            .series
+            .iter()
+            .find(|s| s.name == s3.name)
+            .expect("historic arm present in steal figure");
+        for (a, b) in s3.points.iter().zip(s4.points.iter()) {
+            assert_eq!(a.stats.mean.to_bits(), b.stats.mean.to_bits(), "{}", s3.name);
+        }
+    }
+}
+
+#[test]
+fn steal_hemt_beats_static_hemt_under_spot_and_markov() {
+    // The acceptance criterion: under the spot-revocation and
+    // Markov-throttling families — the mid-stage straggler regimes —
+    // Steal-HeMT's mean map-stage time must beat static-HeMT's, because
+    // a capacity event no longer strands a macrotask's remainder on the
+    // degraded node. 16 rounds span ~280+ simulated seconds, well past
+    // the markov trace's sustained 174–345 s throttle and the spot
+    // trace's 69.7 s revocation at these fixed seeds.
+    let fig = SweepRunner::new(2).run(&steal_comparison_spec(16, COMPARISON_BASE_SEED));
+    let steal = hemt::dynamics::family_means(&fig, "Steal-HeMT (split + steal)");
+    let adaptive = hemt::dynamics::family_means(&fig, "Adaptive-HeMT (OA loop)");
+    let static_ = hemt::dynamics::family_means(&fig, "static HeMT (launch hints)");
+    assert_eq!(steal.len(), COMPARISON_FAMILIES.len());
+    for family in ["spot", "markov"] {
+        let s = steal.iter().find(|(f, _)| f == family).unwrap().1;
+        let st = static_.iter().find(|(f, _)| f == family).unwrap().1;
+        assert!(
+            s < st,
+            "{family}: Steal-HeMT {s:.1}s must beat static-HeMT {st:.1}s"
+        );
+    }
+    // Stealing rides on the same OA loop as the Adaptive arm; the
+    // threshold + profitability guards must keep it from ever losing
+    // materially to its own between-rounds baseline.
+    for (family, s) in &steal {
+        let a = adaptive.iter().find(|(f, _)| f == family).unwrap().1;
+        assert!(
+            *s <= a * 1.05,
+            "{family}: Steal-HeMT {s:.1}s regressed vs Adaptive-HeMT {a:.1}s"
+        );
     }
 }
 

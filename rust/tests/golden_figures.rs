@@ -205,6 +205,88 @@ fn product_sweep_is_bit_identical_across_thread_counts() {
 }
 
 #[test]
+fn steal_enabled_product_is_bit_identical_across_thread_counts() {
+    // A trimmed steal-enabled product (the `dynamic_regimes` preset's
+    // new policy column, on a test-sized grid): scenario trials that
+    // split and re-home running tasks mid-stage must inherit the sweep
+    // runner's thread-count invariance unchanged.
+    use hemt::config::{ClusterConfig, PolicyConfig, WorkloadConfig};
+    use hemt::coordinator::stealing::StealPolicy;
+    use hemt::dynamics::{CapacityProgram, DynamicsConfig};
+    use hemt::sweep::{Metric, Named, ProductSweepSpec};
+    let make_spec = || {
+        let mut wl = WorkloadConfig::wordcount_2gb();
+        wl.data_mb = 256;
+        wl.block_mb = 128;
+        // A deterministic early cliff (node 1 to 0.1x at ~2.2 s)
+        // guarantees steals actually fire inside the short test stages.
+        let cliff = DynamicsConfig {
+            programs: vec![
+                CapacityProgram::Steady,
+                CapacityProgram::CreditCliff { credits: 2.0, peak: 1.0, baseline: 0.1 },
+            ],
+            horizon: 1000.0,
+        };
+        ProductSweepSpec {
+            title: "golden steal product".to_string(),
+            dynamics: vec![
+                Named::new("steady", DynamicsConfig::steady()),
+                Named::new("cliff", cliff),
+            ],
+            clusters: vec![Named::new("static", ClusterConfig::containers_1_and_04())],
+            workloads: vec![Named::new("wc", wl)],
+            policies: vec![
+                Named::new("hemt", PolicyConfig::HemtFromHints),
+                Named::new(
+                    "steal",
+                    PolicyConfig::HemtSteal(StealPolicy {
+                        threshold_secs: 1.0,
+                        cooldown: 0.1,
+                        ..Default::default()
+                    }),
+                ),
+            ],
+            granularities: vec![2],
+            metric: Metric::MapStageTime,
+            trials: 2,
+            base_seed: 91_000,
+        }
+        .to_spec()
+    };
+    let fig = assert_thread_count_invariant(make_spec, "steal product");
+    assert_eq!(fig.series.len(), 4);
+    assert_eq!(fig.series[1].name, "steady/static/wc/steal");
+    assert_eq!(fig.series[3].name, "cliff/static/wc/steal");
+    // Under the cliff the steal policy must actually help: the stranded
+    // remainder gets re-homed instead of crawling at 0.1x.
+    let hemt_cliff = fig.series[2].points[0].stats.mean;
+    let steal_cliff = fig.series[3].points[0].stats.mean;
+    assert!(
+        steal_cliff < hemt_cliff,
+        "stealing must beat plain HeMT under the cliff: {steal_cliff:.1} vs {hemt_cliff:.1}"
+    );
+}
+
+#[test]
+fn dynamic_regimes_preset_carries_the_steal_policy() {
+    // The shipped preset now sweeps Steal-HeMT as a first-class policy
+    // column; its JSON round-trips and the historic cells kept their
+    // seeds (the steal column was appended, never interleaved).
+    use hemt::config::PolicyConfig;
+    use hemt::sweep::ProductSweepSpec;
+    let p = ProductSweepSpec::dynamic_regimes();
+    assert_eq!(p.policies.len(), 3);
+    assert_eq!(p.policies[2].name, "steal");
+    assert!(matches!(p.policies[2].value, PolicyConfig::HemtSteal(_)));
+    assert!(!p.policies[2].value.granularity_sensitive());
+    // 5 dynamics x 1 cluster x 1 workload x (homt@3 granularities +
+    // hemt + steal).
+    assert_eq!(p.num_cells(), 5 * (3 + 1 + 1));
+    let back = ProductSweepSpec::from_str(&p.to_json().pretty()).unwrap();
+    assert_eq!(p, back);
+}
+
+#[test]
 fn repeated_runs_are_bit_identical() {
     // Same runner, run twice: the sweep derives all randomness from the
     // spec's seeds, so repetition is exact.

@@ -1,0 +1,360 @@
+//! Work-stealing property tests: split-work conservation against a
+//! shadow oracle, min-split floor enforcement, the zero-penalty
+//! split-free completion oracle, and the capacity-churn × steal fuzz
+//! that cross-checks the incremental per-node re-level against a full
+//! water-fill rebuild after *every* mutation.
+//!
+//! The shadow asserts here are plain `assert!`s, not `debug_assert!`s:
+//! this suite is the release-mode safety net for the oracles that
+//! vanish when the engine's internal `debug_assertions` checks compile
+//! out (the CI `cargo test --release` leg runs it for exactly that
+//! reason).
+
+use hemt::coordinator::driver::{SessionBuilder, SimParams};
+use hemt::coordinator::stealing::StealPolicy;
+use hemt::coordinator::{JobPlan, PartitionPolicy, StageInput, StagePlan};
+use hemt::netsim::NetSim;
+use hemt::nodes::{water_fill, Node};
+use hemt::sim::{Engine, Event, JobId};
+use hemt::util::{prop, Rng};
+
+const MB: u64 = 1 << 20;
+
+/// Advance `e` by a tiny timer so pending dirty marks are re-levelled,
+/// retiring finished jobs from `live`.
+fn settle(e: &mut Engine, live: &mut Vec<JobId>, tag: u64) {
+    e.set_timer(e.now + 1e-6, tag);
+    while let Some(ev) = e.step() {
+        match ev {
+            Event::Timer { tag: t } if t == tag => break,
+            Event::JobDone { id, .. } => live.retain(|&x| x != id),
+            _ => {}
+        }
+    }
+}
+
+#[test]
+fn random_splits_conserve_work_against_shadow_oracle() {
+    // Under random split/steal sequences the engine's per-job remaining
+    // work must track a shadow oracle applying the identical arithmetic
+    // bit-for-bit, and the total never drifts beyond fp tolerance.
+    prop::check("split-conservation", 0x5EA1, 40, |rng: &mut Rng| {
+        let n_nodes = rng.range(1, 4);
+        let nodes: Vec<Node> = (0..n_nodes)
+            .map(|i| Node::fixed(&format!("n{i}"), rng.range_f64(0.3, 2.0)))
+            .collect();
+        let mut e = Engine::new(nodes, NetSim::new());
+        let mut live: Vec<JobId> = Vec::new();
+        let mut total_injected = 0.0f64;
+        for op in 0..30u64 {
+            match rng.below(3) {
+                0 => {
+                    let work = rng.range_f64(1.0, 15.0);
+                    total_injected += work;
+                    let id =
+                        e.add_cpu_job(rng.below(n_nodes), rng.range_f64(0.2, 1.2), work, op);
+                    live.push(id);
+                }
+                1 if !live.is_empty() => {
+                    // The split under test: carve a random keep off a
+                    // random live job and re-home it on a random node.
+                    let victim = *rng.choose(&live);
+                    let before = e.cpu_job(victim).unwrap().remaining;
+                    if before > 0.1 {
+                        let keep = before * rng.range_f64(0.05, 0.95);
+                        let stolen = e.split_cpu_job(victim, keep).unwrap();
+                        // Shadow oracle: identical arithmetic, bit-exact.
+                        assert_eq!(
+                            stolen.to_bits(),
+                            (before - keep).to_bits(),
+                            "carve must be exactly remaining - keep"
+                        );
+                        assert_eq!(
+                            e.cpu_job(victim).unwrap().remaining.to_bits(),
+                            keep.to_bits(),
+                            "victim must keep exactly the requested work"
+                        );
+                        let id =
+                            e.add_cpu_job(rng.below(n_nodes), rng.range_f64(0.2, 1.2), stolen, 100 + op);
+                        live.push(id);
+                    }
+                }
+                _ => settle(&mut e, &mut live, 10_000 + op),
+            }
+            // Global conservation: live remaining + work already burned
+            // equals everything injected (rates × elapsed time accounted
+            // by the engine; we check the live side never exceeds the
+            // injected total and splits alone never move it).
+            let live_total: f64 =
+                live.iter().map(|&id| e.cpu_job(id).unwrap().remaining).sum();
+            assert!(
+                live_total <= total_injected * (1.0 + 1e-9) + 1e-9,
+                "remaining {live_total} exceeds injected {total_injected}"
+            );
+        }
+        // Split-only conservation, exact to fp tolerance: freeze time
+        // (no steps), split everything repeatedly, re-sum.
+        let before: f64 = live.iter().map(|&id| e.cpu_job(id).unwrap().remaining).sum();
+        let snapshot: Vec<JobId> = live.clone();
+        for &id in &snapshot {
+            let r = e.cpu_job(id).unwrap().remaining;
+            if r > 0.5 {
+                let stolen = e.split_cpu_job(id, r * 0.5).unwrap();
+                live.push(e.add_cpu_job(0, 1.0, stolen, 999));
+            }
+        }
+        let after: f64 = live.iter().map(|&id| e.cpu_job(id).unwrap().remaining).sum();
+        assert!(
+            (after - before).abs() <= before.abs() * 1e-12 + 1e-12,
+            "splitting moved total work: {before} -> {after}"
+        );
+        for &id in &live {
+            e.cancel_cpu_job(id);
+        }
+        assert!(e.step().is_none());
+    });
+}
+
+#[test]
+fn carve_never_undercuts_min_split_floor() {
+    // Policy property: for random remainders, rates and floors, a carve
+    // either refuses or leaves *both* halves at or above the floor and
+    // conserves the remainder.
+    prop::check("carve-floor", 0xF100D, 500, |rng: &mut Rng| {
+        let pol = StealPolicy {
+            max_frac: rng.range_f64(0.05, 0.99),
+            min_split_work: rng.range_f64(0.01, 2.0),
+            threshold_secs: 0.0,
+            io_penalty: 0.0,
+            cooldown: 0.0,
+        };
+        let remaining = rng.range_f64(0.0, 20.0);
+        let victim_rate = rng.range_f64(0.0, 1.5);
+        let thief_rate = rng.range_f64(0.0, 1.5);
+        match pol.carve(remaining, victim_rate, thief_rate) {
+            None => {}
+            Some((keep, stolen)) => {
+                assert!(keep >= pol.min_split_work, "keep {keep} < floor {}", pol.min_split_work);
+                assert!(
+                    stolen >= pol.min_split_work,
+                    "stolen {stolen} < floor {}",
+                    pol.min_split_work
+                );
+                assert_eq!(
+                    stolen.to_bits(),
+                    (remaining - keep).to_bits(),
+                    "carve must conserve the remainder exactly"
+                );
+                // Rate-proportionality never exceeds the cap.
+                assert!(
+                    stolen / remaining <= pol.max_frac + 1e-12
+                        || keep.to_bits() == pol.min_split_work.to_bits(),
+                    "stolen fraction {} breaks the cap {} without a floor clamp",
+                    stolen / remaining,
+                    pol.max_frac
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn zero_penalty_splits_match_split_free_oracle() {
+    // On one node with non-binding caps, splitting a job at random times
+    // (re-homing carves on the same node) cannot change the drain time:
+    // the node's completion-time total is work / capacity either way.
+    prop::check("zero-penalty-oracle", 0x0AC1E, 30, |rng: &mut Rng| {
+        let capacity = rng.range_f64(0.3, 1.5);
+        let work = rng.range_f64(20.0, 60.0);
+
+        // Oracle: the split-free run.
+        let mut plain = Engine::new(vec![Node::fixed("n", capacity)], NetSim::new());
+        plain.add_cpu_job(0, capacity, work, 0);
+        let oracle = plain.run_to_end().last().unwrap().0;
+
+        // Subject: the same work, split 1-4 times at random instants.
+        let mut e = Engine::new(vec![Node::fixed("n", capacity)], NetSim::new());
+        let mut live = vec![e.add_cpu_job(0, capacity, work, 0)];
+        let splits = rng.range(1, 5);
+        for k in 0..splits {
+            let at = e.now + rng.range_f64(0.5, work / capacity / (splits as f64 + 1.0) / 2.0);
+            e.set_timer(at, 50_000 + k as u64);
+            while let Some(ev) = e.step() {
+                match ev {
+                    Event::Timer { tag } if tag == 50_000 + k as u64 => break,
+                    Event::JobDone { id, .. } => live.retain(|&x| x != id),
+                    _ => {}
+                }
+            }
+            if let Some(&victim) = live.last() {
+                let r = e.cpu_job(victim).map(|j| j.remaining).unwrap_or(0.0);
+                if r > 1.0 {
+                    let keep = r * rng.range_f64(0.2, 0.8);
+                    let stolen = e.split_cpu_job(victim, keep).unwrap();
+                    // Same node, same cap: the steal penalty is zero.
+                    live.push(e.add_cpu_job(0, capacity, stolen, 100 + k as u64));
+                }
+            }
+        }
+        let end = e.run_to_end().last().map(|&(t, _)| t).unwrap_or(e.now);
+        assert!(
+            (end - oracle).abs() < 1e-6,
+            "split schedule drifted from the split-free oracle: {end} vs {oracle}"
+        );
+    });
+}
+
+#[test]
+fn capacity_churn_with_steals_matches_full_rebuild_every_step() {
+    // The PR 3 churn test covered capacity events only; this interleaves
+    // splits (steals) with capacity events and compares the engine's
+    // incrementally maintained per-job rates against an independent
+    // from-scratch water-fill after every mutation — with plain asserts,
+    // so the oracle survives release builds where the engine's internal
+    // debug cross-check compiles out.
+    prop::check("churn-steal", 0xC0FFEE, 40, |rng: &mut Rng| {
+        let n_nodes = rng.range(2, 5);
+        let nodes: Vec<Node> = (0..n_nodes)
+            .map(|i| Node::fixed(&format!("n{i}"), rng.range_f64(0.2, 2.0)))
+            .collect();
+        let mut e = Engine::new(nodes, NetSim::new());
+        let mut live: Vec<JobId> = Vec::new();
+        for op in 0..35u64 {
+            match rng.below(5) {
+                0 => {
+                    let id = e.add_cpu_job(
+                        rng.below(n_nodes),
+                        rng.range_f64(0.1, 1.5),
+                        rng.range_f64(0.5, 20.0),
+                        op,
+                    );
+                    live.push(id);
+                }
+                1 if !live.is_empty() => {
+                    let id = live.remove(rng.below(live.len()));
+                    e.cancel_cpu_job(id);
+                }
+                2 => {
+                    e.set_node_capacity(rng.below(n_nodes), rng.range_f64(0.05, 1.0));
+                }
+                3 if !live.is_empty() => {
+                    let victim = *rng.choose(&live);
+                    let before = e.cpu_job(victim).unwrap().remaining;
+                    if before > 0.2 {
+                        let keep = before * rng.range_f64(0.1, 0.9);
+                        let stolen = e.split_cpu_job(victim, keep).unwrap();
+                        live.push(e.add_cpu_job(
+                            rng.below(n_nodes),
+                            rng.range_f64(0.1, 1.5),
+                            stolen,
+                            200 + op,
+                        ));
+                    }
+                }
+                _ => {
+                    let horizon = e.now + rng.range_f64(0.01, 3.0);
+                    e.set_timer(horizon, 1_000_000 + op);
+                    while let Some(ev) = e.step() {
+                        match ev {
+                            Event::Timer { tag } if tag == 1_000_000 + op => break,
+                            Event::JobDone { id, .. } => live.retain(|&x| x != id),
+                            _ => {}
+                        }
+                    }
+                }
+            }
+            // Full-rebuild oracle after every mutation: an epsilon step
+            // forces a re-level, then every node's stored rates must
+            // equal an independent from-scratch water-fill bit-for-bit.
+            settle(&mut e, &mut live, 2_000_000 + op);
+            let mut sorted = live.clone();
+            sorted.sort_unstable();
+            for node in 0..n_nodes {
+                let ids: Vec<JobId> = sorted
+                    .iter()
+                    .copied()
+                    .filter(|&id| e.cpu_job(id).unwrap().node == node)
+                    .collect();
+                let caps: Vec<f64> = ids.iter().map(|id| e.cpu_job(*id).unwrap().cap).collect();
+                let expect = water_fill(e.nodes[node].available_cores(e.now), &caps);
+                for (slot, id) in ids.iter().enumerate() {
+                    let got = e.cpu_job(*id).unwrap().rate();
+                    assert!(
+                        got.to_bits() == expect[slot].to_bits(),
+                        "node {node} job {id}: incremental {got} vs rebuild {}",
+                        expect[slot]
+                    );
+                }
+            }
+        }
+        for &id in &live {
+            e.cancel_cpu_job(id);
+        }
+        assert_eq!(e.num_cpu_jobs(), 0);
+        assert!(e.step().is_none());
+    });
+}
+
+#[test]
+fn random_steal_scenarios_complete_and_conserve_bytes() {
+    // End-to-end robustness fuzz: random capacity traces + random steal
+    // policies over a two-node map stage. Every run must terminate, keep
+    // the record's byte total exact, report sane task times, and leave
+    // the engine fully drained.
+    prop::check("steal-scenarios", 0x57EA1, 25, |rng: &mut Rng| {
+        let cap_b = rng.range_f64(0.3, 1.0);
+        let mut s = SessionBuilder::two_node(
+            Node::fixed("a", 1.0),
+            1.0,
+            Node::fixed("b", 1.0),
+            cap_b,
+        )
+        .with_params(SimParams {
+            sched_overhead: 0.0,
+            launch_latency: 0.0,
+            io_setup: 0.0,
+            ..Default::default()
+        })
+        .with_hdfs_uplink_bps(1e12)
+        .with_seed(rng.next_u64())
+        .build();
+        // A random capacity trace on node 1: throttle, maybe recover.
+        let t1 = rng.range_f64(2.0, 20.0);
+        let mult = rng.range_f64(0.05, 0.6);
+        let mut events = vec![(t1, 1usize, mult)];
+        if rng.below(2) == 0 {
+            events.push((t1 + rng.range_f64(5.0, 40.0), 1, 1.0));
+        }
+        s.install_dynamics(events);
+        let pol = StealPolicy {
+            max_frac: rng.range_f64(0.5, 0.95),
+            min_split_work: rng.range_f64(0.1, 1.0),
+            threshold_secs: rng.range_f64(0.0, 6.0),
+            io_penalty: rng.range_f64(0.0, 1.0),
+            cooldown: rng.range_f64(0.0, 2.0),
+        };
+        let data_mb = 20 + rng.below(60) as u64;
+        let file = s.hdfs.upload(data_mb * MB, data_mb * MB, &mut s.rng);
+        let weights = vec![1.0, cap_b];
+        let job = JobPlan {
+            name: "map".into(),
+            stages: vec![StagePlan {
+                input: StageInput::Hdfs { file },
+                policy: PartitionPolicy::Hemt(weights),
+                cpu_secs_per_byte: 1.0 / MB as f64, // 1 core-s per MB
+                output_ratio: 0.0,
+            }],
+        };
+        let rec = s.run_job_stealing(&job, Some(&pol));
+        let stage = &rec.stages[0];
+        let total: u64 = stage.tasks.iter().map(|t| t.bytes).sum();
+        assert_eq!(total, data_mb * MB, "byte total must survive splitting");
+        assert!(stage.tasks.len() >= 2);
+        for t in &stage.tasks {
+            assert!(t.executor < 2, "task finished on an unknown executor");
+            assert!(t.finished >= t.started - 1e-9, "negative task duration");
+        }
+        assert_eq!(s.engine.num_cpu_jobs(), 0, "leaked CPU jobs");
+        assert_eq!(s.engine.net.num_flows(), 0, "leaked flows");
+    });
+}
