@@ -1,0 +1,47 @@
+//! Stream-stealing comparison bench: the `hemt steal --streams`
+//! four-arm figure (Stream-Steal-HeMT vs CPU-only Steal-HeMT vs
+//! static-HeMT vs HomT on the network-bound testbed) timed through the
+//! sweep runner, serial baseline vs the machine's full pool.
+//!
+//! Writes `BENCH_stream_steal.json` (pooled) and
+//! `BENCH_stream_steal_serial.json` for the CI trajectory gate. The
+//! stream arm exercises the whole new path — per-flow delivered-byte
+//! tracking, `Engine::split_input_stream`, deterministic replica
+//! re-selection and the stage-loop stream-victim scans — so this bench
+//! is the end-to-end wall-clock trajectory of stream splitting.
+
+use hemt::bench_harness::time_and_report;
+use hemt::dynamics::{net_steal_comparison_spec, NET_STEAL_BASE_SEED, NET_STEAL_FAMILIES};
+use hemt::sweep::{session_cache_stats, SweepRunner};
+
+const ROUNDS: usize = 8;
+
+fn main() {
+    println!(
+        "== stream_steal: {} families x 4 policies x {ROUNDS} rounds ==",
+        NET_STEAL_FAMILIES.len()
+    );
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let serial = time_and_report("stream_steal_serial", 0, 3, || {
+        std::hint::black_box(
+            SweepRunner::new(1).run(&net_steal_comparison_spec(ROUNDS, NET_STEAL_BASE_SEED)),
+        );
+    });
+    let mut last = None;
+    let pooled = time_and_report("stream_steal", 0, 3, || {
+        last = Some(
+            SweepRunner::new(threads)
+                .run(&net_steal_comparison_spec(ROUNDS, NET_STEAL_BASE_SEED)),
+        );
+    });
+    let (hits, misses) = session_cache_stats();
+    println!(
+        "stream_steal_serial:    {} s\nstream_steal_pool({threads}): {} s  ({:.2}x)",
+        serial.pm(3),
+        pooled.pm(3),
+        serial.mean / pooled.mean
+    );
+    println!("session cache: {hits} hits / {misses} misses");
+    println!();
+    println!("{}", last.expect("pooled run happened").to_table());
+}

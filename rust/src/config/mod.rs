@@ -529,6 +529,8 @@ mod tests {
             threshold_secs: 2.0,
             io_penalty: 0.25,
             cooldown: 0.1,
+            steal_streams: true,
+            reissue_penalty: 0.2,
         });
         let back = ExperimentConfig::from_str(&c.to_json().pretty()).unwrap();
         assert_eq!(c, back);

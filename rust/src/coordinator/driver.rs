@@ -259,6 +259,10 @@ struct Attempt {
     /// hit the same block, the paper's Sec. 3 observation).
     pending_pieces: Vec<(crate::hdfs::BlockId, u64)>,
     flow_ids: Vec<crate::netsim::FlowId>,
+    /// The HDFS `(block, bytes)` piece the active flow is streaming (the
+    /// stream-steal scan's handle on *where* in the scan the victim is);
+    /// `None` for shuffle/cached inputs.
+    current_piece: Option<(crate::hdfs::BlockId, u64)>,
     job_id: Option<crate::sim::JobId>,
 }
 
@@ -284,8 +288,14 @@ struct TaskState {
     /// of the shrinking remainder.
     assigned_work: f64,
     /// Extra setup seconds before launch (the steal policy's re-home
-    /// I/O penalty; 0 for ordinary tasks).
+    /// I/O penalty for CPU carves, its replica re-issue penalty for
+    /// stream carves; 0 for ordinary tasks).
     extra_setup: f64,
+    /// `Some(datanode)`: this task re-reads a byte range carved off a
+    /// victim's in-flight stream, and its *first* read flow must come
+    /// from a replica other than the one the victim is streaming from
+    /// (deterministic re-selection via [`crate::hdfs::HdfsCluster::best_replica`]).
+    reissue_avoid: Option<usize>,
     /// Executor of the *winning* attempt (for records/caching/shuffle).
     executor: usize,
     dispatched: f64,
@@ -297,6 +307,40 @@ impl TaskState {
     fn running_attempts(&self) -> usize {
         self.attempts.iter().flatten().count()
     }
+}
+
+/// One stealable remainder, as ranked by `Session::try_steal`'s victim
+/// scan (most-behind projected tail first).
+#[derive(Debug, Clone, Copy)]
+enum VictimInfo {
+    /// A pure-CPU remainder (input fully drained): split via
+    /// [`Engine::split_cpu_job`].
+    Cpu {
+        jid: crate::sim::JobId,
+        remaining: f64,
+        victim_rate: f64,
+    },
+    /// An in-flight HDFS input stream: split via
+    /// [`Engine::split_input_stream`], the unread byte suffix re-issued
+    /// from a different replica.
+    Stream {
+        fid: crate::netsim::FlowId,
+        /// Block the active flow is streaming (replica re-selection key).
+        block: crate::hdfs::BlockId,
+        /// Total bytes of the active flow's piece.
+        piece_bytes: u64,
+        /// Whole bytes of the piece already committed to the victim.
+        committed: u64,
+        /// Unread bytes left in the active flow's piece.
+        flow_unread: u64,
+        /// Total unread bytes (active flow + pending pieces).
+        unread: u64,
+        /// The victim stream's current rate, bytes/s.
+        victim_bps: f64,
+        /// Datanode the victim is streaming from (`route[0]` reverse
+        /// lookup) — the replica the re-issue avoids.
+        victim_dn: Option<usize>,
+    },
 }
 
 impl Session {
@@ -452,6 +496,7 @@ impl Session {
                 stolen_work: None,
                 assigned_work: 0.0,
                 extra_setup: 0.0,
+                reissue_avoid: None,
                 executor: usize::MAX,
                 dispatched: 0.0,
                 started: 0.0,
@@ -533,7 +578,9 @@ impl Session {
                                 tag_of(KIND_FLOW, att, i),
                                 limit,
                             );
-                            st[i].attempts[att].as_mut().unwrap().flow_ids.push(fid);
+                            let a = st[i].attempts[att].as_mut().unwrap();
+                            a.flow_ids.push(fid);
+                            a.current_piece = Some((block, bytes));
                         } else {
                             unreachable!("pieces only exist for HDFS stages");
                         }
@@ -764,11 +811,17 @@ impl Session {
         *driver_free = driver_free.max(self.engine.now) + self.params.sched_overhead;
         let mut start_at = *driver_free + self.params.launch_latency;
         if task.stolen_work.is_some() {
-            // A stolen task reads no input of its own; it pays the steal
-            // policy's re-home penalty instead of the HDFS setup.
+            // A CPU-carve task reads no input of its own; it pays the
+            // steal policy's re-home penalty instead of the HDFS setup.
             start_at += task.extra_setup;
-        } else if matches!(stage.input, StageInput::Hdfs { .. }) {
-            start_at += self.params.io_setup;
+        } else {
+            if matches!(stage.input, StageInput::Hdfs { .. }) {
+                start_at += self.params.io_setup;
+            }
+            // A stream re-issue reads HDFS like any task and additionally
+            // pays the replica re-issue penalty (0 for ordinary tasks,
+            // leaving their launch time bit-identical).
+            start_at += task.extra_setup;
         }
         self.engine.set_timer(start_at, tag_of(KIND_LAUNCH, att, i));
     }
@@ -788,12 +841,27 @@ impl Session {
 
     /// Mid-stage work stealing (see [`crate::coordinator::stealing`]):
     /// while an executor is idle — a free slot and nothing pending it
-    /// could run — pick the most-behind running task whose remainder is
-    /// pure CPU, split its engine job under the policy (conserving work
-    /// exactly), and dispatch the carve as a new task bound to the
-    /// thief. Entirely deterministic: thieves are scanned in executor
-    /// order, victims tried in descending projected-tail order (index
-    /// tie-break), and every quantity derives from engine state.
+    /// could run — pick the most-behind running task, split its
+    /// remainder under the policy (conserving work and bytes exactly),
+    /// and dispatch the carve as a new task bound to the thief. Two
+    /// victim classes:
+    ///
+    /// * **pure CPU** — input fully drained: the engine job is split
+    ///   ([`Engine::split_cpu_job`]) and the carve re-homed with no input
+    ///   of its own (the PR 4 path, unchanged);
+    /// * **in-flight stream** (only with [`StealPolicy::steal_streams`],
+    ///   HDFS input stages): the victim's read plan is cut at the split
+    ///   point — its active flow truncated via
+    ///   [`Engine::split_input_stream`], pending pieces trimmed — and the
+    ///   thief re-reads the carved byte *suffix* from a different replica
+    ///   of the same block, with the matching share of CPU work moving
+    ///   along. Shuffle streams are not stealable: a mapper's output has
+    ///   no replicas to re-issue from.
+    ///
+    /// Entirely deterministic: thieves are scanned in executor order,
+    /// victims tried in descending projected-tail order (index
+    /// tie-break), and every quantity — including the re-issue replica —
+    /// derives from engine state, never from the session RNG.
     ///
     /// Returns `true` when the cooldown window blocked a scan — the
     /// caller parks the wake on a deferred re-check timer so the signal
@@ -814,6 +882,13 @@ impl Session {
             if self.engine.now + 1e-9 < *last_steal + pol.cooldown {
                 return true;
             }
+            // The stream scan reads flow rates; a piece chained by this
+            // tick's FlowDone handler has none yet. Re-levelling here is
+            // the identical arithmetic the next engine step would run
+            // (bit-identical by construction) and a no-op when clean.
+            if pol.steal_streams {
+                self.engine.net.recompute_rates();
+            }
             // Every idle executor — a free slot and nothing pending it
             // could run — gets a chance: a thief whose rate makes the
             // carve infeasible (or unprofitable) must not mask a
@@ -831,79 +906,304 @@ impl Session {
                     continue;
                 }
                 let thief_rate = self.effective_rate(thief);
-                // Victims: every running, single-attempt, input-drained
-                // task (not on the thief) past the tail threshold, tried
-                // most-behind first — one extreme victim too small to
-                // split must not mask a splittable straggler behind it.
-                let mut victims: Vec<(f64, usize, crate::sim::JobId, f64, f64)> = Vec::new();
+                // Victims: every running, single-attempt task (not on the
+                // thief) past the tail threshold, tried most-behind first
+                // — one extreme victim too small to split must not mask a
+                // splittable straggler behind it.
+                let mut victims: Vec<(f64, usize, VictimInfo)> = Vec::new();
                 for (i, t) in st.iter().enumerate() {
                     if t.phase != TaskPhase::Running || t.running_attempts() != 1 {
                         continue;
                     }
                     let Some(a) = t.attempts[0].as_ref() else { continue };
-                    if !a.launched
-                        || a.executor == thief
-                        || !a.flow_ids.is_empty()
-                        || !a.pending_pieces.is_empty()
-                    {
+                    if !a.launched || a.executor == thief {
                         continue;
                     }
-                    let Some(jid) = a.job_id else { continue };
-                    let Some(job) = self.engine.cpu_job(jid) else { continue };
-                    let remaining = job.remaining;
-                    let victim_rate = self.effective_rate(a.executor);
-                    let tail = if victim_rate > 0.0 {
-                        remaining / victim_rate
-                    } else {
-                        f64::INFINITY
-                    };
-                    if tail > pol.threshold_secs {
-                        victims.push((tail, i, jid, remaining, victim_rate));
+                    if a.flow_ids.is_empty() && a.pending_pieces.is_empty() {
+                        // Pure-CPU remainder (input drained): the PR 4
+                        // victim class, conditions unchanged.
+                        let Some(jid) = a.job_id else { continue };
+                        let Some(job) = self.engine.cpu_job(jid) else { continue };
+                        let remaining = job.remaining;
+                        let victim_rate = self.effective_rate(a.executor);
+                        let tail = if victim_rate > 0.0 {
+                            remaining / victim_rate
+                        } else {
+                            f64::INFINITY
+                        };
+                        if tail > pol.threshold_secs {
+                            victims.push((
+                                tail,
+                                i,
+                                VictimInfo::Cpu { jid, remaining, victim_rate },
+                            ));
+                        }
+                    } else if pol.steal_streams
+                        && matches!(stage.input, StageInput::Hdfs { .. })
+                        && a.flow_ids.len() == 1
+                        && t.range.is_some()
+                    {
+                        // Mid-read HDFS victim: one active flow (the
+                        // sequential scan) plus pending pieces.
+                        let Some((block, piece_bytes)) = a.current_piece else { continue };
+                        let fid = a.flow_ids[0];
+                        let Some(flow) = self.engine.net.flow(fid) else { continue };
+                        // Whole bytes already committed to the victim in
+                        // the current piece (covering what has landed).
+                        let committed =
+                            ((flow.delivered() / 8.0).ceil() as u64).min(piece_bytes);
+                        let flow_unread = piece_bytes - committed;
+                        let pending: u64 = a.pending_pieces.iter().map(|&(_, b)| b).sum();
+                        let unread = flow_unread + pending;
+                        if unread == 0 {
+                            continue;
+                        }
+                        let victim_bps = flow.rate / 8.0;
+                        let stream_tail = if victim_bps > 0.0 {
+                            unread as f64 / victim_bps
+                        } else {
+                            f64::INFINITY
+                        };
+                        let cpu_tail = match a.job_id.and_then(|j| self.engine.cpu_job(j)) {
+                            Some(job) => {
+                                let r = self.effective_rate(a.executor);
+                                if r > 0.0 {
+                                    job.remaining / r
+                                } else {
+                                    f64::INFINITY
+                                }
+                            }
+                            None => 0.0,
+                        };
+                        let tail = stream_tail.max(cpu_tail);
+                        if tail > pol.threshold_secs {
+                            let victim_dn = self.hdfs.datanode_of_uplink(flow.route[0]);
+                            victims.push((
+                                tail,
+                                i,
+                                VictimInfo::Stream {
+                                    fid,
+                                    block,
+                                    piece_bytes,
+                                    committed,
+                                    flow_unread,
+                                    unread,
+                                    victim_bps,
+                                    victim_dn,
+                                },
+                            ));
+                        }
                     }
                 }
                 victims.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
-                for &(_, vi, jid, remaining, victim_rate) in &victims {
-                    let Some((keep, stolen)) = pol.carve(remaining, victim_rate, thief_rate)
-                    else {
-                        continue;
-                    };
-                    if !pol.profitable(remaining, victim_rate, stolen, thief_rate) {
-                        continue;
+                for &(_, vi, info) in &victims {
+                    match info {
+                        VictimInfo::Cpu { jid, remaining, victim_rate } => {
+                            let Some((keep, stolen)) =
+                                pol.carve(remaining, victim_rate, thief_rate)
+                            else {
+                                continue;
+                            };
+                            if !pol.profitable(remaining, victim_rate, stolen, thief_rate) {
+                                continue;
+                            }
+                            let carved = self
+                                .engine
+                                .split_cpu_job(jid, keep)
+                                .expect("victim job is live");
+                            debug_assert!(
+                                carved.to_bits() == stolen.to_bits(),
+                                "engine carve must match the policy's: {carved} vs {stolen}"
+                            );
+                            // Bytes ride along in proportion to the carved
+                            // share of the task's *assigned* work — not of
+                            // the shrinking remainder — so the thief is
+                            // credited only with the bytes whose processing
+                            // it actually takes over (estimator observations
+                            // and downstream shuffle volumes stay honest;
+                            // the u64 move is exactly conserved).
+                            let assigned = st[vi].assigned_work.max(carved);
+                            let bytes_stolen = ((st[vi].bytes as f64)
+                                * (carved / assigned).min(1.0))
+                            .round() as u64;
+                            let bytes_stolen = bytes_stolen.min(st[vi].bytes);
+                            st[vi].bytes -= bytes_stolen;
+                            // Keep the HDFS range in lockstep with the
+                            // byte plan: a later speculative duplicate
+                            // must re-read only the bytes this task still
+                            // owns, and the stream-victim invariant
+                            // (range length == bytes) stays intact.
+                            if let Some((off, len)) = st[vi].range {
+                                st[vi].range = Some((off, len.saturating_sub(bytes_stolen)));
+                            }
+                            st[vi].assigned_work = (st[vi].assigned_work - carved).max(0.0);
+                            st.push(TaskState {
+                                bytes: bytes_stolen,
+                                bound_to: Some(thief),
+                                range: None,
+                                phase: TaskPhase::Pending,
+                                attempts: [None, None],
+                                work_noise: 1.0,
+                                stolen_work: Some(carved),
+                                assigned_work: carved,
+                                extra_setup: pol.io_penalty,
+                                reissue_avoid: None,
+                                executor: usize::MAX,
+                                dispatched: 0.0,
+                                started: 0.0,
+                                finished: 0.0,
+                            });
+                        }
+                        VictimInfo::Stream {
+                            fid,
+                            block,
+                            piece_bytes,
+                            committed,
+                            flow_unread,
+                            unread,
+                            victim_bps,
+                            victim_dn,
+                        } => {
+                            let StageInput::Hdfs { file } = &stage.input else {
+                                unreachable!("stream victims only exist for HDFS stages")
+                            };
+                            // Thief-side streaming estimate: the best
+                            // replica's uplink share if the thief joined
+                            // it now, against the thief's own downlink
+                            // share and its pipelined pull limit. An
+                            // estimate for the carve/profitability math
+                            // only — actual rates come from the max-min
+                            // solve once the re-issued flow exists.
+                            let dn = self
+                                .hdfs
+                                .best_replica(file, block, &self.engine.net, victim_dn);
+                            let up = self.hdfs.uplink(dn);
+                            let n_up = self.engine.net.active_flows_on_link(up) + 1;
+                            let up_share =
+                                self.engine.net.link(up).effective_capacity(n_up) / n_up as f64;
+                            let dl = self.exec_downlinks[self.executors[thief].node];
+                            let n_dl = self.engine.net.active_flows_on_link(dl) + 1;
+                            let dl_share =
+                                self.engine.net.link(dl).effective_capacity(n_dl) / n_dl as f64;
+                            let thief_bps = up_share
+                                .min(dl_share)
+                                .min(self.input_rate_limit(thief, stage.cpu_secs_per_byte))
+                                / 8.0;
+                            let Some((keep_u, stolen)) =
+                                pol.carve_stream(unread, victim_bps, thief_bps)
+                            else {
+                                continue;
+                            };
+                            // The re-issue's full launch-path cost: a
+                            // stream thief pays dispatch + launch +
+                            // io_setup before its first byte, on top of
+                            // the policy's re-issue penalty.
+                            let setup = self.params.sched_overhead
+                                + self.params.launch_latency
+                                + self.params.io_setup;
+                            if !pol.stream_profitable(unread, victim_bps, stolen, thief_bps, setup)
+                            {
+                                continue;
+                            }
+                            // Cut the victim's read plan after `keep_u`
+                            // more unread bytes; everything past the cut
+                            // is the thief's.
+                            if keep_u < flow_unread {
+                                // The cut lands inside the current piece:
+                                // truncate the active flow (delivered
+                                // bytes stay with the victim) and drop
+                                // every pending piece.
+                                let keep_total = committed + keep_u;
+                                let carved_bits = self
+                                    .engine
+                                    .split_input_stream(fid, (keep_total * 8) as f64)
+                                    .expect("victim stream is live");
+                                debug_assert!(
+                                    carved_bits.to_bits()
+                                        == (((piece_bytes - keep_total) * 8) as f64).to_bits(),
+                                    "engine stream carve must match the policy's: {carved_bits}"
+                                );
+                                let a = st[vi].attempts[0].as_mut().unwrap();
+                                a.pending_pieces.clear();
+                                // The piece the flow now covers ends at the
+                                // cut — a later scan of this victim must
+                                // not count the stolen tail as unread.
+                                a.current_piece = Some((block, keep_total));
+                            } else {
+                                // The cut lands in the pending pieces: the
+                                // active flow streams to completion; trim
+                                // the pending list at the cut point (one
+                                // piece may split — its stolen remainder
+                                // travels with the thief's byte range).
+                                let mut keep_left = keep_u - flow_unread;
+                                let a = st[vi].attempts[0].as_mut().unwrap();
+                                let mut kept = Vec::new();
+                                for (b, bytes) in a.pending_pieces.drain(..) {
+                                    if keep_left == 0 {
+                                        break;
+                                    }
+                                    let take = bytes.min(keep_left);
+                                    kept.push((b, take));
+                                    keep_left -= take;
+                                }
+                                a.pending_pieces = kept;
+                            }
+                            // Bytes and range move with the carved suffix
+                            // — exactly conserved in integer arithmetic
+                            // (`stolen` is computed once and both sides
+                            // adjust by the same u64), which keeps
+                            // estimator observations and downstream
+                            // shuffle volumes honest.
+                            let (off, len) = st[vi].range.expect("hdfs victim has a range");
+                            debug_assert_eq!(
+                                len, st[vi].bytes,
+                                "a stream victim's range tracks its byte plan"
+                            );
+                            debug_assert!(stolen < len);
+                            st[vi].range = Some((off, len - stolen));
+                            st[vi].bytes -= stolen;
+                            // The carved bytes' compute moves too, bounded
+                            // by what the victim's job actually has left —
+                            // compute that raced ahead of the stream has
+                            // nothing to give back.
+                            let w_stolen =
+                                stolen as f64 * stage.cpu_secs_per_byte * st[vi].work_noise;
+                            let victim_job = st[vi].attempts[0]
+                                .as_ref()
+                                .unwrap()
+                                .job_id
+                                .and_then(|j| self.engine.cpu_job(j).map(|job| (j, job.remaining)));
+                            if let Some((jid, r)) = victim_job {
+                                if w_stolen > 0.0 && r > w_stolen {
+                                    self.engine
+                                        .split_cpu_job(jid, r - w_stolen)
+                                        .expect("victim job is live");
+                                }
+                            }
+                            st[vi].assigned_work = (st[vi].assigned_work - w_stolen).max(0.0);
+                            let noise = st[vi].work_noise;
+                            st.push(TaskState {
+                                bytes: stolen,
+                                bound_to: Some(thief),
+                                range: Some((off + (len - stolen), stolen)),
+                                phase: TaskPhase::Pending,
+                                attempts: [None, None],
+                                // Task-intrinsic difficulty travels with
+                                // the data; the re-issued bytes cost the
+                                // thief what they would have cost the
+                                // victim.
+                                work_noise: noise,
+                                stolen_work: None,
+                                assigned_work: 0.0,
+                                extra_setup: pol.reissue_penalty,
+                                reissue_avoid: victim_dn,
+                                executor: usize::MAX,
+                                dispatched: 0.0,
+                                started: 0.0,
+                                finished: 0.0,
+                            });
+                        }
                     }
-                    let carved =
-                        self.engine.split_cpu_job(jid, keep).expect("victim job is live");
-                    debug_assert!(
-                        carved.to_bits() == stolen.to_bits(),
-                        "engine carve must match the policy's: {carved} vs {stolen}"
-                    );
-                    // Bytes ride along in proportion to the carved share
-                    // of the task's *assigned* work — not of the
-                    // shrinking remainder — so the thief is credited
-                    // only with the bytes whose processing it actually
-                    // takes over (estimator observations and downstream
-                    // shuffle volumes stay honest; the u64 move is
-                    // exactly conserved).
-                    let assigned = st[vi].assigned_work.max(carved);
-                    let bytes_stolen =
-                        ((st[vi].bytes as f64) * (carved / assigned).min(1.0)).round() as u64;
-                    let bytes_stolen = bytes_stolen.min(st[vi].bytes);
-                    st[vi].bytes -= bytes_stolen;
-                    st[vi].assigned_work = (st[vi].assigned_work - carved).max(0.0);
-                    st.push(TaskState {
-                        bytes: bytes_stolen,
-                        bound_to: Some(thief),
-                        range: None,
-                        phase: TaskPhase::Pending,
-                        attempts: [None, None],
-                        work_noise: 1.0,
-                        stolen_work: Some(carved),
-                        assigned_work: carved,
-                        extra_setup: pol.io_penalty,
-                        executor: usize::MAX,
-                        dispatched: 0.0,
-                        started: 0.0,
-                        finished: 0.0,
-                    });
                     *last_steal = self.engine.now;
                     self.try_dispatch(stage, st, free_slots, driver_free);
                     // With this thief now busy another executor may
@@ -936,6 +1236,7 @@ impl Session {
         let mut outstanding = 0usize;
         let mut flow_ids = Vec::new();
         let mut pending_pieces = Vec::new();
+        let mut current_piece = None;
         let mut job_id = None;
 
         // Input flows. A stolen task has none: the victim already read
@@ -951,7 +1252,17 @@ impl Session {
                     let mut pieces = file.read_ranges(off, len);
                     let (block, bytes) = pieces.remove(0);
                     pending_pieces = pieces;
-                    let dn = self.hdfs.pick_replica(file, block, &mut self.rng);
+                    current_piece = Some((block, bytes));
+                    // A stream re-issue re-selects its first replica
+                    // deterministically, away from the datanode the
+                    // victim is already streaming from; ordinary tasks
+                    // draw uniformly as always.
+                    let dn = match st[i].reissue_avoid {
+                        Some(avoid) => {
+                            self.hdfs.best_replica(file, block, &self.engine.net, Some(avoid))
+                        }
+                        None => self.hdfs.pick_replica(file, block, &mut self.rng),
+                    };
                     let route = vec![
                         self.hdfs.uplink(dn),
                         self.exec_downlinks[self.executors[exec].node],
@@ -1016,6 +1327,7 @@ impl Session {
             a.outstanding = outstanding;
             a.flow_ids = flow_ids;
             a.pending_pieces = pending_pieces;
+            a.current_piece = current_piece;
             a.job_id = job_id;
         }
         if outstanding == 0 {
@@ -1448,6 +1760,7 @@ mod tests {
             threshold_secs,
             io_penalty,
             cooldown: 0.0,
+            ..Default::default()
         }
     }
 
@@ -1536,6 +1849,7 @@ mod tests {
             threshold_secs: 4.0,
             io_penalty: 0.0,
             cooldown: 20.0,
+            ..Default::default()
         };
         let rec = s.run_job_stealing(&cached_job(vec![(5, 0), (50, 1)]), Some(&pol));
         let stage = &rec.stages[0];
@@ -1558,6 +1872,169 @@ mod tests {
         assert_eq!(rec.stages[0].tasks.len(), 2);
         let total: u64 = rec.stages[0].tasks.iter().map(|t| t.bytes).sum();
         assert_eq!(total, 50 * MB);
+    }
+
+    /// Two equal executors over a 2-datanode, replication-2 HDFS with
+    /// `uplink_bps` uplinks — every block lives on both datanodes, so a
+    /// stream re-issue always has a *different* replica to read from.
+    fn dual_replica_session(uplink_bps: f64) -> Session {
+        SessionBuilder {
+            nodes: vec![Node::fixed("a", 1.0), Node::fixed("b", 1.0)],
+            exec_cpus: vec![1.0, 1.0],
+            node_uplink_bps: 1e12,
+            node_downlink_bps: 1e12,
+            hdfs_datanodes: 2,
+            hdfs_replication: 2,
+            hdfs_uplink_bps: uplink_bps,
+            hdfs_serving_eta: 0.0,
+            params: zero_overheads(),
+            seed: 13,
+        }
+        .build()
+    }
+
+    /// A read-only (zero compute) single-task map over `mb` MB.
+    fn read_only_job(file: HdfsFile) -> JobPlan {
+        JobPlan {
+            name: "read".into(),
+            stages: vec![StagePlan {
+                input: StageInput::Hdfs { file },
+                policy: PartitionPolicy::EvenTasks(1),
+                cpu_secs_per_byte: 0.0,
+                output_ratio: 0.0,
+            }],
+        }
+    }
+
+    #[test]
+    fn stream_steal_reads_unread_range_from_the_other_replica_in_parallel() {
+        // 100 MB in one block replicated on both datanodes, 100 Mbps
+        // uplinks: alone, the read takes ~8.4 s. With stream stealing the
+        // idle executor takes ~half the unread range at launch and
+        // re-reads it from the *other* replica's uplink — two 100 Mbps
+        // pipes in parallel — finishing in a bit over 4 s. CPU-only
+        // stealing can do nothing here (the task is mid-read with zero
+        // CPU remainder) — exactly the network-bound blind spot.
+        let mut s = dual_replica_session(100e6);
+        let file = s.hdfs.upload(100 * MB, 100 * MB, &mut s.rng);
+        let pol = StealPolicy {
+            threshold_secs: 0.5,
+            io_penalty: 0.0,
+            cooldown: 0.0,
+            reissue_penalty: 0.0,
+            steal_streams: true,
+            ..Default::default()
+        };
+        let rec = s.run_job_stealing(&read_only_job(file), Some(&pol));
+        let stage = &rec.stages[0];
+        let t = stage.completion_time();
+        assert!(t < 6.0, "parallel replica re-read must beat 8 s: {t}");
+        assert!(t > 3.9, "two pipes cannot beat bits/2W: {t}");
+        assert!(stage.tasks.len() >= 2, "a stream-stolen task must appear");
+        let total: u64 = stage.tasks.iter().map(|t| t.bytes).sum();
+        assert_eq!(total, 100 * MB, "delivered + re-issued == file size");
+        assert_eq!(s.engine.net.num_flows(), 0);
+        assert_eq!(s.engine.num_cpu_jobs(), 0);
+        // The CPU-only policy on the identical scenario never finds a
+        // victim (the remainder is all stream): bit-identical to the
+        // plain run, still ~8 s.
+        let mut s2 = dual_replica_session(100e6);
+        let file2 = s2.hdfs.upload(100 * MB, 100 * MB, &mut s2.rng);
+        let cpu_only = StealPolicy { steal_streams: false, ..pol };
+        let with_cpu_only =
+            s2.run_job_stealing(&read_only_job(file2), Some(&cpu_only));
+        let mut s3 = dual_replica_session(100e6);
+        let file3 = s3.hdfs.upload(100 * MB, 100 * MB, &mut s3.rng);
+        let plain = s3.run_job(&read_only_job(file3));
+        assert_eq!(
+            with_cpu_only.stages[0].completion_time().to_bits(),
+            plain.stages[0].completion_time().to_bits(),
+            "CPU-only stealing must leave a mid-read stage untouched"
+        );
+        assert!((plain.stages[0].completion_time() - 8.39).abs() < 0.2);
+    }
+
+    #[test]
+    fn stream_steal_trims_pending_pieces_when_the_cut_lands_past_the_flow() {
+        // Many small blocks: the carve spans pending pieces, exercising
+        // the pending-trim branch (active flow left to stream, suffix of
+        // the piece list re-homed). Byte conservation is exact.
+        let mut s = dual_replica_session(80e6);
+        let file = s.hdfs.upload(96 * MB, 8 * MB, &mut s.rng);
+        let pol = StealPolicy {
+            threshold_secs: 0.5,
+            cooldown: 0.0,
+            reissue_penalty: 0.1,
+            steal_streams: true,
+            ..Default::default()
+        };
+        let rec = s.run_job_stealing(&read_only_job(file), Some(&pol));
+        let stage = &rec.stages[0];
+        let total: u64 = stage.tasks.iter().map(|t| t.bytes).sum();
+        assert_eq!(total, 96 * MB);
+        assert!(stage.tasks.len() >= 2);
+        let t = stage.completion_time();
+        // One 80 Mbps uplink alone takes 96*8.389/80 = ~10.1 s. Chained
+        // pieces re-pick replicas uniformly, so the two streams overlap
+        // on a datanode for some pieces — but with eta 0 the aggregate
+        // uplink throughput never drops below the single-reader rate, so
+        // splitting can only help, never hurt (beyond the 0.1 s penalty).
+        assert!(t < 10.3, "pending-piece steal must never lose to sequential: {t}");
+        assert_eq!(s.engine.net.num_flows(), 0);
+        assert_eq!(s.engine.num_cpu_jobs(), 0);
+    }
+
+    #[test]
+    fn stream_steal_moves_matching_cpu_work_with_the_bytes() {
+        // Compute-carrying stream steal: the thief's re-read arrives with
+        // the carved bytes' CPU work, and the victim's job shrinks by the
+        // same amount — the stage ends with all work accounted and the
+        // engine drained.
+        let mut s = dual_replica_session(100e6);
+        let file = s.hdfs.upload(100 * MB, 100 * MB, &mut s.rng);
+        let job = JobPlan {
+            name: "map".into(),
+            stages: vec![StagePlan {
+                input: StageInput::Hdfs { file },
+                policy: PartitionPolicy::EvenTasks(1),
+                // 0.02 s/MB: 2 core-s total — read-dominated but nonzero.
+                cpu_secs_per_byte: 0.02 / MB as f64,
+                output_ratio: 0.0,
+            }],
+        };
+        let pol = StealPolicy {
+            threshold_secs: 0.5,
+            cooldown: 0.0,
+            reissue_penalty: 0.0,
+            steal_streams: true,
+            ..Default::default()
+        };
+        let rec = s.run_job_stealing(&job, Some(&pol));
+        let stage = &rec.stages[0];
+        let total: u64 = stage.tasks.iter().map(|t| t.bytes).sum();
+        assert_eq!(total, 100 * MB);
+        let t = stage.completion_time();
+        assert!(t < 6.5, "split read + split compute: {t}");
+        assert_eq!(s.engine.net.num_flows(), 0);
+        assert_eq!(s.engine.num_cpu_jobs(), 0, "carved CPU must not leak");
+    }
+
+    #[test]
+    fn stream_stealing_runs_are_deterministic() {
+        let run = || {
+            let mut s = dual_replica_session(100e6);
+            let file = s.hdfs.upload(64 * MB, 8 * MB, &mut s.rng);
+            let pol = StealPolicy {
+                threshold_secs: 0.5,
+                cooldown: 0.2,
+                steal_streams: true,
+                ..Default::default()
+            };
+            s.run_job_stealing(&read_only_job(file), Some(&pol))
+                .stages[0]
+                .completion_time()
+        };
+        assert_eq!(run().to_bits(), run().to_bits());
     }
 
     #[test]

@@ -59,6 +59,19 @@ pub struct StealPolicy {
     /// Minimum simulated seconds between consecutive steals within one
     /// stage (thrash guard).
     pub cooldown: f64,
+    /// Whether *in-flight input streams* are stealable too: a victim
+    /// still mid-HDFS-read has its flow truncated at the split point
+    /// ([`crate::sim::Engine::split_input_stream`]) and the thief
+    /// re-reads the unread byte range from a different replica of the
+    /// same block. Off (the default), stealing reaches only pure-CPU
+    /// remainders — a task mid-read stays pinned until its stream drains
+    /// (the PR 4 behavior, bit-identical when this knob is off).
+    pub steal_streams: bool,
+    /// Extra setup seconds a stream re-issue pays on top of the ordinary
+    /// HDFS `io_setup` (replica re-selection, connection, first buffer of
+    /// a cold read — the per-reissue cost that keeps healthy streams from
+    /// being split for sport).
+    pub reissue_penalty: f64,
 }
 
 impl Default for StealPolicy {
@@ -69,6 +82,8 @@ impl Default for StealPolicy {
             threshold_secs: 4.0,
             io_penalty: 0.5,
             cooldown: 1.0,
+            steal_streams: false,
+            reissue_penalty: 0.3,
         }
     }
 }
@@ -102,6 +117,18 @@ impl StealPolicy {
             "cooldown must be non-negative: {}",
             self.cooldown
         );
+        assert!(
+            self.reissue_penalty >= 0.0 && self.reissue_penalty.is_finite(),
+            "reissue_penalty must be non-negative: {}",
+            self.reissue_penalty
+        );
+    }
+
+    /// A stream-stealing variant of this policy (the `--streams` arm):
+    /// identical knobs with in-flight input streams made stealable.
+    pub fn with_streams(mut self) -> StealPolicy {
+        self.steal_streams = true;
+        self
     }
 
     /// Split `remaining` core-seconds between the victim (`keep`) and
@@ -153,6 +180,69 @@ impl StealPolicy {
         stolen / thief_rate + self.io_penalty < victim_alone
     }
 
+    /// Split an unread input stream of `unread_bytes` between the victim
+    /// (`keep`) and the thief (`stolen`), rate-proportionally on the two
+    /// sides' projected *streaming* rates (bytes/s): the thief re-reads
+    /// the share its replica bandwidth earns, so both streams project to
+    /// drain together. The `min_split_work` floor applies in transfer
+    /// *seconds* on each side's own rate (the stream analogue of the
+    /// core-second floor — past it, per-reissue overhead dominates);
+    /// carves that would leave either side under the floor are refused.
+    /// Bytes are conserved exactly in integer arithmetic: `stolen` is
+    /// computed once and `keep = unread_bytes - stolen`.
+    pub fn carve_stream(
+        &self,
+        unread_bytes: u64,
+        victim_bps: f64,
+        thief_bps: f64,
+    ) -> Option<(u64, u64)> {
+        if unread_bytes == 0 || thief_bps <= 0.0 {
+            return None;
+        }
+        let total = victim_bps.max(0.0) + thief_bps;
+        let frac = (thief_bps / total).min(self.max_frac);
+        let stolen = ((unread_bytes as f64) * frac).floor() as u64;
+        let stolen = stolen.min(unread_bytes);
+        let keep = unread_bytes - stolen;
+        // Transfer-time floor on both sides (a rate-0 victim keeps only
+        // the already-delivered prefix, so its floor is waived).
+        if (stolen as f64) / thief_bps < self.min_split_work {
+            return None;
+        }
+        if victim_bps > 0.0 && (keep as f64) / victim_bps < self.min_split_work {
+            return None;
+        }
+        Some((keep, stolen))
+    }
+
+    /// Whether re-issuing `stolen_bytes` on a thief streaming at
+    /// `thief_bps` — paying the re-issue penalty plus `setup_secs`, the
+    /// launch-path costs a re-issued task actually incurs before its
+    /// first byte lands (driver dispatch, launch latency, HDFS
+    /// `io_setup`) — projects to finish before the victim would have
+    /// drained the *whole* unread range at its own streaming rate. The
+    /// stream profitability guard: without `setup_secs` a marginal steal
+    /// could pass the guard and still end the stage later than leaving
+    /// the stream whole.
+    pub fn stream_profitable(
+        &self,
+        unread_bytes: u64,
+        victim_bps: f64,
+        stolen_bytes: u64,
+        thief_bps: f64,
+        setup_secs: f64,
+    ) -> bool {
+        if thief_bps <= 0.0 {
+            return false;
+        }
+        let victim_alone = if victim_bps > 0.0 {
+            unread_bytes as f64 / victim_bps
+        } else {
+            f64::INFINITY
+        };
+        stolen_bytes as f64 / thief_bps + self.reissue_penalty + setup_secs < victim_alone
+    }
+
     pub fn to_json(&self) -> Value {
         json::obj(vec![
             ("max_frac", json::num(self.max_frac)),
@@ -160,11 +250,14 @@ impl StealPolicy {
             ("threshold_secs", json::num(self.threshold_secs)),
             ("io_penalty", json::num(self.io_penalty)),
             ("cooldown", json::num(self.cooldown)),
+            ("steal_streams", json::boolean(self.steal_streams)),
+            ("reissue_penalty", json::num(self.reissue_penalty)),
         ])
     }
 
     /// Parse from JSON; absent fields take the default policy's values,
-    /// so configs only name the knobs they tune.
+    /// so configs only name the knobs they tune (pre-stream configs parse
+    /// unchanged, with stream stealing off).
     pub fn from_json(v: &Value) -> Result<StealPolicy, String> {
         let d = StealPolicy::default();
         let f = |k: &str, dflt: f64| -> Result<f64, String> {
@@ -173,12 +266,18 @@ impl StealPolicy {
                 Some(x) => x.as_f64().ok_or_else(|| format!("steal.{k} must be a number")),
             }
         };
+        let steal_streams = match v.get("steal_streams") {
+            None => d.steal_streams,
+            Some(x) => x.as_bool().ok_or("steal.steal_streams must be a bool")?,
+        };
         Ok(StealPolicy {
             max_frac: f("max_frac", d.max_frac)?,
             min_split_work: f("min_split_work", d.min_split_work)?,
             threshold_secs: f("threshold_secs", d.threshold_secs)?,
             io_penalty: f("io_penalty", d.io_penalty)?,
             cooldown: f("cooldown", d.cooldown)?,
+            steal_streams,
+            reissue_penalty: f("reissue_penalty", d.reissue_penalty)?,
         })
     }
 }
@@ -290,9 +389,18 @@ mod tests {
             threshold_secs: 2.0,
             io_penalty: 0.1,
             cooldown: 0.25,
+            steal_streams: true,
+            reissue_penalty: 0.75,
         };
         let back = StealPolicy::from_json(&pol.to_json()).unwrap();
         assert_eq!(pol, back);
+        // Pre-stream configs (no stream knobs) parse with streams off.
+        let legacy = json::obj(vec![("max_frac", json::num(0.5))]);
+        let got = StealPolicy::from_json(&legacy).unwrap();
+        assert!(!got.steal_streams);
+        assert_eq!(got.reissue_penalty, StealPolicy::default().reissue_penalty);
+        let bad_flag = json::obj(vec![("steal_streams", json::num(1.0))]);
+        assert!(StealPolicy::from_json(&bad_flag).is_err());
         // Partial JSON: unnamed knobs take the defaults.
         let partial = json::obj(vec![("io_penalty", json::num(0.0))]);
         let got = StealPolicy::from_json(&partial).unwrap();
@@ -307,5 +415,59 @@ mod tests {
     #[should_panic(expected = "max_frac must be in (0,1)")]
     fn invalid_policy_fails_loudly() {
         StealPolicy { max_frac: 1.5, ..Default::default() }.assert_valid();
+    }
+
+    #[test]
+    #[should_panic(expected = "reissue_penalty must be non-negative")]
+    fn negative_reissue_penalty_fails_loudly() {
+        StealPolicy { reissue_penalty: -0.1, ..Default::default() }.assert_valid();
+    }
+
+    #[test]
+    fn carve_stream_is_rate_proportional_and_conserves_bytes() {
+        let pol = StealPolicy { max_frac: 0.9, min_split_work: 0.1, ..Default::default() };
+        // Equal streaming rates: a half/half split, bytes conserved in u64.
+        let (keep, stolen) = pol.carve_stream(1000, 50.0, 50.0).unwrap();
+        assert_eq!(stolen, 500);
+        assert_eq!(keep + stolen, 1000);
+        // A starved victim stream hits the max_frac cap, never 100%.
+        let (keep, stolen) = pol.carve_stream(1000, 0.0, 50.0).unwrap();
+        assert_eq!(stolen, 900);
+        assert_eq!(keep, 100);
+        // A dead thief earns nothing; an empty stream splits nothing.
+        assert!(pol.carve_stream(1000, 50.0, 0.0).is_none());
+        assert!(pol.carve_stream(0, 0.0, 50.0).is_none());
+    }
+
+    #[test]
+    fn carve_stream_enforces_transfer_time_floor_on_both_sides() {
+        let pol = StealPolicy { max_frac: 0.95, min_split_work: 4.0, ..Default::default() };
+        // 1000 B split evenly at 100 B/s leaves 5 s per side: allowed.
+        assert!(pol.carve_stream(1000, 100.0, 100.0).is_some());
+        // A fast victim shrinks the carve until the thief's re-read
+        // (250 B at 100 B/s = 2.5 s) undercuts the floor: refused.
+        assert!(pol.carve_stream(1000, 300.0, 100.0).is_none());
+        // Victim at rate 0 keeps only the delivered prefix: its floor is
+        // waived, the thief's still applies.
+        assert!(pol.carve_stream(1000, 0.0, 100.0).is_some());
+        assert!(pol.carve_stream(200, 0.0, 100.0).is_none(), "thief under floor");
+    }
+
+    #[test]
+    fn stream_profitability_guards_healthy_streams() {
+        let pol = StealPolicy { reissue_penalty: 2.0, ..Default::default() };
+        // Victim crawling at 10 B/s over 1000 B (100 s alone): re-reading
+        // 500 B at 100 B/s plus the penalty (7 s) wins.
+        assert!(pol.stream_profitable(1000, 10.0, 500, 100.0, 0.0));
+        // A healthy stream loses to the penalty.
+        assert!(!pol.stream_profitable(1000, 200.0, 500, 100.0, 0.0));
+        // Dead thief never profits; stalled victim always loses.
+        assert!(!pol.stream_profitable(1000, 10.0, 500, 0.0, 0.0));
+        assert!(pol.stream_profitable(1000, 0.0, 1000, 1.0, 0.0));
+        // Launch-path setup counts against marginal steals: 500 B at
+        // 100 B/s + 2 s penalty = 7 s vs 8 s alone passes with zero
+        // setup but must be refused once setup pushes it past 8 s.
+        assert!(pol.stream_profitable(1000, 125.0, 500, 100.0, 0.5));
+        assert!(!pol.stream_profitable(1000, 125.0, 500, 100.0, 1.5));
     }
 }

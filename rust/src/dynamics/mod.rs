@@ -463,6 +463,10 @@ enum Arm {
     /// Steal-HeMT: the OA loop *plus* mid-stage work stealing
     /// ([`crate::coordinator::stealing`]).
     Steal,
+    /// Stream-Steal-HeMT: Steal-HeMT with in-flight input streams also
+    /// stealable ([`StealPolicy::steal_streams`] — the unread byte range
+    /// re-issued from a different replica).
+    StreamSteal,
 }
 
 const ARMS: [(Arm, &str); 3] = [
@@ -476,6 +480,16 @@ const ARMS: [(Arm, &str); 3] = [
 const STEAL_ARMS: [(Arm, &str); 4] = [
     (Arm::Steal, "Steal-HeMT (split + steal)"),
     (Arm::Adaptive, "Adaptive-HeMT (OA loop)"),
+    (Arm::StaticHints, "static HeMT (launch hints)"),
+    (Arm::Homt, "HomT (8 even tasks)"),
+];
+
+/// The `hemt steal --streams` / `net_steal` arm set: stream-splitting
+/// stealing head-to-head against CPU-only stealing (plus the two
+/// non-stealing baselines) on the network-bound testbed.
+const NET_STEAL_ARMS: [(Arm, &str); 4] = [
+    (Arm::StreamSteal, "Stream-Steal-HeMT (streams + CPU)"),
+    (Arm::Steal, "Steal-HeMT (CPU only)"),
     (Arm::StaticHints, "static HeMT (launch hints)"),
     (Arm::Homt, "HomT (8 even tasks)"),
 ];
@@ -498,19 +512,50 @@ fn comparison_workload() -> WorkloadConfig {
     }
 }
 
-/// Run `rounds` closed-loop WordCount rounds of one (family, arm) cell;
-/// returns the per-round map-stage times. All randomness derives from
-/// `seed`; the session comes from the shared cache, so the three arms of
-/// a family start from bit-identical worlds.
-fn run_family_arm(family: &str, arm: Arm, rounds: usize, seed: u64) -> Vec<f64> {
+/// The network-bound testbed of the `net_steal` comparison: the same
+/// static-container pair behind *throttled* 200 Mbps datanode uplinks,
+/// so map stages are read-dominated — the regime where a macrotask's
+/// tail is an in-flight stream, not CPU.
+fn net_comparison_cluster() -> ClusterConfig {
+    let mut c = ClusterConfig::containers_1_and_04();
+    c.hdfs_uplink_mbps = 200.0;
+    c
+}
+
+/// A read-heavy WordCount round for the network-bound comparison: ~6x
+/// less compute per byte than [`comparison_workload`], more blocks (so
+/// replica re-selection has placements to choose from), sized so the
+/// 1.0-weighted executor streams for tens of simulated seconds.
+fn net_comparison_workload() -> WorkloadConfig {
+    WorkloadConfig {
+        kind: WorkloadKind::WordCount,
+        data_mb: 768,
+        block_mb: 128,
+        cpu_secs_per_mb: 10.0 / 1024.0,
+        iterations: 1,
+    }
+}
+
+/// Run `rounds` closed-loop WordCount rounds of one (family, arm) cell
+/// on an explicit testbed; returns the per-round map-stage times. All
+/// randomness derives from `seed`; the session comes from the shared
+/// cache, so every arm of a family starts from a bit-identical world.
+fn run_family_arm_in(
+    family: &str,
+    arm: Arm,
+    rounds: usize,
+    seed: u64,
+    cluster: &ClusterConfig,
+    wl: &WorkloadConfig,
+) -> Vec<f64> {
     let cfg = DynamicsConfig::preset(family).expect("known family");
-    let cluster = comparison_cluster();
-    let wl = comparison_workload();
-    let mut s = cached_session(&cluster, seed);
+    let mut s = cached_session(cluster, seed);
     let events = cfg.compile_events(s.engine.nodes.len(), seed);
     s.install_dynamics(events);
     let mut drv = AdaptiveDriver::new(0.25).with_hint_bootstrap();
     let mut steal_drv = StealingDriver::new(0.25, StealPolicy::default()).with_hint_bootstrap();
+    let mut stream_drv =
+        StealingDriver::new(0.25, StealPolicy::default().with_streams()).with_hint_bootstrap();
     let mut out = Vec::with_capacity(rounds);
     for _ in 0..rounds {
         let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
@@ -520,6 +565,9 @@ fn run_family_arm(family: &str, arm: Arm, rounds: usize, seed: u64) -> Vec<f64> 
                 workloads::wordcount_job(file, pol.clone(), pol, cpb)
             }),
             Arm::Steal => steal_drv.run_round(&mut s, |pol| {
+                workloads::wordcount_job(file, pol.clone(), pol, cpb)
+            }),
+            Arm::StreamSteal => stream_drv.run_round(&mut s, |pol| {
                 workloads::wordcount_job(file, pol.clone(), pol, cpb)
             }),
             Arm::StaticHints => {
@@ -534,6 +582,18 @@ fn run_family_arm(family: &str, arm: Arm, rounds: usize, seed: u64) -> Vec<f64> 
         out.push(rec.map_stage_time());
     }
     out
+}
+
+/// [`run_family_arm_in`] on the historic `hemt dynamics` testbed.
+fn run_family_arm(family: &str, arm: Arm, rounds: usize, seed: u64) -> Vec<f64> {
+    run_family_arm_in(
+        family,
+        arm,
+        rounds,
+        seed,
+        &comparison_cluster(),
+        &comparison_workload(),
+    )
 }
 
 /// The `hemt dynamics` figure: per program family (x), the per-round
@@ -600,6 +660,65 @@ pub fn steal_comparison_spec(rounds: usize, base_seed: u64) -> SweepSpec {
                         value: t,
                     })
                     .collect()
+            });
+        }
+    }
+    spec
+}
+
+/// The families the network-bound `net_steal` comparison runs: the two
+/// mid-stage-straggler regimes (sustained throttling, spot revocation) —
+/// diurnal and credit-cliff add nothing a read-dominated stage feels
+/// differently.
+pub const NET_STEAL_FAMILIES: &[&str] = &["markov", "spot"];
+
+/// Base seed of the `net_steal` comparison (disjoint from the
+/// [`COMPARISON_BASE_SEED`] ladder; all four arms of a family share
+/// their family's seed, trace and pristine session).
+pub const NET_STEAL_BASE_SEED: u64 = 99_000;
+
+/// The `hemt steal --streams` figure (`net_steal`): Stream-Steal-HeMT
+/// (in-flight input streams splittable, the unread byte range re-read
+/// from a different replica — [`StealPolicy::steal_streams`]) vs
+/// CPU-only Steal-HeMT vs static HeMT vs HomT, on the *network-bound*
+/// testbed ([`net_comparison_cluster`]) where map stages are
+/// read-dominated. CPU-only stealing is structurally blind there — a
+/// task mid-read is pinned until its stream drains, by which time its
+/// CPU remainder is nearly gone — so this figure isolates exactly what
+/// stream splitting buys. Same sharing guarantees as
+/// [`steal_comparison_spec`]: all four arms of a family share one
+/// seed/trace/session, bit-identical for any thread count.
+pub fn net_steal_comparison_spec(rounds: usize, base_seed: u64) -> SweepSpec {
+    assert!(rounds > 0, "need at least one round");
+    let mut spec = SweepSpec::new(
+        "Stream stealing: splitting in-flight reads vs CPU-only stealing \
+         on network-bound stages",
+        "capacity-program family",
+        "map stage time (s), per round",
+    );
+    let series: Vec<usize> = NET_STEAL_ARMS.iter().map(|(_, name)| spec.series(name)).collect();
+    for (fi, family) in NET_STEAL_FAMILIES.iter().enumerate() {
+        let seed = base_seed + fi as u64 * 10_000;
+        for (ai, &(arm, _)) in NET_STEAL_ARMS.iter().enumerate() {
+            let series = series[ai];
+            let family = family.to_string();
+            spec.sequence(move || {
+                run_family_arm_in(
+                    &family,
+                    arm,
+                    rounds,
+                    seed,
+                    &net_comparison_cluster(),
+                    &net_comparison_workload(),
+                )
+                .into_iter()
+                .map(|t| Sample {
+                    series,
+                    x: fi as f64,
+                    label: family.clone(),
+                    value: t,
+                })
+                .collect()
             });
         }
     }

@@ -578,6 +578,17 @@ pub fn dynamics_steal_spec() -> SweepSpec {
     )
 }
 
+/// `hemt steal --streams` / `hemt figure net_steal`: stream-splitting
+/// stealing (in-flight reads re-issued from a different replica) vs
+/// CPU-only stealing vs static HeMT vs HomT, on the network-bound
+/// testbed under spot/markov dynamics.
+pub fn net_steal_spec() -> SweepSpec {
+    crate::dynamics::net_steal_comparison_spec(
+        crate::dynamics::DEFAULT_ROUNDS,
+        crate::dynamics::NET_STEAL_BASE_SEED,
+    )
+}
+
 /// Round-by-round adaptation trajectory under Markov-modulated
 /// throttling (the dynamics analogue of Fig. 7).
 pub fn dynamics_markov_spec() -> SweepSpec {
@@ -611,6 +622,7 @@ pub fn spec_by_name(name: &str) -> Option<SweepSpec> {
         "dyn_markov" => Some(dynamics_markov_spec()),
         "dyn_spot" => Some(dynamics_spot_spec()),
         "steal" | "dyn_steal" => Some(dynamics_steal_spec()),
+        "net_steal" => Some(net_steal_spec()),
         _ => None,
     }
 }
@@ -624,7 +636,7 @@ pub fn by_name(name: &str) -> Option<Figure> {
 pub const ALL_FIGURES: &[&str] = &[
     "fig4", "fig5", "fig7", "fig8", "fig9", "fig10_12", "fig13", "fig14", "fig15",
     "fig17", "fig18", "headline", "extension", "dyn_compare", "dyn_markov", "dyn_spot",
-    "dyn_steal",
+    "dyn_steal", "net_steal",
 ];
 
 #[cfg(test)]

@@ -168,6 +168,40 @@ impl HdfsCluster {
     pub fn uplink(&self, d: DatanodeId) -> LinkId {
         self.uplinks[d]
     }
+
+    /// Reverse uplink lookup: which datanode serves over `link` (`None`
+    /// for non-HDFS links) — how a driver maps an in-flight read flow
+    /// back to the datanode it streams from.
+    pub fn datanode_of_uplink(&self, link: LinkId) -> Option<DatanodeId> {
+        self.uplinks.iter().position(|&l| l == link)
+    }
+
+    /// Deterministic replica *re*-selection for a stream re-issue: among
+    /// `block`'s replicas, pick the least-loaded uplink (fewest active
+    /// flows in `net`), preferring replicas other than `avoid` (the
+    /// datanode the victim is already streaming from) and breaking ties
+    /// by datanode id. Unlike [`HdfsCluster::pick_replica`] this draws no
+    /// randomness: a re-issue decision must be a pure function of engine
+    /// state so stealing runs stay bit-identical for any thread count.
+    /// Falls back to `avoid` itself only when it holds the sole replica.
+    pub fn best_replica(
+        &self,
+        file: &HdfsFile,
+        block: BlockId,
+        net: &NetSim,
+        avoid: Option<DatanodeId>,
+    ) -> DatanodeId {
+        *file.placement[block]
+            .iter()
+            .min_by_key(|&&d| {
+                (
+                    Some(d) == avoid,
+                    net.active_flows_on_link(self.uplinks[d]),
+                    d,
+                )
+            })
+            .expect("block has at least one replica")
+    }
 }
 
 /// Monte-Carlo check of the paper's Claim 2 probabilities against this
@@ -280,6 +314,39 @@ mod tests {
             assert!((p2_emp - p2).abs() < 0.01, "n={n} r={r}: p2 {p2_emp} vs {p2}");
             assert!(p1 >= p2 - 1e-12, "Claim 2 violated: n={n} r={r}");
         }
+    }
+
+    #[test]
+    fn best_replica_avoids_victim_and_prefers_idle_uplinks() {
+        let mut net = NetSim::new();
+        let cluster = HdfsCluster::build(&mut net, 4, 2, 64e6, 0.0);
+        let file = HdfsFile {
+            size_bytes: 2 << 20,
+            block_size: 1 << 20,
+            placement: vec![vec![1, 3], vec![2, 3]],
+        };
+        // Idle network: avoid the victim's datanode, tie-break lowest id.
+        assert_eq!(cluster.best_replica(&file, 0, &net, Some(1)), 3);
+        assert_eq!(cluster.best_replica(&file, 0, &net, Some(3)), 1);
+        assert_eq!(cluster.best_replica(&file, 0, &net, None), 1);
+        // Load the tie-break winner's uplink: selection moves off it.
+        net.add_flow(vec![cluster.uplink(2)], 1e6, 0);
+        assert_eq!(cluster.best_replica(&file, 1, &net, None), 3);
+        // The victim's replica is taken only when it is the sole one.
+        let solo = HdfsFile {
+            size_bytes: 1 << 20,
+            block_size: 1 << 20,
+            placement: vec![vec![2]],
+        };
+        assert_eq!(cluster.best_replica(&solo, 0, &net, Some(2)), 2);
+        // Reverse uplink lookup round-trips.
+        assert_eq!(net.num_links(), 4);
+        for d in 0..4 {
+            assert_eq!(cluster.datanode_of_uplink(cluster.uplink(d)), Some(d));
+        }
+        let mut net2 = net;
+        let foreign = net2.add_link("exec-down", 1e6);
+        assert_eq!(cluster.datanode_of_uplink(foreign), None);
     }
 
     #[test]

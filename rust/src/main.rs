@@ -39,11 +39,15 @@ fn usage() -> &'static str {
                                     closed-loop Adaptive-HeMT vs static-HeMT vs HomT
                                     under time-varying capacity (Markov throttling,
                                     spot outage, diurnal, credit cliff)
-  hemt steal [--rounds N] [--json] [--threads N]
+  hemt steal [--streams] [--rounds N] [--json] [--threads N]
                                     mid-stage work stealing: Steal-HeMT (running
                                     tasks split, remainder re-homed on idle nodes)
                                     vs Adaptive-HeMT vs static-HeMT vs HomT across
-                                    the same capacity-program families
+                                    the same capacity-program families. --streams
+                                    runs the network-bound comparison instead:
+                                    stream-splitting stealing (in-flight reads
+                                    re-issued from a different replica) vs
+                                    CPU-only stealing under spot/markov dynamics
   hemt bench-diff --baseline <dir> --new <dir> [--threshold F] [--update]
                                     diff BENCH_*.json medians against a committed
                                     baseline; exit 1 past the threshold (default 0.15)
@@ -239,40 +243,65 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
 /// credit cliff). All three arms of a family share one seed, hence one
 /// capacity trace; output is bit-identical for any thread count.
 fn cmd_dynamics(args: &[String]) -> Result<(), String> {
-    run_family_comparison(args, "dynamics comparison", 3, hemt::dynamics::comparison_spec)
+    run_family_comparison(
+        args,
+        "dynamics comparison",
+        3,
+        hemt::dynamics::COMPARISON_FAMILIES,
+        hemt::dynamics::COMPARISON_BASE_SEED,
+        hemt::dynamics::comparison_spec,
+    )
 }
 
 /// `hemt steal`: the mid-stage work-stealing comparison — Steal-HeMT
 /// (running tasks split on capacity events / idle nodes, the carved
 /// remainder re-homed — [`hemt::coordinator::stealing`]) vs
 /// Adaptive-HeMT vs static-HeMT vs HomT across the capacity-program
-/// families. All four arms of a family share one seed, hence one
+/// families. With `--streams`, the network-bound `net_steal` comparison
+/// instead: stream-splitting stealing (in-flight reads truncated, the
+/// unread range re-issued from a different replica) head-to-head with
+/// CPU-only stealing. All arms of a family share one seed, hence one
 /// capacity trace; output is bit-identical for any thread count.
 fn cmd_steal(args: &[String]) -> Result<(), String> {
-    run_family_comparison(
-        args,
-        "steal comparison",
-        4,
-        hemt::dynamics::steal_comparison_spec,
-    )
+    if args.iter().any(|a| a == "--streams") {
+        run_family_comparison(
+            args,
+            "stream-steal comparison",
+            4,
+            hemt::dynamics::NET_STEAL_FAMILIES,
+            hemt::dynamics::NET_STEAL_BASE_SEED,
+            hemt::dynamics::net_steal_comparison_spec,
+        )
+    } else {
+        run_family_comparison(
+            args,
+            "steal comparison",
+            4,
+            hemt::dynamics::COMPARISON_FAMILIES,
+            hemt::dynamics::COMPARISON_BASE_SEED,
+            hemt::dynamics::steal_comparison_spec,
+        )
+    }
 }
 
 /// Shared skeleton of the per-family policy comparisons (`hemt
-/// dynamics`, `hemt steal`): parse flags, run the spec, print the
-/// figure and the per-family winners.
+/// dynamics`, `hemt steal[ --streams]`): parse flags, run the spec,
+/// print the figure and the per-family winners.
 fn run_family_comparison(
     args: &[String],
     banner: &str,
     arms: usize,
+    families: &[&str],
+    base_seed: u64,
     spec_of: impl Fn(usize, u64) -> hemt::sweep::SweepSpec,
 ) -> Result<(), String> {
     let json = args.iter().any(|a| a == "--json");
     let runner = runner_from_args(args)?;
     let rounds = rounds_arg(args)?;
-    let spec = spec_of(rounds, hemt::dynamics::COMPARISON_BASE_SEED);
+    let spec = spec_of(rounds, base_seed);
     eprintln!(
         "{banner}: {} families x {arms} policies x {rounds} rounds over {} thread(s)",
-        hemt::dynamics::COMPARISON_FAMILIES.len(),
+        families.len(),
         runner.threads()
     );
     let fig = runner.run(&spec);
@@ -281,7 +310,7 @@ fn run_family_comparison(
         return Ok(());
     }
     println!("{}", fig.to_table());
-    print_family_winners(&fig, rounds);
+    print_family_winners(&fig, families, rounds);
     Ok(())
 }
 
@@ -304,9 +333,9 @@ fn rounds_arg(args: &[String]) -> Result<usize, String> {
 }
 
 /// Per-family verdict: which policy's mean round time wins.
-fn print_family_winners(fig: &hemt::metrics::Figure, rounds: usize) {
+fn print_family_winners(fig: &hemt::metrics::Figure, families: &[&str], rounds: usize) {
     println!("per-family winners (mean map-stage time over {rounds} rounds):");
-    for (fi, family) in hemt::dynamics::COMPARISON_FAMILIES.iter().enumerate() {
+    for (fi, family) in families.iter().enumerate() {
         let mut best: Option<(&str, f64)> = None;
         for s in &fig.series {
             if let Some(p) = s.points.iter().find(|p| p.x == fi as f64) {

@@ -93,6 +93,10 @@ pub struct Flow {
     pub route: Vec<LinkId>,
     /// Remaining volume, in bits.
     pub remaining: f64,
+    /// Total volume at creation (or after the last [`NetSim::truncate_flow`]),
+    /// in bits — `total - remaining` is the volume already delivered, the
+    /// quantity stream-splitting work stealing keys on.
+    pub total: f64,
     /// Opaque correlation tag owned by the driver.
     pub tag: u64,
     /// Per-flow rate cap (bits/s) — models receiver backpressure: a
@@ -101,6 +105,13 @@ pub struct Flow {
     pub limit: f64,
     /// Current max-min fair rate (bits/s); valid after `recompute_rates`.
     pub rate: f64,
+}
+
+impl Flow {
+    /// Bits already delivered to the receiver.
+    pub fn delivered(&self) -> f64 {
+        self.total - self.remaining
+    }
 }
 
 /// Reusable scratch buffers for the component water-filler (the hot path).
@@ -282,9 +293,40 @@ impl NetSim {
             self.mark_link_dirty(l);
         }
         self.flows
-            .insert(id, Flow { id, route, remaining: bits, tag, limit, rate: 0.0 });
+            .insert(id, Flow { id, route, remaining: bits, total: bits, tag, limit, rate: 0.0 });
         self.rates_dirty = true;
         id
+    }
+
+    /// Truncate a flow to `new_total_bits` of *total* volume, keeping
+    /// everything already delivered: the flow's remaining volume becomes
+    /// `new_total - delivered` and the carved-off unread tail
+    /// (`total - new_total` bits) is returned for the caller to re-issue
+    /// elsewhere (the stream-splitting work-stealing primitive — see
+    /// [`crate::sim::Engine::split_input_stream`]). `new_total` must not
+    /// undercut what was already delivered; truncating at exactly the
+    /// delivered volume leaves a zero-remaining flow that completes on
+    /// the next scan. The flow's links are marked dirty, so the next
+    /// [`NetSim::recompute_rates`] re-levels only the affected max-min
+    /// components — bit-identical to a full solve by construction (and
+    /// debug-asserted against it).
+    pub fn truncate_flow(&mut self, id: FlowId, new_total_bits: f64) -> Option<f64> {
+        let delivered = self.flows.get(&id)?.delivered();
+        let f = self.flows.get_mut(&id)?;
+        assert!(
+            new_total_bits >= delivered - 1e-6 && new_total_bits <= f.total,
+            "truncation must keep delivered volume: {new_total_bits} not in [{delivered}, {}]",
+            f.total
+        );
+        let carved = f.total - new_total_bits;
+        f.total = new_total_bits;
+        f.remaining = (new_total_bits - delivered).max(0.0);
+        let route = f.route.clone();
+        for l in route {
+            self.mark_link_dirty(l);
+        }
+        self.rates_dirty = true;
+        Some(carved)
     }
 
     pub fn remove_flow(&mut self, id: FlowId) -> Option<Flow> {
@@ -898,5 +940,72 @@ mod tests {
         let mut n = net_with(&[100.0]);
         n.add_flow(vec![0], 1.0, 0);
         n.advance(0.1);
+    }
+
+    #[test]
+    fn truncate_flow_conserves_delivered_plus_carved() {
+        // 1000 bits at 100 bps; after 3 s, 300 delivered. Truncating to
+        // 600 total carves exactly 400 and leaves 300 remaining — the
+        // conservation identity delivered + remaining + carved == total.
+        let mut n = net_with(&[100.0]);
+        let f = n.add_flow(vec![0], 1000.0, 7);
+        n.recompute_rates();
+        n.advance(3.0);
+        assert!((n.flow(f).unwrap().delivered() - 300.0).abs() < 1e-9);
+        let carved = n.truncate_flow(f, 600.0).unwrap();
+        assert!((carved - 400.0).abs() < 1e-9);
+        let fl = n.flow(f).unwrap();
+        assert!((fl.remaining - 300.0).abs() < 1e-9);
+        assert!((fl.delivered() + fl.remaining + carved - 1000.0).abs() < 1e-9);
+        // The truncated flow completes 3 s later (300 bits at 100 bps).
+        n.recompute_rates();
+        let (dt, id) = n.next_completion().unwrap();
+        assert_eq!(id, f);
+        assert!((dt - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn truncate_at_delivered_finishes_the_flow_now() {
+        let mut n = net_with(&[100.0]);
+        let f = n.add_flow(vec![0], 1000.0, 7);
+        n.recompute_rates();
+        n.advance(2.5);
+        let delivered = n.flow(f).unwrap().delivered();
+        let carved = n.truncate_flow(f, delivered).unwrap();
+        assert!((carved - 750.0).abs() < 1e-9);
+        assert_eq!(n.first_finished_flow(), Some(f));
+    }
+
+    #[test]
+    #[should_panic(expected = "truncation must keep delivered volume")]
+    fn truncate_below_delivered_is_rejected() {
+        let mut n = net_with(&[100.0]);
+        let f = n.add_flow(vec![0], 1000.0, 7);
+        n.recompute_rates();
+        n.advance(5.0);
+        n.truncate_flow(f, 100.0);
+    }
+
+    #[test]
+    fn truncation_relevels_only_the_affected_component() {
+        // Two disjoint single-link components; truncating a flow in one
+        // must leave the other's rate untouched and stay on the
+        // incremental path (debug builds additionally cross-check the
+        // solve against the full oracle).
+        let mut n = net_with(&[100.0, 60.0]);
+        let a0 = n.add_flow(vec![0], 1e4, 0);
+        let _a1 = n.add_flow(vec![0], 1e4, 1);
+        let b = n.add_flow(vec![1], 1e4, 2);
+        let _b1 = n.add_flow(vec![1], 1e4, 3);
+        let _b2 = n.add_flow(vec![1], 1e4, 4);
+        n.recompute_rates();
+        n.advance(1.0);
+        let rate_b = n.flow(b).unwrap().rate.to_bits();
+        n.stats = SolveStats::default();
+        n.truncate_flow(a0, 8e3).unwrap();
+        n.recompute_rates();
+        assert_eq!(n.flow(b).unwrap().rate.to_bits(), rate_b);
+        assert_eq!(n.stats.incremental_solves, 1);
+        assert_eq!(n.stats.full_solves, 0);
     }
 }

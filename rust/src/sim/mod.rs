@@ -271,9 +271,27 @@ impl Engine {
 
     /// Drain the recorded capacity events (empty when the tap is off or
     /// nothing fired since the last drain).
+    ///
+    /// Drain order is *stable by contract*: events come back sorted by
+    /// `(time, node)`, with same-`(time, node)` events kept in emission
+    /// order (the last one is the multiplier in force). Events recorded
+    /// during a same-tick split can otherwise interleave with completion
+    /// wakes in whatever order the driver's handlers ran, and a consumer
+    /// keying decisions on the drain sequence would go nondeterministic
+    /// under reordered drains. Recording order is already time-sorted
+    /// (the clock only moves forward — debug-asserted here), so the sort
+    /// only normalizes same-tick node order.
     pub fn take_capacity_events(&mut self) -> Vec<(f64, NodeId, f64)> {
         match self.capacity_tap.as_mut() {
-            Some(tap) => std::mem::take(tap),
+            Some(tap) => {
+                let mut evs = std::mem::take(tap);
+                debug_assert!(
+                    evs.windows(2).all(|w| w[0].0 <= w[1].0),
+                    "capacity tap recorded out of time order"
+                );
+                evs.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                evs
+            }
             None => Vec::new(),
         }
     }
@@ -303,6 +321,27 @@ impl Engine {
         let node = j.node;
         self.mark_node_dirty(node);
         Some(stolen)
+    }
+
+    /// Split a *running* input stream mid-flight: truncate flow `id` to
+    /// `keep_bits` of total volume — everything already delivered stays
+    /// with the receiver, the flow keeps streaming only up to `keep_bits`
+    /// — and return the carved unread tail (bits) for the caller to
+    /// re-issue as a fresh flow elsewhere (typically from a different
+    /// replica of the same HDFS block — the stream-stealing primitive,
+    /// the network dual of [`Engine::split_cpu_job`]).
+    ///
+    /// Volume is conserved by construction: the carve is computed once as
+    /// `total - keep_bits` and the flow's remaining volume becomes
+    /// exactly `keep_bits - delivered`. `keep_bits` at the current
+    /// delivered offset truncates the stream "here" — the victim's flow
+    /// completes immediately and the whole unread range moves. Only the
+    /// flow's own max-min components are re-levelled on the next step
+    /// (the netsim dirty-link path, debug-asserted against the full
+    /// solve). `None` when the flow is unknown (already completed or
+    /// cancelled).
+    pub fn split_input_stream(&mut self, id: FlowId, keep_bits: f64) -> Option<f64> {
+        self.net.truncate_flow(id, keep_bits)
     }
 
     /// Cancel a flow (speculative-execution loser kill).
@@ -1014,6 +1053,89 @@ mod tests {
         let mut e = Engine::new(one_node(), NetSim::new());
         let id = e.add_cpu_job(0, 1.0, 2.0, 0);
         e.split_cpu_job(id, 2.0);
+    }
+
+    #[test]
+    fn split_input_stream_moves_unread_tail_to_a_fresh_flow() {
+        // 1000 bits on a 100 bps link would finish at t=10; at t=4 we
+        // truncate at the current offset (400 delivered) and re-issue the
+        // 600-bit tail on a second link: the victim flow completes
+        // immediately, the re-issued flow runs 600/100 = 6 s in parallel.
+        let mut net = NetSim::new();
+        let l0 = net.add_link("up0", 100.0);
+        let l1 = net.add_link("up1", 100.0);
+        let mut e = Engine::new(one_node(), net);
+        let f = e.add_flow(vec![l0], 1000.0, 1);
+        e.set_timer(4.0, 99);
+        assert_eq!(e.step().unwrap(), Event::Timer { tag: 99 });
+        let delivered = e.net.flow(f).unwrap().delivered();
+        assert!((delivered - 400.0).abs() < 1e-9);
+        let carved = e.split_input_stream(f, delivered).unwrap();
+        assert!((carved - 600.0).abs() < 1e-9);
+        e.add_flow(vec![l1], carved, 2);
+        let evs = e.run_to_end();
+        assert_eq!(evs.len(), 2);
+        assert!(matches!(evs[0].1, Event::FlowDone { tag: 1, .. }));
+        assert!((evs[0].0 - 4.0).abs() < 1e-9, "victim completes at the split");
+        assert!(matches!(evs[1].1, Event::FlowDone { tag: 2, .. }));
+        assert!((evs[1].0 - 10.0).abs() < 1e-9, "tail re-read: {}", evs[1].0);
+    }
+
+    #[test]
+    fn split_input_stream_keeping_volume_past_offset_keeps_streaming() {
+        // Keep 700 of 1000 bits at t=4 (400 delivered): the victim
+        // streams 300 more bits (done at t=7) and the 300-bit carve
+        // re-issued on a parallel link finishes at the same instant —
+        // the parallel-replica win stream stealing exists for.
+        let mut net = NetSim::new();
+        let l0 = net.add_link("up0", 100.0);
+        let l1 = net.add_link("up1", 100.0);
+        let mut e = Engine::new(one_node(), net);
+        let f = e.add_flow(vec![l0], 1000.0, 1);
+        e.set_timer(4.0, 99);
+        e.step().unwrap();
+        let carved = e.split_input_stream(f, 700.0).unwrap();
+        assert!((carved - 300.0).abs() < 1e-9);
+        e.add_flow(vec![l1], carved, 2);
+        let evs = e.run_to_end();
+        assert_eq!(evs.len(), 2);
+        assert!((evs[0].0 - 7.0).abs() < 1e-9, "victim keeps streaming: {}", evs[0].0);
+        assert!((evs[1].0 - 7.0).abs() < 1e-9, "carve in parallel: {}", evs[1].0);
+    }
+
+    #[test]
+    fn split_of_unknown_stream_returns_none() {
+        let mut net = NetSim::new();
+        let l = net.add_link("up", 100.0);
+        let mut e = Engine::new(one_node(), net);
+        let f = e.add_flow(vec![l], 100.0, 1);
+        e.run_to_end();
+        assert!(e.split_input_stream(f, 50.0).is_none());
+    }
+
+    #[test]
+    fn capacity_tap_drains_in_stable_time_node_order() {
+        // Same-tick events on several nodes are recorded in whatever
+        // order the driver's handlers applied them; the drain contract
+        // sorts them by (time, node), keeping same-(time, node) events in
+        // emission order so the last multiplier recorded stays last.
+        let nodes = (0..3).map(|i| Node::fixed(&format!("n{i}"), 1.0)).collect();
+        let mut e = Engine::new(nodes, NetSim::new());
+        e.set_capacity_tap(true);
+        e.set_node_capacity(2, 0.5);
+        e.set_node_capacity(0, 0.25);
+        e.set_node_capacity(1, 0.75);
+        e.set_node_capacity(0, 0.9); // same tick, same node: after 0.25
+        assert_eq!(
+            e.take_capacity_events(),
+            vec![(0.0, 0, 0.25), (0.0, 0, 0.9), (0.0, 1, 0.75), (0.0, 2, 0.5)]
+        );
+        // Across ticks, time order dominates node order.
+        e.set_node_capacity(2, 0.1);
+        e.set_timer(1.0, 9);
+        e.step().unwrap();
+        e.set_node_capacity(0, 0.2);
+        assert_eq!(e.take_capacity_events(), vec![(0.0, 2, 0.1), (1.0, 0, 0.2)]);
     }
 
     #[test]

@@ -247,6 +247,15 @@ impl ProductSweepSpec {
                     "steal",
                     PolicyConfig::HemtSteal(crate::coordinator::stealing::StealPolicy::default()),
                 ),
+                // Appended after `steal` for the same reason: the
+                // stream-splitting variant, which also steals in-flight
+                // reads (unread ranges re-issued from another replica).
+                Named::new(
+                    "stream_steal",
+                    PolicyConfig::HemtSteal(
+                        crate::coordinator::stealing::StealPolicy::default().with_streams(),
+                    ),
+                ),
             ],
             granularities: vec![2, 8, 32],
             metric: Metric::MapStageTime,

@@ -408,6 +408,10 @@ pub fn s(x: &str) -> Value {
     Value::Str(x.to_string())
 }
 
+pub fn boolean(x: bool) -> Value {
+    Value::Bool(x)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

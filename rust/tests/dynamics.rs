@@ -5,8 +5,9 @@
 //! rebuild inside the engine on every re-level in these debug builds).
 
 use hemt::dynamics::{
-    comparison_spec, steal_comparison_spec, CapacityProgram, DynamicsConfig,
-    COMPARISON_BASE_SEED, COMPARISON_FAMILIES,
+    comparison_spec, net_steal_comparison_spec, steal_comparison_spec, CapacityProgram,
+    DynamicsConfig, COMPARISON_BASE_SEED, COMPARISON_FAMILIES, NET_STEAL_BASE_SEED,
+    NET_STEAL_FAMILIES,
 };
 use hemt::metrics::Figure;
 use hemt::sweep::{ProductSweepSpec, SweepRunner};
@@ -102,6 +103,74 @@ fn steal_comparison_is_bit_identical_across_thread_counts() {
             assert_eq!(a.stats.mean.to_bits(), b.stats.mean.to_bits(), "{}", s3.name);
         }
     }
+}
+
+#[test]
+fn net_steal_comparison_is_bit_identical_across_thread_counts() {
+    // The net_steal acceptance gate: the four-arm network-bound
+    // comparison (Stream-Steal-HeMT vs CPU-only Steal-HeMT vs static
+    // HeMT vs HomT) must not depend on sweep scheduling — stream splits,
+    // replica re-issues and all.
+    let make = || net_steal_comparison_spec(3, NET_STEAL_BASE_SEED);
+    let baseline = figure_bits(&SweepRunner::new(1).run(&make()));
+    for threads in [2usize, 8] {
+        let fig = SweepRunner::new(threads).run(&make());
+        assert_eq!(figure_bits(&fig), baseline, "threads={threads}");
+    }
+    // Structural golden: four policy arms, Stream-Steal leading, one
+    // point per network family, n = rounds, labels = family names.
+    let fig = SweepRunner::new(1).run(&make());
+    assert_eq!(fig.series.len(), 4);
+    assert!(
+        fig.series[0].name.starts_with("Stream-Steal-HeMT"),
+        "lead series is the stream arm: {}",
+        fig.series[0].name
+    );
+    assert!(
+        fig.series[1].name.starts_with("Steal-HeMT"),
+        "second series is the CPU-only arm: {}",
+        fig.series[1].name
+    );
+    for s in &fig.series {
+        assert_eq!(s.points.len(), NET_STEAL_FAMILIES.len(), "{}", s.name);
+        for (fi, p) in s.points.iter().enumerate() {
+            assert_eq!(p.label, NET_STEAL_FAMILIES[fi]);
+            assert_eq!(p.stats.n, 3);
+            assert!(p.stats.mean > 1.0 && p.stats.mean < 10_000.0);
+        }
+    }
+}
+
+#[test]
+fn stream_stealing_beats_cpu_only_stealing_on_network_bound_stages() {
+    // The PR's acceptance criterion: on the network-bound testbed under
+    // the spot/markov dynamics, stream-splitting stealing must strictly
+    // improve mean map-stage time over CPU-only stealing on at least one
+    // family — a task mid-read is invisible to CPU-only stealing, and in
+    // a read-dominated stage that blind spot is most of the stage — and
+    // must never lose materially on any family (the profitability and
+    // floor guards).
+    let fig = SweepRunner::new(2).run(&net_steal_comparison_spec(8, NET_STEAL_BASE_SEED));
+    let stream = hemt::dynamics::family_means(&fig, "Stream-Steal-HeMT (streams + CPU)");
+    let cpu_only = hemt::dynamics::family_means(&fig, "Steal-HeMT (CPU only)");
+    assert_eq!(stream.len(), NET_STEAL_FAMILIES.len());
+    assert_eq!(cpu_only.len(), NET_STEAL_FAMILIES.len());
+    let mut strictly_better = 0usize;
+    for (family, s) in &stream {
+        let c = cpu_only.iter().find(|(f, _)| f == family).unwrap().1;
+        if *s < c {
+            strictly_better += 1;
+        }
+        assert!(
+            *s <= c * 1.05,
+            "{family}: stream stealing {s:.1}s regressed vs CPU-only {c:.1}s"
+        );
+    }
+    assert!(
+        strictly_better >= 1,
+        "stream stealing must strictly win on at least one network-bound family: \
+         stream {stream:?} vs cpu-only {cpu_only:?}"
+    );
 }
 
 #[test]

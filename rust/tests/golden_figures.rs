@@ -268,20 +268,31 @@ fn steal_enabled_product_is_bit_identical_across_thread_counts() {
 }
 
 #[test]
-fn dynamic_regimes_preset_carries_the_steal_policy() {
-    // The shipped preset now sweeps Steal-HeMT as a first-class policy
-    // column; its JSON round-trips and the historic cells kept their
-    // seeds (the steal column was appended, never interleaved).
+fn dynamic_regimes_preset_carries_the_steal_policy_columns() {
+    // The shipped preset sweeps Steal-HeMT and Stream-Steal-HeMT as
+    // first-class policy columns; its JSON round-trips and the historic
+    // cells kept their seeds (both steal columns were appended in order,
+    // never interleaved).
     use hemt::config::PolicyConfig;
     use hemt::sweep::ProductSweepSpec;
     let p = ProductSweepSpec::dynamic_regimes();
-    assert_eq!(p.policies.len(), 3);
+    assert_eq!(p.policies.len(), 4);
     assert_eq!(p.policies[2].name, "steal");
-    assert!(matches!(p.policies[2].value, PolicyConfig::HemtSteal(_)));
-    assert!(!p.policies[2].value.granularity_sensitive());
+    assert_eq!(p.policies[3].name, "stream_steal");
+    for pol in &p.policies[2..] {
+        assert!(matches!(pol.value, PolicyConfig::HemtSteal(_)));
+        assert!(!pol.value.granularity_sensitive());
+    }
+    match (&p.policies[2].value, &p.policies[3].value) {
+        (PolicyConfig::HemtSteal(cpu), PolicyConfig::HemtSteal(stream)) => {
+            assert!(!cpu.steal_streams, "the historic steal column stays CPU-only");
+            assert!(stream.steal_streams, "the appended column splits streams");
+        }
+        _ => unreachable!(),
+    }
     // 5 dynamics x 1 cluster x 1 workload x (homt@3 granularities +
-    // hemt + steal).
-    assert_eq!(p.num_cells(), 5 * (3 + 1 + 1));
+    // hemt + steal + stream_steal).
+    assert_eq!(p.num_cells(), 5 * (3 + 1 + 1 + 1));
     let back = ProductSweepSpec::from_str(&p.to_json().pretty()).unwrap();
     assert_eq!(p, back);
 }

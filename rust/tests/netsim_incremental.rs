@@ -133,6 +133,76 @@ fn incremental_matches_full_solve_under_random_churn() {
 }
 
 #[test]
+fn incremental_matches_full_solve_under_truncation_churn() {
+    // The stream-splitting churn: random flow truncations (the
+    // work-stealing `split_input_stream` path) interleaved with adds,
+    // removes and capacity changes. Every truncation must leave the
+    // incrementally maintained rates bit-identical to a forced full
+    // solve and to a from-scratch rebuild, and must conserve volume
+    // (delivered + remaining + carved == pre-truncation total). Plain
+    // asserts, so the oracle survives the release test leg.
+    prop::check("netsim-truncate-vs-full", 0x7123CA7, 30, |rng: &mut Rng| {
+        let mut net = NetSim::new();
+        let links = build_links(&mut net, rng);
+        let mut live: Vec<u64> = Vec::new();
+        for step in 0..90 {
+            match rng.below(10) {
+                0..=4 => {
+                    let route = random_route(rng);
+                    let bits = rng.range_f64(100.0, 1e6);
+                    live.push(net.add_flow(route, bits, step));
+                }
+                5..=6 if !live.is_empty() => {
+                    // The op under test: truncate a live flow somewhere in
+                    // its unread tail and re-issue the carve as a fresh
+                    // flow on a random route (the replica re-read).
+                    let id = *live.get(rng.below(live.len())).unwrap();
+                    let f = net.flow(id).unwrap();
+                    let (delivered, remaining, total) = (f.delivered(), f.remaining, f.total);
+                    if remaining > 1.0 {
+                        let keep = delivered + remaining * rng.range_f64(0.0, 0.95);
+                        let carved = net.truncate_flow(id, keep).unwrap();
+                        let f = net.flow(id).unwrap();
+                        assert!(
+                            (f.delivered() + f.remaining + carved - total).abs()
+                                <= total * 1e-9 + 1e-9,
+                            "truncation lost volume: {} + {} + {carved} vs {total}",
+                            f.delivered(),
+                            f.remaining
+                        );
+                        if carved > 1.0 {
+                            live.push(net.add_flow(random_route(rng), carved, 1_000 + step));
+                        }
+                    }
+                }
+                7..=8 if !live.is_empty() => {
+                    let id = live.swap_remove(rng.below(live.len()));
+                    net.remove_flow(id).expect("live flow");
+                }
+                _ => {
+                    let l = links[rng.below(links.len())];
+                    net.set_link_capacity(l, rng.range_f64(50.0, 1000.0));
+                }
+            }
+            net.recompute_rates();
+            // Let some volume actually drain so truncations meet real
+            // delivered offsets, then retire finished flows.
+            net.advance(rng.range_f64(0.0, 0.5));
+            for id in net.finished_flows() {
+                net.remove_flow(id);
+                live.retain(|&x| x != id);
+            }
+            net.recompute_rates();
+            let mut full = net.clone();
+            full.recompute_rates_full();
+            assert_rates_bit_identical(&net, &full, "truncation churn vs full clone");
+            let fresh = rebuild(&net);
+            assert_rates_bit_identical(&net, &fresh, "truncation churn vs rebuild");
+        }
+    });
+}
+
+#[test]
 fn incremental_engine_takes_both_paths() {
     // Construct the two regimes explicitly so both solver paths are
     // provably exercised (the random property above checks correctness

@@ -127,6 +127,7 @@ fn carve_never_undercuts_min_split_floor() {
             threshold_secs: 0.0,
             io_penalty: 0.0,
             cooldown: 0.0,
+            ..Default::default()
         };
         let remaining = rng.range_f64(0.0, 20.0);
         let victim_rate = rng.range_f64(0.0, 1.5);
@@ -296,6 +297,216 @@ fn capacity_churn_with_steals_matches_full_rebuild_every_step() {
 }
 
 #[test]
+fn random_stream_truncations_conserve_volume() {
+    // Engine-level stream-split conservation: under random advances,
+    // truncations and re-issues on a shared link, every flow keeps the
+    // identity delivered + remaining == total, and the global volume
+    // (delivered + remaining across flows, plus carves not yet
+    // re-issued) never drifts from what was injected.
+    prop::check("stream-truncate-conservation", 0xF10B, 40, |rng: &mut Rng| {
+        let mut net = NetSim::new();
+        let l0 = net.add_link("up0", rng.range_f64(50.0, 500.0));
+        let l1 = net.add_link("up1", rng.range_f64(50.0, 500.0));
+        let mut injected = 0.0f64;
+        let mut live: Vec<u64> = Vec::new();
+        for op in 0..30u64 {
+            match rng.below(3) {
+                0 => {
+                    let bits = rng.range_f64(100.0, 5_000.0);
+                    injected += bits;
+                    let link = if rng.below(2) == 0 { l0 } else { l1 };
+                    live.push(net.add_flow(vec![link], bits, op));
+                }
+                1 if !live.is_empty() => {
+                    let victim = *rng.choose(&live);
+                    let f = net.flow(victim).unwrap();
+                    let (delivered, remaining) = (f.delivered(), f.remaining);
+                    if remaining > 1.0 {
+                        // Keep a random slice of the unread tail; re-issue
+                        // the carve on a random link (the replica re-read).
+                        let keep = delivered + remaining * rng.range_f64(0.0, 0.9);
+                        let carved = net.truncate_flow(victim, keep).unwrap();
+                        let f = net.flow(victim).unwrap();
+                        assert!(
+                            (f.delivered() + f.remaining - f.total).abs() <= f.total * 1e-12 + 1e-9,
+                            "per-flow identity broke: {} + {} vs {}",
+                            f.delivered(),
+                            f.remaining,
+                            f.total
+                        );
+                        let link = if rng.below(2) == 0 { l0 } else { l1 };
+                        if carved > 0.0 {
+                            live.push(net.add_flow(vec![link], carved, 100 + op));
+                        }
+                    }
+                }
+                _ => {
+                    net.recompute_rates();
+                    net.advance(rng.range_f64(0.01, 2.0));
+                    for id in net.finished_flows() {
+                        let f = net.remove_flow(id).unwrap();
+                        // A finished flow delivered its whole (possibly
+                        // truncated) volume; keep the ledger whole.
+                        injected -= f.total;
+                        live.retain(|&x| x != id);
+                    }
+                }
+            }
+            let outstanding: f64 = live
+                .iter()
+                .map(|&id| {
+                    let f = net.flow(id).unwrap();
+                    f.delivered() + f.remaining
+                })
+                .sum();
+            assert!(
+                (outstanding - injected).abs() <= injected.abs() * 1e-9 + 1e-6,
+                "volume drifted: {outstanding} vs injected {injected}"
+            );
+        }
+    });
+}
+
+#[test]
+fn zero_penalty_stream_splits_match_split_free_oracle() {
+    // On a single shared datanode uplink with no concurrency penalty and
+    // zero per-task overheads, splitting in-flight streams (re-issues
+    // necessarily come from the same uplink) cannot change the stage's
+    // drain time: the uplink moves the same bits either way. The stream
+    // analogue of the zero-penalty CPU split oracle above.
+    prop::check("zero-penalty-stream-oracle", 0x57E2, 15, |rng: &mut Rng| {
+        let uplink = rng.range_f64(4e7, 2e8);
+        let data_mb = 20 + rng.below(40) as u64;
+        let block_mb = (data_mb / 3).max(1);
+        let run = |steal: Option<&StealPolicy>| -> (f64, u64, usize) {
+            let mut s = SessionBuilder {
+                nodes: vec![Node::fixed("a", 1.0), Node::fixed("b", 1.0)],
+                exec_cpus: vec![1.0, 1.0],
+                node_uplink_bps: 1e12,
+                node_downlink_bps: 1e12,
+                hdfs_datanodes: 1,
+                hdfs_replication: 1,
+                hdfs_uplink_bps: uplink,
+                hdfs_serving_eta: 0.0,
+                params: SimParams {
+                    sched_overhead: 0.0,
+                    launch_latency: 0.0,
+                    io_setup: 0.0,
+                    ..Default::default()
+                },
+                seed: 7,
+            }
+            .build();
+            let file = s.hdfs.upload(data_mb * MB, block_mb * MB, &mut s.rng);
+            let job = JobPlan {
+                name: "map".into(),
+                stages: vec![StagePlan {
+                    input: StageInput::Hdfs { file },
+                    policy: PartitionPolicy::EvenTasks(1),
+                    cpu_secs_per_byte: 0.0,
+                    output_ratio: 0.0,
+                }],
+            };
+            let rec = s.run_job_stealing(&job, steal);
+            let stage = &rec.stages[0];
+            let total: u64 = stage.tasks.iter().map(|t| t.bytes).sum();
+            assert_eq!(s.engine.net.num_flows(), 0, "leaked flows");
+            assert_eq!(s.engine.num_cpu_jobs(), 0, "leaked jobs");
+            (stage.completion_time(), total, stage.tasks.len())
+        };
+        let (oracle, bytes_plain, _) = run(None);
+        let pol = StealPolicy {
+            max_frac: rng.range_f64(0.3, 0.95),
+            min_split_work: rng.range_f64(0.05, 0.5),
+            threshold_secs: 0.0,
+            io_penalty: 0.0,
+            cooldown: 0.0,
+            steal_streams: true,
+            reissue_penalty: 0.0,
+        };
+        let (split, bytes_split, n_tasks) = run(Some(&pol));
+        assert_eq!(bytes_plain, data_mb * MB);
+        assert_eq!(bytes_split, data_mb * MB, "stream splits must conserve bytes");
+        assert!(n_tasks >= 2, "the idle executor must split the stream");
+        assert!(
+            (split - oracle).abs() < 1e-6 * oracle.max(1.0) + 1e-6,
+            "stream splits on one uplink moved the drain: {split} vs {oracle}"
+        );
+    });
+}
+
+#[test]
+fn random_stream_steal_scenarios_conserve_bytes_across_replica_reissues() {
+    // End-to-end fuzz of the stream-splitting path: random capacity
+    // traces, random stream policies, random block layouts and random
+    // replica placements (replication 2 over 4 datanodes — every
+    // re-issue re-selects a replica) over a two-node read-heavy map
+    // stage. Every run must terminate, conserve the record's byte total
+    // exactly (delivered prefix + re-issued suffixes == file size),
+    // report sane task times, and leave the engine fully drained.
+    prop::check("stream-steal-scenarios", 0x57E3, 20, |rng: &mut Rng| {
+        let cap_b = rng.range_f64(0.3, 1.0);
+        let mut s = SessionBuilder::two_node(
+            Node::fixed("a", 1.0),
+            1.0,
+            Node::fixed("b", 1.0),
+            cap_b,
+        )
+        .with_params(SimParams {
+            sched_overhead: 0.0,
+            launch_latency: 0.0,
+            io_setup: 0.0,
+            ..Default::default()
+        })
+        .with_hdfs_uplink_bps(rng.range_f64(5e7, 4e8))
+        .with_seed(rng.next_u64())
+        .build();
+        let t1 = rng.range_f64(1.0, 15.0);
+        let mult = rng.range_f64(0.05, 0.6);
+        let mut events = vec![(t1, 1usize, mult)];
+        if rng.below(2) == 0 {
+            events.push((t1 + rng.range_f64(5.0, 40.0), 1, 1.0));
+        }
+        s.install_dynamics(events);
+        let pol = StealPolicy {
+            max_frac: rng.range_f64(0.5, 0.95),
+            min_split_work: rng.range_f64(0.1, 1.0),
+            threshold_secs: rng.range_f64(0.0, 6.0),
+            io_penalty: rng.range_f64(0.0, 1.0),
+            cooldown: rng.range_f64(0.0, 2.0),
+            steal_streams: true,
+            reissue_penalty: rng.range_f64(0.0, 1.0),
+        };
+        let data_mb = 24 + rng.below(60) as u64;
+        let block_mb = 4 + rng.below(8) as u64;
+        let file = s.hdfs.upload(data_mb * MB, block_mb * MB, &mut s.rng);
+        let weights = vec![1.0, cap_b];
+        let job = JobPlan {
+            name: "map".into(),
+            stages: vec![StagePlan {
+                input: StageInput::Hdfs { file },
+                policy: PartitionPolicy::Hemt(weights),
+                // Read-heavy: a fraction of a core-second per MB, so the
+                // stream — not the CPU — is each task's tail.
+                cpu_secs_per_byte: rng.range_f64(0.02, 0.3) / MB as f64,
+                output_ratio: 0.0,
+            }],
+        };
+        let rec = s.run_job_stealing(&job, Some(&pol));
+        let stage = &rec.stages[0];
+        let total: u64 = stage.tasks.iter().map(|t| t.bytes).sum();
+        assert_eq!(total, data_mb * MB, "byte total must survive stream splitting");
+        assert!(stage.tasks.len() >= 2);
+        for t in &stage.tasks {
+            assert!(t.executor < 2, "task finished on an unknown executor");
+            assert!(t.finished >= t.started - 1e-9, "negative task duration");
+        }
+        assert_eq!(s.engine.num_cpu_jobs(), 0, "leaked CPU jobs");
+        assert_eq!(s.engine.net.num_flows(), 0, "leaked flows");
+    });
+}
+
+#[test]
 fn random_steal_scenarios_complete_and_conserve_bytes() {
     // End-to-end robustness fuzz: random capacity traces + random steal
     // policies over a two-node map stage. Every run must terminate, keep
@@ -332,6 +543,7 @@ fn random_steal_scenarios_complete_and_conserve_bytes() {
             threshold_secs: rng.range_f64(0.0, 6.0),
             io_penalty: rng.range_f64(0.0, 1.0),
             cooldown: rng.range_f64(0.0, 2.0),
+            ..Default::default()
         };
         let data_mb = 20 + rng.below(60) as u64;
         let file = s.hdfs.upload(data_mb * MB, data_mb * MB, &mut s.rng);
