@@ -1,0 +1,56 @@
+//! Correlated-dynamics bench: the two `hemt dynamics --correlated`
+//! figures timed through the sweep runner, serial baseline vs the
+//! machine's full pool.
+//!
+//! `rack_steal` drives the SharedEvent fan-out path (one realization
+//! replayed on every node, the steal drivers probing a world where
+//! thieves degrade with victims); `link_degrade` drives the
+//! link-capacity playback path (compiled LinkPrograms applied mid-stage
+//! through the dirty-link incremental solve on the 200 Mbps read-heavy
+//! testbed). Writes `BENCH_correlated_dynamics.json` (pooled) and
+//! `BENCH_correlated_dynamics_serial.json` for the CI trajectory gate.
+
+use hemt::bench_harness::time_and_report;
+use hemt::dynamics::{
+    correlated_steal_comparison_spec, link_degrade_comparison_spec, CORRELATED_BASE_SEED,
+    CORRELATED_FAMILIES, LINK_DEGRADE_BASE_SEED, LINK_FAMILIES,
+};
+use hemt::sweep::{session_cache_stats, SweepRunner};
+
+const ROUNDS: usize = 6;
+
+fn run_both(threads: usize) -> (hemt::metrics::Figure, hemt::metrics::Figure) {
+    let rack =
+        SweepRunner::new(threads).run(&correlated_steal_comparison_spec(ROUNDS, CORRELATED_BASE_SEED));
+    let link =
+        SweepRunner::new(threads).run(&link_degrade_comparison_spec(ROUNDS, LINK_DEGRADE_BASE_SEED));
+    (rack, link)
+}
+
+fn main() {
+    println!(
+        "== correlated_dynamics: {} rack + {} link families x {ROUNDS} rounds ==",
+        CORRELATED_FAMILIES.len(),
+        LINK_FAMILIES.len()
+    );
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let serial = time_and_report("correlated_dynamics_serial", 0, 3, || {
+        std::hint::black_box(run_both(1));
+    });
+    let mut last = None;
+    let pooled = time_and_report("correlated_dynamics", 0, 3, || {
+        last = Some(run_both(threads));
+    });
+    let (hits, misses) = session_cache_stats();
+    println!(
+        "correlated_dynamics_serial:    {} s\ncorrelated_dynamics_pool({threads}): {} s  ({:.2}x)",
+        serial.pm(3),
+        pooled.pm(3),
+        serial.mean / pooled.mean
+    );
+    println!("session cache: {hits} hits / {misses} misses");
+    println!();
+    let (rack, link) = last.expect("pooled run happened");
+    println!("{}", rack.to_table());
+    println!("{}", link.to_table());
+}

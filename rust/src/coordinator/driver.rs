@@ -181,6 +181,7 @@ impl SessionBuilder {
             rng: Rng::new(self.seed),
             manager: mgr,
             dynamics: None,
+            link_dynamics: None,
         }
     }
 }
@@ -201,6 +202,7 @@ pub struct Session {
     exec_uplinks: Vec<LinkId>,
     exec_downlinks: Vec<LinkId>,
     dynamics: Option<DynamicsRuntime>,
+    link_dynamics: Option<LinkDynamicsRuntime>,
 }
 
 /// Installed capacity-event schedule: `(time, node, multiplier)` triples,
@@ -216,6 +218,20 @@ struct DynamicsRuntime {
     next: usize,
 }
 
+/// Installed *link*-capacity schedule: `(time, link, multiplier)`
+/// triples, time-sorted, applied through [`Engine::set_link_capacity`]
+/// as `nominal[link] * mult` — multipliers always scale the capacity the
+/// link was *built* with, so schedules compose with repeated events on
+/// the same link without drifting. Same chained-timer discipline as
+/// [`DynamicsRuntime`] (tag kind `KIND_LINK_CAPACITY`).
+#[derive(Debug, Clone)]
+struct LinkDynamicsRuntime {
+    events: Vec<(f64, usize, f64)>,
+    /// Each link's capacity at install time, indexed by link id.
+    nominal: Vec<f64>,
+    next: usize,
+}
+
 // Tag encoding: kind in the top byte, task index below.
 const KIND_LAUNCH: u64 = 1 << 56;
 const KIND_FLOW: u64 = 2 << 56;
@@ -223,6 +239,7 @@ const KIND_CPU: u64 = 3 << 56;
 const KIND_SPEC_CHECK: u64 = 4 << 56;
 const KIND_CAPACITY: u64 = 5 << 56;
 const KIND_STEAL_CHECK: u64 = 6 << 56;
+const KIND_LINK_CAPACITY: u64 = 7 << 56;
 const KIND_MASK: u64 = 0xFF << 56;
 // Attempt index (0 = primary, 1 = speculative copy) in bit 48.
 const ATT_SHIFT: u64 = 48;
@@ -366,6 +383,10 @@ impl Session {
                     let (_, _, idx) = untag(tag);
                     self.apply_capacity_event(idx);
                 }
+                Event::Timer { tag } if tag & KIND_MASK == KIND_LINK_CAPACITY => {
+                    let (_, _, idx) = untag(tag);
+                    self.apply_link_capacity_event(idx);
+                }
                 _ => {}
             }
         }
@@ -410,6 +431,70 @@ impl Session {
         self.engine.set_node_capacity(node, mult);
         if let Some(t) = next_at {
             self.engine.set_timer(t, tag_of(KIND_CAPACITY, 0, next_idx));
+        }
+    }
+
+    /// Install a compiled link-capacity schedule (`(time, link, mult)`,
+    /// time-sorted — see
+    /// [`crate::dynamics::DynamicsConfig::compile_link_events`]).
+    /// Multipliers scale each link's *nominal* (install-time) capacity
+    /// and are applied through [`Engine::set_link_capacity`] at their
+    /// exact simulated times, including mid-stage: the dirtied link's
+    /// flow component is re-levelled incrementally at the engine's next
+    /// step. At most one link schedule per session; install before
+    /// running jobs. Independent of [`Session::install_dynamics`] — the
+    /// two schedules chain separate timers and may interleave freely.
+    pub fn install_link_dynamics(&mut self, events: Vec<(f64, usize, f64)>) {
+        assert!(
+            self.link_dynamics.is_none(),
+            "link dynamics already installed on this session"
+        );
+        let num_links = self.engine.net.num_links();
+        for w in events.windows(2) {
+            assert!(w[0].0 <= w[1].0, "link events must be time-sorted");
+        }
+        for &(t, link, mult) in &events {
+            assert!(t >= self.engine.now, "link event at {t} is in the past");
+            assert!(link < num_links, "unknown link {link}");
+            assert!(mult > 0.0 && mult.is_finite(), "bad link multiplier {mult}");
+        }
+        let nominal = (0..num_links)
+            .map(|l| self.engine.net.link(l).capacity_bps)
+            .collect();
+        if let Some(&(t, _, _)) = events.first() {
+            self.engine.set_timer(t, tag_of(KIND_LINK_CAPACITY, 0, 0));
+        }
+        self.link_dynamics = Some(LinkDynamicsRuntime { events, nominal, next: 0 });
+    }
+
+    /// Fire link event `idx`: apply its multiplier to the link's nominal
+    /// capacity and chain the timer for the next event. Stale timer
+    /// indices (already applied) are ignored.
+    fn apply_link_capacity_event(&mut self, idx: usize) {
+        let Some(rt) = self.link_dynamics.as_mut() else { return };
+        if idx != rt.next {
+            return;
+        }
+        let (_, link, mult) = rt.events[idx];
+        rt.next += 1;
+        let next_idx = rt.next;
+        let next_at = rt.events.get(next_idx).map(|&(t, _, _)| t);
+        let capacity = rt.nominal[link] * mult;
+        self.engine.set_link_capacity(link, capacity);
+        if let Some(t) = next_at {
+            self.engine.set_timer(t, tag_of(KIND_LINK_CAPACITY, 0, next_idx));
+        }
+    }
+
+    /// Install a replayable [`crate::dynamics::TraceSpec`]: the trace is
+    /// normalized (stable `(time, id)` sort) and both halves installed —
+    /// node events through [`Session::install_dynamics`], link events
+    /// through [`Session::install_link_dynamics`].
+    pub fn install_trace(&mut self, trace: &crate::dynamics::TraceSpec) {
+        let t = trace.normalized();
+        self.install_dynamics(t.node_events);
+        if !t.link_events.is_empty() {
+            self.install_link_dynamics(t.link_events);
         }
     }
 
@@ -626,6 +711,13 @@ impl Session {
                     // only the touched node's rates.
                     let idx = untag(tag).2;
                     self.apply_capacity_event(idx);
+                }
+                Event::Timer { tag } if tag & KIND_MASK == KIND_LINK_CAPACITY => {
+                    // A link-capacity event mid-stage: the dirtied link's
+                    // component is re-levelled incrementally at the next
+                    // engine step.
+                    let idx = untag(tag).2;
+                    self.apply_link_capacity_event(idx);
                 }
                 Event::Timer { tag } if tag & KIND_MASK == KIND_STEAL_CHECK => {
                     // Deferred steal re-check: a wake landed inside the

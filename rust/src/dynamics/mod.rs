@@ -40,6 +40,18 @@ use crate::workloads;
 /// of a trial seed (session RNG, placement draws).
 pub const DYNAMICS_SEED_SALT: u64 = 0xD15E_A5ED;
 
+/// Seed salt of [`CapacityProgram::SharedEvent`] streams. A shared
+/// stream's RNG derives from `(trial seed, stream id)` only — never from
+/// the compiling node's fork — so every fan-out member replays the
+/// *identical* realization and historic non-shared configs compile
+/// byte-identically (shared programs consume nothing from the per-node
+/// RNG).
+pub const SHARED_STREAM_SALT: u64 = 0x5AAE_D51D;
+
+/// Seed salt of [`LinkProgram`] compilation, keeping link traces
+/// independent of the per-node CPU traces for the same trial seed.
+pub const LINK_SEED_SALT: u64 = 0x11CC_AB1E;
+
 /// A compiled per-node capacity trace: sorted `(time, multiplier)`
 /// steps; the multiplier in force at `t` is the last entry with
 /// `time <= t` (1.0 before the first). Installed on the engine these
@@ -108,12 +120,54 @@ pub enum CapacityProgram {
     /// Product composition: each part compiles independently and the
     /// multipliers multiply (throttling on top of a diurnal wave, ...).
     Compose(Vec<CapacityProgram>),
+    /// An explicit pre-compiled step trace (consumes no randomness):
+    /// sorted `(time, multiplier)` steps applied verbatim. The
+    /// compilation target of [`TraceSpec`] imports and the manual
+    /// per-node oracle the shared-event fuzz tests merge against.
+    Trace(Vec<(f64, f64)>),
+    /// One *shared* event stream fanned out to a node subset (a rack, a
+    /// replica group, an arbitrary id list): the inner program compiles
+    /// from an RNG derived only from the trial seed and `stream` — never
+    /// from the compiling node — so every member replays the *identical*
+    /// realization (a ToR failure, a hypervisor host outage degrading
+    /// thieves together with victims). Non-members stay steady. Composes
+    /// with per-node programs via [`CapacityProgram::Compose`]; needs
+    /// node context, so it only compiles through
+    /// [`DynamicsConfig::compile_for`].
+    SharedEvent { stream: u64, members: Vec<usize>, program: Box<CapacityProgram> },
 }
 
 impl CapacityProgram {
     /// Compile into a step schedule covering `[0, horizon]`. All
-    /// randomness comes from `rng`.
+    /// randomness comes from `rng`. Programs containing
+    /// [`CapacityProgram::SharedEvent`] need node context and a trial
+    /// seed — compile those through [`DynamicsConfig::compile_for`].
     pub fn compile(&self, rng: &mut Rng, horizon: f64) -> CapacitySchedule {
+        assert!(
+            !self.contains_shared(),
+            "SharedEvent needs node context: compile via DynamicsConfig::compile_for"
+        );
+        self.compile_in(usize::MAX, 0, rng, horizon)
+    }
+
+    /// Whether this program (or any composed part) is a shared stream.
+    fn contains_shared(&self) -> bool {
+        match self {
+            CapacityProgram::SharedEvent { .. } => true,
+            CapacityProgram::Compose(parts) => parts.iter().any(CapacityProgram::contains_shared),
+            _ => false,
+        }
+    }
+
+    /// [`CapacityProgram::compile`] with fan-out context: the node being
+    /// compiled for and the salted shared-stream seed root.
+    fn compile_in(
+        &self,
+        node: usize,
+        shared_seed: u64,
+        rng: &mut Rng,
+        horizon: f64,
+    ) -> CapacitySchedule {
         assert!(horizon >= 0.0 && horizon.is_finite(), "bad horizon {horizon}");
         let sched = match self {
             CapacityProgram::Steady => CapacitySchedule::default(),
@@ -189,10 +243,24 @@ impl CapacityProgram {
                 };
                 CapacitySchedule { steps }
             }
+            CapacityProgram::Trace(steps) => CapacitySchedule { steps: steps.clone() },
+            CapacityProgram::SharedEvent { stream, members, program } => {
+                if !members.contains(&node) {
+                    CapacitySchedule::default()
+                } else {
+                    // The stream's RNG depends only on (trial seed,
+                    // stream id): every member compiles the identical
+                    // trace, and the caller's per-node RNG stream is
+                    // left untouched.
+                    let mut srng =
+                        Rng::new(shared_seed ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                    program.compile_in(node, shared_seed, &mut srng, horizon)
+                }
+            }
             CapacityProgram::Compose(parts) => {
                 assert!(!parts.is_empty(), "compose needs at least one part");
                 let compiled: Vec<CapacitySchedule> =
-                    parts.iter().map(|p| p.compile(rng, horizon)).collect();
+                    parts.iter().map(|p| p.compile_in(node, shared_seed, rng, horizon)).collect();
                 let mut times: Vec<f64> = compiled
                     .iter()
                     .flat_map(|c| c.steps.iter().map(|&(t, _)| t))
@@ -217,6 +285,10 @@ impl CapacityProgram {
         match self {
             CapacityProgram::Steady => true,
             CapacityProgram::Compose(parts) => parts.iter().all(CapacityProgram::is_steady),
+            CapacityProgram::Trace(steps) => steps.is_empty(),
+            CapacityProgram::SharedEvent { members, program, .. } => {
+                members.is_empty() || program.is_steady()
+            }
             _ => false,
         }
     }
@@ -253,6 +325,27 @@ impl CapacityProgram {
             CapacityProgram::Compose(parts) => json::obj(vec![
                 ("kind", json::s("compose")),
                 ("parts", json::arr(parts.iter().map(CapacityProgram::to_json).collect())),
+            ]),
+            CapacityProgram::Trace(steps) => json::obj(vec![
+                ("kind", json::s("trace")),
+                (
+                    "steps",
+                    json::arr(
+                        steps
+                            .iter()
+                            .map(|&(t, m)| json::arr(vec![json::num(t), json::num(m)]))
+                            .collect(),
+                    ),
+                ),
+            ]),
+            CapacityProgram::SharedEvent { stream, members, program } => json::obj(vec![
+                ("kind", json::s("shared")),
+                ("stream", json::num(*stream as f64)),
+                (
+                    "members",
+                    json::arr(members.iter().map(|&n| json::num(n as f64)).collect()),
+                ),
+                ("program", program.to_json()),
             ]),
         }
     }
@@ -293,8 +386,86 @@ impl CapacityProgram {
                     .map(CapacityProgram::from_json)
                     .collect::<Result<_, _>>()?,
             )),
+            "trace" => Ok(CapacityProgram::Trace(
+                v.get("steps")
+                    .and_then(Value::as_arr)
+                    .ok_or("program.steps missing")?
+                    .iter()
+                    .map(|pair| {
+                        let p = pair.as_arr().ok_or("trace step must be [time, mult]")?;
+                        match (p.first().and_then(Value::as_f64), p.get(1).and_then(Value::as_f64))
+                        {
+                            (Some(t), Some(m)) if p.len() == 2 => Ok((t, m)),
+                            _ => Err("trace step must be [time, mult]".to_string()),
+                        }
+                    })
+                    .collect::<Result<_, _>>()?,
+            )),
+            "shared" => Ok(CapacityProgram::SharedEvent {
+                stream: v.get("stream").and_then(Value::as_u64).ok_or("program.stream missing")?,
+                members: v
+                    .get("members")
+                    .and_then(Value::as_arr)
+                    .ok_or("program.members missing")?
+                    .iter()
+                    .map(|n| n.as_usize().ok_or("program.members must be node ids".to_string()))
+                    .collect::<Result<_, _>>()?,
+                program: Box::new(CapacityProgram::from_json(
+                    v.get("program").ok_or("program.program missing")?,
+                )?),
+            }),
             other => Err(format!("unknown program kind '{other}'")),
         }
+    }
+}
+
+/// A time-varying *link*-capacity program — the network dual of the
+/// per-node CPU programs. `links` are raw [`crate::netsim`] link ids in
+/// the session's construction order (HDFS datanode uplinks first, ids
+/// `0..hdfs_datanodes`, then per-node `up`/`down` pairs); the compiled
+/// multipliers scale each link's *nominal* capacity through
+/// [`crate::coordinator::driver::Session::install_link_dynamics`] →
+/// `NetSim::set_link_capacity`, re-levelled mid-stage by the dirty-link
+/// incremental solve.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkProgram {
+    pub links: Vec<usize>,
+    /// `true`: one realization shared by every target link (a ToR /
+    /// switch-wide event). `false`: an independent realization per link.
+    pub shared: bool,
+    pub program: CapacityProgram,
+}
+
+impl LinkProgram {
+    pub fn is_steady(&self) -> bool {
+        self.links.is_empty() || self.program.is_steady()
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("links", json::arr(self.links.iter().map(|&l| json::num(l as f64)).collect())),
+            ("shared", json::boolean(self.shared)),
+            ("program", self.program.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<LinkProgram, String> {
+        Ok(LinkProgram {
+            links: v
+                .get("links")
+                .and_then(Value::as_arr)
+                .ok_or("link_program.links missing")?
+                .iter()
+                .map(|n| n.as_usize().ok_or("link_program.links must be link ids".to_string()))
+                .collect::<Result<_, _>>()?,
+            shared: v
+                .get("shared")
+                .and_then(Value::as_bool)
+                .ok_or("link_program.shared missing")?,
+            program: CapacityProgram::from_json(
+                v.get("program").ok_or("link_program.program missing")?,
+            )?,
+        })
     }
 }
 
@@ -310,17 +481,22 @@ impl CapacityProgram {
 #[derive(Debug, Clone, PartialEq)]
 pub struct DynamicsConfig {
     pub programs: Vec<CapacityProgram>,
+    /// Link-capacity programs (empty = every link steady) — compiled by
+    /// [`DynamicsConfig::compile_link_events`], independent of the CPU
+    /// programs.
+    pub links: Vec<LinkProgram>,
     pub horizon: f64,
 }
 
 impl DynamicsConfig {
     /// No dynamics — the implicit value of every pre-dynamics scenario.
     pub fn steady() -> DynamicsConfig {
-        DynamicsConfig { programs: Vec::new(), horizon: 0.0 }
+        DynamicsConfig { programs: Vec::new(), links: Vec::new(), horizon: 0.0 }
     }
 
     pub fn is_steady(&self) -> bool {
         self.programs.iter().all(CapacityProgram::is_steady)
+            && self.links.iter().all(LinkProgram::is_steady)
     }
 
     /// Preset: node 1 suffers Markov-modulated throttling (node 0 and
@@ -331,6 +507,7 @@ impl DynamicsConfig {
                 CapacityProgram::Steady,
                 CapacityProgram::MarkovThrottle { mult: 0.3, mean_up: 90.0, mean_down: 45.0 },
             ],
+            links: Vec::new(),
             horizon: 4000.0,
         }
     }
@@ -346,6 +523,7 @@ impl DynamicsConfig {
                     residual_mult: 0.05,
                 },
             ],
+            links: Vec::new(),
             horizon: 4000.0,
         }
     }
@@ -355,6 +533,7 @@ impl DynamicsConfig {
     pub fn diurnal() -> DynamicsConfig {
         DynamicsConfig {
             programs: vec![CapacityProgram::Diurnal { period: 240.0, depth: 0.6, steps: 12 }],
+            links: Vec::new(),
             horizon: 4000.0,
         }
     }
@@ -367,8 +546,102 @@ impl DynamicsConfig {
                 CapacityProgram::Steady,
                 CapacityProgram::CreditCliff { credits: 80.0, peak: 1.0, baseline: 0.3 },
             ],
+            links: Vec::new(),
             horizon: 4000.0,
         }
+    }
+
+    /// Preset: rack-wide *shared* Markov throttling — both testbed nodes
+    /// ride the identical realization (one hypervisor/ToR event stream),
+    /// the regime where a thief degrades together with its victim.
+    pub fn rack_markov() -> DynamicsConfig {
+        DynamicsConfig {
+            programs: vec![CapacityProgram::SharedEvent {
+                stream: 1,
+                members: vec![0, 1],
+                program: Box::new(CapacityProgram::MarkovThrottle {
+                    mult: 0.3,
+                    mean_up: 90.0,
+                    mean_down: 45.0,
+                }),
+            }],
+            links: Vec::new(),
+            horizon: 4000.0,
+        }
+    }
+
+    /// Preset: rack-wide *shared* spot revocation — both nodes collapse
+    /// and recover in lockstep (a host-level outage, not an instance
+    /// one).
+    pub fn rack_spot() -> DynamicsConfig {
+        DynamicsConfig {
+            programs: vec![CapacityProgram::SharedEvent {
+                stream: 1,
+                members: vec![0, 1],
+                program: Box::new(CapacityProgram::SpotOutage {
+                    mean_revoke: 150.0,
+                    outage: 60.0,
+                    residual_mult: 0.05,
+                }),
+            }],
+            links: Vec::new(),
+            horizon: 4000.0,
+        }
+    }
+
+    /// Preset: shared Markov throttling of every HDFS datanode uplink
+    /// (links `0..4` on the standard 4-datanode testbeds — datanode
+    /// uplinks are created first, so their link ids are `0..hdfs_datanodes`).
+    /// CPUs stay steady; only the network moves.
+    pub fn link_markov() -> DynamicsConfig {
+        DynamicsConfig {
+            programs: Vec::new(),
+            links: vec![LinkProgram {
+                links: vec![0, 1, 2, 3],
+                shared: true,
+                program: CapacityProgram::MarkovThrottle {
+                    mult: 0.3,
+                    mean_up: 90.0,
+                    mean_down: 45.0,
+                },
+            }],
+            horizon: 4000.0,
+        }
+    }
+
+    /// Preset: shared spot-style outage of every HDFS datanode uplink —
+    /// reads collapse to 5% of nominal for a fixed window, then recover.
+    pub fn link_spot() -> DynamicsConfig {
+        DynamicsConfig {
+            programs: Vec::new(),
+            links: vec![LinkProgram {
+                links: vec![0, 1, 2, 3],
+                shared: true,
+                program: CapacityProgram::SpotOutage {
+                    mean_revoke: 150.0,
+                    outage: 60.0,
+                    residual_mult: 0.05,
+                },
+            }],
+            horizon: 4000.0,
+        }
+    }
+
+    /// Preset: the fully correlated regime — rack-wide shared CPU
+    /// throttling *plus* a shared Markov squeeze of the datanode uplinks.
+    /// The product-sweep `correlated` dynamics axis value.
+    pub fn correlated() -> DynamicsConfig {
+        let mut cfg = DynamicsConfig::rack_markov();
+        cfg.links = vec![LinkProgram {
+            links: vec![0, 1, 2, 3],
+            shared: true,
+            program: CapacityProgram::MarkovThrottle {
+                mult: 0.5,
+                mean_up: 120.0,
+                mean_down: 40.0,
+            },
+        }];
+        cfg
     }
 
     /// Preset lookup by family name (the `hemt dynamics` families and the
@@ -380,6 +653,11 @@ impl DynamicsConfig {
             "spot" => Some(DynamicsConfig::spot_replace()),
             "diurnal" => Some(DynamicsConfig::diurnal()),
             "credit_cliff" => Some(DynamicsConfig::credit_cliff()),
+            "rack_markov" => Some(DynamicsConfig::rack_markov()),
+            "rack_spot" => Some(DynamicsConfig::rack_spot()),
+            "link_markov" => Some(DynamicsConfig::link_markov()),
+            "link_spot" => Some(DynamicsConfig::link_spot()),
+            "correlated" => Some(DynamicsConfig::correlated()),
             _ => None,
         }
     }
@@ -387,18 +665,60 @@ impl DynamicsConfig {
     /// Compile one schedule per node. Every node forks its own RNG
     /// stream off the salted seed — deterministically, and independently
     /// of the other nodes' programs, so editing one node's program never
-    /// reshuffles another's trace.
+    /// reshuffles another's trace. [`CapacityProgram::SharedEvent`]
+    /// streams instead draw from `(seed, stream id)` alone and consume
+    /// nothing from the per-node forks: members replay one identical
+    /// realization, and configs without shared streams compile
+    /// byte-identically to the pre-shared-event engine.
     pub fn compile_for(&self, num_nodes: usize, seed: u64) -> Vec<CapacitySchedule> {
         let mut root = Rng::new(seed ^ DYNAMICS_SEED_SALT);
+        let shared_seed = seed ^ DYNAMICS_SEED_SALT ^ SHARED_STREAM_SALT;
         (0..num_nodes)
             .map(|node| {
                 let mut rng = root.fork();
                 if self.programs.is_empty() {
                     return CapacitySchedule::default();
                 }
-                self.programs[node % self.programs.len()].compile(&mut rng, self.horizon)
+                self.programs[node % self.programs.len()]
+                    .compile_in(node, shared_seed, &mut rng, self.horizon)
             })
             .collect()
+    }
+
+    /// Compile the link programs and flatten into the `(time, link,
+    /// mult)` event list
+    /// [`crate::coordinator::driver::Session::install_link_dynamics`]
+    /// takes, stably sorted by `(time, link)`. RNG discipline mirrors
+    /// [`DynamicsConfig::compile_for`]: one fork per realization off a
+    /// link-salted root, in declaration order — a `shared` program draws
+    /// a single fork for all its links (the ToR/switch-wide event), an
+    /// independent one draws a fork per link.
+    pub fn compile_link_events(&self, num_links: usize, seed: u64) -> Vec<(f64, usize, f64)> {
+        let mut root = Rng::new(seed ^ DYNAMICS_SEED_SALT ^ LINK_SEED_SALT);
+        let mut events: Vec<(f64, usize, f64)> = Vec::new();
+        for lp in &self.links {
+            let mut emit = |sched: &CapacitySchedule, link: usize| {
+                assert!(link < num_links, "link program targets unknown link {link}");
+                for &(t, m) in &sched.steps {
+                    events.push((t, link, m));
+                }
+            };
+            if lp.shared {
+                let mut rng = root.fork();
+                let sched = lp.program.compile(&mut rng, self.horizon);
+                for &l in &lp.links {
+                    emit(&sched, l);
+                }
+            } else {
+                for &l in &lp.links {
+                    let mut rng = root.fork();
+                    let sched = lp.program.compile(&mut rng, self.horizon);
+                    emit(&sched, l);
+                }
+            }
+        }
+        events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        events
     }
 
     /// Compile and flatten into the `(time, node, mult)` event list
@@ -415,13 +735,17 @@ impl DynamicsConfig {
     }
 
     pub fn to_json(&self) -> Value {
-        json::obj(vec![
-            (
-                "programs",
-                json::arr(self.programs.iter().map(CapacityProgram::to_json).collect()),
-            ),
-            ("horizon", json::num(self.horizon)),
-        ])
+        let mut pairs = vec![(
+            "programs",
+            json::arr(self.programs.iter().map(CapacityProgram::to_json).collect()),
+        )];
+        // Emitted only when present, so pre-link-dynamics configs keep
+        // their historic byte-for-byte JSON form.
+        if !self.links.is_empty() {
+            pairs.push(("links", json::arr(self.links.iter().map(LinkProgram::to_json).collect())));
+        }
+        pairs.push(("horizon", json::num(self.horizon)));
+        json::obj(pairs)
     }
 
     pub fn from_json(v: &Value) -> Result<DynamicsConfig, String> {
@@ -433,11 +757,183 @@ impl DynamicsConfig {
                 .iter()
                 .map(CapacityProgram::from_json)
                 .collect::<Result<_, _>>()?,
+            links: match v.get("links") {
+                None => Vec::new(),
+                Some(ls) => ls
+                    .as_arr()
+                    .ok_or("dynamics.links must be an array")?
+                    .iter()
+                    .map(LinkProgram::from_json)
+                    .collect::<Result<_, _>>()?,
+            },
             horizon: v
                 .get("horizon")
                 .and_then(Value::as_f64)
                 .ok_or("dynamics.horizon missing")?,
         })
+    }
+}
+
+// -------------------------------------------------- replayable traces
+
+/// A replayable absolute-time trace over node CPUs and links — the
+/// import format for real spot-preemption / throttling traces. Events
+/// are `(time, id, multiplier)` triples; multipliers scale the target's
+/// nominal capacity from `time` on. [`TraceSpec::normalized`] pins the
+/// replay order the way `take_capacity_events` ordering was pinned:
+/// stable sort by `(time, id)`, so same-key events keep their input
+/// order and the last one wins at replay. Round-trips through JSON and
+/// imports from CSV-style dumps ([`TraceSpec::from_csv`]).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TraceSpec {
+    /// `(time, node, mult)` — replayed through `Engine::set_node_capacity`.
+    pub node_events: Vec<(f64, usize, f64)>,
+    /// `(time, link, mult)` — replayed through `Engine::set_link_capacity`.
+    pub link_events: Vec<(f64, usize, f64)>,
+}
+
+impl TraceSpec {
+    /// The trace with both event lists stably sorted by `(time, id)` —
+    /// the canonical replay order. Stability means duplicate `(time,
+    /// id)` events keep their input order (the last one is the one in
+    /// force), so an out-of-order dump normalizes deterministically.
+    pub fn normalized(&self) -> TraceSpec {
+        let sort = |evs: &[(f64, usize, f64)]| {
+            let mut out = evs.to_vec();
+            out.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            out
+        };
+        TraceSpec { node_events: sort(&self.node_events), link_events: sort(&self.link_events) }
+    }
+
+    fn events_to_json(evs: &[(f64, usize, f64)]) -> Value {
+        json::arr(
+            evs.iter()
+                .map(|&(t, id, m)| json::arr(vec![json::num(t), json::num(id as f64), json::num(m)]))
+                .collect(),
+        )
+    }
+
+    fn events_from_json(v: &Value, what: &str) -> Result<Vec<(f64, usize, f64)>, String> {
+        v.as_arr()
+            .ok_or(format!("trace.{what} must be an array"))?
+            .iter()
+            .map(|e| {
+                let p = e.as_arr().ok_or(format!("{what} event must be [time, id, mult]"))?;
+                match (
+                    p.first().and_then(Value::as_f64),
+                    p.get(1).and_then(Value::as_usize),
+                    p.get(2).and_then(Value::as_f64),
+                ) {
+                    (Some(t), Some(id), Some(m)) if p.len() == 3 => Ok((t, id, m)),
+                    _ => Err(format!("{what} event must be [time, id, mult]")),
+                }
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("node_events", Self::events_to_json(&self.node_events)),
+            ("link_events", Self::events_to_json(&self.link_events)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<TraceSpec, String> {
+        Ok(TraceSpec {
+            node_events: Self::events_from_json(
+                v.get("node_events").ok_or("trace.node_events missing")?,
+                "node_events",
+            )?,
+            link_events: Self::events_from_json(
+                v.get("link_events").ok_or("trace.link_events missing")?,
+                "link_events",
+            )?,
+        })
+    }
+
+    pub fn from_str(text: &str) -> Result<TraceSpec, String> {
+        TraceSpec::from_json(&Value::parse(text).map_err(|e| e.to_string())?)
+    }
+
+    /// Import a CSV-style dump: one `time,kind,id,mult` event per line
+    /// with `kind` either `node` or `link`; blank lines and `#` comments
+    /// skipped. The result is *not* normalized — callers see the dump's
+    /// own order until they ask for [`TraceSpec::normalized`].
+    pub fn from_csv(text: &str) -> Result<TraceSpec, String> {
+        let mut spec = TraceSpec::default();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+            let err = |what: &str| format!("trace line {}: {what}: '{line}'", ln + 1);
+            if fields.len() != 4 {
+                return Err(err("expected time,kind,id,mult"));
+            }
+            let t: f64 = fields[0].parse().map_err(|_| err("bad time"))?;
+            let id: usize = fields[2].parse().map_err(|_| err("bad id"))?;
+            let m: f64 = fields[3].parse().map_err(|_| err("bad mult"))?;
+            match fields[1] {
+                "node" => spec.node_events.push((t, id, m)),
+                "link" => spec.link_events.push((t, id, m)),
+                _ => return Err(err("kind must be 'node' or 'link'")),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Lower the trace to a [`DynamicsConfig`]: one explicit
+    /// [`CapacityProgram::Trace`] per node that has events (others
+    /// steady) plus one single-link [`LinkProgram`] per link with
+    /// events. The trace is normalized first, so compilation order is
+    /// input-order independent; horizon is the last event time (explicit
+    /// traces consume no randomness and ignore it).
+    pub fn to_dynamics(&self, num_nodes: usize) -> DynamicsConfig {
+        let t = self.normalized();
+        let mut per_node: Vec<Vec<(f64, f64)>> = vec![Vec::new(); num_nodes];
+        for &(time, node, m) in &t.node_events {
+            assert!(node < num_nodes, "trace targets unknown node {node}");
+            per_node[node].push((time, m));
+        }
+        let programs = if t.node_events.is_empty() {
+            Vec::new()
+        } else {
+            per_node
+                .into_iter()
+                .map(|steps| {
+                    if steps.is_empty() {
+                        CapacityProgram::Steady
+                    } else {
+                        CapacityProgram::Trace(steps)
+                    }
+                })
+                .collect()
+        };
+        let mut per_link: Vec<(usize, Vec<(f64, f64)>)> = Vec::new();
+        for &(time, link, m) in &t.link_events {
+            match per_link.iter_mut().find(|(l, _)| *l == link) {
+                Some((_, steps)) => steps.push((time, m)),
+                None => per_link.push((link, vec![(time, m)])),
+            }
+        }
+        per_link.sort_by_key(|&(l, _)| l);
+        let links = per_link
+            .into_iter()
+            .map(|(link, steps)| LinkProgram {
+                links: vec![link],
+                shared: false,
+                program: CapacityProgram::Trace(steps),
+            })
+            .collect();
+        let horizon = t
+            .node_events
+            .iter()
+            .chain(&t.link_events)
+            .map(|&(time, _, _)| time)
+            .fold(0.0, f64::max);
+        DynamicsConfig { programs, links, horizon }
     }
 }
 
@@ -552,6 +1048,10 @@ fn run_family_arm_in(
     let mut s = cached_session(cluster, seed);
     let events = cfg.compile_events(s.engine.nodes.len(), seed);
     s.install_dynamics(events);
+    let link_events = cfg.compile_link_events(s.engine.net.num_links(), seed);
+    if !link_events.is_empty() {
+        s.install_link_dynamics(link_events);
+    }
     let mut drv = AdaptiveDriver::new(0.25).with_hint_bootstrap();
     let mut steal_drv = StealingDriver::new(0.25, StealPolicy::default()).with_hint_bootstrap();
     let mut stream_drv =
@@ -596,25 +1096,31 @@ fn run_family_arm(family: &str, arm: Arm, rounds: usize, seed: u64) -> Vec<f64> 
     )
 }
 
-/// The `hemt dynamics` figure: per program family (x), the per-round
-/// map-stage times of the three policy arms (series), aggregated into
-/// mean ± σ over rounds. One sequence unit per (family, arm) — the
-/// sweep runner fans them out with its usual bit-identity guarantee.
-pub fn comparison_spec(rounds: usize, base_seed: u64) -> SweepSpec {
+/// The shared skeleton of every family-comparison figure: per program
+/// family (x), the per-round map-stage times of each policy arm
+/// (series), aggregated into mean ± σ over rounds. One sequence unit
+/// per (family, arm) — the sweep runner fans them out with its usual
+/// bit-identity guarantee — and every arm of a family shares the
+/// family's seed, hence one capacity trace and one pristine session.
+fn family_arms_spec(
+    title: &str,
+    arms: &'static [(Arm, &'static str)],
+    families: &'static [&'static str],
+    rounds: usize,
+    base_seed: u64,
+    cluster_of: fn() -> ClusterConfig,
+    workload_of: fn() -> WorkloadConfig,
+) -> SweepSpec {
     assert!(rounds > 0, "need at least one round");
-    let mut spec = SweepSpec::new(
-        "Dynamics: Adaptive-HeMT vs static HeMT vs HomT under time-varying capacity",
-        "capacity-program family",
-        "map stage time (s), per round",
-    );
-    let series: Vec<usize> = ARMS.iter().map(|(_, name)| spec.series(name)).collect();
-    for (fi, family) in COMPARISON_FAMILIES.iter().enumerate() {
+    let mut spec = SweepSpec::new(title, "capacity-program family", "map stage time (s), per round");
+    let series: Vec<usize> = arms.iter().map(|(_, name)| spec.series(name)).collect();
+    for (fi, family) in families.iter().enumerate() {
         let seed = base_seed + fi as u64 * 10_000;
-        for (ai, &(arm, _)) in ARMS.iter().enumerate() {
+        for (ai, &(arm, _)) in arms.iter().enumerate() {
             let series = series[ai];
             let family = family.to_string();
             spec.sequence(move || {
-                run_family_arm(&family, arm, rounds, seed)
+                run_family_arm_in(&family, arm, rounds, seed, &cluster_of(), &workload_of())
                     .into_iter()
                     .map(|t| Sample {
                         series,
@@ -629,6 +1135,20 @@ pub fn comparison_spec(rounds: usize, base_seed: u64) -> SweepSpec {
     spec
 }
 
+/// The `hemt dynamics` figure: Adaptive-HeMT vs static HeMT vs HomT per
+/// capacity-program family ([`family_arms_spec`] shape and guarantees).
+pub fn comparison_spec(rounds: usize, base_seed: u64) -> SweepSpec {
+    family_arms_spec(
+        "Dynamics: Adaptive-HeMT vs static HeMT vs HomT under time-varying capacity",
+        &ARMS,
+        COMPARISON_FAMILIES,
+        rounds,
+        base_seed,
+        comparison_cluster,
+        comparison_workload,
+    )
+}
+
 /// The `hemt steal` figure (`dyn_steal`): Steal-HeMT (mid-stage
 /// split + steal, [`crate::coordinator::stealing`]) vs Adaptive-HeMT vs
 /// static HeMT vs HomT per capacity-program family. Same shape and
@@ -637,33 +1157,16 @@ pub fn comparison_spec(rounds: usize, base_seed: u64) -> SweepSpec {
 /// the steal arm attacking the mid-stage straggler regime the others
 /// can only absorb.
 pub fn steal_comparison_spec(rounds: usize, base_seed: u64) -> SweepSpec {
-    assert!(rounds > 0, "need at least one round");
-    let mut spec = SweepSpec::new(
+    family_arms_spec(
         "Work stealing: Steal-HeMT vs Adaptive-HeMT vs static HeMT vs HomT \
          under time-varying capacity",
-        "capacity-program family",
-        "map stage time (s), per round",
-    );
-    let series: Vec<usize> = STEAL_ARMS.iter().map(|(_, name)| spec.series(name)).collect();
-    for (fi, family) in COMPARISON_FAMILIES.iter().enumerate() {
-        let seed = base_seed + fi as u64 * 10_000;
-        for (ai, &(arm, _)) in STEAL_ARMS.iter().enumerate() {
-            let series = series[ai];
-            let family = family.to_string();
-            spec.sequence(move || {
-                run_family_arm(&family, arm, rounds, seed)
-                    .into_iter()
-                    .map(|t| Sample {
-                        series,
-                        x: fi as f64,
-                        label: family.clone(),
-                        value: t,
-                    })
-                    .collect()
-            });
-        }
-    }
-    spec
+        &STEAL_ARMS,
+        COMPARISON_FAMILIES,
+        rounds,
+        base_seed,
+        comparison_cluster,
+        comparison_workload,
+    )
 }
 
 /// The families the network-bound `net_steal` comparison runs: the two
@@ -689,40 +1192,70 @@ pub const NET_STEAL_BASE_SEED: u64 = 99_000;
 /// [`steal_comparison_spec`]: all four arms of a family share one
 /// seed/trace/session, bit-identical for any thread count.
 pub fn net_steal_comparison_spec(rounds: usize, base_seed: u64) -> SweepSpec {
-    assert!(rounds > 0, "need at least one round");
-    let mut spec = SweepSpec::new(
+    family_arms_spec(
         "Stream stealing: splitting in-flight reads vs CPU-only stealing \
          on network-bound stages",
-        "capacity-program family",
-        "map stage time (s), per round",
-    );
-    let series: Vec<usize> = NET_STEAL_ARMS.iter().map(|(_, name)| spec.series(name)).collect();
-    for (fi, family) in NET_STEAL_FAMILIES.iter().enumerate() {
-        let seed = base_seed + fi as u64 * 10_000;
-        for (ai, &(arm, _)) in NET_STEAL_ARMS.iter().enumerate() {
-            let series = series[ai];
-            let family = family.to_string();
-            spec.sequence(move || {
-                run_family_arm_in(
-                    &family,
-                    arm,
-                    rounds,
-                    seed,
-                    &net_comparison_cluster(),
-                    &net_comparison_workload(),
-                )
-                .into_iter()
-                .map(|t| Sample {
-                    series,
-                    x: fi as f64,
-                    label: family.clone(),
-                    value: t,
-                })
-                .collect()
-            });
-        }
-    }
-    spec
+        &NET_STEAL_ARMS,
+        NET_STEAL_FAMILIES,
+        rounds,
+        base_seed,
+        net_comparison_cluster,
+        net_comparison_workload,
+    )
+}
+
+/// The rack-correlated program families: the same Markov/spot processes
+/// as the independent comparisons, but fanned out as ONE
+/// [`CapacityProgram::SharedEvent`] stream to every node — the regime
+/// where a thief degrades together with its victim.
+pub const CORRELATED_FAMILIES: &[&str] = &["rack_markov", "rack_spot"];
+
+/// Base seed of the `rack_steal` figure (disjoint from the
+/// [`COMPARISON_BASE_SEED`] / [`NET_STEAL_BASE_SEED`] ladders).
+pub const CORRELATED_BASE_SEED: u64 = 123_000;
+
+/// The link-degradation families: shared Markov/spot squeezes of the
+/// HDFS datanode uplinks — CPUs steady, only the network moves.
+pub const LINK_FAMILIES: &[&str] = &["link_markov", "link_spot"];
+
+/// Base seed of the `link_degrade` figure (its own ladder).
+pub const LINK_DEGRADE_BASE_SEED: u64 = 146_000;
+
+/// The `hemt dynamics --correlated` steal figure (`rack_steal`): the
+/// full steal arm set under *rack-correlated* degradation — every node
+/// rides the identical shared event stream, so when a victim slows, so
+/// does every would-be thief. Relative speeds barely move, profitable
+/// steals all but vanish, and stealing's edge over static HeMT should
+/// *shrink* toward parity relative to the independent-dynamics figure
+/// ([`steal_comparison_spec`]) — the acceptance assertion in
+/// `tests/dynamics.rs` pins exactly that.
+pub fn correlated_steal_comparison_spec(rounds: usize, base_seed: u64) -> SweepSpec {
+    family_arms_spec(
+        "Rack-correlated dynamics: stealing when thieves degrade with victims",
+        &STEAL_ARMS,
+        CORRELATED_FAMILIES,
+        rounds,
+        base_seed,
+        comparison_cluster,
+        comparison_workload,
+    )
+}
+
+/// The `hemt dynamics --correlated` link figure (`link_degrade`):
+/// Adaptive-HeMT vs static HeMT vs HomT on the 200 Mbps read-heavy
+/// testbed of the `net_steal` comparison, with the datanode uplinks
+/// themselves time-varying ([`LinkProgram`] schedules replayed through
+/// `Engine::set_link_capacity` and the dirty-link incremental solve).
+pub fn link_degrade_comparison_spec(rounds: usize, base_seed: u64) -> SweepSpec {
+    family_arms_spec(
+        "Link degradation: HeMT vs HomT under time-varying uplink capacity",
+        &ARMS,
+        LINK_FAMILIES,
+        rounds,
+        base_seed,
+        net_comparison_cluster,
+        net_comparison_workload,
+    )
 }
 
 /// Per-family mean map-stage times of one series of a comparison
@@ -902,11 +1435,152 @@ mod tests {
                 CapacityProgram::Diurnal { period: 60.0, depth: 0.2, steps: 6 },
                 CapacityProgram::MarkovThrottle { mult: 0.5, mean_up: 10.0, mean_down: 5.0 },
             ])],
+            links: Vec::new(),
             horizon: 100.0,
         };
         let back = DynamicsConfig::from_json(&composed.to_json()).unwrap();
         assert_eq!(composed, back);
         assert!(DynamicsConfig::from_json(&json::obj(vec![])).is_err());
+    }
+
+    #[test]
+    fn correlated_presets_round_trip_json() {
+        for name in ["rack_markov", "rack_spot", "link_markov", "link_spot", "correlated"] {
+            let cfg = DynamicsConfig::preset(name).unwrap();
+            assert!(!cfg.is_steady(), "{name}");
+            let back = DynamicsConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(cfg, back, "{name}");
+        }
+        // Pre-link-dynamics configs keep their historic JSON form: no
+        // "links" key unless link programs exist.
+        let plain = DynamicsConfig::markov_throttle().to_json();
+        assert!(plain.get("links").is_none());
+        assert!(DynamicsConfig::correlated().to_json().get("links").is_some());
+    }
+
+    #[test]
+    fn shared_event_members_replay_one_realization() {
+        let cfg = DynamicsConfig {
+            programs: vec![CapacityProgram::SharedEvent {
+                stream: 7,
+                members: vec![0, 2],
+                program: Box::new(CapacityProgram::MarkovThrottle {
+                    mult: 0.3,
+                    mean_up: 50.0,
+                    mean_down: 20.0,
+                }),
+            }],
+            links: Vec::new(),
+            horizon: 4000.0,
+        };
+        let scheds = cfg.compile_for(3, 11);
+        assert!(!scheds[0].steps.is_empty());
+        assert_eq!(scheds[0], scheds[2], "members share the realization");
+        assert!(scheds[1].steps.is_empty(), "non-members stay steady");
+        // The realization depends on the stream id, not the member set.
+        let mut other = cfg.clone();
+        if let CapacityProgram::SharedEvent { stream, .. } = &mut other.programs[0] {
+            *stream = 8;
+        }
+        assert_ne!(scheds[0], other.compile_for(3, 11)[0]);
+        // Direct compile without node context is a hard error.
+        let p = cfg.programs[0].clone();
+        assert!(std::panic::catch_unwind(move || p.compile(&mut Rng::new(1), 100.0)).is_err());
+    }
+
+    #[test]
+    fn shared_event_consumes_nothing_from_node_forks() {
+        // A config mixing a shared stream with a stochastic per-node
+        // program: the per-node program's trace must be byte-identical
+        // to what it compiles to without the shared part present, i.e.
+        // shared streams draw zero randomness from the node forks.
+        let solo = DynamicsConfig {
+            programs: vec![CapacityProgram::Diurnal { period: 240.0, depth: 0.6, steps: 12 }],
+            links: Vec::new(),
+            horizon: 4000.0,
+        };
+        let mixed = DynamicsConfig {
+            programs: vec![CapacityProgram::Compose(vec![
+                CapacityProgram::SharedEvent {
+                    stream: 3,
+                    members: vec![],
+                    program: Box::new(CapacityProgram::MarkovThrottle {
+                        mult: 0.5,
+                        mean_up: 60.0,
+                        mean_down: 30.0,
+                    }),
+                },
+                CapacityProgram::Diurnal { period: 240.0, depth: 0.6, steps: 12 },
+            ])],
+            links: Vec::new(),
+            horizon: 4000.0,
+        };
+        assert_eq!(solo.compile_for(2, 9), mixed.compile_for(2, 9));
+    }
+
+    #[test]
+    fn link_events_compile_shared_and_independent() {
+        let shared = DynamicsConfig::link_markov();
+        let evs = shared.compile_link_events(8, 21);
+        assert!(!evs.is_empty());
+        for w in evs.windows(2) {
+            assert!(w[0].0 <= w[1].0 && (w[0].0 < w[1].0 || w[0].1 <= w[1].1), "(time, link) sorted");
+        }
+        // Shared: all four links carry the identical realization.
+        let of_link = |l: usize| -> Vec<(f64, f64)> {
+            evs.iter().filter(|&&(_, link, _)| link == l).map(|&(t, _, m)| (t, m)).collect()
+        };
+        assert_eq!(of_link(0), of_link(3));
+        assert!(!of_link(0).is_empty());
+        // Independent: per-link forks draw distinct realizations.
+        let mut indep = shared.clone();
+        indep.links[0].shared = false;
+        let ievs = indep.compile_link_events(8, 21);
+        let iof = |l: usize| -> Vec<(f64, f64)> {
+            ievs.iter().filter(|&&(_, link, _)| link == l).map(|&(t, _, m)| (t, m)).collect()
+        };
+        assert_ne!(iof(0), iof(3));
+        // Determinism per seed either way.
+        assert_eq!(evs, shared.compile_link_events(8, 21));
+        assert_ne!(evs, shared.compile_link_events(8, 22));
+    }
+
+    #[test]
+    fn trace_spec_lowers_to_explicit_programs() {
+        let spec = TraceSpec {
+            node_events: vec![(30.0, 1, 0.5), (10.0, 0, 0.8), (40.0, 1, 1.0)],
+            link_events: vec![(5.0, 2, 0.25), (50.0, 2, 1.0)],
+        };
+        let cfg = spec.to_dynamics(2);
+        assert_eq!(cfg.horizon, 50.0);
+        assert_eq!(cfg.programs.len(), 2);
+        assert_eq!(cfg.programs[0], CapacityProgram::Trace(vec![(10.0, 0.8)]));
+        assert_eq!(cfg.programs[1], CapacityProgram::Trace(vec![(30.0, 0.5), (40.0, 1.0)]));
+        assert_eq!(cfg.links.len(), 1);
+        assert_eq!(cfg.links[0].links, vec![2]);
+        assert_eq!(cfg.links[0].program, CapacityProgram::Trace(vec![(5.0, 0.25), (50.0, 1.0)]));
+        // Explicit traces draw no randomness: any seed compiles the same
+        // events, exactly the normalized input.
+        assert_eq!(
+            cfg.compile_events(2, 1),
+            vec![(10.0, 0, 0.8), (30.0, 1, 0.5), (40.0, 1, 1.0)]
+        );
+        assert_eq!(cfg.compile_events(2, 1), cfg.compile_events(2, 999));
+        assert_eq!(cfg.compile_link_events(4, 1), vec![(5.0, 2, 0.25), (50.0, 2, 1.0)]);
+    }
+
+    #[test]
+    fn trace_spec_parses_csv_dumps() {
+        let csv = "# spot preemption dump\n\
+                   0.5, node, 1, 0.05\n\
+                   \n\
+                   12.5, link, 0, 0.5\n\
+                   60.5, node, 1, 1.0\n";
+        let spec = TraceSpec::from_csv(csv).unwrap();
+        assert_eq!(spec.node_events, vec![(0.5, 1, 0.05), (60.5, 1, 1.0)]);
+        assert_eq!(spec.link_events, vec![(12.5, 0, 0.5)]);
+        assert!(TraceSpec::from_csv("1.0, cpu, 0, 0.5").is_err());
+        assert!(TraceSpec::from_csv("1.0, node, 0").is_err());
     }
 
     #[test]

@@ -589,6 +589,28 @@ pub fn net_steal_spec() -> SweepSpec {
     )
 }
 
+/// `hemt dynamics --correlated` / `hemt figure rack_steal`: the steal
+/// arm set under *rack-correlated* shared-event degradation — every node
+/// rides one realization, so thieves degrade with victims and stealing's
+/// edge collapses toward parity.
+pub fn rack_steal_spec() -> SweepSpec {
+    crate::dynamics::correlated_steal_comparison_spec(
+        crate::dynamics::DEFAULT_ROUNDS,
+        crate::dynamics::CORRELATED_BASE_SEED,
+    )
+}
+
+/// `hemt dynamics --correlated` / `hemt figure link_degrade`: HeMT vs
+/// HomT on the 200 Mbps read-heavy testbed with the datanode uplinks
+/// themselves time-varying (compiled LinkPrograms replayed mid-stage
+/// through the dirty-link incremental solve).
+pub fn link_degrade_spec() -> SweepSpec {
+    crate::dynamics::link_degrade_comparison_spec(
+        crate::dynamics::DEFAULT_ROUNDS,
+        crate::dynamics::LINK_DEGRADE_BASE_SEED,
+    )
+}
+
 /// Round-by-round adaptation trajectory under Markov-modulated
 /// throttling (the dynamics analogue of Fig. 7).
 pub fn dynamics_markov_spec() -> SweepSpec {
@@ -623,6 +645,8 @@ pub fn spec_by_name(name: &str) -> Option<SweepSpec> {
         "dyn_spot" => Some(dynamics_spot_spec()),
         "steal" | "dyn_steal" => Some(dynamics_steal_spec()),
         "net_steal" => Some(net_steal_spec()),
+        "rack_steal" => Some(rack_steal_spec()),
+        "link_degrade" => Some(link_degrade_spec()),
         _ => None,
     }
 }
@@ -636,7 +660,7 @@ pub fn by_name(name: &str) -> Option<Figure> {
 pub const ALL_FIGURES: &[&str] = &[
     "fig4", "fig5", "fig7", "fig8", "fig9", "fig10_12", "fig13", "fig14", "fig15",
     "fig17", "fig18", "headline", "extension", "dyn_compare", "dyn_markov", "dyn_spot",
-    "dyn_steal", "net_steal",
+    "dyn_steal", "net_steal", "rack_steal", "link_degrade",
 ];
 
 #[cfg(test)]

@@ -35,10 +35,14 @@ fn usage() -> &'static str {
                                     whole-grid product sweep (dynamics x clusters x
                                     workloads x policies x granularities); default:
                                     the built-in tiny-tasks regime product
-  hemt dynamics [--rounds N] [--json] [--threads N]
+  hemt dynamics [--correlated] [--rounds N] [--json] [--threads N]
                                     closed-loop Adaptive-HeMT vs static-HeMT vs HomT
                                     under time-varying capacity (Markov throttling,
-                                    spot outage, diurnal, credit cliff)
+                                    spot outage, diurnal, credit cliff).
+                                    --correlated runs the correlated figures instead:
+                                    rack_steal (shared-event rack degradation, thieves
+                                    degrade with victims) and link_degrade (time-varying
+                                    HDFS uplink capacity on the 200 Mbps testbed)
   hemt steal [--streams] [--rounds N] [--json] [--threads N]
                                     mid-stage work stealing: Steal-HeMT (running
                                     tasks split, remainder re-homed on idle nodes)
@@ -242,7 +246,32 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
 /// families (Markov throttling, spot outage, diurnal interference,
 /// credit cliff). All three arms of a family share one seed, hence one
 /// capacity trace; output is bit-identical for any thread count.
+///
+/// With `--correlated`, the correlated-dynamics figures instead: the
+/// `rack_steal` comparison (the steal arm set under rack-wide
+/// shared-event degradation, where thieves degrade with victims) then
+/// the `link_degrade` comparison (HeMT vs HomT on the 200 Mbps
+/// read-heavy testbed with the datanode uplinks themselves
+/// time-varying).
 fn cmd_dynamics(args: &[String]) -> Result<(), String> {
+    if args.iter().any(|a| a == "--correlated") {
+        run_family_comparison(
+            args,
+            "rack-correlated steal comparison",
+            4,
+            hemt::dynamics::CORRELATED_FAMILIES,
+            hemt::dynamics::CORRELATED_BASE_SEED,
+            hemt::dynamics::correlated_steal_comparison_spec,
+        )?;
+        return run_family_comparison(
+            args,
+            "link-degradation comparison",
+            3,
+            hemt::dynamics::LINK_FAMILIES,
+            hemt::dynamics::LINK_DEGRADE_BASE_SEED,
+            hemt::dynamics::link_degrade_comparison_spec,
+        );
+    }
     run_family_comparison(
         args,
         "dynamics comparison",

@@ -263,6 +263,16 @@ impl Engine {
         }
     }
 
+    /// Apply an external capacity change to a network link (the
+    /// [`crate::dynamics`] link-event path: a congested ToR, a failing
+    /// uplink) — the network dual of [`Engine::set_node_capacity`].
+    /// Takes effect at the next step's rate re-level; only flow
+    /// components touching the dirtied link are re-solved (the
+    /// incremental dirty-link path in [`crate::netsim`]).
+    pub fn set_link_capacity(&mut self, link: crate::netsim::LinkId, capacity_bps: f64) {
+        self.net.set_link_capacity(link, capacity_bps);
+    }
+
     /// Enable or disable the capacity-event tap. Enabling starts with an
     /// empty buffer; disabling discards whatever was not drained.
     pub fn set_capacity_tap(&mut self, enabled: bool) {

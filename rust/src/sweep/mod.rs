@@ -388,6 +388,10 @@ pub fn run_scenario_trial(sc: &Scenario, seed: u64) -> f64 {
     if !sc.dynamics.is_steady() {
         let events = sc.dynamics.compile_events(s.engine.nodes.len(), seed);
         s.install_dynamics(events);
+        let link_events = sc.dynamics.compile_link_events(s.engine.net.num_links(), seed);
+        if !link_events.is_empty() {
+            s.install_link_dynamics(link_events);
+        }
     }
     match sc.workload.kind {
         WorkloadKind::WordCount => wordcount_trial_in(&mut s, sc),
@@ -629,6 +633,7 @@ mod tests {
                     baseline: 0.1,
                 },
             ],
+            links: Vec::new(),
             horizon: 4000.0,
         };
         let dynamic_a = run_scenario_trial(&sc, 5150);

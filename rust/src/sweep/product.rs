@@ -234,6 +234,11 @@ impl ProductSweepSpec {
                 Named::new("spot", DynamicsConfig::spot_replace()),
                 Named::new("diurnal", DynamicsConfig::diurnal()),
                 Named::new("credit_cliff", DynamicsConfig::credit_cliff()),
+                // Appended after the original five: the dynamics axis is
+                // seed-strided by index, so every historic cell keeps its
+                // exact seed and value. Rack-correlated shared CPU events
+                // plus a shared uplink squeeze — fully correlated.
+                Named::new("correlated", DynamicsConfig::correlated()),
             ],
             clusters: vec![Named::new("static", ClusterConfig::containers_1_and_04())],
             workloads: vec![Named::new("wordcount", WorkloadConfig::wordcount_2gb())],
@@ -579,6 +584,7 @@ mod tests {
                 CapacityProgram::Steady,
                 CapacityProgram::CreditCliff { credits: 2.0, peak: 1.0, baseline: 0.1 },
             ],
+            links: Vec::new(),
             horizon: 1000.0,
         };
         p.dynamics = vec![

@@ -5,9 +5,10 @@
 //! rebuild inside the engine on every re-level in these debug builds).
 
 use hemt::dynamics::{
-    comparison_spec, net_steal_comparison_spec, steal_comparison_spec, CapacityProgram,
-    DynamicsConfig, COMPARISON_BASE_SEED, COMPARISON_FAMILIES, NET_STEAL_BASE_SEED,
-    NET_STEAL_FAMILIES,
+    comparison_spec, correlated_steal_comparison_spec, family_means, link_degrade_comparison_spec,
+    net_steal_comparison_spec, steal_comparison_spec, CapacityProgram, DynamicsConfig, TraceSpec,
+    COMPARISON_BASE_SEED, COMPARISON_FAMILIES, CORRELATED_BASE_SEED, CORRELATED_FAMILIES,
+    LINK_DEGRADE_BASE_SEED, LINK_FAMILIES, NET_STEAL_BASE_SEED, NET_STEAL_FAMILIES,
 };
 use hemt::metrics::Figure;
 use hemt::sweep::{ProductSweepSpec, SweepRunner};
@@ -233,6 +234,7 @@ fn dynamics_product_sweep_is_bit_identical_across_thread_counts() {
                                 baseline: 0.1,
                             },
                         ],
+                        links: Vec::new(),
                         horizon: 1000.0,
                     },
                 ),
@@ -322,6 +324,346 @@ fn compiled_schedules_drive_sessions_identically_to_node_interference() {
     // Sanity: the trace actually bit (200 core-s at full speed would be
     // 200 s; the throttled run must take longer).
     assert!(via_dynamics > 210.0, "trace had no effect: {via_dynamics}");
+}
+
+#[test]
+fn correlated_steal_comparison_is_bit_identical_across_thread_counts() {
+    // The rack_steal acceptance gate: the four-arm comparison under
+    // *rack-correlated* shared-event degradation (every node riding one
+    // realization) must not depend on sweep scheduling.
+    let make = || correlated_steal_comparison_spec(3, CORRELATED_BASE_SEED);
+    let baseline = figure_bits(&SweepRunner::new(1).run(&make()));
+    for threads in [2usize, 8] {
+        let fig = SweepRunner::new(threads).run(&make());
+        assert_eq!(figure_bits(&fig), baseline, "threads={threads}");
+    }
+    // Structural golden: four policy arms, Steal-HeMT leading, one point
+    // per correlated family, n = rounds, labels = family names.
+    let fig = SweepRunner::new(1).run(&make());
+    assert_eq!(fig.series.len(), 4);
+    assert!(
+        fig.series[0].name.starts_with("Steal-HeMT"),
+        "lead series is the steal arm: {}",
+        fig.series[0].name
+    );
+    for s in &fig.series {
+        assert_eq!(s.points.len(), CORRELATED_FAMILIES.len(), "{}", s.name);
+        for (fi, p) in s.points.iter().enumerate() {
+            assert_eq!(p.label, CORRELATED_FAMILIES[fi]);
+            assert_eq!(p.stats.n, 3);
+            assert!(p.stats.mean > 1.0 && p.stats.mean < 10_000.0);
+        }
+    }
+}
+
+#[test]
+fn link_degrade_comparison_is_bit_identical_across_thread_counts() {
+    // The link_degrade acceptance gate: HeMT vs HomT on the 200 Mbps
+    // read-heavy testbed with the datanode uplinks *themselves*
+    // time-varying (LinkProgram schedules replayed mid-stage through the
+    // dirty-link incremental solve) must not depend on sweep scheduling.
+    let make = || link_degrade_comparison_spec(3, LINK_DEGRADE_BASE_SEED);
+    let baseline = figure_bits(&SweepRunner::new(1).run(&make()));
+    for threads in [2usize, 8] {
+        let fig = SweepRunner::new(threads).run(&make());
+        assert_eq!(figure_bits(&fig), baseline, "threads={threads}");
+    }
+    // Structural golden: three policy arms, one point per link family,
+    // n = rounds, labels = family names.
+    let fig = SweepRunner::new(1).run(&make());
+    assert_eq!(fig.series.len(), 3);
+    for s in &fig.series {
+        assert_eq!(s.points.len(), LINK_FAMILIES.len(), "{}", s.name);
+        for (fi, p) in s.points.iter().enumerate() {
+            assert_eq!(p.label, LINK_FAMILIES[fi]);
+            assert_eq!(p.stats.n, 3);
+            assert!(p.stats.mean > 1.0 && p.stats.mean < 10_000.0);
+        }
+    }
+}
+
+#[test]
+fn stealing_win_over_static_shrinks_under_rack_correlated_degradation() {
+    // The correlated-regime acceptance criterion: under *independent*
+    // Markov throttling (node 1 degrades, node 0 keeps full speed),
+    // stealing beats static HeMT — the stranded remainder re-homes onto
+    // the still-fast node. Under *rack-correlated* throttling the same
+    // process hits every node at once: relative speeds barely move,
+    // there is no fast node to re-home onto, and the profitability guard
+    // should leave stealing near parity with static HeMT. The win ratio
+    // (static time / steal time) must therefore shrink.
+    let rounds = 16;
+    let ind = SweepRunner::new(2).run(&steal_comparison_spec(rounds, COMPARISON_BASE_SEED));
+    let corr =
+        SweepRunner::new(2).run(&correlated_steal_comparison_spec(rounds, CORRELATED_BASE_SEED));
+    let ratio = |fig: &Figure, family: &str| {
+        let steal = family_means(fig, "Steal-HeMT (split + steal)");
+        let static_ = family_means(fig, "static HeMT (launch hints)");
+        let s = steal.iter().find(|(f, _)| f == family).unwrap().1;
+        let st = static_.iter().find(|(f, _)| f == family).unwrap().1;
+        st / s
+    };
+    let r_ind = ratio(&ind, "markov");
+    let r_corr = ratio(&corr, "rack_markov");
+    assert!(
+        r_corr < r_ind,
+        "stealing's win must shrink when thieves degrade with victims: \
+         independent markov ratio {r_ind:.3} vs rack-correlated {r_corr:.3}"
+    );
+    // And stealing must not materially *lose* in the correlated regime:
+    // the profitability guards keep no-win steals from firing.
+    assert!(
+        r_corr > 0.90,
+        "Steal-HeMT regressed under rack-correlated dynamics: ratio {r_corr:.3}"
+    );
+}
+
+#[test]
+fn shared_event_fanout_matches_manually_merged_per_node_programs() {
+    // The composition oracle, fuzzed: a SharedEvent program fanned to a
+    // random node subset must compile to exactly what you get by
+    // manually merging the shared realization into per-node explicit
+    // Trace programs (members) and Steady (non-members) — same events,
+    // same order, bit for bit.
+    use hemt::util::prop;
+    prop::check("shared-event-composition-oracle", 0x5A_EDE7, 30, |rng| {
+        let n = 2 + rng.below(4);
+        let members: Vec<usize> = (0..n).filter(|_| rng.f64() < 0.6).collect();
+        let inner = match rng.below(3) {
+            0 => CapacityProgram::MarkovThrottle {
+                mult: 0.2 + 0.6 * rng.f64(),
+                mean_up: 20.0 + 80.0 * rng.f64(),
+                mean_down: 10.0 + 40.0 * rng.f64(),
+            },
+            1 => CapacityProgram::SpotOutage {
+                mean_revoke: 50.0 + 100.0 * rng.f64(),
+                outage: 10.0 + 50.0 * rng.f64(),
+                residual_mult: 0.05,
+            },
+            _ => CapacityProgram::Diurnal {
+                period: 100.0 + 200.0 * rng.f64(),
+                depth: 0.3 + 0.4 * rng.f64(),
+                steps: 8,
+            },
+        };
+        let shared = DynamicsConfig {
+            programs: vec![CapacityProgram::SharedEvent {
+                stream: rng.below(100) as u64,
+                members: members.clone(),
+                program: Box::new(inner),
+            }],
+            links: Vec::new(),
+            horizon: 1500.0,
+        };
+        let seed = rng.next_u64() >> 16;
+        let scheds = shared.compile_for(n, seed);
+        // Every member carries the identical realization; non-members
+        // stay steady.
+        for (i, sched) in scheds.iter().enumerate() {
+            if members.contains(&i) {
+                assert_eq!(sched, &scheds[members[0]], "node {i}");
+            } else {
+                assert!(sched.steps.is_empty(), "node {i} is not a member");
+            }
+        }
+        // The manually merged oracle: explicit per-node Trace programs
+        // with the same events (one per node, so i % n == i).
+        let oracle = DynamicsConfig {
+            programs: (0..n)
+                .map(|i| {
+                    if members.contains(&i) {
+                        CapacityProgram::Trace(scheds[members[0]].steps.clone())
+                    } else {
+                        CapacityProgram::Steady
+                    }
+                })
+                .collect(),
+            links: Vec::new(),
+            horizon: 1500.0,
+        };
+        assert_eq!(
+            shared.compile_events(n, seed),
+            oracle.compile_events(n, seed),
+            "merged event streams must match bit for bit"
+        );
+    });
+}
+
+#[test]
+fn shared_event_session_runs_match_the_merged_oracle_end_to_end() {
+    // End-to-end engine-state check of the composition oracle: driving a
+    // 3-node session with the SharedEvent config vs the manually merged
+    // per-node Trace config must leave stage times *and* per-node
+    // capacities bit-identical.
+    use hemt::coordinator::driver::{SessionBuilder, SimParams};
+    use hemt::coordinator::{JobPlan, PartitionPolicy, StageInput, StagePlan};
+    use hemt::nodes::Node;
+
+    let n = 3;
+    let shared = DynamicsConfig {
+        programs: vec![CapacityProgram::SharedEvent {
+            stream: 2,
+            members: vec![0, 2],
+            program: Box::new(CapacityProgram::MarkovThrottle {
+                mult: 0.3,
+                mean_up: 30.0,
+                mean_down: 20.0,
+            }),
+        }],
+        links: Vec::new(),
+        horizon: 500.0,
+    };
+    let seed = 4242u64;
+    let scheds = shared.compile_for(n, seed);
+    let oracle = DynamicsConfig {
+        programs: (0..n)
+            .map(|i| {
+                if i % 2 == 0 {
+                    CapacityProgram::Trace(scheds[0].steps.clone())
+                } else {
+                    CapacityProgram::Steady
+                }
+            })
+            .collect(),
+        links: Vec::new(),
+        horizon: 500.0,
+    };
+    let mb = 1u64 << 20;
+    let run = |cfg: &DynamicsConfig| -> (f64, Vec<f64>) {
+        let params = SimParams {
+            sched_overhead: 0.0,
+            launch_latency: 0.0,
+            io_setup: 0.0,
+            ..Default::default()
+        };
+        let mut s = SessionBuilder {
+            nodes: (0..n).map(|i| Node::fixed(&format!("n{i}"), 1.0)).collect(),
+            exec_cpus: vec![1.0; n],
+            node_uplink_bps: 1e12,
+            node_downlink_bps: 1e12,
+            hdfs_datanodes: n,
+            hdfs_replication: 1,
+            hdfs_uplink_bps: 1e12,
+            hdfs_serving_eta: 0.0,
+            params,
+            seed: 77,
+        }
+        .build();
+        let file = s.hdfs.upload(300 * mb, 100 * mb, &mut s.rng);
+        s.install_dynamics(cfg.compile_events(n, seed));
+        let job = JobPlan {
+            name: "map".into(),
+            stages: vec![StagePlan {
+                input: StageInput::Hdfs { file },
+                policy: PartitionPolicy::EvenTasks(n),
+                cpu_secs_per_byte: 1.0 / mb as f64,
+                output_ratio: 0.0,
+            }],
+        };
+        let t = s.run_job(&job).stages[0].completion_time();
+        let caps = (0..n).map(|i| s.engine.nodes[i].available_cores(t)).collect();
+        (t, caps)
+    };
+    let (t_shared, caps_shared) = run(&shared);
+    let (t_oracle, caps_oracle) = run(&oracle);
+    assert_eq!(t_shared.to_bits(), t_oracle.to_bits(), "{t_shared} vs {t_oracle}");
+    for i in 0..n {
+        assert_eq!(caps_shared[i].to_bits(), caps_oracle[i].to_bits(), "node {i}");
+    }
+    // Sanity: the shared trace actually bit (members throttle mid-stage).
+    assert!(!scheds[0].steps.is_empty());
+}
+
+#[test]
+fn trace_spec_round_trips_and_normalizes_stably() {
+    // Out-of-order input with same-time events on different ids AND
+    // duplicate (time, id) pairs: JSON round-trips the raw order, and
+    // normalization stable-sorts by (time, id) so duplicates keep input
+    // order — the last one is the multiplier in force, exactly the
+    // take_capacity_events pinning.
+    let spec = TraceSpec {
+        node_events: vec![(50.0, 1, 0.5), (10.0, 0, 0.8), (10.0, 0, 0.6), (50.0, 0, 1.0)],
+        link_events: vec![(20.0, 1, 0.5), (20.0, 0, 0.7), (5.0, 1, 0.9)],
+    };
+    let back = TraceSpec::from_str(&spec.to_json().pretty()).unwrap();
+    assert_eq!(spec, back, "JSON preserves the dump's own order");
+    let norm = spec.normalized();
+    assert_eq!(
+        norm.node_events,
+        vec![(10.0, 0, 0.8), (10.0, 0, 0.6), (50.0, 0, 1.0), (50.0, 1, 0.5)]
+    );
+    assert_eq!(norm.link_events, vec![(5.0, 1, 0.9), (20.0, 0, 0.7), (20.0, 1, 0.5)]);
+    assert_eq!(norm, norm.normalized(), "normalization is idempotent");
+    assert_eq!(norm, back.normalized(), "JSON round-trip preserves normalization");
+    // Lowering to DynamicsConfig is input-order independent: the raw and
+    // normalized traces compile to identical configs and events.
+    assert_eq!(spec.to_dynamics(2), norm.to_dynamics(2));
+    let cfg = spec.to_dynamics(2);
+    assert_eq!(
+        cfg.compile_events(2, 1),
+        vec![(10.0, 0, 0.8), (10.0, 0, 0.6), (50.0, 0, 1.0), (50.0, 1, 0.5)]
+    );
+    let round = DynamicsConfig::from_json(&cfg.to_json()).unwrap();
+    assert_eq!(cfg, round, "lowered trace configs round-trip too");
+}
+
+#[test]
+fn trace_replay_is_bit_identical_across_installs() {
+    // Replay determinism: installing the same TraceSpec on two fresh
+    // sessions — once raw, once pre-normalized — must produce
+    // bit-identical stage times; traces carry no randomness at all.
+    use hemt::coordinator::driver::{SessionBuilder, SimParams};
+    use hemt::coordinator::{JobPlan, PartitionPolicy, StageInput, StagePlan};
+    use hemt::nodes::Node;
+
+    let mb = 1u64 << 20;
+    // Out-of-order dump: CPU throttle on node 1 plus a squeeze of HDFS
+    // uplink 0 (datanode uplinks are links 0..hdfs_datanodes).
+    let spec = TraceSpec {
+        node_events: vec![(40.0, 1, 1.0), (15.0, 1, 0.3)],
+        link_events: vec![(60.0, 0, 1.0), (10.0, 0, 0.25)],
+    };
+    let run = |trace: &TraceSpec| -> f64 {
+        let params = SimParams {
+            sched_overhead: 0.0,
+            launch_latency: 0.0,
+            io_setup: 0.0,
+            ..Default::default()
+        };
+        let mut s = SessionBuilder {
+            nodes: vec![Node::fixed("a", 1.0), Node::fixed("b", 1.0)],
+            exec_cpus: vec![1.0, 1.0],
+            node_uplink_bps: 1e9,
+            node_downlink_bps: 1e9,
+            hdfs_datanodes: 2,
+            hdfs_replication: 1,
+            hdfs_uplink_bps: 4e8,
+            hdfs_serving_eta: 0.0,
+            params,
+            seed: 13,
+        }
+        .build();
+        let file = s.hdfs.upload(400 * mb, 100 * mb, &mut s.rng);
+        s.install_trace(trace);
+        let job = JobPlan {
+            name: "map".into(),
+            stages: vec![StagePlan {
+                input: StageInput::Hdfs { file },
+                policy: PartitionPolicy::EvenTasks(2),
+                cpu_secs_per_byte: 0.2 / mb as f64,
+                output_ratio: 0.0,
+            }],
+        };
+        s.run_job(&job).stages[0].completion_time()
+    };
+    let raw = run(&spec);
+    let pre_normalized = run(&spec.normalized());
+    let again = run(&spec);
+    assert_eq!(raw.to_bits(), pre_normalized.to_bits(), "{raw} vs {pre_normalized}");
+    assert_eq!(raw.to_bits(), again.to_bits());
+    // Sanity: the trace bit — a no-dynamics run is strictly faster.
+    let steady = run(&TraceSpec::default());
+    assert!(raw > steady, "trace had no effect: {steady} -> {raw}");
 }
 
 #[test]

@@ -203,6 +203,82 @@ fn incremental_matches_full_solve_under_truncation_churn() {
 }
 
 #[test]
+fn incremental_matches_full_solve_under_compiled_link_programs() {
+    // The link-dynamics churn: capacity events come from *compiled*
+    // LinkPrograms (the `hemt dynamics --correlated` path) instead of
+    // raw random pokes — shared ToR-style streams fanned to a rack's
+    // links plus independent per-link realizations — replayed in their
+    // canonical (time, link) order as `nominal * mult`, interleaved with
+    // flow churn. After every event the incrementally maintained rates
+    // must be bit-identical to the forced full solve on a clone AND to a
+    // from-scratch rebuild (the same shadow oracles as the node-CPU
+    // churn above).
+    use hemt::dynamics::{CapacityProgram, DynamicsConfig, LinkProgram};
+    prop::check("netsim-link-programs-vs-full", 0x11CC_0DD5, 25, |rng: &mut Rng| {
+        let mut net = NetSim::new();
+        let links = build_links(&mut net, rng);
+        let nominal: Vec<f64> = links.iter().map(|&l| net.link(l).capacity_bps).collect();
+        // A shared squeeze of one rack's up/down pair plus an independent
+        // program over a random link subset.
+        let rack = rng.below(RACKS);
+        let cfg = DynamicsConfig {
+            programs: Vec::new(),
+            links: vec![
+                LinkProgram {
+                    links: vec![2 * rack, 2 * rack + 1],
+                    shared: true,
+                    program: CapacityProgram::MarkovThrottle {
+                        mult: 0.2 + 0.5 * rng.f64(),
+                        mean_up: 5.0 + 20.0 * rng.f64(),
+                        mean_down: 5.0 + 15.0 * rng.f64(),
+                    },
+                },
+                LinkProgram {
+                    links: (0..links.len()).filter(|_| rng.f64() < 0.4).collect(),
+                    shared: false,
+                    program: CapacityProgram::SpotOutage {
+                        mean_revoke: 10.0 + 30.0 * rng.f64(),
+                        outage: 5.0 + 10.0 * rng.f64(),
+                        residual_mult: 0.05,
+                    },
+                },
+            ],
+            horizon: 400.0,
+        };
+        let events = cfg.compile_link_events(links.len(), rng.next_u64() >> 16);
+        for w in events.windows(2) {
+            assert!(
+                w[0].0 < w[1].0 || (w[0].0 == w[1].0 && w[0].1 <= w[1].1),
+                "compiled events must be (time, link)-sorted"
+            );
+        }
+        let mut live: Vec<u64> = Vec::new();
+        for (step, &(_, link, mult)) in events.iter().enumerate() {
+            // Interleave flow churn with the scheduled link events.
+            match rng.below(6) {
+                0..=2 => {
+                    live.push(net.add_flow(random_route(rng), rng.range_f64(1.0, 1e6), step as u64))
+                }
+                3 if !live.is_empty() => {
+                    let id = live.swap_remove(rng.below(live.len()));
+                    net.remove_flow(id).expect("live flow");
+                }
+                _ => {}
+            }
+            // The driver's replay: multipliers always scale the nominal
+            // (build-time) capacity, never the current one.
+            net.set_link_capacity(links[link], nominal[link] * mult);
+            net.recompute_rates();
+            let mut full = net.clone();
+            full.recompute_rates_full();
+            assert_rates_bit_identical(&net, &full, "link program churn vs full clone");
+            let fresh = rebuild(&net);
+            assert_rates_bit_identical(&net, &fresh, "link program churn vs rebuild");
+        }
+    });
+}
+
+#[test]
 fn incremental_engine_takes_both_paths() {
     // Construct the two regimes explicitly so both solver paths are
     // provably exercised (the random property above checks correctness
