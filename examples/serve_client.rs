@@ -1,0 +1,102 @@
+//! Serve client demo: submit a product sweep to a running `hemt serve`
+//! and print the per-trial results as they stream back over SSE.
+//!
+//! Start the server in one terminal:
+//!
+//! ```text
+//! cargo run --release -- serve --addr 127.0.0.1:7199
+//! ```
+//!
+//! then in another:
+//!
+//! ```text
+//! cargo run --release --example serve_client                  # tiny_tasks preset
+//! cargo run --release --example serve_client 127.0.0.1:7199 --metrics
+//! cargo run --release --example serve_client 127.0.0.1:7199 --shutdown
+//! ```
+//!
+//! Submit the same spec twice and the second stream replays from the
+//! server's memo cache — identical bytes, no recompute (watch
+//! `memo_hits` in `--metrics`).
+
+use hemt::api::RunRequest;
+use hemt::metrics::Figure;
+use hemt::serve::client;
+use hemt::sweep::ProductSweepSpec;
+use hemt::util::json::Value;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let addr = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .cloned()
+        .unwrap_or_else(|| "127.0.0.1:7199".to_string());
+
+    if args.iter().any(|a| a == "--healthz") {
+        let resp = client::request(&addr, "GET", "/healthz", None).expect("server unreachable");
+        print!("{} {}", resp.status, resp.body_str());
+        return;
+    }
+    if args.iter().any(|a| a == "--metrics") {
+        let resp = client::request(&addr, "GET", "/metrics", None).expect("server unreachable");
+        print!("{}", resp.body_str());
+        return;
+    }
+    if args.iter().any(|a| a == "--shutdown") {
+        let resp = client::request(&addr, "POST", "/shutdown", None).expect("server unreachable");
+        print!("{}", resp.body_str());
+        return;
+    }
+
+    // The whole-grid tiny-tasks regime product, as a RunRequest — the
+    // same document `hemt sweep` runs locally and `hemt request` reads
+    // from disk.
+    let req = RunRequest::ProductSweep { spec: ProductSweepSpec::tiny_tasks_regimes() };
+    let body = req.to_json().pretty();
+    println!("POST /run -> {addr} (tiny_tasks product sweep)");
+
+    let mut trials = 0usize;
+    let (status, err_body) = client::post_sse(&addr, "/run", &body, |event, data| {
+        let v = Value::parse(data).unwrap_or(Value::Null);
+        match event {
+            "start" => {
+                if let Some(banner) = v.get("banner").and_then(Value::as_str) {
+                    println!("[start] {banner}");
+                }
+            }
+            "trial" => {
+                trials += 1;
+                println!(
+                    "[trial {trials:>3}] unit {:>3}  series {}  x={:<6} value={:.3}",
+                    v.get("unit").and_then(Value::as_usize).unwrap_or(0),
+                    v.get("series").and_then(Value::as_usize).unwrap_or(0),
+                    v.get("x").and_then(Value::as_f64).unwrap_or(0.0),
+                    v.get("value").and_then(Value::as_f64).unwrap_or(0.0),
+                );
+            }
+            "figure" => {
+                if let Some(fv) = v.get("output").and_then(|o| o.get("figure")) {
+                    match Figure::from_json(fv) {
+                        Ok(fig) => println!("\n{}", fig.to_table()),
+                        Err(e) => eprintln!("bad figure frame: {e}"),
+                    }
+                }
+            }
+            "done" => println!(
+                "[done] spec_hash {}",
+                v.get("spec_hash").and_then(Value::as_str).unwrap_or("?")
+            ),
+            "error" => eprintln!(
+                "[error] {}",
+                v.get("error").and_then(Value::as_str).unwrap_or(data)
+            ),
+            _ => {}
+        }
+    })
+    .expect("server unreachable — start one with: cargo run --release -- serve");
+    if status != 200 {
+        eprintln!("server rejected the run: HTTP {status}\n{err_body}");
+        std::process::exit(1);
+    }
+}

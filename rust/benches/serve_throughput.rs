@@ -1,0 +1,107 @@
+//! `hemt serve` throughput bench: spin up the real server (loopback
+//! TCP, SSE streaming, memo + session pool) and measure two paths the
+//! service lives or dies by:
+//!
+//! * `serve_throughput` — a batch of *distinct* tiny product-sweep
+//!   specs submitted concurrently: full compute per spec, but every
+//!   trial of every spec reuses the pooled cluster session
+//!   ([`hemt::sweep::cached_session`] keys on the cluster alone).
+//! * `serve_memo_hit` — resubmitting one already-computed spec over and
+//!   over: the pure replay path (parse → hash → stream stored frames),
+//!   which is what a dashboard hammering the service actually exercises.
+//!
+//! Writes `BENCH_serve_throughput.json` and `BENCH_serve_memo_hit.json`
+//! for the CI trajectory gate.
+
+use hemt::api::RunRequest;
+use hemt::bench_harness::time_and_report;
+use hemt::config::{ClusterConfig, PolicyConfig, WorkloadConfig};
+use hemt::serve::{client, spawn, ServeConfig};
+use hemt::sweep::{Metric, Named, ProductSweepSpec};
+
+fn tiny_body(base_seed: u64) -> String {
+    let mut wl = WorkloadConfig::wordcount_2gb();
+    wl.data_mb = 256;
+    wl.block_mb = 128;
+    let spec = ProductSweepSpec {
+        title: format!("bench product {base_seed}"),
+        dynamics: ProductSweepSpec::steady_axis(),
+        clusters: vec![Named::new("static", ClusterConfig::containers_1_and_04())],
+        workloads: vec![Named::new("wc", wl)],
+        policies: vec![
+            Named::new("homt", PolicyConfig::Homt(2)),
+            Named::new("hemt", PolicyConfig::HemtFromHints),
+        ],
+        granularities: vec![2, 8],
+        metric: Metric::MapStageTime,
+        trials: 2,
+        base_seed,
+    };
+    RunRequest::ProductSweep { spec }.to_json().compact()
+}
+
+fn submit_batch(addr: &str, seeds: &[u64]) {
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = seeds
+            .iter()
+            .map(|&seed| {
+                let body = tiny_body(seed);
+                scope.spawn(move || {
+                    let mut done = false;
+                    let (status, err) = client::post_sse(addr, "/run", &body, |ev, _| {
+                        done = done || ev == "done";
+                    })
+                    .expect("submit");
+                    assert_eq!(status, 200, "{err}");
+                    assert!(done, "stream must complete");
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+}
+
+fn main() {
+    let workers = 2;
+    let handle = spawn(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        workers,
+        threads: 2,
+        max_queue: 64,
+        paused: false,
+    })
+    .expect("bind loopback");
+    let addr = handle.addr().to_string();
+    println!("== serve_throughput: {workers} workers x 2 sweep threads on {addr} ==");
+
+    // Distinct specs per iteration (seed varies per round and per slot)
+    // so each batch is real compute, never a memo replay.
+    let mut round: u64 = 0;
+    let throughput = time_and_report("serve_throughput", 1, 3, || {
+        let seeds: Vec<u64> = (0..6).map(|i| 1_000_000 + round * 100 + i).collect();
+        submit_batch(&addr, &seeds);
+        round += 1;
+    });
+    println!("serve_throughput (6 specs/batch): {} s", throughput.pm(3));
+
+    // Replay path: one spec, computed once above the timer, then
+    // resubmitted — memo hits only.
+    let replay_body = tiny_body(9_999_999);
+    submit_batch(&addr, &[9_999_999]);
+    let memo = time_and_report("serve_memo_hit", 1, 5, || {
+        for _ in 0..20 {
+            let raw = client::raw_request(&addr, "POST", "/run", Some(&replay_body))
+                .expect("replay");
+            assert!(!raw.is_empty());
+        }
+    });
+    println!("serve_memo_hit (20 replays/iter): {} s", memo.pm(3));
+
+    let metrics = client::request(&addr, "GET", "/metrics", None).expect("metrics");
+    println!();
+    println!("{}", metrics.body_str());
+    handle.shutdown();
+    handle.join();
+}

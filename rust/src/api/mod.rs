@@ -1,0 +1,747 @@
+//! The unified programmatic run API: one request type, one entry point.
+//!
+//! Historically every `hemt` subcommand hand-parsed its arguments into a
+//! different internal call, so there was no single request a server
+//! could accept. [`RunRequest`] is that request: a JSON-round-trippable
+//! description of any run the CLI can perform (a paper figure, an
+//! ablation, a config experiment, a whole-grid product sweep, or the
+//! dynamics/steal family comparisons), and [`execute`] is the one
+//! dispatch point both the CLI subcommands (`rust/src/main.rs`) and the
+//! serve layer ([`crate::serve`]) route through. The CLI subcommands are
+//! thin translators to `RunRequest`; `hemt request <file.json>` runs any
+//! serialized request directly, so the two surfaces are provably the
+//! same (asserted by `rust/tests/api_golden.rs`).
+//!
+//! [`execute_with`] adds a progress observer: the serve layer streams
+//! [`RunEvent::Unit`] completions to SSE subscribers as the sweep pool
+//! finishes them, and the CLI prints banners/tables at the exact points
+//! the pre-redesign subcommands did. Figures produced through this path
+//! are bit-identical to the historic per-subcommand plumbing for any
+//! thread count — the specs, seeds, and runner are the same objects.
+
+use crate::config::ExperimentConfig;
+use crate::dynamics;
+use crate::experiments;
+use crate::metrics::Figure;
+use crate::sweep::{Metric, ProductSweepSpec, Sample, Scenario, SweepRunner, SweepSpec};
+use crate::util::json::{self, Value};
+
+/// Any run the CLI or server can perform, as data.
+///
+/// The CLI mapping: `hemt figure` → [`RunRequest::Figure`], `hemt
+/// ablation` → [`RunRequest::Ablation`], `hemt run --config` →
+/// [`RunRequest::Sweep`] (a single-cell trial sweep of one
+/// [`ExperimentConfig`]), `hemt sweep` → [`RunRequest::ProductSweep`],
+/// `hemt dynamics [--correlated]` → [`RunRequest::Dynamics`], and `hemt
+/// steal [--streams]` → [`RunRequest::Steal`].
+#[derive(Debug, Clone)]
+pub enum RunRequest {
+    /// One paper figure by registry name ([`experiments::FIGURES`]), or
+    /// `"all"` for every figure.
+    Figure { name: String },
+    /// One design-choice ablation by name, or `"all"`.
+    Ablation { name: String },
+    /// A custom experiment config: `trials` runs of one cluster ×
+    /// workload × policy cell.
+    Sweep { config: ExperimentConfig },
+    /// A whole-grid scenario product (dynamics × clusters × workloads ×
+    /// policies × granularities).
+    ProductSweep { spec: ProductSweepSpec },
+    /// The closed-loop policy comparison across capacity-program
+    /// families; `correlated` runs the rack_steal + link_degrade pair
+    /// instead.
+    Dynamics { correlated: bool, rounds: usize },
+    /// The mid-stage work-stealing comparison; `streams` runs the
+    /// network-bound stream-splitting head-to-head instead.
+    Steal { streams: bool, rounds: usize },
+}
+
+impl RunRequest {
+    pub fn to_json(&self) -> Value {
+        match self {
+            RunRequest::Figure { name } => json::obj(vec![
+                ("type", json::s("figure")),
+                ("name", json::s(name)),
+            ]),
+            RunRequest::Ablation { name } => json::obj(vec![
+                ("type", json::s("ablation")),
+                ("name", json::s(name)),
+            ]),
+            RunRequest::Sweep { config } => json::obj(vec![
+                ("type", json::s("sweep")),
+                ("config", config.to_json()),
+            ]),
+            RunRequest::ProductSweep { spec } => json::obj(vec![
+                ("type", json::s("product_sweep")),
+                ("spec", spec.to_json()),
+            ]),
+            RunRequest::Dynamics { correlated, rounds } => json::obj(vec![
+                ("type", json::s("dynamics")),
+                ("correlated", json::boolean(*correlated)),
+                ("rounds", json::num(*rounds as f64)),
+            ]),
+            RunRequest::Steal { streams, rounds } => json::obj(vec![
+                ("type", json::s("steal")),
+                ("streams", json::boolean(*streams)),
+                ("rounds", json::num(*rounds as f64)),
+            ]),
+        }
+    }
+
+    /// Parse a request. `product_sweep` accepts either a full `"spec"`
+    /// or the `"preset"` shorthand (`tiny_tasks` | `dynamics`), which is
+    /// resolved to the full spec at parse time — so a preset request and
+    /// its expanded equivalent serialize (and memo-hash) identically.
+    pub fn from_json(v: &Value) -> Result<RunRequest, String> {
+        let ty = v
+            .get("type")
+            .and_then(Value::as_str)
+            .ok_or("request needs a string \"type\" field")?;
+        let name_field = |v: &Value| -> Result<String, String> {
+            Ok(v.get("name")
+                .and_then(Value::as_str)
+                .ok_or_else(|| format!("{ty} request needs a \"name\""))?
+                .to_string())
+        };
+        let rounds_field = |v: &Value| -> Result<usize, String> {
+            match v.get("rounds") {
+                None => Ok(dynamics::DEFAULT_ROUNDS),
+                Some(r) => r
+                    .as_usize()
+                    .ok_or_else(|| "\"rounds\" must be a non-negative integer".to_string()),
+            }
+        };
+        let req = match ty {
+            "figure" => RunRequest::Figure { name: name_field(v)? },
+            "ablation" => RunRequest::Ablation { name: name_field(v)? },
+            "sweep" => RunRequest::Sweep {
+                config: ExperimentConfig::from_json(
+                    v.get("config").ok_or("sweep request needs a \"config\"")?,
+                )?,
+            },
+            "product_sweep" => {
+                let spec = match v.get("preset").and_then(Value::as_str) {
+                    Some("tiny_tasks") => ProductSweepSpec::tiny_tasks_regimes(),
+                    Some("dynamics") => ProductSweepSpec::dynamic_regimes(),
+                    Some(other) => {
+                        return Err(format!(
+                            "unknown preset '{other}' (expected tiny_tasks or dynamics)"
+                        ))
+                    }
+                    None => ProductSweepSpec::from_json(
+                        v.get("spec")
+                            .ok_or("product_sweep request needs a \"spec\" or \"preset\"")?,
+                    )?,
+                };
+                RunRequest::ProductSweep { spec }
+            }
+            "dynamics" => RunRequest::Dynamics {
+                correlated: v.get("correlated").and_then(Value::as_bool).unwrap_or(false),
+                rounds: rounds_field(v)?,
+            },
+            "steal" => RunRequest::Steal {
+                streams: v.get("streams").and_then(Value::as_bool).unwrap_or(false),
+                rounds: rounds_field(v)?,
+            },
+            other => {
+                return Err(format!(
+                    "unknown request type '{other}' (expected figure, ablation, sweep, \
+                     product_sweep, dynamics, or steal)"
+                ))
+            }
+        };
+        req.validate()?;
+        Ok(req)
+    }
+
+    /// Inherent by design, mirroring `ExperimentConfig::from_str`.
+    #[allow(clippy::should_implement_trait)]
+    pub fn from_str(text: &str) -> Result<RunRequest, String> {
+        let v = Value::parse(text).map_err(|e| e.to_string())?;
+        Self::from_json(&v)
+    }
+
+    /// Reject requests that could not execute (unknown names, empty
+    /// axes, zero trial/round counts) with an error instead of a panic
+    /// deep in a worker — the serve layer turns this into a 400 before
+    /// anything is queued.
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            RunRequest::Figure { name } => {
+                if name != "all" && experiments::spec_by_name(name).is_none() {
+                    return Err(format!("unknown figure '{name}'"));
+                }
+            }
+            RunRequest::Ablation { name } => {
+                if name != "all" && experiments::ablations::spec_by_name(name).is_none() {
+                    return Err(format!("unknown ablation '{name}'"));
+                }
+            }
+            RunRequest::Sweep { config } => {
+                if config.trials == 0 {
+                    return Err("sweep config needs trials >= 1".into());
+                }
+                if config.cluster.nodes.is_empty() {
+                    return Err("sweep config needs at least one node".into());
+                }
+            }
+            RunRequest::ProductSweep { spec } => {
+                if spec.trials == 0 {
+                    return Err("product sweep needs trials >= 1".into());
+                }
+                for (axis, len) in [
+                    ("dynamics", spec.dynamics.len()),
+                    ("clusters", spec.clusters.len()),
+                    ("workloads", spec.workloads.len()),
+                    ("policies", spec.policies.len()),
+                    ("granularities", spec.granularities.len()),
+                ] {
+                    if len == 0 {
+                        return Err(format!("product axis '{axis}' must be non-empty"));
+                    }
+                    if len > 100 {
+                        return Err(format!(
+                            "product axis '{axis}' exceeds 100 values ({len})"
+                        ));
+                    }
+                }
+            }
+            RunRequest::Dynamics { rounds, .. } | RunRequest::Steal { rounds, .. } => {
+                if *rounds == 0 {
+                    return Err("rounds must be >= 1".into());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// FNV-1a 64 of the request's canonical compact JSON — the serve layer's
+/// memo key. Canonical because [`json::Value`] objects render with
+/// sorted keys and the preset shorthand is resolved at parse time:
+/// semantically equal requests hash equal.
+pub fn spec_hash(req: &RunRequest) -> u64 {
+    let canon = req.to_json().compact();
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in canon.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// One figure a request produced, plus what the CLI needs to render it
+/// exactly as the pre-redesign subcommands did.
+#[derive(Debug, Clone)]
+pub struct RunOutput {
+    /// Registry-style name (`fig9`, `dyn_steal`, a config's name, …).
+    pub name: String,
+    pub figure: Figure,
+    /// Capacity-program family names, in figure x-order — non-empty only
+    /// for the dynamics/steal comparisons, which print a winners table.
+    pub families: Vec<String>,
+    /// Adaptation rounds behind each family mean (0 when not a family
+    /// comparison).
+    pub rounds: usize,
+}
+
+impl RunOutput {
+    /// The per-family winners block the dynamics/steal subcommands print
+    /// after the figure table (byte-for-byte the historic format), or
+    /// `None` when this output has no family axis.
+    pub fn winners_table(&self) -> Option<String> {
+        if self.families.is_empty() {
+            return None;
+        }
+        let mut out = format!(
+            "per-family winners (mean map-stage time over {} rounds):",
+            self.rounds
+        );
+        for (fi, family) in self.families.iter().enumerate() {
+            let mut best: Option<(&str, f64)> = None;
+            for s in &self.figure.series {
+                if let Some(p) = s.points.iter().find(|p| p.x == fi as f64) {
+                    match best {
+                        Some((_, b)) if b <= p.stats.mean => {}
+                        _ => best = Some((s.name.as_str(), p.stats.mean)),
+                    }
+                }
+            }
+            if let Some((name, mean)) = best {
+                out.push_str(&format!("\n  {family:<13} -> {name} ({mean:.1} s)"));
+            }
+        }
+        Some(out)
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("figure", self.figure.to_json()),
+            (
+                "families",
+                json::arr(self.families.iter().map(|f| json::s(f)).collect()),
+            ),
+            ("rounds", json::num(self.rounds as f64)),
+        ])
+    }
+}
+
+/// Everything a request produced. Most requests yield one output;
+/// `figure all`, `ablation all` and the correlated dynamics pair yield
+/// several.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub outputs: Vec<RunOutput>,
+}
+
+impl RunResult {
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![(
+            "outputs",
+            json::arr(self.outputs.iter().map(RunOutput::to_json).collect()),
+        )])
+    }
+}
+
+/// Progress callbacks from [`execute_with`], in emission order per
+/// output: one `Start`, then a `Unit` per completed work unit (from
+/// whichever sweep worker ran it — completion order follows pool
+/// scheduling), then one `Output` carrying the merged figure.
+#[derive(Debug)]
+pub enum RunEvent<'a> {
+    Start {
+        /// Index of the output this event belongs to (0-based).
+        index: usize,
+        name: &'a str,
+        /// The stderr banner the historic subcommand printed before
+        /// compute (empty = no banner).
+        banner: &'a str,
+        units: usize,
+    },
+    Unit {
+        index: usize,
+        /// Declaration-order unit number within the output's spec.
+        unit: usize,
+        samples: &'a [Sample],
+    },
+    Output {
+        index: usize,
+        output: &'a RunOutput,
+    },
+}
+
+/// Run a request on the default runner (`HEMT_SWEEP_THREADS` / available
+/// parallelism), without progress events.
+pub fn execute(req: &RunRequest) -> Result<RunResult, String> {
+    execute_with(req, &experiments::default_runner(), |_| {})
+}
+
+/// Run a request on an explicit runner with a progress observer. The
+/// observer is called from sweep worker threads (hence `Sync`).
+pub fn execute_with<F>(
+    req: &RunRequest,
+    runner: &SweepRunner,
+    on_event: F,
+) -> Result<RunResult, String>
+where
+    F: Fn(RunEvent<'_>) + Sync,
+{
+    req.validate()?;
+    let mut outputs: Vec<RunOutput> = Vec::new();
+    match req {
+        RunRequest::Figure { name } => {
+            let names: Vec<&str> = if name == "all" {
+                experiments::ALL_FIGURES.to_vec()
+            } else {
+                vec![name.as_str()]
+            };
+            for n in names {
+                let spec = experiments::spec_by_name(n)
+                    .ok_or_else(|| format!("unknown figure '{n}'"))?;
+                run_one(runner, &on_event, &mut outputs, n, String::new(), spec, vec![], 0);
+            }
+        }
+        RunRequest::Ablation { name } => {
+            let names: Vec<&str> = if name == "all" {
+                experiments::ablations::ALL_ABLATIONS.to_vec()
+            } else {
+                vec![name.as_str()]
+            };
+            for n in names {
+                let spec = experiments::ablations::spec_by_name(n)
+                    .ok_or_else(|| format!("unknown ablation '{n}'"))?;
+                run_one(runner, &on_event, &mut outputs, n, String::new(), spec, vec![], 0);
+            }
+        }
+        RunRequest::Sweep { config } => {
+            let spec = config_spec(config);
+            run_one(
+                runner,
+                &on_event,
+                &mut outputs,
+                &config.name,
+                String::new(),
+                spec,
+                vec![],
+                0,
+            );
+        }
+        RunRequest::ProductSweep { spec: product } => {
+            let spec = product.to_spec();
+            let banner = format!(
+                "product sweep: {} cells x {} trials = {} units over {} thread(s)",
+                product.num_cells(),
+                product.trials,
+                spec.num_units(),
+                runner.threads()
+            );
+            run_one(
+                runner,
+                &on_event,
+                &mut outputs,
+                "product_sweep",
+                banner,
+                spec,
+                vec![],
+                0,
+            );
+        }
+        RunRequest::Dynamics { correlated: false, rounds } => {
+            family_comparison(
+                runner,
+                &on_event,
+                &mut outputs,
+                "dyn_compare",
+                "dynamics comparison",
+                3,
+                dynamics::COMPARISON_FAMILIES,
+                *rounds,
+                dynamics::comparison_spec(*rounds, dynamics::COMPARISON_BASE_SEED),
+            );
+        }
+        RunRequest::Dynamics { correlated: true, rounds } => {
+            family_comparison(
+                runner,
+                &on_event,
+                &mut outputs,
+                "rack_steal",
+                "rack-correlated steal comparison",
+                4,
+                dynamics::CORRELATED_FAMILIES,
+                *rounds,
+                dynamics::correlated_steal_comparison_spec(
+                    *rounds,
+                    dynamics::CORRELATED_BASE_SEED,
+                ),
+            );
+            family_comparison(
+                runner,
+                &on_event,
+                &mut outputs,
+                "link_degrade",
+                "link-degradation comparison",
+                3,
+                dynamics::LINK_FAMILIES,
+                *rounds,
+                dynamics::link_degrade_comparison_spec(
+                    *rounds,
+                    dynamics::LINK_DEGRADE_BASE_SEED,
+                ),
+            );
+        }
+        RunRequest::Steal { streams: false, rounds } => {
+            family_comparison(
+                runner,
+                &on_event,
+                &mut outputs,
+                "dyn_steal",
+                "steal comparison",
+                4,
+                dynamics::COMPARISON_FAMILIES,
+                *rounds,
+                dynamics::steal_comparison_spec(*rounds, dynamics::COMPARISON_BASE_SEED),
+            );
+        }
+        RunRequest::Steal { streams: true, rounds } => {
+            family_comparison(
+                runner,
+                &on_event,
+                &mut outputs,
+                "net_steal",
+                "stream-steal comparison",
+                4,
+                dynamics::NET_STEAL_FAMILIES,
+                *rounds,
+                dynamics::net_steal_comparison_spec(*rounds, dynamics::NET_STEAL_BASE_SEED),
+            );
+        }
+    }
+    Ok(RunResult { outputs })
+}
+
+/// Run one spec as the next output: emit `Start`, stream `Unit`s, emit
+/// `Output`, collect.
+#[allow(clippy::too_many_arguments)]
+fn run_one<F>(
+    runner: &SweepRunner,
+    on_event: &F,
+    outputs: &mut Vec<RunOutput>,
+    name: &str,
+    banner: String,
+    spec: SweepSpec,
+    families: Vec<String>,
+    rounds: usize,
+) where
+    F: Fn(RunEvent<'_>) + Sync,
+{
+    let index = outputs.len();
+    on_event(RunEvent::Start { index, name, banner: &banner, units: spec.num_units() });
+    let figure = runner.run_observed(&spec, |unit, samples| {
+        on_event(RunEvent::Unit { index, unit, samples });
+    });
+    let out = RunOutput { name: name.to_string(), figure, families, rounds };
+    on_event(RunEvent::Output { index, output: &out });
+    outputs.push(out);
+}
+
+/// The shared skeleton of the per-family policy comparisons, with the
+/// historic stderr banner text.
+#[allow(clippy::too_many_arguments)]
+fn family_comparison<F>(
+    runner: &SweepRunner,
+    on_event: &F,
+    outputs: &mut Vec<RunOutput>,
+    name: &str,
+    banner: &str,
+    arms: usize,
+    families: &[&str],
+    rounds: usize,
+    spec: SweepSpec,
+) where
+    F: Fn(RunEvent<'_>) + Sync,
+{
+    let banner = format!(
+        "{banner}: {} families x {arms} policies x {rounds} rounds over {} thread(s)",
+        families.len(),
+        runner.threads()
+    );
+    run_one(
+        runner,
+        on_event,
+        outputs,
+        name,
+        banner,
+        spec,
+        families.iter().map(|f| f.to_string()).collect(),
+        rounds,
+    );
+}
+
+/// Express an experiment config as a sweep spec: `trials` runs of the
+/// configured workload under the configured policy, reporting
+/// completion-time stats (the historic `hemt run` shape).
+pub fn config_spec(cfg: &ExperimentConfig) -> SweepSpec {
+    let mut spec = SweepSpec::new(&cfg.name, "trial set", "completion time (s)");
+    let series = spec.series(cfg.workload.kind.name());
+    spec.scenario(
+        series,
+        0.0,
+        &cfg.name,
+        Scenario {
+            cluster: cfg.cluster.clone(),
+            workload: cfg.workload.clone(),
+            policy: cfg.policy.clone(),
+            dynamics: dynamics::DynamicsConfig::steady(),
+            metric: Metric::JobTime,
+            trials: cfg.trials,
+            base_seed: cfg.base_seed,
+        },
+    );
+    spec
+}
+
+/// The figure registry as JSON: name, description, and the default
+/// [`RunRequest`] that runs it — `hemt figure --list --json` and the
+/// serve layer's `GET /figures` both emit this.
+pub fn figure_registry_json() -> Value {
+    json::arr(
+        experiments::FIGURES
+            .iter()
+            .map(|f| {
+                json::obj(vec![
+                    ("name", json::s(f.name)),
+                    ("description", json::s(f.description)),
+                    (
+                        "request",
+                        RunRequest::Figure { name: f.name.to_string() }.to_json(),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(req: &RunRequest) -> RunRequest {
+        RunRequest::from_str(&req.to_json().pretty()).unwrap()
+    }
+
+    #[test]
+    fn requests_round_trip_through_json() {
+        let reqs = vec![
+            RunRequest::Figure { name: "fig9".into() },
+            RunRequest::Ablation { name: "alpha".into() },
+            RunRequest::Sweep {
+                config: ExperimentConfig {
+                    name: "probe".into(),
+                    cluster: crate::config::ClusterConfig::containers_1_and_04(),
+                    workload: crate::config::WorkloadConfig::wordcount_2gb(),
+                    policy: crate::config::PolicyConfig::HemtFromHints,
+                    trials: 2,
+                    base_seed: 9,
+                },
+            },
+            RunRequest::ProductSweep { spec: ProductSweepSpec::tiny_tasks_regimes() },
+            RunRequest::Dynamics { correlated: true, rounds: 7 },
+            RunRequest::Steal { streams: true, rounds: 3 },
+        ];
+        for req in &reqs {
+            let back = roundtrip(req);
+            assert_eq!(
+                back.to_json().compact(),
+                req.to_json().compact(),
+                "round-trip must be canonical"
+            );
+            assert_eq!(spec_hash(&back), spec_hash(req));
+        }
+        // Distinct requests hash distinctly.
+        let hashes: Vec<u64> = reqs.iter().map(spec_hash).collect();
+        let mut dedup = hashes.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), hashes.len(), "hash collision among {hashes:?}");
+    }
+
+    #[test]
+    fn preset_shorthand_resolves_to_full_spec() {
+        let preset = RunRequest::from_str(r#"{"type": "product_sweep", "preset": "tiny_tasks"}"#)
+            .unwrap();
+        let full = RunRequest::ProductSweep { spec: ProductSweepSpec::tiny_tasks_regimes() };
+        assert_eq!(preset.to_json().compact(), full.to_json().compact());
+        assert_eq!(spec_hash(&preset), spec_hash(&full));
+        let dyn_preset =
+            RunRequest::from_str(r#"{"type": "product_sweep", "preset": "dynamics"}"#).unwrap();
+        match dyn_preset {
+            RunRequest::ProductSweep { spec } => {
+                assert_eq!(spec, ProductSweepSpec::dynamic_regimes())
+            }
+            other => panic!("expected product sweep, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn invalid_requests_are_rejected() {
+        for (text, needle) in [
+            (r#"{"type": "figure", "name": "fig99"}"#, "unknown figure"),
+            (r#"{"type": "ablation", "name": "nope"}"#, "unknown ablation"),
+            (r#"{"type": "warp"}"#, "unknown request type"),
+            (r#"{"type": "dynamics", "rounds": 0}"#, "rounds"),
+            (r#"{"type": "product_sweep", "preset": "everything"}"#, "unknown preset"),
+            (r#"{"type": "product_sweep"}"#, "spec"),
+            (r#"{"type": "sweep"}"#, "config"),
+            (r#"{"nope": 1}"#, "type"),
+            ("not json", "parse error"),
+        ] {
+            let err = RunRequest::from_str(text).unwrap_err();
+            assert!(err.contains(needle), "'{text}' -> '{err}' (wanted '{needle}')");
+        }
+    }
+
+    #[test]
+    fn rounds_default_when_absent() {
+        let req = RunRequest::from_str(r#"{"type": "steal", "streams": true}"#).unwrap();
+        match req {
+            RunRequest::Steal { streams, rounds } => {
+                assert!(streams);
+                assert_eq!(rounds, dynamics::DEFAULT_ROUNDS);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn figure_registry_json_covers_all_figures() {
+        let v = figure_registry_json();
+        let entries = v.as_arr().unwrap();
+        assert_eq!(entries.len(), experiments::ALL_FIGURES.len());
+        for (e, &name) in entries.iter().zip(experiments::ALL_FIGURES) {
+            assert_eq!(e.get("name").unwrap().as_str(), Some(name));
+            assert!(!e.get("description").unwrap().as_str().unwrap().is_empty());
+            let req = RunRequest::from_json(e.get("request").unwrap()).unwrap();
+            assert!(matches!(req, RunRequest::Figure { .. }));
+        }
+    }
+
+    #[test]
+    fn winners_table_matches_historic_format() {
+        let mut fig = Figure::new("t", "family", "s");
+        let mut a = crate::metrics::Series::new("HomT");
+        a.push(0.0, "markov", &[100.0]);
+        a.push(1.0, "spot", &[50.0]);
+        fig.add(a);
+        let mut b = crate::metrics::Series::new("Steal-HeMT");
+        b.push(0.0, "markov", &[80.0]);
+        b.push(1.0, "spot", &[60.0]);
+        fig.add(b);
+        let out = RunOutput {
+            name: "dyn_steal".into(),
+            figure: fig,
+            families: vec!["markov".into(), "spot".into()],
+            rounds: 12,
+        };
+        let table = out.winners_table().unwrap();
+        assert_eq!(
+            table,
+            "per-family winners (mean map-stage time over 12 rounds):\n  \
+             markov        -> Steal-HeMT (80.0 s)\n  spot          -> HomT (50.0 s)"
+        );
+        let plain = RunOutput {
+            name: "fig9".into(),
+            figure: Figure::new("t", "x", "y"),
+            families: vec![],
+            rounds: 0,
+        };
+        assert!(plain.winners_table().is_none());
+    }
+
+    #[test]
+    fn execute_runs_fig4_and_emits_events() {
+        use std::sync::Mutex;
+        let events: Mutex<Vec<String>> = Mutex::new(Vec::new());
+        let req = RunRequest::Figure { name: "fig4".into() };
+        let result = execute_with(&req, &SweepRunner::serial(), |ev| {
+            let tag = match ev {
+                RunEvent::Start { name, .. } => format!("start:{name}"),
+                RunEvent::Unit { unit, .. } => format!("unit:{unit}"),
+                RunEvent::Output { output, .. } => format!("output:{}", output.name),
+            };
+            events.lock().unwrap().push(tag);
+        })
+        .unwrap();
+        assert_eq!(result.outputs.len(), 1);
+        assert_eq!(result.outputs[0].name, "fig4");
+        let ev = events.into_inner().unwrap();
+        assert_eq!(ev.first().unwrap(), "start:fig4");
+        assert_eq!(ev.last().unwrap(), "output:fig4");
+        assert!(ev.iter().any(|e| e.starts_with("unit:")), "{ev:?}");
+        // The serialized result parses back into the same table.
+        let v = result.to_json();
+        let first = &v.get("outputs").unwrap().as_arr().unwrap()[0];
+        let fig = Figure::from_json(first.get("figure").unwrap()).unwrap();
+        assert_eq!(fig.to_table(), result.outputs[0].figure.to_table());
+    }
+}

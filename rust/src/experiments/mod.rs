@@ -663,9 +663,114 @@ pub const ALL_FIGURES: &[&str] = &[
     "dyn_steal", "net_steal", "rack_steal", "link_degrade",
 ];
 
+/// One figure-registry entry: the canonical name plus a one-line
+/// description (what `hemt figure --list` and the serve layer's
+/// `GET /figures` show).
+#[derive(Debug, Clone, Copy)]
+pub struct FigureInfo {
+    pub name: &'static str,
+    pub description: &'static str,
+}
+
+/// The figure registry as data: one entry per [`ALL_FIGURES`] name, in
+/// the same order (asserted by a test). [`spec_by_name`] accepts every
+/// `name` here.
+pub const FIGURES: &[FigureInfo] = &[
+    FigureInfo {
+        name: "fig4",
+        description: "Claim 2: same-datanode collision probabilities p1/p2 vs cluster size",
+    },
+    FigureInfo {
+        name: "fig5",
+        description: "Network-bottleneck regime: HomT vs HeMT map-stage times on 200 Mbps HDFS",
+    },
+    FigureInfo {
+        name: "fig7",
+        description: "OA-HeMT adaptation rounds under synthetic interference",
+    },
+    FigureInfo {
+        name: "fig8",
+        description: "OA-HeMT adaptation on the provisioned-container testbed",
+    },
+    FigureInfo {
+        name: "fig9",
+        description: "Static containers (1.0/0.4 cores): HomT granularity U-curve vs HeMT",
+    },
+    FigureInfo {
+        name: "fig10_12",
+        description: "Burstable credit planner: simultaneous-finish split and t'",
+    },
+    FigureInfo {
+        name: "fig13",
+        description: "Burstable pair, CPU-bound WordCount: HomT vs HeMT vs planner",
+    },
+    FigureInfo {
+        name: "fig14",
+        description: "Burstable pair on 480 Mbps HDFS uplinks",
+    },
+    FigureInfo {
+        name: "fig15",
+        description: "Burstable pair on 250 Mbps HDFS uplinks",
+    },
+    FigureInfo {
+        name: "fig17",
+        description: "K-Means (30 iterations): cached-partition totals per policy",
+    },
+    FigureInfo {
+        name: "fig18",
+        description: "PageRank (100 iterations): shuffle-chained totals per policy",
+    },
+    FigureInfo {
+        name: "headline",
+        description: "Headline summary: every testbed's best HomT vs HeMT",
+    },
+    FigureInfo {
+        name: "extension",
+        description: "Beyond-paper 4-node heterogeneous cluster extension",
+    },
+    FigureInfo {
+        name: "dyn_compare",
+        description: "Adaptive-HeMT vs static-HeMT vs HomT across capacity-program families",
+    },
+    FigureInfo {
+        name: "dyn_markov",
+        description: "Round-by-round adaptation trajectory under Markov throttling",
+    },
+    FigureInfo {
+        name: "dyn_spot",
+        description: "Round-by-round trajectory under spot revocation + replacement",
+    },
+    FigureInfo {
+        name: "dyn_steal",
+        description: "Steal-HeMT vs adaptive/static/HomT across capacity-program families",
+    },
+    FigureInfo {
+        name: "net_steal",
+        description: "Stream-splitting vs CPU-only stealing on the network-bound testbed",
+    },
+    FigureInfo {
+        name: "rack_steal",
+        description: "Steal arms under rack-correlated shared-event degradation",
+    },
+    FigureInfo {
+        name: "link_degrade",
+        description: "HeMT vs HomT with time-varying HDFS uplink capacities",
+    },
+];
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn figure_registry_matches_all_figures() {
+        let names: Vec<&str> = FIGURES.iter().map(|f| f.name).collect();
+        assert_eq!(names, ALL_FIGURES, "FIGURES must mirror ALL_FIGURES in order");
+        for f in FIGURES {
+            assert!(spec_by_name(f.name).is_some(), "unresolvable figure '{}'", f.name);
+            assert!(!f.description.is_empty(), "figure '{}' needs a description", f.name);
+        }
+    }
 
     #[test]
     fn fig9_shape_hemt_beats_best_homt_and_u_curve() {

@@ -34,6 +34,7 @@
 //! the examples, and the per-figure benches.
 
 pub mod analysis;
+pub mod api;
 pub mod bench_harness;
 pub mod cluster;
 pub mod config;
@@ -48,6 +49,7 @@ pub mod netsim;
 pub mod nodes;
 pub mod partition;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod sweep;
 pub mod util;

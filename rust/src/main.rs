@@ -1,15 +1,26 @@
 //! `hemt` — the HeMT reproduction CLI (leader entrypoint).
 //!
+//! Every simulation subcommand is a thin translator onto the unified
+//! [`hemt::api::RunRequest`] surface: flags parse into a request, the
+//! request runs through [`hemt::api::execute_with`], and a rendering
+//! callback prints banners/tables exactly where the historic
+//! per-subcommand plumbing did (asserted bit-identical by
+//! `rust/tests/api_golden.rs`). The same requests drive `hemt request
+//! <file.json>` and the `hemt serve` HTTP service.
+//!
 //! Subcommands:
 //!
 //! * `hemt figure <4|5|7|8|9|10|13|14|15|17|18|headline|all> [--json]` —
 //!   regenerate a paper figure on the simulation substrate and print the
-//!   paper-shaped table (or JSON).
+//!   paper-shaped table (or JSON). `--list` prints the figure registry.
 //! * `hemt run --config <file.json> [--json]` — run a custom experiment
 //!   described by an [`hemt::config::ExperimentConfig`].
 //! * `hemt dynamics [--rounds N]` — closed-loop Adaptive-HeMT vs
 //!   static-HeMT vs HomT under time-varying node capacity
 //!   ([`hemt::dynamics`]).
+//! * `hemt request <file.json>` — run any serialized
+//!   [`hemt::api::RunRequest`].
+//! * `hemt serve` — the persistent sweep service ([`hemt::serve`]).
 //! * `hemt analysis` — print the closed-form Claim 1 / Claim 2 numbers.
 //! * `hemt plan-credits --work <W> <credits...>` — the Sec. 6.2 burstable
 //!   credit planner: split `W` CPU-minutes across t2.small-like nodes.
@@ -20,6 +31,7 @@
 
 use std::process::ExitCode;
 
+use hemt::api::{self, RunEvent, RunRequest};
 use hemt::estimator::credits::{plan, CreditCurve};
 use hemt::{analysis, config, experiments};
 
@@ -27,6 +39,8 @@ fn usage() -> &'static str {
     "usage:
   hemt figure <id|all> [--json] [--threads N]
                                     reproduce a paper figure (4,5,7,8,9,10,13,14,15,17,18,headline)
+  hemt figure --list [--json]       list the figure registry (name, description,
+                                    and the RunRequest JSON that reproduces it)
   hemt ablation <name|all> [--json] [--threads N]
                                     design-choice ablations (alpha, speculation, rack, stale_credits)
   hemt run --config <file> [--json] [--threads N]
@@ -52,6 +66,15 @@ fn usage() -> &'static str {
                                     stream-splitting stealing (in-flight reads
                                     re-issued from a different replica) vs
                                     CPU-only stealing under spot/markov dynamics
+  hemt request <file.json> [--json] [--threads N]
+                                    run a serialized RunRequest (the same JSON
+                                    document `hemt serve` accepts on POST /run)
+  hemt serve [--addr H:P] [--workers N] [--queue N] [--threads N]
+                                    persistent sweep service: POST /run streams
+                                    per-trial results over SSE; results are
+                                    memoized by spec hash and sessions pooled per
+                                    cluster. GET /figures, GET /metrics,
+                                    GET /healthz, POST /shutdown
   hemt bench-diff --baseline <dir> --new <dir> [--threshold F] [--update]
                                     diff BENCH_*.json medians against a committed
                                     baseline; exit 1 past the threshold (default 0.15)
@@ -93,6 +116,8 @@ fn main() -> ExitCode {
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("dynamics") => cmd_dynamics(&args[1..]),
         Some("steal") => cmd_steal(&args[1..]),
+        Some("request") => cmd_request(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
         Some("bench-diff") => cmd_bench_diff(&args[1..]),
         Some("analysis") => cmd_analysis(),
         Some("plan-credits") => cmd_plan_credits(&args[1..]),
@@ -121,7 +146,14 @@ fn positional(args: &[String]) -> Option<&String> {
             skip_next = false;
             continue;
         }
-        if a == "--threads" || a == "--config" || a == "--preset" || a == "--rounds" {
+        if a == "--threads"
+            || a == "--config"
+            || a == "--preset"
+            || a == "--rounds"
+            || a == "--addr"
+            || a == "--workers"
+            || a == "--queue"
+        {
             skip_next = true;
             continue;
         }
@@ -133,76 +165,84 @@ fn positional(args: &[String]) -> Option<&String> {
     None
 }
 
-fn cmd_figure(args: &[String]) -> Result<(), String> {
+/// The value following `flag`, if the flag is present.
+fn flag_value<'a>(args: &'a [String], flag: &str) -> Result<Option<&'a String>, String> {
+    match args.iter().position(|a| a == flag) {
+        None => Ok(None),
+        Some(i) => args
+            .get(i + 1)
+            .map(Some)
+            .ok_or_else(|| format!("{flag} needs a value")),
+    }
+}
+
+/// Run a request and render it the way the historic subcommands did:
+/// non-empty banners to stderr before compute, then per output either
+/// the figure JSON (`--json`) or the table plus the per-family winners
+/// block. Printing happens on `Output` events, so multi-output requests
+/// (`figure all`, `dynamics --correlated`) interleave banners and
+/// tables exactly as before.
+fn run_request(req: &RunRequest, args: &[String]) -> Result<(), String> {
     let json = args.iter().any(|a| a == "--json");
     let runner = runner_from_args(args)?;
-    let name = positional(args).ok_or("figure id required")?;
-    let names: Vec<&str> = if name == "all" {
-        experiments::ALL_FIGURES.to_vec()
-    } else {
-        vec![name.as_str()]
-    };
-    for n in names {
-        let spec =
-            experiments::spec_by_name(n).ok_or_else(|| format!("unknown figure '{n}'"))?;
-        let fig = runner.run(&spec);
-        if json {
-            println!("{}", fig.to_json().pretty());
-        } else {
-            println!("{}", fig.to_table());
+    api::execute_with(req, &runner, |ev| match ev {
+        RunEvent::Start { banner, .. } => {
+            if !banner.is_empty() {
+                eprintln!("{banner}");
+            }
         }
-    }
+        RunEvent::Unit { .. } => {}
+        RunEvent::Output { output, .. } => {
+            if json {
+                println!("{}", output.figure.to_json().pretty());
+            } else {
+                println!("{}", output.figure.to_table());
+                if let Some(winners) = output.winners_table() {
+                    println!("{winners}");
+                }
+            }
+        }
+    })?;
     Ok(())
+}
+
+fn cmd_figure(args: &[String]) -> Result<(), String> {
+    if args.iter().any(|a| a == "--list") {
+        if args.iter().any(|a| a == "--json") {
+            println!("{}", api::figure_registry_json().pretty());
+        } else {
+            for f in experiments::FIGURES {
+                println!("{:<13} {}", f.name, f.description);
+            }
+        }
+        return Ok(());
+    }
+    let name = positional(args).ok_or("figure id required")?;
+    run_request(&RunRequest::Figure { name: name.clone() }, args)
 }
 
 fn cmd_ablation(args: &[String]) -> Result<(), String> {
-    let json = args.iter().any(|a| a == "--json");
-    let runner = runner_from_args(args)?;
     let name = positional(args).ok_or("ablation name required")?;
-    let names: Vec<&str> = if name == "all" {
-        experiments::ablations::ALL_ABLATIONS.to_vec()
-    } else {
-        vec![name.as_str()]
-    };
-    for n in names {
-        let spec = experiments::ablations::spec_by_name(n)
-            .ok_or_else(|| format!("unknown ablation '{n}'"))?;
-        let fig = runner.run(&spec);
-        if json {
-            println!("{}", fig.to_json().pretty());
-        } else {
-            println!("{}", fig.to_table());
-        }
-    }
-    Ok(())
+    run_request(&RunRequest::Ablation { name: name.clone() }, args)
 }
 
 fn cmd_run(args: &[String]) -> Result<(), String> {
-    let json = args.iter().any(|a| a == "--json");
-    let runner = runner_from_args(args)?;
-    let path = args
-        .iter()
-        .position(|a| a == "--config")
-        .and_then(|i| args.get(i + 1))
-        .ok_or("--config <file> required")?;
+    let path = flag_value(args, "--config")?.ok_or("--config <file> required")?;
     let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
     let cfg = config::ExperimentConfig::from_str(&text)?;
-    let fig = runner.run(&config_spec(&cfg));
-    if json {
-        println!("{}", fig.to_json().pretty());
-    } else {
-        println!("{}", fig.to_table());
-    }
-    Ok(())
+    run_request(&RunRequest::Sweep { config: cfg }, args)
 }
 
 /// `hemt sweep`: run a whole-grid scenario product (the built-in
 /// tiny-tasks regime product, or a JSON `ProductSweepSpec` via
 /// `--config`) through the sweep runner.
 fn cmd_sweep(args: &[String]) -> Result<(), String> {
-    let json = args.iter().any(|a| a == "--json");
-    let runner = runner_from_args(args)?;
-    let product = match args.iter().position(|a| a == "--config") {
+    let product = match flag_value(args, "--config")? {
+        Some(path) => {
+            let text =
+                std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+            hemt::sweep::ProductSweepSpec::from_str(&text)?
+        }
         None => match args.iter().position(|a| a == "--preset") {
             None => hemt::sweep::ProductSweepSpec::tiny_tasks_regimes(),
             Some(i) => match args.get(i + 1).map(String::as_str) {
@@ -216,28 +256,8 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
                 None => return Err("--preset needs a value".into()),
             },
         },
-        Some(i) => {
-            let path = args.get(i + 1).ok_or("--config needs a value")?;
-            let text =
-                std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
-            hemt::sweep::ProductSweepSpec::from_str(&text)?
-        }
     };
-    let spec = product.to_spec();
-    eprintln!(
-        "product sweep: {} cells x {} trials = {} units over {} thread(s)",
-        product.num_cells(),
-        product.trials,
-        spec.num_units(),
-        runner.threads()
-    );
-    let fig = runner.run(&spec);
-    if json {
-        println!("{}", fig.to_json().pretty());
-    } else {
-        println!("{}", fig.to_table());
-    }
-    Ok(())
+    run_request(&RunRequest::ProductSweep { spec: product }, args)
 }
 
 /// `hemt dynamics`: the closed-loop comparison — Adaptive-HeMT (the
@@ -254,32 +274,11 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
 /// read-heavy testbed with the datanode uplinks themselves
 /// time-varying).
 fn cmd_dynamics(args: &[String]) -> Result<(), String> {
-    if args.iter().any(|a| a == "--correlated") {
-        run_family_comparison(
-            args,
-            "rack-correlated steal comparison",
-            4,
-            hemt::dynamics::CORRELATED_FAMILIES,
-            hemt::dynamics::CORRELATED_BASE_SEED,
-            hemt::dynamics::correlated_steal_comparison_spec,
-        )?;
-        return run_family_comparison(
-            args,
-            "link-degradation comparison",
-            3,
-            hemt::dynamics::LINK_FAMILIES,
-            hemt::dynamics::LINK_DEGRADE_BASE_SEED,
-            hemt::dynamics::link_degrade_comparison_spec,
-        );
-    }
-    run_family_comparison(
-        args,
-        "dynamics comparison",
-        3,
-        hemt::dynamics::COMPARISON_FAMILIES,
-        hemt::dynamics::COMPARISON_BASE_SEED,
-        hemt::dynamics::comparison_spec,
-    )
+    let req = RunRequest::Dynamics {
+        correlated: args.iter().any(|a| a == "--correlated"),
+        rounds: rounds_arg(args)?,
+    };
+    run_request(&req, args)
 }
 
 /// `hemt steal`: the mid-stage work-stealing comparison — Steal-HeMT
@@ -292,54 +291,55 @@ fn cmd_dynamics(args: &[String]) -> Result<(), String> {
 /// CPU-only stealing. All arms of a family share one seed, hence one
 /// capacity trace; output is bit-identical for any thread count.
 fn cmd_steal(args: &[String]) -> Result<(), String> {
-    if args.iter().any(|a| a == "--streams") {
-        run_family_comparison(
-            args,
-            "stream-steal comparison",
-            4,
-            hemt::dynamics::NET_STEAL_FAMILIES,
-            hemt::dynamics::NET_STEAL_BASE_SEED,
-            hemt::dynamics::net_steal_comparison_spec,
-        )
-    } else {
-        run_family_comparison(
-            args,
-            "steal comparison",
-            4,
-            hemt::dynamics::COMPARISON_FAMILIES,
-            hemt::dynamics::COMPARISON_BASE_SEED,
-            hemt::dynamics::steal_comparison_spec,
-        )
-    }
+    let req = RunRequest::Steal {
+        streams: args.iter().any(|a| a == "--streams"),
+        rounds: rounds_arg(args)?,
+    };
+    run_request(&req, args)
 }
 
-/// Shared skeleton of the per-family policy comparisons (`hemt
-/// dynamics`, `hemt steal[ --streams]`): parse flags, run the spec,
-/// print the figure and the per-family winners.
-fn run_family_comparison(
-    args: &[String],
-    banner: &str,
-    arms: usize,
-    families: &[&str],
-    base_seed: u64,
-    spec_of: impl Fn(usize, u64) -> hemt::sweep::SweepSpec,
-) -> Result<(), String> {
-    let json = args.iter().any(|a| a == "--json");
-    let runner = runner_from_args(args)?;
-    let rounds = rounds_arg(args)?;
-    let spec = spec_of(rounds, base_seed);
-    eprintln!(
-        "{banner}: {} families x {arms} policies x {rounds} rounds over {} thread(s)",
-        families.len(),
-        runner.threads()
-    );
-    let fig = runner.run(&spec);
-    if json {
-        println!("{}", fig.to_json().pretty());
-        return Ok(());
+/// `hemt request`: run any serialized [`RunRequest`] — the same JSON
+/// document `hemt serve` accepts on `POST /run`.
+fn cmd_request(args: &[String]) -> Result<(), String> {
+    let path = positional(args).ok_or("request file required (a RunRequest JSON document)")?;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    let req = RunRequest::from_str(&text)?;
+    run_request(&req, args)
+}
+
+/// `hemt serve`: the persistent sweep service ([`hemt::serve`]).
+fn cmd_serve(args: &[String]) -> Result<(), String> {
+    let mut cfg = hemt::serve::ServeConfig::default();
+    if let Some(addr) = flag_value(args, "--addr")? {
+        cfg.addr = addr.clone();
     }
-    println!("{}", fig.to_table());
-    print_family_winners(&fig, families, rounds);
+    if let Some(w) = flag_value(args, "--workers")? {
+        cfg.workers = w.parse().map_err(|e| format!("bad --workers: {e}"))?;
+        if cfg.workers == 0 {
+            return Err("--workers must be >= 1".into());
+        }
+    }
+    if let Some(q) = flag_value(args, "--queue")? {
+        cfg.max_queue = q.parse().map_err(|e| format!("bad --queue: {e}"))?;
+        if cfg.max_queue == 0 {
+            return Err("--queue must be >= 1".into());
+        }
+    }
+    if let Some(t) = flag_value(args, "--threads")? {
+        // 0 = environment default, matching ServeConfig semantics.
+        cfg.threads = t.parse().map_err(|e| format!("bad --threads: {e}"))?;
+    }
+    let addr = cfg.addr.clone();
+    let workers = cfg.workers;
+    let max_queue = cfg.max_queue;
+    let handle = hemt::serve::spawn(cfg).map_err(|e| format!("binding {addr}: {e}"))?;
+    eprintln!(
+        "hemt serve: listening on {} ({workers} worker(s), queue {max_queue}); \
+         POST /run streams SSE; GET /figures, GET /metrics, GET /healthz, POST /shutdown",
+        handle.addr()
+    );
+    handle.join();
+    eprintln!("hemt serve: drained");
     Ok(())
 }
 
@@ -357,25 +357,6 @@ fn rounds_arg(args: &[String]) -> Result<usize, String> {
                 return Err("--rounds must be >= 1".into());
             }
             Ok(n)
-        }
-    }
-}
-
-/// Per-family verdict: which policy's mean round time wins.
-fn print_family_winners(fig: &hemt::metrics::Figure, families: &[&str], rounds: usize) {
-    println!("per-family winners (mean map-stage time over {rounds} rounds):");
-    for (fi, family) in families.iter().enumerate() {
-        let mut best: Option<(&str, f64)> = None;
-        for s in &fig.series {
-            if let Some(p) = s.points.iter().find(|p| p.x == fi as f64) {
-                match best {
-                    Some((_, b)) if b <= p.stats.mean => {}
-                    _ => best = Some((s.name.as_str(), p.stats.mean)),
-                }
-            }
-        }
-        if let Some((name, mean)) = best {
-            println!("  {family:<13} -> {name} ({mean:.1} s)");
         }
     }
 }
@@ -432,29 +413,6 @@ fn cmd_bench_diff(args: &[String]) -> Result<(), String> {
             new.display()
         ))
     }
-}
-
-/// Express a config file as a sweep spec: `trials` runs of the configured
-/// workload under the configured policy, reporting completion-time stats.
-fn config_spec(cfg: &config::ExperimentConfig) -> hemt::sweep::SweepSpec {
-    let mut spec =
-        hemt::sweep::SweepSpec::new(&cfg.name, "trial set", "completion time (s)");
-    let series = spec.series(cfg.workload.kind.name());
-    spec.scenario(
-        series,
-        0.0,
-        &cfg.name,
-        hemt::sweep::Scenario {
-            cluster: cfg.cluster.clone(),
-            workload: cfg.workload.clone(),
-            policy: cfg.policy.clone(),
-            dynamics: hemt::dynamics::DynamicsConfig::steady(),
-            metric: hemt::sweep::Metric::JobTime,
-            trials: cfg.trials,
-            base_seed: cfg.base_seed,
-        },
-    );
-    spec
 }
 
 fn cmd_analysis() -> Result<(), String> {

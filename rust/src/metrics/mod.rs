@@ -5,6 +5,7 @@
 //! paper plots: stage completion times, job finish times, per-executor
 //! task times (synchronization delay), and the ±1σ beams.
 
+use crate::util::json::Value;
 use crate::util::{json, Summary};
 
 /// One task's lifecycle within a stage.
@@ -217,6 +218,50 @@ impl Figure {
             ),
         ])
     }
+
+    /// Reconstruct a figure from its [`Figure::to_json`] form — what the
+    /// serve client does with streamed `figure` events. The JSON carries
+    /// per-point `mean`/`std`/`n` but not the sample extremes, so the
+    /// rebuilt [`Summary`] sets `min = max = mean`; everything
+    /// `to_table` renders (mean ± σ, n) round-trips exactly.
+    pub fn from_json(v: &Value) -> Result<Figure, String> {
+        let field = |v: &Value, k: &str| -> Result<String, String> {
+            Ok(v.get(k)
+                .and_then(Value::as_str)
+                .ok_or_else(|| format!("figure.{k} missing"))?
+                .to_string())
+        };
+        let mut fig = Figure::new(
+            &field(v, "title")?,
+            &field(v, "x_label")?,
+            &field(v, "y_label")?,
+        );
+        for sv in v.get("series").and_then(Value::as_arr).ok_or("figure.series missing")? {
+            let mut series = Series::new(&field(sv, "name")?);
+            for pv in sv.get("points").and_then(Value::as_arr).ok_or("series.points missing")?
+            {
+                let num = |k: &str| -> Result<f64, String> {
+                    pv.get(k)
+                        .and_then(Value::as_f64)
+                        .ok_or_else(|| format!("point.{k} missing"))
+                };
+                let mean = num("mean")?;
+                series.points.push(Point {
+                    x: num("x")?,
+                    label: field(pv, "label")?,
+                    stats: Summary {
+                        n: pv.get("n").and_then(Value::as_usize).ok_or("point.n missing")?,
+                        mean,
+                        std: num("std")?,
+                        min: mean,
+                        max: mean,
+                    },
+                });
+            }
+            fig.add(series);
+        }
+        Ok(fig)
+    }
 }
 
 #[cfg(test)]
@@ -297,5 +342,30 @@ mod tests {
         let v = f.to_json();
         let parsed = crate::util::json::Value::parse(&v.pretty()).unwrap();
         assert_eq!(parsed.get("title").unwrap().as_str(), Some("Fig 4"));
+    }
+
+    #[test]
+    fn figure_from_json_round_trips_table() {
+        let mut f = Figure::new("Fig 9", "partitions", "stage time (s)");
+        let mut s = Series::new("HomT");
+        s.push(2.0, "", &[100.0, 110.0]);
+        s.push(8.0, "eight", &[80.0]);
+        f.add(s);
+        f.add(Series::new("empty"));
+        let back = Figure::from_json(&f.to_json()).unwrap();
+        assert_eq!(back.to_table(), f.to_table());
+        assert_eq!(back.to_json().pretty(), f.to_json().pretty());
+        assert_eq!(back.series[0].points[0].stats.n, 2);
+    }
+
+    #[test]
+    fn figure_from_json_reports_missing_fields() {
+        let v = crate::util::json::Value::parse(r#"{"title": "t"}"#).unwrap();
+        let err = Figure::from_json(&v).unwrap_err();
+        assert!(err.contains("x_label"), "{err}");
+        let v =
+            crate::util::json::Value::parse(r#"{"title": "t", "x_label": "x", "y_label": "y"}"#)
+                .unwrap();
+        assert!(Figure::from_json(&v).unwrap_err().contains("series"));
     }
 }

@@ -1,0 +1,191 @@
+//! A minimal blocking client for the serve API — shared by
+//! `examples/serve_client.rs`, the integration tests, and the
+//! throughput bench. Speaks exactly the subset the server does: one
+//! request per connection, `Connection: close`, EOF-delimited bodies.
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+
+/// A fully-buffered response (for the non-streaming endpoints).
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn body_str(&self) -> &str {
+        std::str::from_utf8(&self.body).unwrap_or("")
+    }
+}
+
+/// Send one request and read the whole response. `addr` is `host:port`.
+pub fn request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> io::Result<Response> {
+    let raw = raw_request(addr, method, path, body)?;
+    parse_response(&raw)
+}
+
+/// Same, but return the response exactly as it came off the wire —
+/// the memo tests compare these byte-for-byte.
+pub fn raw_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> io::Result<Vec<u8>> {
+    let mut stream = TcpStream::connect(addr)?;
+    let body = body.unwrap_or("");
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    let mut out = Vec::new();
+    stream.read_to_end(&mut out)?;
+    Ok(out)
+}
+
+/// `POST` a [`crate::api::RunRequest`] body to `/run` and consume the
+/// SSE stream incrementally: `on_event(event_name, data_json)` fires as
+/// each frame arrives, before the run has finished. Returns the HTTP
+/// status; on a non-200 (rejected/invalid spec) no events fire and the
+/// error body is returned alongside.
+pub fn post_sse<F: FnMut(&str, &str)>(
+    addr: &str,
+    path: &str,
+    body: &str,
+    mut on_event: F,
+) -> io::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let head = format!(
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nAccept: text/event-stream\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+
+    let mut buf: Vec<u8> = Vec::with_capacity(4096);
+    let mut chunk = [0u8; 4096];
+    // Headers first.
+    let header_end = loop {
+        if let Some(p) = find(&buf, b"\r\n\r\n") {
+            break p;
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "connection closed before response headers",
+            ));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let status = parse_status(&buf[..header_end])?;
+    let mut pos = header_end + 4;
+    if status != 200 {
+        // Error body, not SSE: drain and hand it back for diagnostics.
+        loop {
+            let n = stream.read(&mut chunk)?;
+            if n == 0 {
+                break;
+            }
+            buf.extend_from_slice(&chunk[..n]);
+        }
+        return Ok((status, String::from_utf8_lossy(&buf[pos..]).into_owned()));
+    }
+    // Stream frames as they complete ("\n\n"-delimited).
+    loop {
+        while let Some(rel) = find(&buf[pos..], b"\n\n") {
+            let frame = String::from_utf8_lossy(&buf[pos..pos + rel]).into_owned();
+            pos += rel + 2;
+            if let Some((event, data)) = parse_frame(&frame) {
+                on_event(&event, &data);
+            }
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Ok((200, String::new()));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+}
+
+fn find(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+fn parse_status(head: &[u8]) -> io::Result<u16> {
+    let text = std::str::from_utf8(head)
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "non-UTF-8 response head"))?;
+    let line = text.lines().next().unwrap_or("");
+    line.split(' ')
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| {
+            io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("bad status line '{line}'"),
+            )
+        })
+}
+
+/// Split one SSE frame into (event, data); frames without both lines
+/// (comments, keep-alives) yield `None`.
+fn parse_frame(frame: &str) -> Option<(String, String)> {
+    let mut event: Option<&str> = None;
+    let mut data: Option<&str> = None;
+    for line in frame.lines() {
+        if let Some(v) = line.strip_prefix("event: ") {
+            event = Some(v);
+        } else if let Some(v) = line.strip_prefix("data: ") {
+            data = Some(v);
+        }
+    }
+    Some((event?.to_string(), data?.to_string()))
+}
+
+fn parse_response(raw: &[u8]) -> io::Result<Response> {
+    let header_end = find(raw, b"\r\n\r\n").ok_or_else(|| {
+        io::Error::new(io::ErrorKind::InvalidData, "response has no header block")
+    })?;
+    Ok(Response {
+        status: parse_status(&raw[..header_end])?,
+        body: raw[header_end + 4..].to_vec(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_canned_response() {
+        let raw = crate::serve::http::response(429, "application/json", "{\"error\": \"full\"}\n");
+        let resp = parse_response(&raw).unwrap();
+        assert_eq!(resp.status, 429);
+        assert_eq!(resp.body_str(), "{\"error\": \"full\"}\n");
+    }
+
+    #[test]
+    fn parses_sse_frames_and_skips_comments() {
+        assert_eq!(
+            parse_frame("event: trial\ndata: {\"x\":1}"),
+            Some(("trial".into(), "{\"x\":1}".into()))
+        );
+        assert_eq!(parse_frame(": keep-alive"), None);
+        assert_eq!(parse_frame("data: orphan"), None);
+    }
+
+    #[test]
+    fn rejects_garbage_status_lines() {
+        assert!(parse_status(b"NOPE").is_err());
+        assert!(parse_status(b"HTTP/1.1 abc OK").is_err());
+        assert_eq!(parse_status(b"HTTP/1.1 200 OK\r\nX: y").unwrap(), 200);
+    }
+}

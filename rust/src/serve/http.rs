@@ -1,0 +1,414 @@
+//! Hand-rolled HTTP/1.1 plumbing for the serve layer: request parsing
+//! over any [`Read`], response building, and SSE framing.
+//!
+//! The server speaks the smallest useful subset of HTTP/1.1: one request
+//! per connection, `Connection: close` on every response, bodies
+//! delimited by `Content-Length` on the way in and by connection close on
+//! the way out (streaming responses carry no length and no chunked
+//! framing — a client reads until EOF). Responses deliberately omit the
+//! `Date` header so that equal payloads are equal bytes, which the memo
+//! tests assert.
+
+use std::io::Read;
+
+/// Header-block cap; beyond this the request is rejected with 431.
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Body cap; a declared `Content-Length` beyond this is rejected with 413.
+pub const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
+
+/// A parsed request. Header names are lowercased at parse time.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let want = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == want)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> Result<&str, ParseError> {
+        std::str::from_utf8(&self.body)
+            .map_err(|_| ParseError::BadRequest("body is not valid UTF-8".into()))
+    }
+}
+
+/// Why a request could not be parsed, mapped to a status by
+/// [`ParseError::status`].
+#[derive(Debug)]
+pub enum ParseError {
+    /// Malformed request line, header, or length (400).
+    BadRequest(String),
+    /// Header block exceeded [`MAX_HEADER_BYTES`] (431).
+    HeadersTooLarge,
+    /// Declared body exceeded [`MAX_BODY_BYTES`] (413).
+    BodyTooLarge,
+    /// A feature this server does not speak, e.g. chunked bodies (501).
+    NotImplemented(String),
+    /// The peer closed before sending a full request — includes the
+    /// clean "connected and said nothing" case. No response is owed.
+    Incomplete,
+}
+
+impl ParseError {
+    pub fn status(&self) -> u16 {
+        match self {
+            ParseError::BadRequest(_) => 400,
+            ParseError::HeadersTooLarge => 431,
+            ParseError::BodyTooLarge => 413,
+            ParseError::NotImplemented(_) => 501,
+            ParseError::Incomplete => 400,
+        }
+    }
+
+    pub fn message(&self) -> String {
+        match self {
+            ParseError::BadRequest(m) => m.clone(),
+            ParseError::HeadersTooLarge => {
+                format!("header block exceeds {MAX_HEADER_BYTES} bytes")
+            }
+            ParseError::BodyTooLarge => format!("body exceeds {MAX_BODY_BYTES} bytes"),
+            ParseError::NotImplemented(m) => m.clone(),
+            ParseError::Incomplete => "connection closed mid-request".into(),
+        }
+    }
+}
+
+/// Read and parse one request. Works over any [`Read`] — the tests feed
+/// it sliced/fragmented streams to prove split reads cannot change the
+/// parse.
+pub fn read_request<R: Read>(r: &mut R) -> Result<Request, ParseError> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 1024];
+    // Accumulate until the blank line that ends the header block.
+    let header_end = loop {
+        if let Some(pos) = find_header_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_HEADER_BYTES {
+            return Err(ParseError::HeadersTooLarge);
+        }
+        let n = r.read(&mut chunk).map_err(|_| ParseError::Incomplete)?;
+        if n == 0 {
+            return if buf.is_empty() {
+                Err(ParseError::Incomplete)
+            } else {
+                Err(ParseError::BadRequest("connection closed inside headers".into()))
+            };
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    if header_end > MAX_HEADER_BYTES {
+        return Err(ParseError::HeadersTooLarge);
+    }
+    let head = std::str::from_utf8(&buf[..header_end])
+        .map_err(|_| ParseError::BadRequest("headers are not valid UTF-8".into()))?
+        .to_string();
+    let mut lines = head.split("\r\n").filter(|l| !l.is_empty());
+    let request_line = lines
+        .next()
+        .ok_or_else(|| ParseError::BadRequest("empty request".into()))?;
+    let mut parts = request_line.split(' ');
+    let method = parts
+        .next()
+        .filter(|m| !m.is_empty())
+        .ok_or_else(|| ParseError::BadRequest("missing method".into()))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| ParseError::BadRequest("missing request path".into()))?
+        .to_string();
+    let version = parts
+        .next()
+        .ok_or_else(|| ParseError::BadRequest("missing HTTP version".into()))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(ParseError::BadRequest(format!(
+            "unsupported protocol '{version}'"
+        )));
+    }
+    let mut headers: Vec<(String, String)> = Vec::new();
+    for line in lines {
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| ParseError::BadRequest(format!("malformed header '{line}'")))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let mut req = Request { method, path, headers, body: Vec::new() };
+    if let Some(te) = req.header("transfer-encoding") {
+        if !te.eq_ignore_ascii_case("identity") {
+            return Err(ParseError::NotImplemented(format!(
+                "transfer-encoding '{te}' not supported; send Content-Length"
+            )));
+        }
+    }
+    let content_length = match req.header("content-length") {
+        None => 0usize,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| ParseError::BadRequest(format!("bad Content-Length '{v}'")))?,
+    };
+    if content_length > MAX_BODY_BYTES {
+        return Err(ParseError::BodyTooLarge);
+    }
+    // The body may partially (or fully) sit in the header read-ahead.
+    let body_start = header_end + 4;
+    let mut body: Vec<u8> = buf[body_start.min(buf.len())..].to_vec();
+    body.truncate(content_length);
+    while body.len() < content_length {
+        let n = r
+            .read(&mut chunk)
+            .map_err(|_| ParseError::BadRequest("read error inside body".into()))?;
+        if n == 0 {
+            return Err(ParseError::BadRequest("connection closed inside body".into()));
+        }
+        let want = content_length - body.len();
+        body.extend_from_slice(&chunk[..n.min(want)]);
+    }
+    req.body = body;
+    Ok(req)
+}
+
+fn find_header_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        501 => "Not Implemented",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Build a complete close-delimited response with a known body. No
+/// `Date` header: equal payloads must be equal bytes.
+pub fn response(status: u16, content_type: &str, body: &str) -> Vec<u8> {
+    response_with_headers(status, content_type, &[], body)
+}
+
+pub fn response_with_headers(
+    status: u16,
+    content_type: &str,
+    extra: &[(&str, &str)],
+    body: &str,
+) -> Vec<u8> {
+    let mut out = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n",
+        status_text(status),
+        body.len()
+    );
+    for (k, v) in extra {
+        out.push_str(&format!("{k}: {v}\r\n"));
+    }
+    out.push_str("\r\n");
+    let mut bytes = out.into_bytes();
+    bytes.extend_from_slice(body.as_bytes());
+    bytes
+}
+
+/// A JSON error body, shaped `{"error": ...}`.
+pub fn error_response(status: u16, message: &str) -> Vec<u8> {
+    let body = crate::util::json::obj(vec![("error", crate::util::json::s(message))]);
+    response(status, "application/json", &format!("{}\n", body.pretty()))
+}
+
+/// The header block that opens an SSE stream: no `Content-Length`, no
+/// chunked framing — the body runs until the server closes the socket.
+pub fn sse_response_head() -> &'static str {
+    "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-store\r\nConnection: close\r\n\r\n"
+}
+
+/// One SSE frame. `data` must be newline-free (use
+/// [`crate::util::json::Value::compact`]).
+pub fn sse_event(event: &str, data: &str) -> String {
+    debug_assert!(!data.contains('\n'), "SSE data must be single-line");
+    format!("event: {event}\ndata: {data}\n\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    /// A reader that hands out the underlying bytes in caller-chosen
+    /// slice sizes, to simulate TCP fragmentation.
+    struct SplitReader {
+        data: Vec<u8>,
+        cuts: Vec<usize>,
+        pos: usize,
+        cut_idx: usize,
+    }
+
+    impl SplitReader {
+        fn new(data: &[u8], cuts: Vec<usize>) -> SplitReader {
+            SplitReader { data: data.to_vec(), cuts, pos: 0, cut_idx: 0 }
+        }
+    }
+
+    impl Read for SplitReader {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos >= self.data.len() {
+                return Ok(0);
+            }
+            let step = self
+                .cuts
+                .get(self.cut_idx)
+                .copied()
+                .unwrap_or(usize::MAX)
+                .max(1)
+                .min(buf.len())
+                .min(self.data.len() - self.pos);
+            self.cut_idx += 1;
+            buf[..step].copy_from_slice(&self.data[self.pos..self.pos + step]);
+            self.pos += step;
+            Ok(step)
+        }
+    }
+
+    fn raw_post(body: &str) -> Vec<u8> {
+        format!(
+            "POST /run HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .into_bytes()
+    }
+
+    #[test]
+    fn parses_simple_get_and_post() {
+        let mut r = SplitReader::new(b"GET /metrics HTTP/1.1\r\nHost: a\r\n\r\n", vec![]);
+        let req = read_request(&mut r).unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/metrics");
+        assert_eq!(req.header("host"), Some("a"));
+        assert!(req.body.is_empty());
+
+        let raw = raw_post("{\"type\": \"steal\"}");
+        let mut r = SplitReader::new(&raw, vec![]);
+        let req = read_request(&mut r).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body_str().unwrap(), "{\"type\": \"steal\"}");
+    }
+
+    #[test]
+    fn split_reads_never_change_the_parse() {
+        // Property: any fragmentation of a valid request parses to the
+        // same method/path/body as the unfragmented stream.
+        let raw = raw_post("{\"rounds\": 3, \"type\": \"dynamics\"}");
+        prop::check("http_split_reads", 0x5e1f_1e5d, 200, |rng| {
+            let cuts: Vec<usize> = (0..rng.below(12) + 1).map(|_| rng.below(9) + 1).collect();
+            let req = read_request(&mut SplitReader::new(&raw, cuts)).unwrap();
+            assert_eq!(req.method, "POST");
+            assert_eq!(req.path, "/run");
+            assert_eq!(req.body_str().unwrap(), "{\"rounds\": 3, \"type\": \"dynamics\"}");
+        });
+    }
+
+    #[test]
+    fn garbage_never_panics() {
+        // Property: arbitrary byte soup (fragmented arbitrarily) yields
+        // Ok or Err, never a panic — and never an impossible body.
+        prop::check("http_garbage", 0xbad_f00d, 300, |rng| {
+            let len = rng.below(200);
+            let mut data: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            // Bias some cases toward almost-valid text.
+            if rng.below(2) == 0 {
+                let prefix = b"POST /run HTTP/1.1\r\nContent-Length: 5\r\n";
+                for (i, b) in prefix.iter().enumerate().take(data.len()) {
+                    data[i] = *b;
+                }
+            }
+            let cuts: Vec<usize> = (0..rng.below(6)).map(|_| rng.below(40) + 1).collect();
+            let _ = read_request(&mut SplitReader::new(&data, cuts));
+        });
+    }
+
+    #[test]
+    fn oversized_headers_are_rejected() {
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        raw.extend_from_slice(format!("X-Pad: {}\r\n", "a".repeat(MAX_HEADER_BYTES)).as_bytes());
+        raw.extend_from_slice(b"\r\n");
+        let err = read_request(&mut SplitReader::new(&raw, vec![])).unwrap_err();
+        assert!(matches!(err, ParseError::HeadersTooLarge), "{err:?}");
+        assert_eq!(err.status(), 431);
+    }
+
+    #[test]
+    fn oversized_body_is_rejected_without_reading_it() {
+        let raw = format!(
+            "POST /run HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        let err = read_request(&mut SplitReader::new(raw.as_bytes(), vec![])).unwrap_err();
+        assert!(matches!(err, ParseError::BodyTooLarge), "{err:?}");
+        assert_eq!(err.status(), 413);
+    }
+
+    #[test]
+    fn chunked_bodies_are_not_implemented() {
+        let raw = b"POST /run HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n";
+        let err = read_request(&mut SplitReader::new(raw, vec![])).unwrap_err();
+        assert_eq!(err.status(), 501);
+    }
+
+    #[test]
+    fn truncated_requests_are_errors_not_hangs() {
+        for raw in [
+            &b"GET / HTTP/1.1\r\nHost: x"[..], // dies inside headers
+            &b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc"[..], // dies inside body
+            &b"bogus\r\n\r\n"[..],             // malformed request line
+            &b"GET / SPDY/9\r\n\r\n"[..],      // wrong protocol
+            &b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n"[..], // malformed header
+            &b"POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n"[..], // bad length
+        ] {
+            let err = read_request(&mut SplitReader::new(raw, vec![])).unwrap_err();
+            assert_eq!(err.status(), 400, "{raw:?} -> {err:?}");
+        }
+        // Empty stream = clean close, still an error but distinguishable.
+        let err = read_request(&mut SplitReader::new(b"", vec![])).unwrap_err();
+        assert!(matches!(err, ParseError::Incomplete));
+    }
+
+    #[test]
+    fn responses_are_deterministic_and_close_delimited() {
+        let a = response(200, "application/json", "{}\n");
+        let b = response(200, "application/json", "{}\n");
+        assert_eq!(a, b, "equal payloads must be equal bytes");
+        let text = String::from_utf8(a).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(!text.contains("Date:"), "Date would break byte-determinism");
+        let rej = String::from_utf8(response_with_headers(
+            429,
+            "application/json",
+            &[("Retry-After", "1")],
+            "{}",
+        ))
+        .unwrap();
+        assert!(rej.contains("Retry-After: 1\r\n"));
+        assert!(String::from_utf8(error_response(404, "no such route"))
+            .unwrap()
+            .contains("no such route"));
+    }
+
+    #[test]
+    fn sse_frames_are_well_formed() {
+        assert_eq!(sse_event("trial", "{\"x\":1}"), "event: trial\ndata: {\"x\":1}\n\n");
+        assert!(sse_response_head().ends_with("\r\n\r\n"));
+        assert!(!sse_response_head().contains("Content-Length"));
+    }
+}

@@ -1,0 +1,616 @@
+//! `hemt serve` — a persistent sweep service over the unified
+//! [`crate::api`] request surface.
+//!
+//! A threaded HTTP/1.1 server on [`std::net::TcpListener`] (no deps; see
+//! [`http`] for the wire subset). One connection carries one request:
+//!
+//! * `POST /run` — body is a [`RunRequest`] JSON document. The response
+//!   is a Server-Sent-Events stream: `start` (banner + unit count per
+//!   output), `trial` (one sample, streamed as sweep workers finish
+//!   units), `figure` (the merged output), then `done` — or `error`.
+//! * `GET /figures` — the figure registry ([`api::figure_registry_json`]).
+//! * `GET /metrics` — counters as JSON (cache hits/misses, queue depth,
+//!   session pool size, requests served).
+//! * `GET /healthz` — liveness probe.
+//! * `POST /shutdown` — stop accepting, drain queued runs, exit.
+//!
+//! **Memoization.** Results are memoized by [`api::spec_hash`] (FNV-1a 64
+//! of the request's canonical compact JSON). A resubmitted spec is
+//! replayed from the stored event log — byte-identical to the first
+//! response. Concurrent identical submissions share ONE compute: the
+//! first creates a `Running` entry holding a live [`EventLog`]; later
+//! arrivals subscribe to the same log, so all N streams are identical
+//! bytes. Failed runs are evicted, never cached.
+//!
+//! **Sessions.** Simulation state is pooled by
+//! [`crate::sweep::cached_session`], which keys on the cluster spec
+//! alone (construction seed is decoupled from trial seed), so every
+//! trial of every submitted spec on a known cluster is a pool hit.
+//!
+//! **Backpressure.** New work beyond `max_queue` pending jobs is
+//! rejected with `429` + `Retry-After` before anything is enqueued.
+//! Replays and subscriptions to running jobs are never rejected — they
+//! cost no compute.
+
+pub mod client;
+pub mod http;
+
+use crate::api::{self, RunEvent, RunRequest};
+use crate::sweep::{self, SweepRunner};
+use crate::util::json::{self, Value};
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::Duration;
+
+/// Server tuning. `threads == 0` means "let the sweep runner decide"
+/// (`HEMT_SWEEP_THREADS` / available parallelism).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub addr: String,
+    /// Concurrent run executors (each drives one sweep at a time).
+    pub workers: usize,
+    /// Sweep-pool threads per run; 0 = environment default.
+    pub threads: usize,
+    /// Pending-queue bound beyond which new specs get `429`.
+    pub max_queue: usize,
+    /// Test hook: start with the worker pool gated until
+    /// [`ServerHandle::release_workers`] — makes backpressure and drain
+    /// behavior deterministic to test.
+    pub paused: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:7199".into(),
+            workers: 2,
+            threads: 0,
+            max_queue: 8,
+            paused: false,
+        }
+    }
+}
+
+/// An append-only frame log with broadcast: the single compute pushes
+/// SSE frames, any number of subscribers replay-then-follow.
+struct EventLog {
+    inner: Mutex<LogInner>,
+    cv: Condvar,
+}
+
+struct LogInner {
+    frames: Vec<String>,
+    done: bool,
+}
+
+impl EventLog {
+    fn new() -> EventLog {
+        EventLog {
+            inner: Mutex::new(LogInner { frames: Vec::new(), done: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn push(&self, frame: String) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.frames.push(frame);
+        self.cv.notify_all();
+    }
+
+    fn finish(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.done = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until there are frames past `from` (or the log is done);
+    /// return the new frames and the done flag.
+    fn wait_from(&self, from: usize) -> (Vec<String>, bool) {
+        let mut inner = self.inner.lock().unwrap();
+        while inner.frames.len() <= from && !inner.done {
+            inner = self.cv.wait(inner).unwrap();
+        }
+        (inner.frames[from.min(inner.frames.len())..].to_vec(), inner.done)
+    }
+
+    fn snapshot(&self) -> Vec<String> {
+        self.inner.lock().unwrap().frames.clone()
+    }
+}
+
+enum MemoEntry {
+    /// Compute in flight — subscribe to the live log.
+    Running(Arc<EventLog>),
+    /// Finished — replay the stored frames (byte-identical every time).
+    Done(Arc<Vec<String>>),
+}
+
+struct Job {
+    req: RunRequest,
+    hash: u64,
+    log: Arc<EventLog>,
+}
+
+#[derive(Default)]
+struct Metrics {
+    requests: AtomicU64,
+    runs_submitted: AtomicU64,
+    memo_hits: AtomicU64,
+    memo_misses: AtomicU64,
+    rejected: AtomicU64,
+    jobs_running: AtomicU64,
+}
+
+struct ServeState {
+    cfg: ServeConfig,
+    addr: SocketAddr,
+    queue: Mutex<VecDeque<Job>>,
+    queue_cv: Condvar,
+    shutdown: AtomicBool,
+    released: Mutex<bool>,
+    release_cv: Condvar,
+    memo: Mutex<HashMap<u64, MemoEntry>>,
+    conns: Mutex<usize>,
+    conns_cv: Condvar,
+    metrics: Metrics,
+}
+
+/// A running server. Keep it around to [`ServerHandle::join`]; drop
+/// without joining only if you never need a clean drain.
+pub struct ServerHandle {
+    state: Arc<ServeState>,
+    accept: Option<thread::JoinHandle<()>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound address (useful with `addr: "127.0.0.1:0"`).
+    pub fn addr(&self) -> SocketAddr {
+        self.state.addr
+    }
+
+    /// Open the worker gate (no-op unless configured `paused`).
+    pub fn release_workers(&self) {
+        let mut released = self.state.released.lock().unwrap();
+        *released = true;
+        self.state.release_cv.notify_all();
+    }
+
+    /// Stop accepting connections and let workers drain the queue.
+    /// Idempotent; also triggered by `POST /shutdown`.
+    pub fn shutdown(&self) {
+        initiate_shutdown(&self.state);
+    }
+
+    /// Wait for the accept loop, every worker, and every open
+    /// connection (including SSE streams of still-draining jobs) to
+    /// finish. Blocks until something calls [`ServerHandle::shutdown`]
+    /// or posts `/shutdown`.
+    pub fn join(mut self) {
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let mut conns = self.state.conns.lock().unwrap();
+        while *conns > 0 {
+            conns = self.state.conns_cv.wait(conns).unwrap();
+        }
+    }
+}
+
+/// Bind and start the server: one accept thread, `cfg.workers` run
+/// executors, one thread per live connection.
+pub fn spawn(cfg: ServeConfig) -> std::io::Result<ServerHandle> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let addr = listener.local_addr()?;
+    let released = !cfg.paused;
+    let state = Arc::new(ServeState {
+        cfg,
+        addr,
+        queue: Mutex::new(VecDeque::new()),
+        queue_cv: Condvar::new(),
+        shutdown: AtomicBool::new(false),
+        released: Mutex::new(released),
+        release_cv: Condvar::new(),
+        memo: Mutex::new(HashMap::new()),
+        conns: Mutex::new(0),
+        conns_cv: Condvar::new(),
+        metrics: Metrics::default(),
+    });
+    let workers = (0..state.cfg.workers)
+        .map(|_| {
+            let st = Arc::clone(&state);
+            thread::spawn(move || worker_loop(&st))
+        })
+        .collect();
+    let accept = {
+        let st = Arc::clone(&state);
+        thread::spawn(move || accept_loop(&st, listener))
+    };
+    Ok(ServerHandle { state, accept: Some(accept), workers })
+}
+
+fn initiate_shutdown(state: &ServeState) {
+    if state.shutdown.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    state.queue_cv.notify_all();
+    state.release_cv.notify_all();
+    // Wake the blocking accept loop so it can observe the flag.
+    let _ = TcpStream::connect(state.addr);
+}
+
+fn accept_loop(state: &Arc<ServeState>, listener: TcpListener) {
+    for stream in listener.incoming() {
+        if state.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        *state.conns.lock().unwrap() += 1;
+        let st = Arc::clone(state);
+        thread::spawn(move || {
+            // Balance the count even if the handler panics.
+            struct ConnGuard(Arc<ServeState>);
+            impl Drop for ConnGuard {
+                fn drop(&mut self) {
+                    *self.0.conns.lock().unwrap() -= 1;
+                    self.0.conns_cv.notify_all();
+                }
+            }
+            let _guard = ConnGuard(Arc::clone(&st));
+            handle_conn(&st, stream);
+        });
+    }
+}
+
+fn handle_conn(state: &ServeState, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let req = match http::read_request(&mut stream) {
+        Ok(r) => r,
+        Err(http::ParseError::Incomplete) => return,
+        Err(e) => {
+            let _ = stream.write_all(&http::error_response(e.status(), &e.message()));
+            // Drain what the peer already sent (briefly, bounded) so
+            // closing with unread bytes doesn't turn into a TCP reset
+            // that destroys the error response in flight.
+            let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+            let mut sink = [0u8; 4096];
+            let mut drained = 0usize;
+            while drained < (1 << 20) {
+                match stream.read(&mut sink) {
+                    Ok(0) | Err(_) => break,
+                    Ok(n) => drained += n,
+                }
+            }
+            return;
+        }
+    };
+    state.metrics.requests.fetch_add(1, Ordering::SeqCst);
+    let reply: Vec<u8> = match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => http::response(200, "text/plain", "ok\n"),
+        ("GET", "/figures") => http::response(
+            200,
+            "application/json",
+            &format!("{}\n", api::figure_registry_json().pretty()),
+        ),
+        ("GET", "/metrics") => http::response(
+            200,
+            "application/json",
+            &format!("{}\n", metrics_json(state).pretty()),
+        ),
+        ("POST", "/shutdown") => {
+            let _ = stream.write_all(&http::response(200, "text/plain", "draining\n"));
+            initiate_shutdown(state);
+            return;
+        }
+        ("POST", "/run") => {
+            handle_run(state, &req, stream);
+            return;
+        }
+        (m, p) => http::error_response(404, &format!("no route {m} {p}")),
+    };
+    let _ = stream.write_all(&reply);
+}
+
+/// What `/run` resolved to before any bytes went out.
+enum RunSource {
+    Replay(Arc<Vec<String>>),
+    Live(Arc<EventLog>),
+    Reject(Vec<u8>),
+}
+
+fn handle_run(state: &ServeState, req: &http::Request, mut stream: TcpStream) {
+    let run_req = match req
+        .body_str()
+        .map_err(|e| e.message())
+        .and_then(RunRequest::from_str)
+    {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = stream.write_all(&http::error_response(400, &e));
+            return;
+        }
+    };
+    let hash = api::spec_hash(&run_req);
+    let source = {
+        let mut memo = state.memo.lock().unwrap();
+        match memo.get(&hash) {
+            Some(MemoEntry::Done(frames)) => {
+                state.metrics.memo_hits.fetch_add(1, Ordering::SeqCst);
+                RunSource::Replay(Arc::clone(frames))
+            }
+            Some(MemoEntry::Running(log)) => {
+                state.metrics.memo_hits.fetch_add(1, Ordering::SeqCst);
+                RunSource::Live(Arc::clone(log))
+            }
+            None => {
+                // Queue inspection and insertion happen under both the
+                // memo and queue locks so admission is atomic (lock
+                // order memo → queue everywhere).
+                let mut queue = state.queue.lock().unwrap();
+                if state.shutdown.load(Ordering::SeqCst) {
+                    RunSource::Reject(http::error_response(503, "server is draining"))
+                } else if queue.len() >= state.cfg.max_queue {
+                    state.metrics.rejected.fetch_add(1, Ordering::SeqCst);
+                    RunSource::Reject(http::response_with_headers(
+                        429,
+                        "application/json",
+                        &[("Retry-After", "1")],
+                        &format!(
+                            "{}\n",
+                            json::obj(vec![(
+                                "error",
+                                json::s("run queue is full; retry shortly")
+                            )])
+                            .pretty()
+                        ),
+                    ))
+                } else {
+                    state.metrics.memo_misses.fetch_add(1, Ordering::SeqCst);
+                    state.metrics.runs_submitted.fetch_add(1, Ordering::SeqCst);
+                    let log = Arc::new(EventLog::new());
+                    memo.insert(hash, MemoEntry::Running(Arc::clone(&log)));
+                    queue.push_back(Job { req: run_req, hash, log: Arc::clone(&log) });
+                    state.queue_cv.notify_one();
+                    RunSource::Live(log)
+                }
+            }
+        }
+    };
+    match source {
+        RunSource::Reject(reply) => {
+            let _ = stream.write_all(&reply);
+        }
+        RunSource::Replay(frames) => {
+            if stream.write_all(http::sse_response_head().as_bytes()).is_err() {
+                return;
+            }
+            for f in frames.iter() {
+                if stream.write_all(f.as_bytes()).is_err() {
+                    return;
+                }
+            }
+        }
+        RunSource::Live(log) => {
+            // SSE may idle for minutes while the job sits queued; the
+            // log condvar does the pacing, not the socket.
+            let _ = stream.set_write_timeout(Some(Duration::from_secs(300)));
+            if stream.write_all(http::sse_response_head().as_bytes()).is_err() {
+                return;
+            }
+            let mut sent = 0usize;
+            loop {
+                let (frames, done) = log.wait_from(sent);
+                sent += frames.len();
+                for f in &frames {
+                    if stream.write_all(f.as_bytes()).is_err() {
+                        return; // subscriber gone; the compute goes on
+                    }
+                }
+                if done {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn worker_loop(state: &Arc<ServeState>) {
+    // Pause gate (test hook). Shutdown also opens it so a paused server
+    // still drains.
+    {
+        let mut released = state.released.lock().unwrap();
+        while !*released && !state.shutdown.load(Ordering::SeqCst) {
+            released = state.release_cv.wait(released).unwrap();
+        }
+    }
+    loop {
+        let job = {
+            let mut queue = state.queue.lock().unwrap();
+            loop {
+                if let Some(job) = queue.pop_front() {
+                    break job;
+                }
+                if state.shutdown.load(Ordering::SeqCst) {
+                    return; // queue drained, server draining: done
+                }
+                queue = state.queue_cv.wait(queue).unwrap();
+            }
+        };
+        run_job(state, job);
+    }
+}
+
+fn run_job(state: &ServeState, job: Job) {
+    state.metrics.jobs_running.fetch_add(1, Ordering::SeqCst);
+    let runner = if state.cfg.threads == 0 {
+        SweepRunner::from_env()
+    } else {
+        SweepRunner::new(state.cfg.threads)
+    };
+    let log = &job.log;
+    let result = api::execute_with(&job.req, &runner, |ev| match ev {
+        RunEvent::Start { index, name, banner, units } => {
+            log.push(http::sse_event(
+                "start",
+                &json::obj(vec![
+                    ("banner", json::s(banner)),
+                    ("index", json::num(index as f64)),
+                    ("name", json::s(name)),
+                    ("units", json::num(units as f64)),
+                ])
+                .compact(),
+            ));
+        }
+        RunEvent::Unit { index, unit, samples } => {
+            for s in samples {
+                log.push(http::sse_event(
+                    "trial",
+                    &json::obj(vec![
+                        ("index", json::num(index as f64)),
+                        ("label", json::s(&s.label)),
+                        ("series", json::num(s.series as f64)),
+                        ("unit", json::num(unit as f64)),
+                        ("value", json::num(s.value)),
+                        ("x", json::num(s.x)),
+                    ])
+                    .compact(),
+                ));
+            }
+        }
+        RunEvent::Output { index, output } => {
+            log.push(http::sse_event(
+                "figure",
+                &json::obj(vec![
+                    ("index", json::num(index as f64)),
+                    ("output", output.to_json()),
+                ])
+                .compact(),
+            ));
+        }
+    });
+    match result {
+        Ok(res) => {
+            log.push(http::sse_event(
+                "done",
+                &json::obj(vec![
+                    ("outputs", json::num(res.outputs.len() as f64)),
+                    ("spec_hash", json::s(&format!("{:016x}", job.hash))),
+                    ("status", json::s("ok")),
+                ])
+                .compact(),
+            ));
+            log.finish();
+            let frames = Arc::new(log.snapshot());
+            state
+                .memo
+                .lock()
+                .unwrap()
+                .insert(job.hash, MemoEntry::Done(frames));
+        }
+        Err(e) => {
+            log.push(http::sse_event(
+                "error",
+                &json::obj(vec![("error", json::s(&e)), ("status", json::s("error"))])
+                    .compact(),
+            ));
+            log.finish();
+            // Errors are never served from cache.
+            state.memo.lock().unwrap().remove(&job.hash);
+        }
+    }
+    state.metrics.jobs_running.fetch_sub(1, Ordering::SeqCst);
+}
+
+fn metrics_json(state: &ServeState) -> Value {
+    let m = &state.metrics;
+    let (cache_hits, cache_misses) = sweep::session_cache_stats();
+    let count = |c: &AtomicU64| json::num(c.load(Ordering::SeqCst) as f64);
+    json::obj(vec![
+        ("jobs_running", count(&m.jobs_running)),
+        (
+            "memo_entries",
+            json::num(state.memo.lock().unwrap().len() as f64),
+        ),
+        ("memo_hits", count(&m.memo_hits)),
+        ("memo_misses", count(&m.memo_misses)),
+        (
+            "queue_depth",
+            json::num(state.queue.lock().unwrap().len() as f64),
+        ),
+        ("rejected", count(&m.rejected)),
+        ("requests", count(&m.requests)),
+        ("runs_submitted", count(&m.runs_submitted)),
+        // The session pool is process-global (sweep::cached_session),
+        // shared by every worker's runs.
+        ("session_cache_hits", json::num(cache_hits as f64)),
+        ("session_cache_misses", json::num(cache_misses as f64)),
+        ("session_pool", json::num(sweep::session_cache_len() as f64)),
+        ("workers", json::num(state.cfg.workers as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_log_broadcasts_and_replays() {
+        let log = Arc::new(EventLog::new());
+        let l2 = Arc::clone(&log);
+        let reader = thread::spawn(move || {
+            let mut got: Vec<String> = Vec::new();
+            let mut seen = 0usize;
+            loop {
+                let (frames, done) = l2.wait_from(seen);
+                seen += frames.len();
+                got.extend(frames);
+                if done {
+                    break got;
+                }
+            }
+        });
+        log.push("a".into());
+        log.push("b".into());
+        log.finish();
+        assert_eq!(reader.join().unwrap(), vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(log.snapshot(), vec!["a".to_string(), "b".to_string()]);
+        // A late subscriber sees everything immediately.
+        let (frames, done) = log.wait_from(0);
+        assert_eq!(frames.len(), 2);
+        assert!(done);
+    }
+
+    #[test]
+    fn server_spawns_probes_and_drains() {
+        let handle = spawn(ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 1,
+            threads: 1,
+            max_queue: 2,
+            paused: false,
+        })
+        .unwrap();
+        let addr = handle.addr().to_string();
+        let ok = client::request(&addr, "GET", "/healthz", None).unwrap();
+        assert_eq!(ok.status, 200);
+        assert_eq!(String::from_utf8(ok.body).unwrap(), "ok\n");
+        let missing = client::request(&addr, "GET", "/nope", None).unwrap();
+        assert_eq!(missing.status, 404);
+        let metrics = client::request(&addr, "GET", "/metrics", None).unwrap();
+        assert_eq!(metrics.status, 200);
+        let v = json::Value::parse(std::str::from_utf8(&metrics.body).unwrap().trim()).unwrap();
+        assert_eq!(v.get("workers").and_then(json::Value::as_usize), Some(1));
+        assert_eq!(v.get("queue_depth").and_then(json::Value::as_usize), Some(0));
+        let bye = client::request(&addr, "POST", "/shutdown", None).unwrap();
+        assert_eq!(bye.status, 200);
+        handle.join();
+    }
+}

@@ -212,7 +212,21 @@ impl SweepRunner {
     /// work-stealing order across the pool; results are merged in unit
     /// declaration order, so the output does not depend on scheduling.
     pub fn run(&self, spec: &SweepSpec) -> Figure {
-        let outputs = self.execute_units(&spec.units);
+        self.run_observed(spec, |_, _| {})
+    }
+
+    /// [`SweepRunner::run`] with a completion observer: `observe(i,
+    /// samples)` fires once per work unit, as the unit finishes, from
+    /// whichever worker thread ran it (hence `Sync`). Completion *order*
+    /// follows pool scheduling — only the merged figure is
+    /// order-independent — so observers (the serve layer's per-trial SSE
+    /// stream) see progress, not a canonical ordering. The figure
+    /// returned is bit-identical to `run`'s.
+    pub fn run_observed<F>(&self, spec: &SweepSpec, observe: F) -> Figure
+    where
+        F: Fn(usize, &[Sample]) + Sync,
+    {
+        let outputs = self.execute_units(&spec.units, &observe);
         // Cells keyed by (x bit-pattern, label), per series, in first-
         // appearance order — exactly the order a serial driver would have
         // pushed points.
@@ -245,11 +259,23 @@ impl SweepRunner {
     }
 
     /// Fan the units out over the pool; returns per-unit outputs indexed
-    /// by declaration order.
-    fn execute_units(&self, units: &[UnitFn]) -> Vec<Vec<Sample>> {
+    /// by declaration order. `observe` fires per completed unit, before
+    /// its output is parked in the result slot.
+    fn execute_units<F>(&self, units: &[UnitFn], observe: &F) -> Vec<Vec<Sample>>
+    where
+        F: Fn(usize, &[Sample]) + Sync,
+    {
         let n = units.len();
         if self.threads == 1 || n <= 1 {
-            return units.iter().map(|u| u()).collect();
+            return units
+                .iter()
+                .enumerate()
+                .map(|(i, u)| {
+                    let out = u();
+                    observe(i, &out);
+                    out
+                })
+                .collect();
         }
         let next = AtomicUsize::new(0);
         let slots: Vec<Mutex<Option<Vec<Sample>>>> =
@@ -264,6 +290,7 @@ impl SweepRunner {
                         break;
                     }
                     let out = units[i]();
+                    observe(i, &out);
                     *slots[i].lock().unwrap() = Some(out);
                 });
             }
@@ -277,16 +304,23 @@ impl SweepRunner {
 
 // --------------------------------------------------------- session cache
 
-/// Cap on distinct `(cluster, seed)` entries; past it the cache resets
-/// (the keys are tiny but sessions hold a full engine each).
+/// Cap on distinct cluster entries; past it the cache resets (the keys
+/// are tiny but sessions hold a full engine each).
 const SESSION_CACHE_CAP: usize = 512;
+
+/// The construction seed every cached pristine build uses. Arbitrary:
+/// [`crate::coordinator::driver::SessionBuilder::build`] consumes the
+/// seed *only* to initialize `Session.rng` (construction draws nothing
+/// from it), and [`cached_session`] re-seeds the RNG per call — so the
+/// construction seed is unobservable in any trial's output.
+const SESSION_BUILD_SEED: u64 = 0;
 
 struct SessionCache {
     /// `Arc` values so lookups clone a pointer under the lock and do the
     /// deep `Session` clone *outside* it — workers sharing a key (the
     /// dynamics arms, pooled bench iterations) never serialize behind a
     /// full engine copy.
-    map: Mutex<HashMap<(String, u64), Arc<Session>>>,
+    map: Mutex<HashMap<String, Arc<Session>>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -300,39 +334,44 @@ fn session_cache() -> &'static SessionCache {
     })
 }
 
-/// A pristine session for `(cluster, seed)` under default [`SimParams`]
-/// — cloned from a process-wide cache instead of rebuilt. A clone of a
-/// pristine build is field-wise identical to a fresh build (same RNG
-/// state, same link ids), so cached and uncached runs are bit-identical.
-/// The key is the cluster's canonical JSON (exact: the writer
-/// round-trips every f64) plus the seed.
+/// A pristine session for `cluster` under default [`SimParams`], with its
+/// RNG seeded to `seed` — cloned from a process-wide cache keyed on the
+/// cluster's canonical JSON (exact: the writer round-trips every f64)
+/// instead of rebuilt per trial.
 ///
-/// Hits come from *repeated* `(cluster, seed)` uses in one process: the
-/// three policy arms of each `hemt dynamics` family, the 1/2/8-thread
-/// golden runs, bench iterations, and `kmeans_total_time`-style repeated
-/// figure probes. Ordinary product-sweep trials each carry a unique seed
-/// by design (their values are pinned by the seed ladder), so for them
-/// the cache is a small constant overhead (key string + one pristine
-/// clone), not a win — the wall-clock payoff is in the repeated-run
-/// paths above.
+/// The key deliberately excludes the seed: session *construction* never
+/// draws from the RNG (the builder consumes its seed only to initialize
+/// `Session.rng`), so one pristine build per cluster serves every trial
+/// seed — the clone gets `Rng::new(seed)` installed and is then
+/// field-wise identical to a fresh `build_session(params, seed)`. Cached
+/// and uncached runs are therefore bit-identical, and *every* repeated
+/// trial on a cluster is a hit: the per-trial seeds of a sweep cell, the
+/// policy arms of `hemt dynamics`, golden reruns, bench iterations, and
+/// the serve layer's request traffic all share one build per cluster.
 pub fn cached_session(cluster: &ClusterConfig, seed: u64) -> Session {
     let cache = session_cache();
-    let key = (cluster.to_json().pretty(), seed);
+    let key = cluster.to_json().pretty();
     let hit = cache.map.lock().unwrap().get(&key).cloned();
-    if let Some(arc) = hit {
-        cache.hits.fetch_add(1, Ordering::Relaxed);
-        return (*arc).clone();
-    }
-    cache.misses.fetch_add(1, Ordering::Relaxed);
-    let arc = Arc::new(cluster.build_session(SimParams::default(), seed));
-    {
-        let mut map = cache.map.lock().unwrap();
-        if map.len() >= SESSION_CACHE_CAP {
-            map.clear();
+    let arc = match hit {
+        Some(arc) => {
+            cache.hits.fetch_add(1, Ordering::Relaxed);
+            arc
         }
-        map.insert(key, Arc::clone(&arc));
-    }
-    (*arc).clone()
+        None => {
+            cache.misses.fetch_add(1, Ordering::Relaxed);
+            let arc =
+                Arc::new(cluster.build_session(SimParams::default(), SESSION_BUILD_SEED));
+            let mut map = cache.map.lock().unwrap();
+            if map.len() >= SESSION_CACHE_CAP {
+                map.clear();
+            }
+            map.insert(key, Arc::clone(&arc));
+            arc
+        }
+    };
+    let mut s = (*arc).clone();
+    s.rng = crate::util::Rng::new(seed);
+    s
 }
 
 /// `(hits, misses)` of the process-wide session cache, for benches and
@@ -340,6 +379,12 @@ pub fn cached_session(cluster: &ClusterConfig, seed: u64) -> Session {
 pub fn session_cache_stats() -> (u64, u64) {
     let cache = session_cache();
     (cache.hits.load(Ordering::Relaxed), cache.misses.load(Ordering::Relaxed))
+}
+
+/// Number of distinct pristine builds currently pooled (the serve
+/// layer's `/metrics` "session_pool" gauge).
+pub fn session_cache_len() -> usize {
+    session_cache().map.lock().unwrap().len()
 }
 
 // ------------------------------------------------------- scenario trials
@@ -591,12 +636,18 @@ mod tests {
         assert_eq!(fig.series[0].points[1].label, "hemt");
     }
 
+    /// A cluster no other test uses: the cache key is now the cluster
+    /// JSON alone, so key isolation must come from an unusual *cluster*
+    /// (an off-preset serving eta), not an unusual seed.
+    fn unusual_cluster(eta: f64) -> ClusterConfig {
+        let mut cluster = ClusterConfig::containers_1_and_04();
+        cluster.hdfs_serving_eta = eta;
+        cluster
+    }
+
     #[test]
     fn cached_sessions_are_pristine_clones() {
-        // An unusual seed keeps this test's keys disjoint from any other
-        // concurrently running test; the second lookup must be a hit and
-        // the clone must carry the identical RNG stream.
-        let cluster = ClusterConfig::containers_1_and_04();
+        let cluster = unusual_cluster(0.2617);
         let seed = 0xCAC4E_u64;
         let (_, miss0) = session_cache_stats();
         let mut a = cached_session(&cluster, seed);
@@ -608,6 +659,59 @@ mod tests {
         assert_eq!(a.engine.now, 0.0);
         assert_eq!(a.rng.next_u64(), b.rng.next_u64());
         assert_eq!(a.capacity_hints(), b.capacity_hints());
+    }
+
+    #[test]
+    fn cached_sessions_decouple_construction_seed_from_trial_seed() {
+        // Different trial seeds on one cluster share a single pristine
+        // build (second lookup is a hit) yet carry exactly the RNG stream
+        // a fresh build at that seed would have.
+        let cluster = unusual_cluster(0.2619);
+        let (hit0, _) = session_cache_stats();
+        let mut a = cached_session(&cluster, 41);
+        let mut b = cached_session(&cluster, 42);
+        let (hit1, _) = session_cache_stats();
+        assert!(hit1 > hit0, "second seed on the same cluster must hit");
+        let mut fresh_a = cluster.build_session(SimParams::default(), 41);
+        let mut fresh_b = cluster.build_session(SimParams::default(), 42);
+        for _ in 0..8 {
+            assert_eq!(a.rng.next_u64(), fresh_a.rng.next_u64());
+            assert_eq!(b.rng.next_u64(), fresh_b.rng.next_u64());
+        }
+    }
+
+    #[test]
+    fn per_trial_cache_hits_are_bit_identical_to_uncached() {
+        // The serve-layer regression the seed split exists for: two
+        // trials of one cell produce >= 1 session-cache hit, and each
+        // trial's value is bit-identical to a run on a fresh uncached
+        // session built at that trial's seed.
+        let cluster = unusual_cluster(0.2621);
+        let sc = Scenario {
+            cluster: cluster.clone(),
+            workload: WorkloadConfig::wordcount_2gb(),
+            policy: PolicyConfig::Homt(8),
+            dynamics: DynamicsConfig::steady(),
+            metric: Metric::MapStageTime,
+            trials: 2,
+            base_seed: 4242,
+        };
+        let (hit0, _) = session_cache_stats();
+        let cached: Vec<f64> = (0..2)
+            .map(|t| run_scenario_trial(&sc, trial_seed(sc.base_seed, t)))
+            .collect();
+        let (hit1, _) = session_cache_stats();
+        assert!(hit1 > hit0, "the second trial must reuse the first trial's build");
+        for (t, got) in cached.iter().enumerate() {
+            let mut s =
+                cluster.build_session(SimParams::default(), trial_seed(sc.base_seed, t));
+            let direct = wordcount_trial_in(&mut s, &sc);
+            assert_eq!(
+                got.to_bits(),
+                direct.to_bits(),
+                "trial {t}: cached {got} != uncached {direct}"
+            );
+        }
     }
 
     #[test]

@@ -92,6 +92,48 @@ impl Value {
         out
     }
 
+    /// Single-line form with no whitespace. Newline-free by construction
+    /// (string escapes cover embedded newlines), so a compact document is
+    /// always a valid SSE `data:` payload; object keys stay sorted, so
+    /// equal values render to equal bytes — the property the request
+    /// memo hash relies on.
+    pub fn compact(&self) -> String {
+        let mut out = String::new();
+        self.write_compact(&mut out);
+        out
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Num(x) => write_num(out, *x),
+            Value::Str(s) => write_str(out, s),
+            Value::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write_compact(out);
+                }
+                out.push(']');
+            }
+            Value::Obj(m) => {
+                out.push('{');
+                for (i, (k, item)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(out, k);
+                    out.push(':');
+                    item.write_compact(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
     fn write(&self, out: &mut String, indent: usize) {
         match self {
             Value::Null => out.push_str("null"),
@@ -451,6 +493,27 @@ mod tests {
         let v = Value::parse(src).unwrap();
         let again = Value::parse(&v.pretty()).unwrap();
         assert_eq!(v, again);
+    }
+
+    #[test]
+    fn compact_roundtrips_and_stays_single_line() {
+        let src = r#"{"name": "fig9", "note": "a\nb", "seeds": [1, 2], "x": 0.25, "e": {}}"#;
+        let v = Value::parse(src).unwrap();
+        let c = v.compact();
+        assert!(!c.contains('\n'), "compact output must be newline-free: {c}");
+        assert!(!c.contains(": "), "compact output has no key spacing: {c}");
+        assert_eq!(Value::parse(&c).unwrap(), v);
+        // Key order (BTreeMap) makes equal values byte-equal.
+        let v2 = Value::parse(r#"{"x": 0.25, "seeds": [1, 2], "note": "a\nb", "name": "fig9", "e": {}}"#)
+            .unwrap();
+        assert_eq!(v2.compact(), c);
+    }
+
+    #[test]
+    fn compact_empty_containers() {
+        assert_eq!(Value::Arr(vec![]).compact(), "[]");
+        assert_eq!(Value::Obj(Default::default()).compact(), "{}");
+        assert_eq!(obj(vec![("a", arr(vec![num(1.0), s("x")]))]).compact(), r#"{"a":[1,"x"]}"#);
     }
 
     #[test]

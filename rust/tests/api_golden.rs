@@ -1,0 +1,236 @@
+//! API-redesign goldens: every CLI subcommand's compute path now routes
+//! through `api::execute(&RunRequest)`; these tests pin that the
+//! unified path is bit-identical to driving the underlying specs
+//! directly (what the pre-redesign subcommands did), at any thread
+//! count, and that requests survive the disk round-trip `hemt request`
+//! uses.
+
+use hemt::api::{self, execute_with, spec_hash, RunEvent, RunRequest};
+use hemt::config::{ClusterConfig, ExperimentConfig, PolicyConfig, WorkloadConfig};
+use hemt::dynamics::{
+    comparison_spec, net_steal_comparison_spec, COMPARISON_BASE_SEED, COMPARISON_FAMILIES,
+    NET_STEAL_BASE_SEED, NET_STEAL_FAMILIES,
+};
+use hemt::experiments;
+use hemt::metrics::Figure;
+use hemt::sweep::{Metric, Named, ProductSweepSpec, SweepRunner};
+
+/// Every float as raw bits — equality here is bit-identity, not an
+/// epsilon comparison.
+fn figure_bits(fig: &Figure) -> Vec<(String, Vec<(u64, String, u64, u64, usize)>)> {
+    fig.series
+        .iter()
+        .map(|s| {
+            (
+                s.name.clone(),
+                s.points
+                    .iter()
+                    .map(|p| {
+                        (
+                            p.x.to_bits(),
+                            p.label.clone(),
+                            p.stats.mean.to_bits(),
+                            p.stats.std.to_bits(),
+                            p.stats.n,
+                        )
+                    })
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+fn tiny_product() -> ProductSweepSpec {
+    let mut wl = WorkloadConfig::wordcount_2gb();
+    wl.data_mb = 256;
+    wl.block_mb = 128;
+    ProductSweepSpec {
+        title: "api golden product".to_string(),
+        dynamics: ProductSweepSpec::steady_axis(),
+        clusters: vec![Named::new("static", ClusterConfig::containers_1_and_04())],
+        workloads: vec![Named::new("wc", wl)],
+        policies: vec![
+            Named::new("homt", PolicyConfig::Homt(2)),
+            Named::new("hemt", PolicyConfig::HemtFromHints),
+        ],
+        granularities: vec![2, 8],
+        metric: Metric::MapStageTime,
+        trials: 2,
+        base_seed: 555,
+    }
+}
+
+fn probe_config() -> ExperimentConfig {
+    let mut wl = WorkloadConfig::wordcount_2gb();
+    wl.data_mb = 256;
+    wl.block_mb = 128;
+    ExperimentConfig {
+        name: "api-probe".into(),
+        cluster: ClusterConfig::containers_1_and_04(),
+        workload: wl,
+        policy: PolicyConfig::HemtFromHints,
+        trials: 2,
+        base_seed: 4242,
+    }
+}
+
+fn run(req: &RunRequest, runner: &SweepRunner) -> Vec<Figure> {
+    execute_with(req, runner, |_| {})
+        .unwrap()
+        .outputs
+        .into_iter()
+        .map(|o| o.figure)
+        .collect()
+}
+
+#[test]
+fn figure_request_matches_direct_spec_run() {
+    let runner = SweepRunner::serial();
+    let via_api = run(&RunRequest::Figure { name: "fig4".into() }, &runner);
+    let direct = runner.run(&experiments::spec_by_name("fig4").unwrap());
+    assert_eq!(via_api.len(), 1);
+    assert_eq!(figure_bits(&via_api[0]), figure_bits(&direct));
+}
+
+#[test]
+fn ablation_request_matches_direct_spec_run() {
+    let runner = SweepRunner::serial();
+    let via_api = run(&RunRequest::Ablation { name: "alpha".into() }, &runner);
+    let direct = runner.run(&experiments::ablations::spec_by_name("alpha").unwrap());
+    assert_eq!(figure_bits(&via_api[0]), figure_bits(&direct));
+}
+
+#[test]
+fn sweep_request_matches_direct_config_spec_run() {
+    let cfg = probe_config();
+    let runner = SweepRunner::serial();
+    let via_api = run(&RunRequest::Sweep { config: cfg.clone() }, &runner);
+    let direct = runner.run(&api::config_spec(&cfg));
+    assert_eq!(figure_bits(&via_api[0]), figure_bits(&direct));
+    assert_eq!(via_api[0].title, "api-probe");
+}
+
+#[test]
+fn product_sweep_request_matches_direct_run_at_any_thread_count() {
+    let product = tiny_product();
+    let direct = SweepRunner::serial().run(&product.to_spec());
+    for threads in [1usize, 2, 4] {
+        let runner = SweepRunner::new(threads);
+        let via_api = run(&RunRequest::ProductSweep { spec: product.clone() }, &runner);
+        assert_eq!(
+            figure_bits(&via_api[0]),
+            figure_bits(&direct),
+            "thread count {threads} must not change the figure"
+        );
+    }
+}
+
+#[test]
+fn dynamics_request_matches_direct_comparison() {
+    let runner = SweepRunner::new(2);
+    let via_api = execute_with(
+        &RunRequest::Dynamics { correlated: false, rounds: 2 },
+        &runner,
+        |_| {},
+    )
+    .unwrap();
+    let direct = runner.run(&comparison_spec(2, COMPARISON_BASE_SEED));
+    assert_eq!(via_api.outputs.len(), 1);
+    let out = &via_api.outputs[0];
+    assert_eq!(out.name, "dyn_compare");
+    assert_eq!(figure_bits(&out.figure), figure_bits(&direct));
+    // The winners block knows every family.
+    let winners = out.winners_table().unwrap();
+    assert!(winners.starts_with("per-family winners (mean map-stage time over 2 rounds):"));
+    for family in COMPARISON_FAMILIES {
+        assert!(winners.contains(family), "missing {family} in:\n{winners}");
+    }
+}
+
+#[test]
+fn stream_steal_request_matches_direct_comparison() {
+    let runner = SweepRunner::new(2);
+    let via_api = execute_with(
+        &RunRequest::Steal { streams: true, rounds: 2 },
+        &runner,
+        |_| {},
+    )
+    .unwrap();
+    let direct = runner.run(&net_steal_comparison_spec(2, NET_STEAL_BASE_SEED));
+    assert_eq!(via_api.outputs[0].name, "net_steal");
+    assert_eq!(figure_bits(&via_api.outputs[0].figure), figure_bits(&direct));
+    assert_eq!(
+        via_api.outputs[0].families,
+        NET_STEAL_FAMILIES.iter().map(|f| f.to_string()).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn requests_survive_the_disk_round_trip() {
+    // The `hemt request <file.json>` path: serialize, re-parse from
+    // disk, run — identical hash and figure.
+    let product = tiny_product();
+    let req = RunRequest::ProductSweep { spec: product };
+    let dir = std::env::temp_dir().join("hemt-api-golden");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("request.json");
+    std::fs::write(&path, req.to_json().pretty()).unwrap();
+    let back = RunRequest::from_str(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(spec_hash(&back), spec_hash(&req));
+    let runner = SweepRunner::serial();
+    assert_eq!(
+        figure_bits(&run(&back, &runner)[0]),
+        figure_bits(&run(&req, &runner)[0])
+    );
+}
+
+#[test]
+fn events_cover_every_unit_and_carry_the_banner() {
+    use std::sync::Mutex;
+    let product = tiny_product();
+    let spec_units = product.to_spec().num_units();
+    let req = RunRequest::ProductSweep { spec: product };
+    let seen_units: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+    let banner: Mutex<String> = Mutex::new(String::new());
+    let samples_streamed: Mutex<usize> = Mutex::new(0);
+    execute_with(&req, &SweepRunner::new(4), |ev| match ev {
+        RunEvent::Start { banner: b, units, .. } => {
+            assert_eq!(units, spec_units);
+            *banner.lock().unwrap() = b.to_string();
+        }
+        RunEvent::Unit { unit, samples, .. } => {
+            seen_units.lock().unwrap().push(unit);
+            *samples_streamed.lock().unwrap() += samples.len();
+        }
+        RunEvent::Output { .. } => {}
+    })
+    .unwrap();
+    let mut units = seen_units.into_inner().unwrap();
+    units.sort_unstable();
+    assert_eq!(units, (0..spec_units).collect::<Vec<_>>(), "every unit observed once");
+    assert!(*samples_streamed.lock().unwrap() >= spec_units, "each unit yields samples");
+    let banner = banner.into_inner().unwrap();
+    assert!(
+        banner.starts_with("product sweep: 3 cells x 2 trials = 6 units over 4 thread(s)"),
+        "banner was '{banner}'"
+    );
+}
+
+#[test]
+fn correlated_dynamics_yields_the_output_pair() {
+    // Shape-only check (rounds=1 keeps it cheap): the correlated request
+    // must produce rack_steal then link_degrade, like the historic
+    // two-figure subcommand.
+    let result = execute_with(
+        &RunRequest::Dynamics { correlated: true, rounds: 1 },
+        &SweepRunner::new(4),
+        |_| {},
+    )
+    .unwrap();
+    let names: Vec<&str> = result.outputs.iter().map(|o| o.name.as_str()).collect();
+    assert_eq!(names, vec!["rack_steal", "link_degrade"]);
+    for out in &result.outputs {
+        assert!(!out.families.is_empty());
+        assert!(out.winners_table().is_some());
+    }
+}

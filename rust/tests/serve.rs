@@ -1,0 +1,364 @@
+//! End-to-end tests of `hemt serve`: SSE streaming, spec-hash
+//! memoization (byte-identical replays, one compute for concurrent
+//! identical submissions), bounded-queue backpressure, graceful drain,
+//! and parser robustness against hostile bytes on a real socket.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use hemt::api::RunRequest;
+use hemt::config::{ClusterConfig, PolicyConfig, WorkloadConfig};
+use hemt::experiments;
+use hemt::metrics::Figure;
+use hemt::serve::{client, spawn, ServeConfig};
+use hemt::sweep::{Metric, Named, ProductSweepSpec, SweepRunner};
+use hemt::util::json::Value;
+
+fn serve(
+    workers: usize,
+    threads: usize,
+    max_queue: usize,
+    paused: bool,
+) -> hemt::serve::ServerHandle {
+    spawn(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        workers,
+        threads,
+        max_queue,
+        paused,
+    })
+    .expect("bind 127.0.0.1:0")
+}
+
+fn metrics(addr: &str) -> Value {
+    let resp = client::request(addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(resp.status, 200);
+    Value::parse(resp.body_str().trim()).unwrap()
+}
+
+fn metric(addr: &str, key: &str) -> usize {
+    metrics(addr).get(key).and_then(Value::as_usize).unwrap()
+}
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let start = Instant::now();
+    while !cond() {
+        assert!(
+            start.elapsed() < Duration::from_secs(60),
+            "timed out waiting for {what}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn fig4_body() -> String {
+    RunRequest::Figure { name: "fig4".into() }.to_json().pretty()
+}
+
+fn tiny_product_body(base_seed: u64) -> String {
+    let mut wl = WorkloadConfig::wordcount_2gb();
+    wl.data_mb = 256;
+    wl.block_mb = 128;
+    let spec = ProductSweepSpec {
+        title: "serve tiny product".to_string(),
+        dynamics: ProductSweepSpec::steady_axis(),
+        clusters: vec![Named::new("static", ClusterConfig::containers_1_and_04())],
+        workloads: vec![Named::new("wc", wl)],
+        policies: vec![
+            Named::new("homt", PolicyConfig::Homt(2)),
+            Named::new("hemt", PolicyConfig::HemtFromHints),
+        ],
+        granularities: vec![2, 8],
+        metric: Metric::MapStageTime,
+        trials: 2,
+        base_seed,
+    };
+    RunRequest::ProductSweep { spec }.to_json().pretty()
+}
+
+#[test]
+fn sse_stream_carries_trials_figure_and_done() {
+    let handle = serve(1, 1, 4, false);
+    let addr = handle.addr().to_string();
+    let mut events: Vec<(String, String)> = Vec::new();
+    let (status, _) = client::post_sse(&addr, "/run", &fig4_body(), |ev, data| {
+        events.push((ev.to_string(), data.to_string()));
+    })
+    .unwrap();
+    assert_eq!(status, 200);
+    let kinds: Vec<&str> = events.iter().map(|(e, _)| e.as_str()).collect();
+    assert_eq!(kinds.first(), Some(&"start"));
+    assert_eq!(kinds.last(), Some(&"done"));
+    assert!(kinds.contains(&"trial"), "{kinds:?}");
+    assert!(kinds.contains(&"figure"), "{kinds:?}");
+    // The streamed figure parses back into exactly the figure a local
+    // runner produces for the same request.
+    let fig_data = &events.iter().find(|(e, _)| e == "figure").unwrap().1;
+    let v = Value::parse(fig_data).unwrap();
+    assert_eq!(v.get("output").unwrap().get("name").unwrap().as_str(), Some("fig4"));
+    let streamed = Figure::from_json(v.get("output").unwrap().get("figure").unwrap()).unwrap();
+    let local = SweepRunner::serial().run(&experiments::spec_by_name("fig4").unwrap());
+    assert_eq!(streamed.to_table(), local.to_table());
+    // Every trial frame is a flat sample record.
+    let trial = &events.iter().find(|(e, _)| e == "trial").unwrap().1;
+    let t = Value::parse(trial).unwrap();
+    for key in ["series", "unit", "value", "x"] {
+        assert!(t.get(key).is_some(), "trial frame missing {key}: {trial}");
+    }
+    let done = &events.iter().rev().find(|(e, _)| e == "done").unwrap().1;
+    assert_eq!(Value::parse(done).unwrap().get("status").unwrap().as_str(), Some("ok"));
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn resubmitted_spec_replays_byte_identical_from_the_memo() {
+    let handle = serve(1, 1, 4, false);
+    let addr = handle.addr().to_string();
+    let body = fig4_body();
+    let first = client::raw_request(&addr, "POST", "/run", Some(&body)).unwrap();
+    assert_eq!(metric(&addr, "memo_misses"), 1);
+    let second = client::raw_request(&addr, "POST", "/run", Some(&body)).unwrap();
+    let third = client::raw_request(&addr, "POST", "/run", Some(&body)).unwrap();
+    assert_eq!(first, second, "replay must be byte-identical to the live stream");
+    assert_eq!(second, third);
+    assert_eq!(metric(&addr, "memo_hits"), 2);
+    assert_eq!(metric(&addr, "runs_submitted"), 1, "one compute total");
+    // Semantically equal requests hash equal: compact JSON replays too.
+    let compact = RunRequest::from_str(&body).unwrap().to_json().compact();
+    let fourth = client::raw_request(&addr, "POST", "/run", Some(&compact)).unwrap();
+    assert_eq!(first, fourth);
+    assert_eq!(metric(&addr, "memo_hits"), 3);
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn concurrent_identical_submissions_share_one_compute() {
+    let handle = serve(2, 2, 8, false);
+    let addr = handle.addr().to_string();
+    let body = tiny_product_body(910_000);
+    let streams: Vec<Vec<u8>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let addr = addr.clone();
+                let body = body.clone();
+                scope.spawn(move || {
+                    client::raw_request(&addr, "POST", "/run", Some(&body)).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for s in &streams[1..] {
+        assert_eq!(&streams[0], s, "all subscribers see identical bytes");
+    }
+    assert_eq!(metric(&addr, "runs_submitted"), 1, "identical specs fold into one compute");
+    assert_eq!(metric(&addr, "memo_misses"), 1);
+    assert_eq!(metric(&addr, "memo_hits"), 3);
+    assert!(
+        String::from_utf8_lossy(&streams[0]).contains("event: done"),
+        "stream must complete"
+    );
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn full_queue_rejects_with_429_and_drains_after_release() {
+    // Paused workers make admission deterministic: nothing is popped
+    // until release_workers(), so the queue depth is exactly what we
+    // submitted.
+    let handle = serve(1, 1, 1, true);
+    let addr = handle.addr().to_string();
+    let first_body = tiny_product_body(920_000);
+    let waiter = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut done = false;
+            let (status, _) = client::post_sse(&addr, "/run", &first_body, |ev, _| {
+                done = done || ev == "done";
+            })
+            .unwrap();
+            (status, done)
+        })
+    };
+    wait_until("first job queued", || metric(&addr, "queue_depth") == 1);
+    // Queue full: a distinct spec bounces with 429 + Retry-After before
+    // any state is created.
+    let rejected =
+        client::raw_request(&addr, "POST", "/run", Some(&tiny_product_body(930_000))).unwrap();
+    let rejected = String::from_utf8(rejected).unwrap();
+    assert!(rejected.starts_with("HTTP/1.1 429 "), "{rejected}");
+    assert!(rejected.contains("Retry-After: 1"), "{rejected}");
+    assert_eq!(metric(&addr, "rejected"), 1);
+    assert_eq!(metric(&addr, "runs_submitted"), 1);
+    // Open the gate: the queued job runs to completion.
+    handle.release_workers();
+    let (status, done) = waiter.join().unwrap();
+    assert_eq!(status, 200);
+    assert!(done, "queued job must finish after release");
+    assert_eq!(metric(&addr, "queue_depth"), 0);
+    // And the slot freed: the previously rejected spec is now accepted.
+    let mut ok = false;
+    let (status, _) =
+        client::post_sse(&addr, "/run", &tiny_product_body(930_000), |ev, _| {
+            ok = ok || ev == "done";
+        })
+        .unwrap();
+    assert_eq!(status, 200);
+    assert!(ok);
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn shutdown_drains_queued_jobs_before_exit() {
+    let handle = serve(1, 1, 8, true);
+    let addr = handle.addr().to_string();
+    let submit = |seed: u64| {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut done = false;
+            let (status, _) = client::post_sse(&addr, "/run", &tiny_product_body(seed), |ev, _| {
+                done = done || ev == "done";
+            })
+            .unwrap();
+            (status, done)
+        })
+    };
+    let a = submit(940_000);
+    let b = submit(950_000);
+    wait_until("both jobs queued", || metric(&addr, "queue_depth") == 2);
+    let bye = client::request(&addr, "POST", "/shutdown", None).unwrap();
+    assert_eq!(bye.status, 200);
+    assert_eq!(bye.body_str(), "draining\n");
+    // Shutdown opens the pause gate itself: queued work drains, streams
+    // complete, join returns.
+    for waiter in [a, b] {
+        let (status, done) = waiter.join().unwrap();
+        assert_eq!(status, 200);
+        assert!(done, "queued job must complete during drain");
+    }
+    handle.join();
+}
+
+/// Write raw bytes on a fresh connection and return the full response.
+fn raw_exchange(addr: &str, bytes: &[u8]) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(bytes).unwrap();
+    let mut out = Vec::new();
+    stream.read_to_end(&mut out).unwrap();
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+#[test]
+fn hostile_bytes_get_4xx_and_the_server_stays_healthy() {
+    let handle = serve(1, 1, 2, false);
+    let addr = handle.addr().to_string();
+
+    // Malformed request line.
+    assert!(raw_exchange(&addr, b"NONSENSE\r\n\r\n").starts_with("HTTP/1.1 400 "));
+    // Oversized header block.
+    let mut big = b"GET /healthz HTTP/1.1\r\nX-Pad: ".to_vec();
+    big.extend(vec![b'a'; 20_000]);
+    big.extend_from_slice(b"\r\n\r\n");
+    assert!(raw_exchange(&addr, &big).starts_with("HTTP/1.1 431 "));
+    // Huge declared body, rejected before reading it.
+    assert!(raw_exchange(
+        &addr,
+        b"POST /run HTTP/1.1\r\nContent-Length: 999999999\r\n\r\n"
+    )
+    .starts_with("HTTP/1.1 413 "));
+    // Chunked bodies are out of scope, loudly.
+    assert!(raw_exchange(
+        &addr,
+        b"POST /run HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"
+    )
+    .starts_with("HTTP/1.1 501 "));
+    // Bad JSON and invalid specs are 400s from validation, not panics.
+    let bad = client::request(&addr, "POST", "/run", Some("this is not json")).unwrap();
+    assert_eq!(bad.status, 400);
+    let unknown = client::request(
+        &addr,
+        "POST",
+        "/run",
+        Some("{\"type\": \"figure\", \"name\": \"fig99\"}"),
+    )
+    .unwrap();
+    assert_eq!(unknown.status, 400);
+    assert!(unknown.body_str().contains("unknown figure"), "{}", unknown.body_str());
+    let zero_rounds =
+        client::request(&addr, "POST", "/run", Some("{\"type\": \"steal\", \"rounds\": 0}"))
+            .unwrap();
+    assert_eq!(zero_rounds.status, 400);
+    // A peer that connects and says nothing is tolerated.
+    drop(TcpStream::connect(&addr).unwrap());
+
+    // After all of that, the server still serves.
+    let ok = client::request(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(ok.status, 200);
+    assert_eq!(metric(&addr, "runs_submitted"), 0, "no hostile request reached the queue");
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn figures_endpoint_matches_the_registry() {
+    let handle = serve(1, 1, 2, false);
+    let addr = handle.addr().to_string();
+    let resp = client::request(&addr, "GET", "/figures", None).unwrap();
+    assert_eq!(resp.status, 200);
+    let v = Value::parse(resp.body_str().trim()).unwrap();
+    let entries = v.as_arr().unwrap();
+    assert_eq!(entries.len(), experiments::ALL_FIGURES.len());
+    for (e, &name) in entries.iter().zip(experiments::ALL_FIGURES) {
+        assert_eq!(e.get("name").unwrap().as_str(), Some(name));
+        assert!(!e.get("description").unwrap().as_str().unwrap().is_empty());
+        // Each carries a ready-to-POST request document.
+        let req = RunRequest::from_json(e.get("request").unwrap()).unwrap();
+        assert!(matches!(req, RunRequest::Figure { .. }));
+    }
+    // The CLI's `figure --list --json` emits the same document.
+    assert_eq!(
+        resp.body_str().trim(),
+        hemt::api::figure_registry_json().pretty()
+    );
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn metrics_report_the_session_pool() {
+    let handle = serve(1, 1, 4, false);
+    let addr = handle.addr().to_string();
+    let before = metrics(&addr);
+    for key in [
+        "jobs_running",
+        "memo_entries",
+        "memo_hits",
+        "memo_misses",
+        "queue_depth",
+        "rejected",
+        "requests",
+        "runs_submitted",
+        "session_cache_hits",
+        "session_cache_misses",
+        "session_pool",
+        "workers",
+    ] {
+        assert!(before.get(key).is_some(), "metrics missing {key}");
+    }
+    // A simulated run populates the process-wide session pool.
+    let mut done = false;
+    let (status, _) = client::post_sse(&addr, "/run", &tiny_product_body(960_000), |ev, _| {
+        done = done || ev == "done";
+    })
+    .unwrap();
+    assert_eq!(status, 200);
+    assert!(done);
+    assert!(metric(&addr, "session_pool") >= 1, "cluster session should be pooled");
+    handle.shutdown();
+    handle.join();
+}
