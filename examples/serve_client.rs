@@ -12,6 +12,7 @@
 //! ```text
 //! cargo run --release --example serve_client                  # tiny_tasks preset
 //! cargo run --release --example serve_client 127.0.0.1:7199 --metrics
+//! cargo run --release --example serve_client 127.0.0.1:7199 --metrics-text
 //! cargo run --release --example serve_client 127.0.0.1:7199 --shutdown
 //! ```
 //!
@@ -40,6 +41,19 @@ fn main() {
     }
     if args.iter().any(|a| a == "--metrics") {
         let resp = client::request(&addr, "GET", "/metrics", None).expect("server unreachable");
+        print!("{}", resp.body_str());
+        return;
+    }
+    if args.iter().any(|a| a == "--metrics-text") {
+        // Prometheus text exposition — same endpoint, negotiated via Accept.
+        let resp = client::request_with_headers(
+            &addr,
+            "GET",
+            "/metrics",
+            &[("Accept", "text/plain")],
+            None,
+        )
+        .expect("server unreachable");
         print!("{}", resp.body_str());
         return;
     }
@@ -77,6 +91,9 @@ fn main() {
             }
             "figure" => {
                 if let Some(fv) = v.get("output").and_then(|o| o.get("figure")) {
+                    // from_json is lossy on sample extremes (the wire
+                    // form has mean/std/n only, so min = max = mean);
+                    // to_table renders mean ± σ, which round-trips.
                     match Figure::from_json(fv) {
                         Ok(fig) => println!("\n{}", fig.to_table()),
                         Err(e) => eprintln!("bad figure frame: {e}"),

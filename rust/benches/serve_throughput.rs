@@ -71,6 +71,7 @@ fn main() {
         threads: 2,
         max_queue: 64,
         paused: false,
+        ..ServeConfig::default()
     })
     .expect("bind loopback");
     let addr = handle.addr().to_string();

@@ -1,0 +1,39 @@
+//! Recorder overhead bench: the headline static-container figure (fig9)
+//! run untraced on the serial runner vs the same run through
+//! [`hemt::api::execute_traced`] with the span recorder installed. The
+//! recorder's contract is bit-identical *output*; this bench tracks its
+//! wall-clock cost — every hook is a thread-local check plus (when
+//! installed) a vector push, so traced should stay within a few percent
+//! of untraced.
+//!
+//! Writes `BENCH_trace_overhead_untraced.json` and
+//! `BENCH_trace_overhead.json` for the CI trajectory gate.
+
+use hemt::api::{self, RunRequest};
+use hemt::bench_harness::time_and_report;
+use hemt::obs;
+
+fn main() {
+    let req = RunRequest::Figure { name: "fig9".into() };
+    println!("== trace_overhead: fig9 untraced vs span-recorded (serial) ==");
+    let untraced = time_and_report("trace_overhead_untraced", 1, 3, || {
+        std::hint::black_box(
+            api::execute_with(&req, &hemt::sweep::SweepRunner::serial(), |_| {}).unwrap(),
+        );
+    });
+    let mut events = 0usize;
+    let traced = time_and_report("trace_overhead", 1, 3, || {
+        let (result, rec) = api::execute_traced(&req, |_| {}).unwrap();
+        std::hint::black_box(result);
+        events = rec.events.len();
+        // Export cost rides along: the trace document is part of what
+        // `hemt trace` pays per invocation.
+        std::hint::black_box(obs::chrome_trace(&rec));
+    });
+    println!(
+        "trace_overhead_untraced: {} s\ntrace_overhead (traced): {} s  ({:+.1}% overhead, {events} events)",
+        untraced.pm(3),
+        traced.pm(3),
+        (traced.mean / untraced.mean - 1.0) * 100.0,
+    );
+}

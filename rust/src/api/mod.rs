@@ -337,6 +337,37 @@ pub fn execute(req: &RunRequest) -> Result<RunResult, String> {
     execute_with(req, &experiments::default_runner(), |_| {})
 }
 
+/// Run a request serially with a span recorder installed, returning the
+/// result together with the full recording ([`crate::obs::Recorder`]).
+///
+/// The runner is forced to one thread: the recorder is thread-local (a
+/// multi-threaded sweep would record only the units that happen to land
+/// on the calling thread), and on the serial path recording order *is*
+/// the deterministic sim-time order — which is what makes the exported
+/// Chrome trace and per-stage breakdown replayable artifacts rather
+/// than schedules of one lucky interleaving. Tracing is strictly
+/// passive: the figures produced here are bit-identical to an untraced
+/// single-threaded run (and hence to any thread count).
+pub fn execute_traced<F>(
+    req: &RunRequest,
+    on_event: F,
+) -> Result<(RunResult, crate::obs::Recorder), String>
+where
+    F: Fn(RunEvent<'_>) + Sync,
+{
+    let runner = SweepRunner::new(1);
+    crate::obs::install(crate::obs::Recorder::new());
+    let result = execute_with(req, &runner, |ev| {
+        if let RunEvent::Start { index, name, .. } = &ev {
+            let (i, n) = (*index, *name);
+            crate::obs::record(|r| r.begin_output(i, n));
+        }
+        on_event(ev);
+    });
+    let rec = crate::obs::take().unwrap_or_default();
+    result.map(|res| (res, rec))
+}
+
 /// Run a request on an explicit runner with a progress observer. The
 /// observer is called from sweep worker threads (hence `Sync`).
 pub fn execute_with<F>(

@@ -80,6 +80,17 @@ impl AdaptiveDriver {
         session: &mut Session,
         plan_of: impl FnOnce(PartitionPolicy) -> JobPlan,
     ) -> JobRecord {
+        let t = session.engine.now;
+        crate::obs::record(|r| {
+            let round = r
+                .events
+                .iter()
+                .filter(|e| {
+                    matches!(e, crate::obs::ObsEvent::OaRound { driver: "adaptive", .. })
+                })
+                .count();
+            r.push(crate::obs::ObsEvent::OaRound { t, driver: "adaptive", round });
+        });
         let plan = plan_of(self.policy(session));
         let rec = session.run_job(&plan);
         observe_map_stage(&mut self.estimator, &rec, session.executors.len());

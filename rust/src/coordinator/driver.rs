@@ -428,6 +428,8 @@ impl Session {
         rt.next += 1;
         let next_idx = rt.next;
         let next_at = rt.events.get(next_idx).map(|&(t, _, _)| t);
+        let t = self.engine.now;
+        crate::obs::record(|r| r.push(crate::obs::ObsEvent::Capacity { t, node, mult }));
         self.engine.set_node_capacity(node, mult);
         if let Some(t) = next_at {
             self.engine.set_timer(t, tag_of(KIND_CAPACITY, 0, next_idx));
@@ -480,6 +482,8 @@ impl Session {
         let next_idx = rt.next;
         let next_at = rt.events.get(next_idx).map(|&(t, _, _)| t);
         let capacity = rt.nominal[link] * mult;
+        let t = self.engine.now;
+        crate::obs::record(|r| r.push(crate::obs::ObsEvent::LinkCapacity { t, link, mult }));
         self.engine.set_link_capacity(link, capacity);
         if let Some(t) = next_at {
             self.engine.set_timer(t, tag_of(KIND_LINK_CAPACITY, 0, next_idx));
@@ -518,6 +522,8 @@ impl Session {
             pol.assert_valid();
             self.engine.set_capacity_tap(true);
         }
+        let profile_at_entry = self.engine.profile;
+        let net_stats_at_entry = self.engine.net.stats;
         let job_start = self.engine.now;
         let mut stages = Vec::new();
         // Per-executor output bytes of the previous stage (shuffle input).
@@ -537,6 +543,17 @@ impl Session {
         if steal.is_some() {
             self.engine.set_capacity_tap(false);
         }
+        // Feed the process-global self-profile (relaxed atomic adds — no
+        // effect on the run itself).
+        let engine_delta = self.engine.profile.delta_since(&profile_at_entry);
+        let net_delta = crate::netsim::SolveStats {
+            incremental_solves: self.engine.net.stats.incremental_solves
+                - net_stats_at_entry.incremental_solves,
+            full_solves: self.engine.net.stats.full_solves - net_stats_at_entry.full_solves,
+            flows_relevelled: self.engine.net.stats.flows_relevelled
+                - net_stats_at_entry.flows_relevelled,
+        };
+        crate::obs::global().absorb_job(&engine_delta, &net_delta, &stages);
         JobRecord { stages, start: job_start, end: self.engine.now }
     }
 
@@ -675,6 +692,10 @@ impl Session {
                     // remainder is now pure CPU, so it may have become a
                     // steal victim.
                     steal_check = true;
+                    if crate::obs::active() {
+                        let t = self.engine.now;
+                        crate::obs::record(|r| r.note_input_done(i, t));
+                    }
                     if Self::complete_part(&mut st[i], att, self.engine.now) {
                         completed = Some(i);
                     }
@@ -776,6 +797,31 @@ impl Session {
         // A speculation-check timer may still be pending; the next stage's
         // event loop (or session teardown) consumes it as a no-op, so the
         // clock is not advanced here.
+
+        if crate::obs::active() {
+            let slots: usize = self.executors.iter().map(|e| e.slots).sum();
+            let end = self.engine.now;
+            crate::obs::record(|r| {
+                let tasks = st
+                    .iter()
+                    .enumerate()
+                    .map(|(i, t)| crate::obs::TaskObs {
+                        task: i,
+                        executor: t.executor,
+                        bytes: t.bytes,
+                        dispatched: t.dispatched,
+                        started: t.started,
+                        input_done: r.input_done_of(i),
+                        finished: t.finished,
+                        // Tasks past the planned count were appended by
+                        // mid-stage steals (CPU carves and stream
+                        // re-issues alike).
+                        stolen: i >= n,
+                    })
+                    .collect();
+                r.end_stage(crate::obs::StageObs { start: stage_start, end, slots, tasks });
+            });
+        }
 
         StageRecord {
             tasks: st
@@ -1145,6 +1191,19 @@ impl Session {
                                 started: 0.0,
                                 finished: 0.0,
                             });
+                            crate::obs::global().note_steal();
+                            let t = self.engine.now;
+                            let task = st.len() - 1;
+                            crate::obs::record(|r| {
+                                r.push(crate::obs::ObsEvent::Steal {
+                                    t,
+                                    victim: vi,
+                                    task,
+                                    thief_exec: thief,
+                                    work: carved,
+                                    stream: false,
+                                })
+                            });
                         }
                         VictimInfo::Stream {
                             fid,
@@ -1293,6 +1352,19 @@ impl Session {
                                 dispatched: 0.0,
                                 started: 0.0,
                                 finished: 0.0,
+                            });
+                            crate::obs::global().note_steal();
+                            let t = self.engine.now;
+                            let task = st.len() - 1;
+                            crate::obs::record(|r| {
+                                r.push(crate::obs::ObsEvent::Steal {
+                                    t,
+                                    victim: vi,
+                                    task,
+                                    thief_exec: thief,
+                                    work: w_stolen,
+                                    stream: true,
+                                })
                             });
                         }
                     }

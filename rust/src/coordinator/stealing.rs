@@ -318,6 +318,17 @@ impl StealingDriver {
         session: &mut Session,
         plan_of: impl FnOnce(PartitionPolicy) -> JobPlan,
     ) -> JobRecord {
+        let t = session.engine.now;
+        crate::obs::record(|r| {
+            let round = r
+                .events
+                .iter()
+                .filter(|e| {
+                    matches!(e, crate::obs::ObsEvent::OaRound { driver: "stealing", .. })
+                })
+                .count();
+            r.push(crate::obs::ObsEvent::OaRound { t, driver: "stealing", round });
+        });
         let plan = plan_of(self.policy_for(session));
         let rec = session.run_job_stealing(&plan, Some(&self.policy));
         crate::coordinator::adaptive::observe_map_stage(

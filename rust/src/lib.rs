@@ -47,6 +47,7 @@ pub mod hdfs;
 pub mod metrics;
 pub mod netsim;
 pub mod nodes;
+pub mod obs;
 pub mod partition;
 pub mod runtime;
 pub mod serve;

@@ -69,11 +69,22 @@ fn usage() -> &'static str {
   hemt request <file.json> [--json] [--threads N]
                                     run a serialized RunRequest (the same JSON
                                     document `hemt serve` accepts on POST /run)
+  hemt trace <file.json> [--out trace.json]
+                                    run a serialized RunRequest serially with the
+                                    span recorder on: writes Chrome trace-event
+                                    JSON (load in Perfetto / chrome://tracing)
+                                    and prints the per-stage compute/overhead/idle
+                                    breakdown per policy arm. Figures are
+                                    bit-identical to the untraced run
   hemt serve [--addr H:P] [--workers N] [--queue N] [--threads N]
+             [--memo-entries N] [--memo-bytes N]
                                     persistent sweep service: POST /run streams
-                                    per-trial results over SSE; results are
-                                    memoized by spec hash and sessions pooled per
-                                    cluster. GET /figures, GET /metrics,
+                                    per-trial results over SSE (?trace=1 adds
+                                    span frames); results are memoized by spec
+                                    hash (bounded LRU: --memo-entries /
+                                    --memo-bytes) and sessions pooled per
+                                    cluster. GET /figures, GET /metrics (JSON,
+                                    or Prometheus text via Accept: text/plain),
                                     GET /healthz, POST /shutdown
   hemt bench-diff --baseline <dir> --new <dir> [--threshold F] [--update]
                                     diff BENCH_*.json medians against a committed
@@ -117,6 +128,7 @@ fn main() -> ExitCode {
         Some("dynamics") => cmd_dynamics(&args[1..]),
         Some("steal") => cmd_steal(&args[1..]),
         Some("request") => cmd_request(&args[1..]),
+        Some("trace") => cmd_trace(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("bench-diff") => cmd_bench_diff(&args[1..]),
         Some("analysis") => cmd_analysis(),
@@ -153,6 +165,7 @@ fn positional(args: &[String]) -> Option<&String> {
             || a == "--addr"
             || a == "--workers"
             || a == "--queue"
+            || a == "--out"
         {
             skip_next = true;
             continue;
@@ -307,6 +320,33 @@ fn cmd_request(args: &[String]) -> Result<(), String> {
     run_request(&req, args)
 }
 
+/// `hemt trace`: run a serialized [`RunRequest`] with the span recorder
+/// installed ([`hemt::obs`]) — serial execution, figures bit-identical
+/// to the untraced run. Writes Chrome trace-event JSON to `--out`
+/// (default `trace.json`; load in Perfetto or chrome://tracing) and
+/// prints the per-stage compute/overhead/idle breakdown to stdout.
+fn cmd_trace(args: &[String]) -> Result<(), String> {
+    let path = positional(args).ok_or("request file required (a RunRequest JSON document)")?;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    let req = RunRequest::from_str(&text)?;
+    let out_path = flag_value(args, "--out")?
+        .map(String::as_str)
+        .unwrap_or("trace.json");
+    let (_result, rec) = api::execute_traced(&req, |ev| {
+        if let RunEvent::Start { banner, .. } = ev {
+            if !banner.is_empty() {
+                eprintln!("{banner}");
+            }
+        }
+    })?;
+    let trace = hemt::obs::chrome_trace(&rec);
+    std::fs::write(out_path, trace.pretty())
+        .map_err(|e| format!("writing {out_path}: {e}"))?;
+    print!("{}", hemt::obs::breakdown(&rec));
+    eprintln!("wrote {out_path}");
+    Ok(())
+}
+
 /// `hemt serve`: the persistent sweep service ([`hemt::serve`]).
 fn cmd_serve(args: &[String]) -> Result<(), String> {
     let mut cfg = hemt::serve::ServeConfig::default();
@@ -328,6 +368,13 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
     if let Some(t) = flag_value(args, "--threads")? {
         // 0 = environment default, matching ServeConfig semantics.
         cfg.threads = t.parse().map_err(|e| format!("bad --threads: {e}"))?;
+    }
+    if let Some(n) = flag_value(args, "--memo-entries")? {
+        // 0 is allowed: completed runs are evicted immediately (memo off).
+        cfg.memo_entries = n.parse().map_err(|e| format!("bad --memo-entries: {e}"))?;
+    }
+    if let Some(b) = flag_value(args, "--memo-bytes")? {
+        cfg.memo_bytes = b.parse().map_err(|e| format!("bad --memo-bytes: {e}"))?;
     }
     let addr = cfg.addr.clone();
     let workers = cfg.workers;

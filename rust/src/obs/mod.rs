@@ -1,0 +1,885 @@
+//! Run telemetry: span tracing, simulator self-profiling, and export.
+//!
+//! The paper's argument is an *overhead* argument — HeMT wins exactly
+//! where HomT's scheduling and I/O overheads dominate — so this module
+//! makes where-time-goes observable end to end:
+//!
+//! * **Span recording.** A [`Recorder`], installed per thread via
+//!   [`install`], passively collects per-task spans (dispatched →
+//!   input-read → compute → finished, with executor attribution) and
+//!   instant events (steal decisions, capacity/link dynamics events,
+//!   netsim re-solves, OA re-partition rounds) as the drivers run. The
+//!   recorder is strictly passive: hooks fire through [`record`], which
+//!   is a no-op unless a recorder is installed on the *current* thread,
+//!   and no hook draws from any RNG or mutates simulation state — every
+//!   golden is bit-identical with tracing on or off.
+//! * **Export.** [`chrome_trace`] renders a recording as Chrome
+//!   trace-event JSON (load in Perfetto / `chrome://tracing`);
+//!   [`breakdown`] prints the paper's Fig-2-style per-stage
+//!   decomposition (compute / overhead / idle fractions per policy
+//!   arm). Both are driven by `hemt trace <request.json> --out t.json`.
+//! * **Self-profiling.** Always-on process-global counters and
+//!   hand-rolled log-bucket histograms ([`LogHist`]) aggregate engine
+//!   heap traffic, per-node re-levellings, incremental-vs-full netsim
+//!   solves and task/stage timings across every run in the process —
+//!   surfaced by `GET /metrics` in Prometheus text exposition format
+//!   (see [`prometheus_text`]).
+//!
+//! Because recording is keyed on a thread-local, a multi-threaded sweep
+//! records only the units that execute on the installing thread; trace
+//! export therefore runs on a serial runner
+//! ([`crate::api::execute_traced`]), where the recording order *is* the
+//! deterministic sim-time order.
+
+use crate::util::json::{self, Value};
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+// ------------------------------------------------------------- recorder
+
+/// One observed task of a stage: the driver's recorded lifecycle
+/// timestamps plus the input-drain instant the stage loop noted.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskObs {
+    pub task: usize,
+    pub executor: usize,
+    pub bytes: u64,
+    pub dispatched: f64,
+    pub started: f64,
+    /// When the task's input stream drained (`None`: no network input —
+    /// cached stages and CPU-carve stolen tasks). In the fluid model
+    /// compute overlaps the read; `finished - input_done` is the
+    /// pure-CPU tail (exactly the stealing driver's victim criterion).
+    pub input_done: Option<f64>,
+    pub finished: f64,
+    /// Appended mid-stage by a steal (CPU carve or stream re-issue).
+    pub stolen: bool,
+}
+
+/// One completed stage: boundary times, the executor slot count, and
+/// every task observed in it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageObs {
+    pub start: f64,
+    pub end: f64,
+    /// Total executor slots (the idle-time denominator).
+    pub slots: usize,
+    pub tasks: Vec<TaskObs>,
+}
+
+impl StageObs {
+    /// The Fig-2 decomposition in seconds: `(overhead, busy, idle)`
+    /// against `slots x (end - start)` slot-seconds. Overhead is
+    /// dispatch→launch (scheduler serialization + launch latency + I/O
+    /// setup), busy is launch→finish, idle is the remainder (clamped:
+    /// a speculative duplicate holds a second slot the task records
+    /// don't itemize).
+    pub fn decompose(&self) -> (f64, f64, f64) {
+        let total = self.slots as f64 * (self.end - self.start);
+        let overhead: f64 = self.tasks.iter().map(|t| (t.started - t.dispatched).max(0.0)).sum();
+        let busy: f64 = self.tasks.iter().map(|t| (t.finished - t.started).max(0.0)).sum();
+        (overhead, busy, (total - overhead - busy).max(0.0))
+    }
+
+    pub fn completion_time(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+/// Everything a [`Recorder`] collects, in recording order (deterministic
+/// sim-time order on a serial runner).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ObsEvent {
+    /// A new output (figure / comparison) began — from the trace entry
+    /// point, not the sim.
+    Output { index: usize, name: String },
+    /// A sweep work unit began on this thread.
+    Unit { index: usize, label: String },
+    /// A stage completed.
+    Stage(StageObs),
+    /// A successful steal: `task` is the carved task appended to the
+    /// stage, `victim` the task it was carved from.
+    Steal { t: f64, victim: usize, task: usize, thief_exec: usize, work: f64, stream: bool },
+    /// A node capacity-dynamics event applied mid-run.
+    Capacity { t: f64, node: usize, mult: f64 },
+    /// A link capacity-dynamics event applied mid-run.
+    LinkCapacity { t: f64, link: usize, mult: f64 },
+    /// The network engine re-solved rates (incremental or full).
+    NetSolve { t: f64, incremental: bool, flows: u64 },
+    /// A closed-loop driver re-partitioned between rounds.
+    OaRound { t: f64, driver: &'static str, round: usize },
+}
+
+/// A passive span/event recorder. Install with [`install`], feed through
+/// [`record`], retrieve with [`take`].
+#[derive(Debug, Default)]
+pub struct Recorder {
+    pub events: Vec<ObsEvent>,
+    /// Per-stage scratch: first-attempt input-drain instants by task
+    /// index, consumed when the stage closes.
+    input_done: HashMap<usize, f64>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    pub fn begin_output(&mut self, index: usize, name: &str) {
+        self.events.push(ObsEvent::Output { index, name: name.to_string() });
+    }
+
+    pub fn begin_unit(&mut self, index: usize) {
+        self.events.push(ObsEvent::Unit { index, label: String::new() });
+    }
+
+    /// Attach the label (policy arm / cell name) to the most recent
+    /// unit marker — known only once the unit's samples exist.
+    pub fn label_unit(&mut self, label: &str) {
+        if let Some(ObsEvent::Unit { label: l, .. }) =
+            self.events.iter_mut().rev().find(|e| matches!(e, ObsEvent::Unit { .. }))
+        {
+            if l.is_empty() {
+                *l = label.to_string();
+            }
+        }
+    }
+
+    /// The stage loop noted task `i`'s (first-attempt) input stream
+    /// draining at `t`.
+    pub fn note_input_done(&mut self, task: usize, t: f64) {
+        self.input_done.entry(task).or_insert(t);
+    }
+
+    pub fn input_done_of(&self, task: usize) -> Option<f64> {
+        self.input_done.get(&task).copied()
+    }
+
+    /// Close a stage: record it and clear the per-stage scratch.
+    pub fn end_stage(&mut self, stage: StageObs) {
+        self.input_done.clear();
+        self.events.push(ObsEvent::Stage(stage));
+    }
+
+    pub fn push(&mut self, ev: ObsEvent) {
+        self.events.push(ev);
+    }
+
+    /// Drain the events collected so far (streaming export — the serve
+    /// layer's per-unit `span` SSE frames).
+    pub fn drain_events(&mut self) -> Vec<ObsEvent> {
+        self.input_done.clear();
+        std::mem::take(&mut self.events)
+    }
+
+    pub fn stages(&self) -> impl Iterator<Item = &StageObs> {
+        self.events.iter().filter_map(|e| match e {
+            ObsEvent::Stage(s) => Some(s),
+            _ => None,
+        })
+    }
+}
+
+thread_local! {
+    static OBS_ACTIVE: Cell<bool> = const { Cell::new(false) };
+    static OBS_RECORDER: RefCell<Option<Recorder>> = const { RefCell::new(None) };
+}
+
+/// Install a recorder on the current thread (replacing any previous
+/// one). Hooks on this thread start collecting; other threads are
+/// untouched.
+pub fn install(r: Recorder) {
+    OBS_RECORDER.with(|c| *c.borrow_mut() = Some(r));
+    OBS_ACTIVE.with(|a| a.set(true));
+}
+
+/// Remove and return the current thread's recorder (hooks go back to
+/// no-ops).
+pub fn take() -> Option<Recorder> {
+    OBS_ACTIVE.with(|a| a.set(false));
+    OBS_RECORDER.with(|c| c.borrow_mut().take())
+}
+
+/// Whether a recorder is installed on this thread. One thread-local
+/// `Cell` read — the hot-path guard the engine uses per step.
+#[inline]
+pub fn active() -> bool {
+    OBS_ACTIVE.with(|a| a.get())
+}
+
+/// Run `f` against the installed recorder, if any. The closure must be
+/// passive: read simulation state, never mutate it, never touch an RNG.
+#[inline]
+pub fn record<F: FnOnce(&mut Recorder)>(f: F) {
+    if !active() {
+        return;
+    }
+    OBS_RECORDER.with(|c| {
+        if let Some(r) = c.borrow_mut().as_mut() {
+            f(r);
+        }
+    });
+}
+
+// ------------------------------------------------- log-bucket histogram
+
+/// Number of power-of-two buckets (covers 1 µs .. ~36 000 s and change).
+pub const HIST_BUCKETS: usize = 48;
+
+/// A hand-rolled log-bucket histogram over non-negative durations in
+/// seconds. Bucket `i` counts observations with `value <= 2^i µs`
+/// (bucket 0: `<= 1 µs`); the last bucket absorbs the tail. No floats
+/// are stored beyond the running sum, no allocation after construction.
+#[derive(Debug, Clone)]
+pub struct LogHist {
+    pub counts: [u64; HIST_BUCKETS],
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl Default for LogHist {
+    fn default() -> LogHist {
+        LogHist { counts: [0; HIST_BUCKETS], count: 0, sum: 0.0 }
+    }
+}
+
+impl LogHist {
+    pub fn new() -> LogHist {
+        LogHist::default()
+    }
+
+    pub fn observe(&mut self, seconds: f64) {
+        let v = seconds.max(0.0);
+        let micros = (v * 1e6).ceil() as u64;
+        // ceil(log2(micros)) without floats; micros <= 1 lands in 0.
+        let bucket = if micros <= 1 {
+            0
+        } else {
+            (64 - (micros - 1).leading_zeros() as usize).min(HIST_BUCKETS - 1)
+        };
+        self.counts[bucket] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    /// Upper bound of bucket `i`, in seconds.
+    pub fn bound(i: usize) -> f64 {
+        (1u64 << i) as f64 * 1e-6
+    }
+
+    /// Append this histogram in Prometheus text exposition format
+    /// (cumulative `_bucket{le=...}` lines plus `_sum` / `_count`).
+    fn prometheus_into(&self, out: &mut String, name: &str) {
+        out.push_str(&format!("# TYPE {name} histogram\n"));
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            // The last bucket is the +Inf catch-all.
+            if i == HIST_BUCKETS - 1 {
+                out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+            } else {
+                out.push_str(&format!(
+                    "{name}_bucket{{le=\"{}\"}} {cum}\n",
+                    fmt_f64(Self::bound(i))
+                ));
+            }
+        }
+        out.push_str(&format!("{name}_sum {}\n", fmt_f64(self.sum)));
+        out.push_str(&format!("{name}_count {}\n", self.count));
+    }
+}
+
+fn fmt_f64(x: f64) -> String {
+    if x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+// ------------------------------------------- process-global self-profile
+
+/// Always-on process-global counters, fed by the sim engine and drivers
+/// regardless of whether a recorder is installed (plain relaxed atomic
+/// adds — nothing here can perturb a run). `GET /metrics` surfaces them.
+#[derive(Debug, Default)]
+pub struct GlobalStats {
+    /// Jobs driven to completion ([`crate::coordinator::driver`]).
+    pub jobs_run: AtomicU64,
+    pub stages_run: AtomicU64,
+    pub tasks_finished: AtomicU64,
+    pub steals: AtomicU64,
+    /// Engine self-profile deltas absorbed at job end.
+    pub engine_steps: AtomicU64,
+    pub engine_heap_pushes: AtomicU64,
+    pub engine_heap_pops: AtomicU64,
+    pub engine_heap_compactions: AtomicU64,
+    pub engine_node_relevels: AtomicU64,
+    pub engine_timers_set: AtomicU64,
+    pub netsim_incremental_solves: AtomicU64,
+    pub netsim_full_solves: AtomicU64,
+    pub netsim_flows_relevelled: AtomicU64,
+    /// Real-execution bridge ([`crate::runtime`]).
+    pub runtime_executes: AtomicU64,
+    hists: Mutex<GlobalHists>,
+}
+
+#[derive(Debug, Default)]
+struct GlobalHists {
+    /// Per-task launch→finish duration (sim seconds).
+    task_duration: LogHist,
+    /// Per-task dispatch→launch overhead (sim seconds).
+    task_overhead: LogHist,
+    /// Per-stage completion time (sim seconds).
+    stage_completion: LogHist,
+    /// PJRT artifact execution wall time (real seconds).
+    runtime_execute_wall: LogHist,
+}
+
+impl GlobalStats {
+    /// Absorb one finished job: engine/netsim profile deltas plus
+    /// per-task and per-stage timing observations.
+    pub fn absorb_job(
+        &self,
+        engine_delta: &crate::sim::EngineProfile,
+        net_delta: &crate::netsim::SolveStats,
+        stages: &[crate::metrics::StageRecord],
+    ) {
+        let add = |c: &AtomicU64, v: u64| {
+            c.fetch_add(v, Ordering::Relaxed);
+        };
+        add(&self.jobs_run, 1);
+        add(&self.stages_run, stages.len() as u64);
+        add(
+            &self.tasks_finished,
+            stages.iter().map(|s| s.tasks.len() as u64).sum(),
+        );
+        add(&self.engine_steps, engine_delta.steps);
+        add(&self.engine_heap_pushes, engine_delta.heap_pushes);
+        add(&self.engine_heap_pops, engine_delta.heap_pops);
+        add(&self.engine_heap_compactions, engine_delta.heap_compactions);
+        add(&self.engine_node_relevels, engine_delta.node_relevels);
+        add(&self.engine_timers_set, engine_delta.timers_set);
+        add(&self.netsim_incremental_solves, net_delta.incremental_solves);
+        add(&self.netsim_full_solves, net_delta.full_solves);
+        add(&self.netsim_flows_relevelled, net_delta.flows_relevelled);
+        let mut h = self.hists.lock().unwrap();
+        for st in stages {
+            h.stage_completion.observe(st.completion_time());
+            for t in &st.tasks {
+                h.task_duration.observe((t.finished - t.started).max(0.0));
+                h.task_overhead.observe((t.started - t.dispatched).max(0.0));
+            }
+        }
+    }
+
+    pub fn note_steal(&self) {
+        self.steals.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_runtime_execute(&self, wall_seconds: f64) {
+        self.runtime_executes.fetch_add(1, Ordering::Relaxed);
+        self.hists.lock().unwrap().runtime_execute_wall.observe(wall_seconds);
+    }
+}
+
+/// The process-global self-profile.
+pub fn global() -> &'static GlobalStats {
+    static GLOBAL: OnceLock<GlobalStats> = OnceLock::new();
+    GLOBAL.get_or_init(GlobalStats::default)
+}
+
+/// Render the global self-profile plus caller-supplied gauges/counters
+/// (the serve layer's request/memo/queue numbers) in Prometheus text
+/// exposition format. Counter names get the `hemt_` prefix here; pass
+/// bare names in `extra`.
+pub fn prometheus_text(extra: &[(&str, u64)]) -> String {
+    let g = global();
+    let mut out = String::new();
+    let mut counter = |name: &str, v: u64| {
+        out.push_str(&format!("# TYPE hemt_{name} counter\nhemt_{name} {v}\n"));
+    };
+    for (name, v) in extra {
+        counter(name, *v);
+    }
+    let load = |c: &AtomicU64| c.load(Ordering::Relaxed);
+    counter("jobs_run_total", load(&g.jobs_run));
+    counter("stages_run_total", load(&g.stages_run));
+    counter("tasks_finished_total", load(&g.tasks_finished));
+    counter("steals_total", load(&g.steals));
+    counter("engine_steps_total", load(&g.engine_steps));
+    counter("engine_heap_pushes_total", load(&g.engine_heap_pushes));
+    counter("engine_heap_pops_total", load(&g.engine_heap_pops));
+    counter("engine_heap_compactions_total", load(&g.engine_heap_compactions));
+    counter("engine_node_relevels_total", load(&g.engine_node_relevels));
+    counter("engine_timers_set_total", load(&g.engine_timers_set));
+    counter("netsim_incremental_solves_total", load(&g.netsim_incremental_solves));
+    counter("netsim_full_solves_total", load(&g.netsim_full_solves));
+    counter("netsim_flows_relevelled_total", load(&g.netsim_flows_relevelled));
+    counter("runtime_executes_total", load(&g.runtime_executes));
+    let h = g.hists.lock().unwrap();
+    h.task_duration.prometheus_into(&mut out, "hemt_task_duration_seconds");
+    h.task_overhead.prometheus_into(&mut out, "hemt_task_overhead_seconds");
+    h.stage_completion.prometheus_into(&mut out, "hemt_stage_completion_seconds");
+    h.runtime_execute_wall.prometheus_into(&mut out, "hemt_runtime_execute_wall_seconds");
+    out
+}
+
+// --------------------------------------------------- chrome trace export
+
+const US: f64 = 1e6;
+
+fn x_event(pid: usize, tid: usize, name: &str, cat: &str, ts: f64, dur: f64, args: Value) -> Value {
+    json::obj(vec![
+        ("args", args),
+        ("cat", json::s(cat)),
+        ("dur", json::num((dur * US).max(0.0))),
+        ("name", json::s(name)),
+        ("ph", json::s("X")),
+        ("pid", json::num(pid as f64)),
+        ("tid", json::num(tid as f64)),
+        ("ts", json::num(ts * US)),
+    ])
+}
+
+fn i_event(pid: usize, tid: usize, name: &str, cat: &str, ts: f64, args: Value) -> Value {
+    json::obj(vec![
+        ("args", args),
+        ("cat", json::s(cat)),
+        ("name", json::s(name)),
+        ("ph", json::s("i")),
+        ("pid", json::num(pid as f64)),
+        ("s", json::s("t")),
+        ("tid", json::num(tid as f64)),
+        ("ts", json::num(ts * US)),
+    ])
+}
+
+fn meta_event(pid: usize, tid: Option<usize>, which: &str, name: &str) -> Value {
+    let mut pairs = vec![
+        ("args", json::obj(vec![("name", json::s(name))])),
+        ("name", json::s(which)),
+        ("ph", json::s("M")),
+        ("pid", json::num(pid as f64)),
+    ];
+    if let Some(t) = tid {
+        pairs.push(("tid", json::num(t as f64)));
+    }
+    json::obj(pairs)
+}
+
+/// Executors live on tids 1..; tid 0 is the driver lane (stage spans and
+/// instant events).
+const DRIVER_TID: usize = 0;
+
+/// Render a flat event slice as Chrome trace events under one pid. Used
+/// directly for the serve layer's per-unit `span` frames; the full-file
+/// export ([`chrome_trace`]) adds pid assignment and metadata.
+pub fn chrome_events(events: &[ObsEvent], pid: usize) -> Vec<Value> {
+    let mut out = Vec::new();
+    let mut stage_no = 0usize;
+    for ev in events {
+        match ev {
+            ObsEvent::Output { .. } | ObsEvent::Unit { .. } => {}
+            ObsEvent::Stage(s) => {
+                out.push(x_event(
+                    pid,
+                    DRIVER_TID,
+                    &format!("stage {stage_no}"),
+                    "stage",
+                    s.start,
+                    s.end - s.start,
+                    json::obj(vec![
+                        ("slots", json::num(s.slots as f64)),
+                        ("tasks", json::num(s.tasks.len() as f64)),
+                    ]),
+                ));
+                stage_no += 1;
+                for t in &s.tasks {
+                    let tid = t.executor + 1;
+                    let args = json::obj(vec![
+                        ("bytes", json::num(t.bytes as f64)),
+                        ("executor", json::num(t.executor as f64)),
+                        ("stolen", json::num(if t.stolen { 1.0 } else { 0.0 })),
+                    ]);
+                    out.push(x_event(
+                        pid,
+                        tid,
+                        &format!("task {}", t.task),
+                        "task",
+                        t.dispatched,
+                        t.finished - t.dispatched,
+                        args,
+                    ));
+                    if t.started > t.dispatched {
+                        out.push(x_event(
+                            pid,
+                            tid,
+                            "overhead",
+                            "phase",
+                            t.dispatched,
+                            t.started - t.dispatched,
+                            json::obj(vec![]),
+                        ));
+                    }
+                    // In the fluid model compute overlaps the input
+                    // read; the trace shows "input" up to the stream
+                    // drain and "compute" as the pure-CPU tail, which
+                    // together tile launch→finish.
+                    let compute_from = match t.input_done {
+                        Some(d) if d > t.started => {
+                            out.push(x_event(
+                                pid,
+                                tid,
+                                "input",
+                                "phase",
+                                t.started,
+                                (d - t.started).min(t.finished - t.started),
+                                json::obj(vec![]),
+                            ));
+                            d.min(t.finished)
+                        }
+                        _ => t.started,
+                    };
+                    if t.finished > compute_from {
+                        out.push(x_event(
+                            pid,
+                            tid,
+                            "compute",
+                            "phase",
+                            compute_from,
+                            t.finished - compute_from,
+                            json::obj(vec![]),
+                        ));
+                    }
+                }
+            }
+            ObsEvent::Steal { t, victim, task, thief_exec, work, stream } => {
+                out.push(i_event(
+                    pid,
+                    thief_exec + 1,
+                    "steal",
+                    "steal",
+                    *t,
+                    json::obj(vec![
+                        ("stream", json::num(if *stream { 1.0 } else { 0.0 })),
+                        ("task", json::num(*task as f64)),
+                        ("victim", json::num(*victim as f64)),
+                        ("work", json::num(*work)),
+                    ]),
+                ));
+            }
+            ObsEvent::Capacity { t, node, mult } => {
+                out.push(i_event(
+                    pid,
+                    DRIVER_TID,
+                    "capacity",
+                    "dynamics",
+                    *t,
+                    json::obj(vec![
+                        ("mult", json::num(*mult)),
+                        ("node", json::num(*node as f64)),
+                    ]),
+                ));
+            }
+            ObsEvent::LinkCapacity { t, link, mult } => {
+                out.push(i_event(
+                    pid,
+                    DRIVER_TID,
+                    "link_capacity",
+                    "dynamics",
+                    *t,
+                    json::obj(vec![
+                        ("link", json::num(*link as f64)),
+                        ("mult", json::num(*mult)),
+                    ]),
+                ));
+            }
+            ObsEvent::NetSolve { t, incremental, flows } => {
+                out.push(i_event(
+                    pid,
+                    DRIVER_TID,
+                    "net_solve",
+                    "netsim",
+                    *t,
+                    json::obj(vec![
+                        ("flows", json::num(*flows as f64)),
+                        ("incremental", json::num(if *incremental { 1.0 } else { 0.0 })),
+                    ]),
+                ));
+            }
+            ObsEvent::OaRound { t, driver, round } => {
+                out.push(i_event(
+                    pid,
+                    DRIVER_TID,
+                    "oa_round",
+                    "driver",
+                    *t,
+                    json::obj(vec![
+                        ("driver", json::s(driver)),
+                        ("round", json::num(*round as f64)),
+                    ]),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Emit one slice (the events of one sweep unit) under its own pid:
+/// metadata events naming the process/threads, then the rendered slice.
+/// Empty slices are dropped without consuming a pid.
+fn emit_slice(events: &mut Vec<Value>, pid: &mut usize, name: &str, slice: &mut Vec<ObsEvent>) {
+    if slice.is_empty() {
+        return;
+    }
+    let mut execs: Vec<usize> = slice
+        .iter()
+        .filter_map(|e| match e {
+            ObsEvent::Stage(s) => Some(s.tasks.iter().map(|t| t.executor)),
+            _ => None,
+        })
+        .flatten()
+        .collect();
+    execs.sort_unstable();
+    execs.dedup();
+    events.push(meta_event(*pid, None, "process_name", name));
+    events.push(meta_event(*pid, Some(DRIVER_TID), "thread_name", "driver"));
+    for &e in &execs {
+        events.push(meta_event(*pid, Some(e + 1), "thread_name", &format!("exec {e}")));
+    }
+    events.extend(chrome_events(slice, *pid));
+    slice.clear();
+    *pid += 1;
+}
+
+fn slice_name(out_name: &str, unit_label: &Option<String>) -> String {
+    let unit = unit_label.as_deref().unwrap_or("run");
+    if out_name.is_empty() {
+        unit.to_string()
+    } else {
+        format!("{out_name} / {unit}")
+    }
+}
+
+/// Render a full recording as a Chrome trace-event JSON document
+/// (`{"displayTimeUnit": "ms", "traceEvents": [...]}`). Sim time maps to
+/// microseconds 1:1. Each sweep unit becomes its own pid (trials replay
+/// overlapping sim-time ranges, so they must not share a timeline);
+/// process names carry the output name and unit label, thread names the
+/// executor index.
+pub fn chrome_trace(rec: &Recorder) -> Value {
+    let mut events: Vec<Value> = Vec::new();
+    let mut pid = 0usize;
+    let mut out_name = String::new();
+    let mut unit_label: Option<String> = None;
+    let mut slice: Vec<ObsEvent> = Vec::new();
+    for ev in &rec.events {
+        match ev {
+            ObsEvent::Output { name, .. } => {
+                emit_slice(&mut events, &mut pid, &slice_name(&out_name, &unit_label), &mut slice);
+                out_name = name.clone();
+                unit_label = None;
+            }
+            ObsEvent::Unit { index, label } => {
+                emit_slice(&mut events, &mut pid, &slice_name(&out_name, &unit_label), &mut slice);
+                unit_label = Some(if label.is_empty() {
+                    format!("unit {index}")
+                } else {
+                    format!("unit {index}: {label}")
+                });
+            }
+            other => slice.push(other.clone()),
+        }
+    }
+    emit_slice(&mut events, &mut pid, &slice_name(&out_name, &unit_label), &mut slice);
+    json::obj(vec![
+        ("displayTimeUnit", json::s("ms")),
+        ("traceEvents", Value::Arr(events)),
+    ])
+}
+
+// --------------------------------------------------- per-stage breakdown
+
+/// The paper's Fig-2-style text decomposition: one row per recorded
+/// stage, grouped by unit (policy arm), with compute / overhead / idle
+/// fractions of total slot-seconds plus steal counts.
+pub fn breakdown(rec: &Recorder) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<44} {:>9} {:>8} {:>8} {:>8} {:>6} {:>6}\n",
+        "unit / stage", "compl (s)", "compute", "ovhd", "idle", "tasks", "steals"
+    ));
+    let mut unit = String::from("run");
+    let mut stage_no = 0usize;
+    let mut steals_in_stage = 0usize;
+    for ev in &rec.events {
+        match ev {
+            ObsEvent::Output { name, .. } => {
+                unit = name.clone();
+                stage_no = 0;
+            }
+            ObsEvent::Unit { index, label } => {
+                unit = if label.is_empty() {
+                    format!("unit {index}")
+                } else {
+                    format!("unit {index}: {label}")
+                };
+                stage_no = 0;
+            }
+            ObsEvent::Steal { .. } => steals_in_stage += 1,
+            ObsEvent::Stage(s) => {
+                let (overhead, busy, idle) = s.decompose();
+                let total = (s.slots as f64 * s.completion_time()).max(f64::MIN_POSITIVE);
+                out.push_str(&format!(
+                    "{:<44} {:>9.3} {:>7.1}% {:>7.1}% {:>7.1}% {:>6} {:>6}\n",
+                    format!("{unit} / stage {stage_no}"),
+                    s.completion_time(),
+                    100.0 * busy / total,
+                    100.0 * overhead / total,
+                    100.0 * idle / total,
+                    s.tasks.len(),
+                    steals_in_stage,
+                ));
+                stage_no += 1;
+                steals_in_stage = 0;
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_is_thread_local_and_removable() {
+        assert!(!active());
+        record(|_| panic!("must not fire when inactive"));
+        install(Recorder::new());
+        assert!(active());
+        record(|r| r.push(ObsEvent::NetSolve { t: 1.0, incremental: true, flows: 3 }));
+        let other = std::thread::spawn(|| active()).join().unwrap();
+        assert!(!other, "recorder must not leak across threads");
+        let rec = take().unwrap();
+        assert_eq!(rec.events.len(), 1);
+        assert!(!active());
+        assert!(take().is_none());
+    }
+
+    #[test]
+    fn log_hist_buckets_are_cumulative_and_exact() {
+        let mut h = LogHist::new();
+        h.observe(0.0); // bucket 0
+        h.observe(1e-6); // exactly 1 µs -> bucket 0
+        h.observe(3e-6); // bucket 2 (4 µs bound)
+        h.observe(1.0); // 1 s = 1e6 µs -> 2^20 bound
+        assert_eq!(h.count, 4);
+        assert_eq!(h.counts[0], 2);
+        assert_eq!(h.counts[2], 1);
+        assert_eq!(h.counts[20], 1);
+        assert!((h.sum - 1.000004).abs() < 1e-9);
+        let mut text = String::new();
+        h.prometheus_into(&mut text, "t_seconds");
+        assert!(text.starts_with("# TYPE t_seconds histogram\n"));
+        assert!(text.contains("t_seconds_bucket{le=\"+Inf\"} 4\n"));
+        assert!(text.contains("t_seconds_count 4\n"));
+        // Cumulative counts never decrease.
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.contains("_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "{line}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn stage_decomposition_reconciles_with_slot_seconds() {
+        let s = StageObs {
+            start: 10.0,
+            end: 20.0,
+            slots: 2,
+            tasks: vec![
+                TaskObs {
+                    task: 0,
+                    executor: 0,
+                    bytes: 100,
+                    dispatched: 10.0,
+                    started: 11.0,
+                    input_done: Some(13.0),
+                    finished: 18.0,
+                    stolen: false,
+                },
+                TaskObs {
+                    task: 1,
+                    executor: 1,
+                    bytes: 100,
+                    dispatched: 10.5,
+                    started: 11.5,
+                    input_done: None,
+                    finished: 20.0,
+                    stolen: false,
+                },
+            ],
+        };
+        let (overhead, busy, idle) = s.decompose();
+        assert!((overhead - 2.0).abs() < 1e-12);
+        assert!((busy - 15.5).abs() < 1e-12);
+        assert!((overhead + busy + idle - 2.0 * 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chrome_trace_shapes_are_valid() {
+        let mut r = Recorder::new();
+        r.begin_output(0, "fig9");
+        r.begin_unit(0);
+        r.label_unit("homt");
+        r.push(ObsEvent::Steal {
+            t: 12.0,
+            victim: 0,
+            task: 2,
+            thief_exec: 1,
+            work: 3.5,
+            stream: false,
+        });
+        r.end_stage(StageObs {
+            start: 10.0,
+            end: 20.0,
+            slots: 2,
+            tasks: vec![TaskObs {
+                task: 0,
+                executor: 0,
+                bytes: 64,
+                dispatched: 10.0,
+                started: 11.0,
+                input_done: Some(12.0),
+                finished: 19.0,
+                stolen: false,
+            }],
+        });
+        let doc = chrome_trace(&r);
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!evs.is_empty());
+        for e in evs {
+            let ph = e.get("ph").unwrap().as_str().unwrap();
+            assert!(matches!(ph, "X" | "i" | "M"), "{ph}");
+            if ph == "X" {
+                assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+            }
+            if ph != "M" {
+                assert!(e.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+            }
+        }
+        // Round-trips through the in-repo JSON parser.
+        let text = doc.compact();
+        let parsed = Value::parse(&text).unwrap();
+        assert!(parsed.get("traceEvents").is_some());
+        let table = breakdown(&r);
+        assert!(table.contains("unit 0: homt / stage 0"), "{table}");
+        assert!(table.contains("steals"), "{table}");
+    }
+}

@@ -92,7 +92,11 @@ impl Runtime {
             .artifacts
             .get(name)
             .ok_or_else(|| anyhow!("unknown artifact '{name}' (have {:?})", self.artifact_names()))?;
+        let t0 = std::time::Instant::now();
         let result = art.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // Real wall time, not sim time: the bridge runs actual PJRT
+        // artifacts, so its latency histogram is honest hardware data.
+        crate::obs::global().note_runtime_execute(t0.elapsed().as_secs_f64());
         Ok(result.to_tuple()?)
     }
 

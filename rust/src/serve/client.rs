@@ -30,6 +30,20 @@ pub fn request(
     parse_response(&raw)
 }
 
+/// Same as [`request`], with extra request headers — e.g.
+/// `("Accept", "text/plain")` to get `/metrics` in Prometheus text
+/// exposition format instead of JSON.
+pub fn request_with_headers(
+    addr: &str,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: Option<&str>,
+) -> io::Result<Response> {
+    let raw = raw_request_with_headers(addr, method, path, headers, body)?;
+    parse_response(&raw)
+}
+
 /// Same, but return the response exactly as it came off the wire —
 /// the memo tests compare these byte-for-byte.
 pub fn raw_request(
@@ -38,12 +52,26 @@ pub fn raw_request(
     path: &str,
     body: Option<&str>,
 ) -> io::Result<Vec<u8>> {
+    raw_request_with_headers(addr, method, path, &[], body)
+}
+
+fn raw_request_with_headers(
+    addr: &str,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: Option<&str>,
+) -> io::Result<Vec<u8>> {
     let mut stream = TcpStream::connect(addr)?;
     let body = body.unwrap_or("");
-    let head = format!(
-        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+    let mut head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n",
         body.len()
     );
+    for (k, v) in headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
     stream.write_all(head.as_bytes())?;
     stream.write_all(body.as_bytes())?;
     let mut out = Vec::new();

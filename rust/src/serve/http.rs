@@ -1,13 +1,17 @@
 //! Hand-rolled HTTP/1.1 plumbing for the serve layer: request parsing
 //! over any [`Read`], response building, and SSE framing.
 //!
-//! The server speaks the smallest useful subset of HTTP/1.1: one request
-//! per connection, `Connection: close` on every response, bodies
+//! The server speaks the smallest useful subset of HTTP/1.1: bodies
 //! delimited by `Content-Length` on the way in and by connection close on
 //! the way out (streaming responses carry no length and no chunked
-//! framing — a client reads until EOF). Responses deliberately omit the
-//! `Date` header so that equal payloads are equal bytes, which the memo
-//! tests assert.
+//! framing — a client reads until EOF). Connections default to
+//! `Connection: close`; a client that sends `Connection: keep-alive`
+//! may reuse the connection for up to [`MAX_REQUESTS_PER_CONN`]
+//! fixed-length responses ([`RequestReader`] carries read-ahead bytes
+//! from one parse into the next, so pipelined requests survive arbitrary
+//! TCP fragmentation). SSE streams and `/shutdown` always close.
+//! Responses deliberately omit the `Date` header so that equal payloads
+//! are equal bytes, which the memo tests assert.
 
 use std::io::Read;
 
@@ -15,6 +19,9 @@ use std::io::Read;
 pub const MAX_HEADER_BYTES: usize = 16 * 1024;
 /// Body cap; a declared `Content-Length` beyond this is rejected with 413.
 pub const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
+/// Keep-alive bound: a connection serves at most this many requests
+/// before the server closes it (caps per-connection resource hold).
+pub const MAX_REQUESTS_PER_CONN: usize = 32;
 
 /// A parsed request. Header names are lowercased at parse time.
 #[derive(Debug, Clone)]
@@ -37,6 +44,15 @@ impl Request {
     pub fn body_str(&self) -> Result<&str, ParseError> {
         std::str::from_utf8(&self.body)
             .map_err(|_| ParseError::BadRequest("body is not valid UTF-8".into()))
+    }
+
+    /// Whether the client explicitly asked to reuse the connection.
+    /// Keep-alive is strictly opt-in here (HTTP/1.0 semantics): absent
+    /// the header, the server closes after one response, matching every
+    /// pre-keep-alive client.
+    pub fn wants_keep_alive(&self) -> bool {
+        self.header("connection")
+            .is_some_and(|v| v.eq_ignore_ascii_case("keep-alive"))
     }
 }
 
@@ -81,11 +97,36 @@ impl ParseError {
     }
 }
 
+/// Reads successive requests off one connection, carrying bytes read
+/// past each request's end (keep-alive / pipelined traffic sitting in
+/// the read-ahead) into the next parse.
+#[derive(Debug, Default)]
+pub struct RequestReader {
+    leftover: Vec<u8>,
+}
+
+impl RequestReader {
+    pub fn new() -> RequestReader {
+        RequestReader::default()
+    }
+
+    pub fn read_request<R: Read>(&mut self, r: &mut R) -> Result<Request, ParseError> {
+        read_request_from(r, &mut self.leftover)
+    }
+}
+
 /// Read and parse one request. Works over any [`Read`] — the tests feed
 /// it sliced/fragmented streams to prove split reads cannot change the
 /// parse.
 pub fn read_request<R: Read>(r: &mut R) -> Result<Request, ParseError> {
-    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    read_request_from(r, &mut Vec::new())
+}
+
+/// The parse behind [`read_request`] / [`RequestReader`]: `leftover`
+/// seeds the buffer and receives any bytes read past this request's end.
+fn read_request_from<R: Read>(r: &mut R, leftover: &mut Vec<u8>) -> Result<Request, ParseError> {
+    let mut buf: Vec<u8> = std::mem::take(leftover);
+    buf.reserve(1024);
     let mut chunk = [0u8; 1024];
     // Accumulate until the blank line that ends the header block.
     let header_end = loop {
@@ -157,10 +198,15 @@ pub fn read_request<R: Read>(r: &mut R) -> Result<Request, ParseError> {
     if content_length > MAX_BODY_BYTES {
         return Err(ParseError::BodyTooLarge);
     }
-    // The body may partially (or fully) sit in the header read-ahead.
+    // The body may partially (or fully) sit in the header read-ahead;
+    // anything past it is the next pipelined request and goes back into
+    // `leftover` rather than being dropped.
     let body_start = header_end + 4;
     let mut body: Vec<u8> = buf[body_start.min(buf.len())..].to_vec();
-    body.truncate(content_length);
+    if body.len() > content_length {
+        *leftover = body[content_length..].to_vec();
+        body.truncate(content_length);
+    }
     while body.len() < content_length {
         let n = r
             .read(&mut chunk)
@@ -170,6 +216,9 @@ pub fn read_request<R: Read>(r: &mut R) -> Result<Request, ParseError> {
         }
         let want = content_length - body.len();
         body.extend_from_slice(&chunk[..n.min(want)]);
+        if n > want {
+            *leftover = chunk[want..n].to_vec();
+        }
     }
     req.body = body;
     Ok(req)
@@ -219,6 +268,23 @@ pub fn response_with_headers(
     let mut bytes = out.into_bytes();
     bytes.extend_from_slice(body.as_bytes());
     bytes
+}
+
+/// Rewrite a complete fixed-length response in place to announce
+/// `Connection: keep-alive` instead of `close`. Only the header block is
+/// scanned, so body bytes can never be corrupted; responses without the
+/// `close` header (none today) pass through untouched.
+pub fn make_keep_alive(resp: &mut Vec<u8>) {
+    const CLOSE: &[u8] = b"Connection: close\r\n";
+    const KEEP: &[u8] = b"Connection: keep-alive\r\n";
+    let head_end = resp
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .map(|p| p + 2)
+        .unwrap_or(resp.len());
+    if let Some(pos) = resp[..head_end].windows(CLOSE.len()).position(|w| w == CLOSE) {
+        resp.splice(pos..pos + CLOSE.len(), KEEP.iter().copied());
+    }
 }
 
 /// A JSON error body, shaped `{"error": ...}`.
@@ -403,6 +469,48 @@ mod tests {
         assert!(String::from_utf8(error_response(404, "no such route"))
             .unwrap()
             .contains("no such route"));
+    }
+
+    #[test]
+    fn request_reader_preserves_pipelined_read_ahead() {
+        // Two requests back to back on one stream: whatever the first
+        // parse over-reads must feed the second parse, under any
+        // fragmentation.
+        let mut raw = raw_post("{\"type\": \"steal\"}");
+        raw.extend_from_slice(b"GET /metrics HTTP/1.1\r\nConnection: keep-alive\r\n\r\n");
+        prop::check("http_keep_alive_pipelining", 0x6eea_11fe, 200, |rng| {
+            let cuts: Vec<usize> = (0..rng.below(16) + 1).map(|_| rng.below(13) + 1).collect();
+            let mut r = SplitReader::new(&raw, cuts);
+            let mut reader = RequestReader::new();
+            let first = reader.read_request(&mut r).unwrap();
+            assert_eq!(first.method, "POST");
+            assert_eq!(first.body_str().unwrap(), "{\"type\": \"steal\"}");
+            assert!(!first.wants_keep_alive());
+            let second = reader.read_request(&mut r).unwrap();
+            assert_eq!(second.method, "GET");
+            assert_eq!(second.path, "/metrics");
+            assert!(second.wants_keep_alive());
+            assert!(second.body.is_empty());
+            // Clean end-of-stream after the last request.
+            assert!(matches!(
+                reader.read_request(&mut r).unwrap_err(),
+                ParseError::Incomplete
+            ));
+        });
+    }
+
+    #[test]
+    fn make_keep_alive_rewrites_only_the_header_block() {
+        // A body containing the literal close header must not be touched.
+        let mut resp = response(200, "text/plain", "Connection: close\r\nnot a header");
+        make_keep_alive(&mut resp);
+        let text = String::from_utf8(resp).unwrap();
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.ends_with("Connection: close\r\nnot a header"));
+        // Idempotent on an already keep-alive response.
+        let mut again = text.clone().into_bytes();
+        make_keep_alive(&mut again);
+        assert_eq!(again, text.into_bytes());
     }
 
     #[test]

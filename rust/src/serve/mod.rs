@@ -2,15 +2,25 @@
 //! [`crate::api`] request surface.
 //!
 //! A threaded HTTP/1.1 server on [`std::net::TcpListener`] (no deps; see
-//! [`http`] for the wire subset). One connection carries one request:
+//! [`http`] for the wire subset). Connections close after one response
+//! unless the client opts into `Connection: keep-alive` (bounded at
+//! [`http::MAX_REQUESTS_PER_CONN`]; SSE streams and `/shutdown` always
+//! close). Routes:
 //!
 //! * `POST /run` — body is a [`RunRequest`] JSON document. The response
 //!   is a Server-Sent-Events stream: `start` (banner + unit count per
 //!   output), `trial` (one sample, streamed as sweep workers finish
 //!   units), `figure` (the merged output), then `done` — or `error`.
+//!   With `?trace=1` the run executes serially under the span recorder
+//!   ([`crate::obs`]) and interleaves one `span` frame per unit (Chrome
+//!   trace events for that unit) — bypassing the memo, since the frames
+//!   are a diagnostic view, not the canonical result stream.
 //! * `GET /figures` — the figure registry ([`api::figure_registry_json`]).
 //! * `GET /metrics` — counters as JSON (cache hits/misses, queue depth,
-//!   session pool size, requests served).
+//!   session pool size, requests served). With `Accept: text/plain`,
+//!   Prometheus text exposition format instead: the same serve counters
+//!   plus the process-global sim self-profile
+//!   ([`crate::obs::prometheus_text`]).
 //! * `GET /healthz` — liveness probe.
 //! * `POST /shutdown` — stop accepting, drain queued runs, exit.
 //!
@@ -20,7 +30,10 @@
 //! response. Concurrent identical submissions share ONE compute: the
 //! first creates a `Running` entry holding a live [`EventLog`]; later
 //! arrivals subscribe to the same log, so all N streams are identical
-//! bytes. Failed runs are evicted, never cached.
+//! bytes. Failed runs are evicted, never cached. The memo is bounded
+//! ([`ServeConfig::memo_entries`] / [`ServeConfig::memo_bytes`]):
+//! least-recently-used finished entries are evicted once either cap is
+//! exceeded; in-flight `Running` entries are pinned.
 //!
 //! **Sessions.** Simulation state is pooled by
 //! [`crate::sweep::cached_session`], which keys on the cluster spec
@@ -57,6 +70,10 @@ pub struct ServeConfig {
     pub threads: usize,
     /// Pending-queue bound beyond which new specs get `429`.
     pub max_queue: usize,
+    /// Memo cap: finished entries held for replay before LRU eviction.
+    pub memo_entries: usize,
+    /// Memo cap: total bytes of stored replay frames before LRU eviction.
+    pub memo_bytes: usize,
     /// Test hook: start with the worker pool gated until
     /// [`ServerHandle::release_workers`] — makes backpressure and drain
     /// behavior deterministic to test.
@@ -70,6 +87,8 @@ impl Default for ServeConfig {
             workers: 2,
             threads: 0,
             max_queue: 8,
+            memo_entries: 64,
+            memo_bytes: 32 * 1024 * 1024,
             paused: false,
         }
     }
@@ -122,6 +141,7 @@ impl EventLog {
     }
 }
 
+#[derive(Clone)]
 enum MemoEntry {
     /// Compute in flight — subscribe to the live log.
     Running(Arc<EventLog>),
@@ -129,10 +149,86 @@ enum MemoEntry {
     Done(Arc<Vec<String>>),
 }
 
+struct MemoSlot {
+    entry: MemoEntry,
+    /// Logical-clock stamp of the last lookup or insert (LRU order).
+    last_used: u64,
+}
+
+/// The spec-hash memo: a bounded LRU over finished event logs. Only
+/// `Done` entries are evictable and only their frames count toward the
+/// byte budget — a `Running` entry is live compute with subscribers and
+/// stays pinned until it finishes or fails.
+struct Memo {
+    map: HashMap<u64, MemoSlot>,
+    tick: u64,
+    /// Total bytes of stored `Done` frames.
+    bytes: usize,
+    evictions: u64,
+}
+
+fn frames_bytes(frames: &[String]) -> usize {
+    frames.iter().map(String::len).sum()
+}
+
+impl Memo {
+    fn new() -> Memo {
+        Memo { map: HashMap::new(), tick: 0, bytes: 0, evictions: 0 }
+    }
+
+    /// Look up an entry, refreshing its LRU stamp.
+    fn lookup(&mut self, hash: u64) -> Option<MemoEntry> {
+        self.tick += 1;
+        let tick = self.tick;
+        let slot = self.map.get_mut(&hash)?;
+        slot.last_used = tick;
+        Some(slot.entry.clone())
+    }
+
+    fn insert_running(&mut self, hash: u64, log: Arc<EventLog>) {
+        self.tick += 1;
+        self.map
+            .insert(hash, MemoSlot { entry: MemoEntry::Running(log), last_used: self.tick });
+    }
+
+    /// Promote a finished run to a replayable `Done` entry, then enforce
+    /// the caps. The fresh entry carries the newest stamp, so it is the
+    /// last eviction candidate — unless it alone busts the byte budget.
+    fn finish(&mut self, hash: u64, frames: Arc<Vec<String>>, max_entries: usize, max_bytes: usize) {
+        self.tick += 1;
+        self.bytes += frames_bytes(&frames);
+        let slot = MemoSlot { entry: MemoEntry::Done(frames), last_used: self.tick };
+        if let Some(MemoSlot { entry: MemoEntry::Done(old), .. }) = self.map.insert(hash, slot) {
+            self.bytes -= frames_bytes(&old);
+        }
+        while self.map.len() > max_entries || self.bytes > max_bytes {
+            let victim = self
+                .map
+                .iter()
+                .filter(|(_, s)| matches!(s.entry, MemoEntry::Done(_)))
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(h, _)| *h);
+            // Only pinned Running entries left: nothing evictable.
+            let Some(h) = victim else { break };
+            self.remove(h);
+            self.evictions += 1;
+        }
+    }
+
+    fn remove(&mut self, hash: u64) {
+        if let Some(MemoSlot { entry: MemoEntry::Done(frames), .. }) = self.map.remove(&hash) {
+            self.bytes -= frames_bytes(&frames);
+        }
+    }
+}
+
 struct Job {
     req: RunRequest,
     hash: u64,
     log: Arc<EventLog>,
+    /// Run serially under the span recorder, emitting `span` SSE frames
+    /// per unit; never memoized.
+    traced: bool,
 }
 
 #[derive(Default)]
@@ -153,7 +249,7 @@ struct ServeState {
     shutdown: AtomicBool,
     released: Mutex<bool>,
     release_cv: Condvar,
-    memo: Mutex<HashMap<u64, MemoEntry>>,
+    memo: Mutex<Memo>,
     conns: Mutex<usize>,
     conns_cv: Condvar,
     metrics: Metrics,
@@ -218,7 +314,7 @@ pub fn spawn(cfg: ServeConfig) -> std::io::Result<ServerHandle> {
         shutdown: AtomicBool::new(false),
         released: Mutex::new(released),
         release_cv: Condvar::new(),
-        memo: Mutex::new(HashMap::new()),
+        memo: Mutex::new(Memo::new()),
         conns: Mutex::new(0),
         conns_cv: Condvar::new(),
         metrics: Metrics::default(),
@@ -272,51 +368,110 @@ fn accept_loop(state: &Arc<ServeState>, listener: TcpListener) {
 fn handle_conn(state: &ServeState, mut stream: TcpStream) {
     let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
     let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
-    let req = match http::read_request(&mut stream) {
-        Ok(r) => r,
-        Err(http::ParseError::Incomplete) => return,
-        Err(e) => {
-            let _ = stream.write_all(&http::error_response(e.status(), &e.message()));
-            // Drain what the peer already sent (briefly, bounded) so
-            // closing with unread bytes doesn't turn into a TCP reset
-            // that destroys the error response in flight.
-            let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
-            let mut sink = [0u8; 4096];
-            let mut drained = 0usize;
-            while drained < (1 << 20) {
-                match stream.read(&mut sink) {
-                    Ok(0) | Err(_) => break,
-                    Ok(n) => drained += n,
+    let mut reader = http::RequestReader::new();
+    for served in 1..=http::MAX_REQUESTS_PER_CONN {
+        let req = match reader.read_request(&mut stream) {
+            Ok(r) => r,
+            // Clean close — including "no further request" on keep-alive.
+            Err(http::ParseError::Incomplete) => return,
+            Err(e) => {
+                let _ = stream.write_all(&http::error_response(e.status(), &e.message()));
+                // Drain what the peer already sent (briefly, bounded) so
+                // closing with unread bytes doesn't turn into a TCP reset
+                // that destroys the error response in flight.
+                let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+                let mut sink = [0u8; 4096];
+                let mut drained = 0usize;
+                while drained < (1 << 20) {
+                    match stream.read(&mut sink) {
+                        Ok(0) | Err(_) => break,
+                        Ok(n) => drained += n,
+                    }
                 }
+                return;
             }
+        };
+        state.metrics.requests.fetch_add(1, Ordering::SeqCst);
+        // The query string routes (`/run?trace=1`) but the path match
+        // stays query-blind.
+        let (path, query) = match req.path.split_once('?') {
+            Some((p, q)) => (p.to_string(), q.to_string()),
+            None => (req.path.clone(), String::new()),
+        };
+        let keep_alive = req.wants_keep_alive() && served < http::MAX_REQUESTS_PER_CONN;
+        let mut reply: Vec<u8> = match (req.method.as_str(), path.as_str()) {
+            ("GET", "/healthz") => http::response(200, "text/plain", "ok\n"),
+            ("GET", "/figures") => http::response(
+                200,
+                "application/json",
+                &format!("{}\n", api::figure_registry_json().pretty()),
+            ),
+            ("GET", "/metrics") => metrics_response(state, &req),
+            ("POST", "/shutdown") => {
+                // Always closes: the server is going away.
+                let _ = stream.write_all(&http::response(200, "text/plain", "draining\n"));
+                initiate_shutdown(state);
+                return;
+            }
+            ("POST", "/run") => {
+                // SSE is close-delimited, so this is always the last
+                // request on the connection.
+                let traced = query.split('&').any(|kv| kv == "trace=1");
+                handle_run(state, &req, traced, stream);
+                return;
+            }
+            (m, p) => http::error_response(404, &format!("no route {m} {p}")),
+        };
+        if keep_alive {
+            http::make_keep_alive(&mut reply);
+        }
+        if stream.write_all(&reply).is_err() || !keep_alive {
             return;
         }
-    };
-    state.metrics.requests.fetch_add(1, Ordering::SeqCst);
-    let reply: Vec<u8> = match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => http::response(200, "text/plain", "ok\n"),
-        ("GET", "/figures") => http::response(
-            200,
-            "application/json",
-            &format!("{}\n", api::figure_registry_json().pretty()),
-        ),
-        ("GET", "/metrics") => http::response(
+    }
+}
+
+/// `GET /metrics` with content negotiation: `Accept: text/plain` gets
+/// Prometheus text exposition format (serve counters plus the
+/// process-global sim self-profile); anything else gets the original
+/// JSON document, byte-for-byte unchanged.
+fn metrics_response(state: &ServeState, req: &http::Request) -> Vec<u8> {
+    let accept = req.header("accept").unwrap_or("");
+    if !accept.contains("text/plain") {
+        return http::response(
             200,
             "application/json",
             &format!("{}\n", metrics_json(state).pretty()),
-        ),
-        ("POST", "/shutdown") => {
-            let _ = stream.write_all(&http::response(200, "text/plain", "draining\n"));
-            initiate_shutdown(state);
-            return;
-        }
-        ("POST", "/run") => {
-            handle_run(state, &req, stream);
-            return;
-        }
-        (m, p) => http::error_response(404, &format!("no route {m} {p}")),
+        );
+    }
+    let m = &state.metrics;
+    let (cache_hits, cache_misses) = sweep::session_cache_stats();
+    let (memo_entries, memo_bytes, memo_evictions) = {
+        let memo = state.memo.lock().unwrap();
+        (memo.map.len() as u64, memo.bytes as u64, memo.evictions)
     };
-    let _ = stream.write_all(&reply);
+    let load = |c: &AtomicU64| c.load(Ordering::SeqCst);
+    let extra: Vec<(&str, u64)> = vec![
+        ("serve_jobs_running", load(&m.jobs_running)),
+        ("serve_memo_bytes", memo_bytes),
+        ("serve_memo_entries", memo_entries),
+        ("serve_memo_evictions_total", memo_evictions),
+        ("serve_memo_hits_total", load(&m.memo_hits)),
+        ("serve_memo_misses_total", load(&m.memo_misses)),
+        ("serve_queue_depth", state.queue.lock().unwrap().len() as u64),
+        ("serve_rejected_total", load(&m.rejected)),
+        ("serve_requests_total", load(&m.requests)),
+        ("serve_runs_submitted_total", load(&m.runs_submitted)),
+        ("serve_session_cache_hits_total", cache_hits as u64),
+        ("serve_session_cache_misses_total", cache_misses as u64),
+        ("serve_session_pool", sweep::session_cache_len() as u64),
+        ("serve_workers", state.cfg.workers as u64),
+    ];
+    http::response(
+        200,
+        "text/plain; version=0.0.4; charset=utf-8",
+        &crate::obs::prometheus_text(&extra),
+    )
 }
 
 /// What `/run` resolved to before any bytes went out.
@@ -326,7 +481,7 @@ enum RunSource {
     Reject(Vec<u8>),
 }
 
-fn handle_run(state: &ServeState, req: &http::Request, mut stream: TcpStream) {
+fn handle_run(state: &ServeState, req: &http::Request, traced: bool, mut stream: TcpStream) {
     let run_req = match req
         .body_str()
         .map_err(|e| e.message())
@@ -340,20 +495,23 @@ fn handle_run(state: &ServeState, req: &http::Request, mut stream: TcpStream) {
     };
     let hash = api::spec_hash(&run_req);
     let source = {
-        let mut memo = state.memo.lock().unwrap();
-        match memo.get(&hash) {
+        // Queue inspection and insertion happen under both the memo and
+        // queue locks so admission is atomic (lock order memo → queue
+        // everywhere). Traced runs skip the memo on both ends: their
+        // span frames are a diagnostic view, so they neither replay a
+        // cached result nor pollute the cache for untraced submissions.
+        let mut memo = if traced { None } else { Some(state.memo.lock().unwrap()) };
+        let cached = memo.as_mut().and_then(|m| m.lookup(hash));
+        match cached {
             Some(MemoEntry::Done(frames)) => {
                 state.metrics.memo_hits.fetch_add(1, Ordering::SeqCst);
-                RunSource::Replay(Arc::clone(frames))
+                RunSource::Replay(frames)
             }
             Some(MemoEntry::Running(log)) => {
                 state.metrics.memo_hits.fetch_add(1, Ordering::SeqCst);
-                RunSource::Live(Arc::clone(log))
+                RunSource::Live(log)
             }
             None => {
-                // Queue inspection and insertion happen under both the
-                // memo and queue locks so admission is atomic (lock
-                // order memo → queue everywhere).
                 let mut queue = state.queue.lock().unwrap();
                 if state.shutdown.load(Ordering::SeqCst) {
                     RunSource::Reject(http::error_response(503, "server is draining"))
@@ -373,11 +531,13 @@ fn handle_run(state: &ServeState, req: &http::Request, mut stream: TcpStream) {
                         ),
                     ))
                 } else {
-                    state.metrics.memo_misses.fetch_add(1, Ordering::SeqCst);
                     state.metrics.runs_submitted.fetch_add(1, Ordering::SeqCst);
                     let log = Arc::new(EventLog::new());
-                    memo.insert(hash, MemoEntry::Running(Arc::clone(&log)));
-                    queue.push_back(Job { req: run_req, hash, log: Arc::clone(&log) });
+                    if let Some(m) = memo.as_mut() {
+                        state.metrics.memo_misses.fetch_add(1, Ordering::SeqCst);
+                        m.insert_running(hash, Arc::clone(&log));
+                    }
+                    queue.push_back(Job { req: run_req, hash, log: Arc::clone(&log), traced });
                     state.queue_cv.notify_one();
                     RunSource::Live(log)
                 }
@@ -450,11 +610,19 @@ fn worker_loop(state: &Arc<ServeState>) {
 
 fn run_job(state: &ServeState, job: Job) {
     state.metrics.jobs_running.fetch_add(1, Ordering::SeqCst);
-    let runner = if state.cfg.threads == 0 {
+    // Traced jobs run serially: the span recorder is thread-local, and
+    // serial execution is what makes the recording order deterministic.
+    let runner = if job.traced {
+        SweepRunner::new(1)
+    } else if state.cfg.threads == 0 {
         SweepRunner::from_env()
     } else {
         SweepRunner::new(state.cfg.threads)
     };
+    if job.traced {
+        crate::obs::install(crate::obs::Recorder::new());
+    }
+    let traced = job.traced;
     let log = &job.log;
     let result = api::execute_with(&job.req, &runner, |ev| match ev {
         RunEvent::Start { index, name, banner, units } => {
@@ -484,6 +652,25 @@ fn run_job(state: &ServeState, job: Job) {
                     .compact(),
                 ));
             }
+            if traced {
+                // Drain what the recorder collected for this unit and
+                // ship it as one `span` frame of Chrome trace events
+                // (the unit index doubles as the pid).
+                let mut events: Vec<crate::obs::ObsEvent> = Vec::new();
+                crate::obs::record(|r| events = r.drain_events());
+                let rendered = crate::obs::chrome_events(&events, unit);
+                if !rendered.is_empty() {
+                    log.push(http::sse_event(
+                        "span",
+                        &json::obj(vec![
+                            ("events", Value::Arr(rendered)),
+                            ("index", json::num(index as f64)),
+                            ("unit", json::num(unit as f64)),
+                        ])
+                        .compact(),
+                    ));
+                }
+            }
         }
         RunEvent::Output { index, output } => {
             log.push(http::sse_event(
@@ -496,6 +683,11 @@ fn run_job(state: &ServeState, job: Job) {
             ));
         }
     });
+    if traced {
+        // Uninstall so this worker thread records nothing for later
+        // (untraced) jobs; any tail events past the last unit go with it.
+        let _ = crate::obs::take();
+    }
     match result {
         Ok(res) => {
             log.push(http::sse_event(
@@ -508,12 +700,15 @@ fn run_job(state: &ServeState, job: Job) {
                 .compact(),
             ));
             log.finish();
-            let frames = Arc::new(log.snapshot());
-            state
-                .memo
-                .lock()
-                .unwrap()
-                .insert(job.hash, MemoEntry::Done(frames));
+            if !traced {
+                let frames = Arc::new(log.snapshot());
+                state.memo.lock().unwrap().finish(
+                    job.hash,
+                    frames,
+                    state.cfg.memo_entries,
+                    state.cfg.memo_bytes,
+                );
+            }
         }
         Err(e) => {
             log.push(http::sse_event(
@@ -523,7 +718,9 @@ fn run_job(state: &ServeState, job: Job) {
             ));
             log.finish();
             // Errors are never served from cache.
-            state.memo.lock().unwrap().remove(&job.hash);
+            if !traced {
+                state.memo.lock().unwrap().remove(job.hash);
+            }
         }
     }
     state.metrics.jobs_running.fetch_sub(1, Ordering::SeqCst);
@@ -532,13 +729,16 @@ fn run_job(state: &ServeState, job: Job) {
 fn metrics_json(state: &ServeState) -> Value {
     let m = &state.metrics;
     let (cache_hits, cache_misses) = sweep::session_cache_stats();
+    let (memo_entries, memo_bytes, memo_evictions) = {
+        let memo = state.memo.lock().unwrap();
+        (memo.map.len(), memo.bytes, memo.evictions)
+    };
     let count = |c: &AtomicU64| json::num(c.load(Ordering::SeqCst) as f64);
     json::obj(vec![
         ("jobs_running", count(&m.jobs_running)),
-        (
-            "memo_entries",
-            json::num(state.memo.lock().unwrap().len() as f64),
-        ),
+        ("memo_bytes", json::num(memo_bytes as f64)),
+        ("memo_entries", json::num(memo_entries as f64)),
+        ("memo_evictions", json::num(memo_evictions as f64)),
         ("memo_hits", count(&m.memo_hits)),
         ("memo_misses", count(&m.memo_misses)),
         (
@@ -589,13 +789,49 @@ mod tests {
     }
 
     #[test]
+    fn memo_evicts_lru_done_entries_within_caps() {
+        let mut memo = Memo::new();
+        let frames = |n: usize| Arc::new(vec!["x".repeat(10); n]);
+        // Three finished entries, 10 bytes each, entry cap 2.
+        memo.finish(1, frames(1), 2, 1000);
+        memo.finish(2, frames(1), 2, 1000);
+        assert_eq!(memo.bytes, 20);
+        memo.finish(3, frames(1), 2, 1000);
+        assert_eq!(memo.map.len(), 2);
+        assert_eq!(memo.evictions, 1);
+        assert!(memo.lookup(1).is_none(), "oldest entry must go first");
+        assert!(memo.lookup(2).is_some());
+        // Touching 2 makes 3 the LRU victim under byte pressure.
+        memo.finish(4, frames(3), 10, 45);
+        assert!(memo.lookup(3).is_none());
+        assert!(memo.lookup(2).is_some());
+        assert!(memo.lookup(4).is_some());
+        assert_eq!(memo.bytes, 40);
+        assert_eq!(memo.evictions, 2);
+        // Running entries are pinned: never evicted, never counted in bytes.
+        let mut memo = Memo::new();
+        memo.insert_running(7, Arc::new(EventLog::new()));
+        memo.insert_running(8, Arc::new(EventLog::new()));
+        memo.finish(9, frames(100), 1, 10);
+        // 9 itself busts both caps, but 7/8 stay pinned.
+        assert!(memo.lookup(7).is_some());
+        assert!(memo.lookup(8).is_some());
+        assert!(memo.lookup(9).is_none());
+        assert_eq!(memo.bytes, 0);
+        // Removing a Running entry must not underflow byte accounting.
+        memo.remove(7);
+        assert_eq!(memo.bytes, 0);
+        assert_eq!(memo.map.len(), 1);
+    }
+
+    #[test]
     fn server_spawns_probes_and_drains() {
         let handle = spawn(ServeConfig {
             addr: "127.0.0.1:0".into(),
             workers: 1,
             threads: 1,
             max_queue: 2,
-            paused: false,
+            ..ServeConfig::default()
         })
         .unwrap();
         let addr = handle.addr().to_string();

@@ -103,6 +103,43 @@ impl Ord for CpuCandidate {
     }
 }
 
+/// Engine self-profile: plain counters bumped on the hot paths
+/// (always on — a handful of integer adds per step — and surfaced via
+/// [`crate::obs`] as process-global metrics). The numbers the
+/// datacenter-scale refactor needs: heap traffic vs live jobs, how often
+/// per-node re-levelling actually fires, compaction frequency.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct EngineProfile {
+    /// Events delivered by [`Engine::step`].
+    pub steps: u64,
+    /// Completion candidates pushed into the CPU heap.
+    pub heap_pushes: u64,
+    /// Entries popped from the CPU heap (real completions + lazily shed
+    /// stale candidates).
+    pub heap_pops: u64,
+    /// Whole-heap compactions (stale backlog dominated the live set).
+    pub heap_compactions: u64,
+    /// Per-node water-fill re-levellings (dirty nodes actually redone).
+    pub node_relevels: u64,
+    /// Timers scheduled.
+    pub timers_set: u64,
+}
+
+impl EngineProfile {
+    /// Counter-wise `self - earlier` (the per-job delta absorbed into the
+    /// process-global stats).
+    pub fn delta_since(&self, earlier: &EngineProfile) -> EngineProfile {
+        EngineProfile {
+            steps: self.steps - earlier.steps,
+            heap_pushes: self.heap_pushes - earlier.heap_pushes,
+            heap_pops: self.heap_pops - earlier.heap_pops,
+            heap_compactions: self.heap_compactions - earlier.heap_compactions,
+            node_relevels: self.node_relevels - earlier.node_relevels,
+            timers_set: self.timers_set - earlier.timers_set,
+        }
+    }
+}
+
 /// What the engine hands back to the driver.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Event {
@@ -155,6 +192,8 @@ pub struct Engine {
     /// (session-level dynamics playback is otherwise invisible to the
     /// stage loop reacting to it).
     capacity_tap: Option<Vec<(f64, NodeId, f64)>>,
+    /// Self-profile counters (see [`EngineProfile`]).
+    pub profile: EngineProfile,
 }
 
 impl Engine {
@@ -176,6 +215,7 @@ impl Engine {
             usage_cache: vec![0.0; num_nodes],
             caps_scratch: Vec::new(),
             capacity_tap: None,
+            profile: EngineProfile::default(),
         }
     }
 
@@ -191,6 +231,7 @@ impl Engine {
         assert!(at >= self.now - 1e-9, "timer in the past: {at} < {}", self.now);
         let seq = self.next_seq;
         self.next_seq += 1;
+        self.profile.timers_set += 1;
         self.timers.push(Reverse(Timer { time: at.max(self.now), seq, tag }));
     }
 
@@ -396,6 +437,7 @@ impl Engine {
 
         let mut dirty = std::mem::take(&mut self.dirty_nodes);
         dirty.sort_unstable();
+        self.profile.node_relevels += dirty.len() as u64;
         for &node in &dirty {
             self.node_dirty[node] = false;
             let capacity = self.capacity_cache[node];
@@ -416,8 +458,10 @@ impl Engine {
                 usage += rate;
                 if remaining <= 1e-9 {
                     // Born-finished (sub-epsilon work): completes now.
+                    self.profile.heap_pushes += 1;
                     self.cpu_heap.push(Reverse(CpuCandidate { time: self.now, id, gen }));
                 } else if rate > 0.0 {
+                    self.profile.heap_pushes += 1;
                     self.cpu_heap.push(Reverse(CpuCandidate {
                         time: self.now + remaining / rate,
                         id,
@@ -437,6 +481,7 @@ impl Engine {
         // order over (time, id, gen), so rebuilding from the retained
         // multiset cannot change event order.
         if self.cpu_heap.len() > 64 + 4 * self.jobs.len() {
+            self.profile.heap_compactions += 1;
             let live: Vec<Reverse<CpuCandidate>> = self
                 .cpu_heap
                 .drain()
@@ -501,6 +546,7 @@ impl Engine {
             );
             // 0. Deliver any already-elapsed completions (zero-dt events).
             if let Some(ev) = self.pop_ready() {
+                self.profile.steps += 1;
                 return Some(ev);
             }
             if self.timers.is_empty() && self.net.num_flows() == 0 && self.jobs.is_empty() {
@@ -513,7 +559,28 @@ impl Engine {
             // the last step (falling back to the full solve past a dirty-
             // set threshold), so steady shuffle phases where one flow
             // finishes at a time cost O(component), not O(network).
-            self.net.recompute_rates();
+            if crate::obs::active() {
+                // Passive tap: report what the solver actually did this
+                // step (NetSim keeps no sim clock of its own, so the
+                // instant is attributed here by diffing its counters).
+                let before = self.net.stats;
+                self.net.recompute_rates();
+                let d_inc = self.net.stats.incremental_solves - before.incremental_solves;
+                let d_full = self.net.stats.full_solves - before.full_solves;
+                if d_inc + d_full > 0 {
+                    let flows = self.net.stats.flows_relevelled - before.flows_relevelled;
+                    let t = self.now;
+                    crate::obs::record(|r| {
+                        r.push(crate::obs::ObsEvent::NetSolve {
+                            t,
+                            incremental: d_full == 0,
+                            flows,
+                        })
+                    });
+                }
+            } else {
+                self.net.recompute_rates();
+            }
             self.recompute_cpu_rates();
 
             // 2. Candidate times for the next state change.
@@ -537,6 +604,7 @@ impl Engine {
                     dt = dt.min(head.0 - self.now);
                     break;
                 }
+                self.profile.heap_pops += 1;
                 self.cpu_heap.pop();
             }
             for (i, n) in self.nodes.iter().enumerate() {
@@ -603,9 +671,11 @@ impl Engine {
             };
             match finished {
                 None => {
+                    self.profile.heap_pops += 1;
                     self.cpu_heap.pop();
                 }
                 Some(true) => {
+                    self.profile.heap_pops += 1;
                     self.cpu_heap.pop();
                     let j = self.jobs.remove(&head_id).unwrap();
                     self.unindex_job(head_id, j.node);

@@ -271,7 +271,17 @@ impl SweepRunner {
                 .iter()
                 .enumerate()
                 .map(|(i, u)| {
+                    // Unit boundary markers for the span recorder: only
+                    // the serial path records (workers' thread-locals are
+                    // off), which is exactly where recording order equals
+                    // sim-time order.
+                    crate::obs::record(|r| r.begin_unit(i));
                     let out = u();
+                    crate::obs::record(|r| {
+                        if let Some(s) = out.first() {
+                            r.label_unit(&s.label);
+                        }
+                    });
                     observe(i, &out);
                     out
                 })

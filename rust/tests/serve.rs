@@ -27,6 +27,7 @@ fn serve(
         threads,
         max_queue,
         paused,
+        ..ServeConfig::default()
     })
     .expect("bind 127.0.0.1:0")
 }
@@ -93,7 +94,11 @@ fn sse_stream_carries_trials_figure_and_done() {
     assert!(kinds.contains(&"trial"), "{kinds:?}");
     assert!(kinds.contains(&"figure"), "{kinds:?}");
     // The streamed figure parses back into exactly the figure a local
-    // runner produces for the same request.
+    // runner produces for the same request. Compare via to_table, not
+    // the stats structs: Figure::from_json has no sample extremes to
+    // rebuild from (the wire form carries mean/std/n only) and sets
+    // min = max = mean, so a struct-level comparison would fail on
+    // fields the stream never carried.
     let fig_data = &events.iter().find(|(e, _)| e == "figure").unwrap().1;
     let v = Value::parse(fig_data).unwrap();
     assert_eq!(v.get("output").unwrap().get("name").unwrap().as_str(), Some("fig4"));
@@ -325,6 +330,244 @@ fn figures_endpoint_matches_the_registry() {
         resp.body_str().trim(),
         hemt::api::figure_registry_json().pretty()
     );
+    handle.shutdown();
+    handle.join();
+}
+
+/// Incrementally read Content-Length-framed responses off one socket,
+/// carrying read-ahead between responses (for keep-alive tests).
+struct RespReader {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl RespReader {
+    fn new(stream: TcpStream) -> RespReader {
+        RespReader { stream, buf: Vec::new() }
+    }
+
+    fn next_response(&mut self) -> String {
+        let mut chunk = [0u8; 1024];
+        let header_end = loop {
+            if let Some(p) = self.buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                break p;
+            }
+            let n = self.stream.read(&mut chunk).unwrap();
+            assert!(n > 0, "connection closed before response head");
+            self.buf.extend_from_slice(&chunk[..n]);
+        };
+        let head = String::from_utf8_lossy(&self.buf[..header_end]).into_owned();
+        let cl: usize = head
+            .lines()
+            .find_map(|l| l.strip_prefix("Content-Length: "))
+            .expect("framed response must carry Content-Length")
+            .trim()
+            .parse()
+            .unwrap();
+        let total = header_end + 4 + cl;
+        while self.buf.len() < total {
+            let n = self.stream.read(&mut chunk).unwrap();
+            assert!(n > 0, "connection closed inside response body");
+            self.buf.extend_from_slice(&chunk[..n]);
+        }
+        let resp = String::from_utf8_lossy(&self.buf[..total]).into_owned();
+        self.buf.drain(..total);
+        resp
+    }
+}
+
+#[test]
+fn keep_alive_serves_multiple_requests_on_one_connection() {
+    let handle = serve(1, 1, 2, false);
+    let addr = handle.addr().to_string();
+    let ka_get = |path: &str| {
+        format!("GET {path} HTTP/1.1\r\nHost: x\r\nConnection: keep-alive\r\n\r\n")
+    };
+
+    // Two requests pipelined in a single write: both answered, in order,
+    // on the same connection, each announcing keep-alive.
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    stream
+        .write_all(format!("{}{}", ka_get("/healthz"), ka_get("/metrics")).as_bytes())
+        .unwrap();
+    let mut reader = RespReader::new(stream);
+    let first = reader.next_response();
+    assert!(first.starts_with("HTTP/1.1 200 "), "{first}");
+    assert!(first.contains("Connection: keep-alive\r\n"), "{first}");
+    assert!(first.ends_with("ok\n"), "{first}");
+    let second = reader.next_response();
+    assert!(second.starts_with("HTTP/1.1 200 "), "{second}");
+    assert!(second.contains("Connection: keep-alive\r\n"), "{second}");
+    assert!(second.contains("\"workers\""), "{second}");
+    // A final request *without* the header closes the connection.
+    reader
+        .stream
+        .write_all(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n")
+        .unwrap();
+    let third = reader.next_response();
+    assert!(third.contains("Connection: close\r\n"), "{third}");
+    let mut tail = Vec::new();
+    reader.stream.read_to_end(&mut tail).unwrap();
+    assert!(tail.is_empty(), "server must close after Connection: close");
+
+    // All three requests counted, over one connection.
+    assert!(metric(&addr, "requests") >= 3);
+    handle.shutdown();
+    handle.join();
+}
+
+/// The tiny Prometheus text-format parser check the serve-smoke CI job
+/// mirrors: every line is a comment or `name{labels} value`, histogram
+/// buckets are cumulative, and each histogram ends at `+Inf`.
+fn assert_prometheus_well_formed(text: &str) {
+    let mut prev_bucket: Option<(String, f64)> = None;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut parts = rest.split(' ');
+            let name = parts.next().unwrap();
+            let kind = parts.next().unwrap();
+            assert!(name.starts_with("hemt_"), "{line}");
+            assert!(matches!(kind, "counter" | "histogram"), "{line}");
+            continue;
+        }
+        let (name, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad line: {line}"));
+        assert!(name.starts_with("hemt_"), "{line}");
+        let value: f64 = value.parse().unwrap_or_else(|_| panic!("bad value: {line}"));
+        if let Some(series) = name.split('{').next().filter(|_| name.contains("_bucket{le=")) {
+            if let Some((prev_series, prev)) = &prev_bucket {
+                if prev_series == series {
+                    assert!(value >= *prev, "non-cumulative buckets: {line}");
+                }
+            }
+            prev_bucket = Some((series.to_string(), value));
+        } else {
+            prev_bucket = None;
+        }
+    }
+}
+
+#[test]
+fn metrics_content_negotiation_serves_prometheus_text() {
+    let handle = serve(1, 1, 4, false);
+    let addr = handle.addr().to_string();
+    // Run something first so histograms have observations.
+    let mut done = false;
+    let (status, _) = client::post_sse(&addr, "/run", &fig4_body(), |ev, _| {
+        done = done || ev == "done";
+    })
+    .unwrap();
+    assert_eq!(status, 200);
+    assert!(done);
+
+    let prom = client::request_with_headers(
+        &addr,
+        "GET",
+        "/metrics",
+        &[("Accept", "text/plain")],
+        None,
+    )
+    .unwrap();
+    assert_eq!(prom.status, 200);
+    let text = prom.body_str();
+    for series in [
+        "hemt_serve_requests_total",
+        "hemt_serve_memo_bytes",
+        "hemt_serve_memo_evictions_total",
+        "hemt_jobs_run_total",
+        "hemt_engine_steps_total",
+        "hemt_task_duration_seconds_bucket{le=\"+Inf\"}",
+        "hemt_stage_completion_seconds_count",
+    ] {
+        assert!(text.contains(series), "prometheus output missing {series}:\n{text}");
+    }
+    assert_prometheus_well_formed(text);
+
+    // Without the Accept header the JSON document is unchanged.
+    let json_resp = client::request(&addr, "GET", "/metrics", None).unwrap();
+    let v = Value::parse(json_resp.body_str().trim()).unwrap();
+    assert!(v.get("memo_bytes").is_some());
+    assert!(v.get("memo_evictions").is_some());
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn memo_lru_eviction_is_bounded_and_counted() {
+    let handle = spawn(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        threads: 1,
+        max_queue: 4,
+        memo_entries: 1,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let addr = handle.addr().to_string();
+    let run = |body: &str| {
+        let raw = client::raw_request(&addr, "POST", "/run", Some(body)).unwrap();
+        assert!(String::from_utf8_lossy(&raw).contains("event: done"));
+    };
+    run(&tiny_product_body(970_000));
+    // Memoization lands just after the stream closes; wait for it.
+    wait_until("first result memoized", || metric(&addr, "memo_bytes") > 0);
+    assert_eq!(metric(&addr, "memo_entries"), 1);
+    assert_eq!(metric(&addr, "memo_evictions"), 0);
+    // A second distinct spec evicts the first (cap is one entry).
+    run(&tiny_product_body(980_000));
+    wait_until("lru eviction", || metric(&addr, "memo_evictions") == 1);
+    assert_eq!(metric(&addr, "memo_entries"), 1);
+    // The evicted spec recomputes rather than replaying.
+    run(&tiny_product_body(970_000));
+    assert_eq!(metric(&addr, "memo_misses"), 3);
+    assert_eq!(metric(&addr, "runs_submitted"), 3);
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn traced_runs_stream_span_frames_and_leave_results_unchanged() {
+    let handle = serve(1, 1, 4, false);
+    let addr = handle.addr().to_string();
+    let body = fig4_body();
+    let mut events: Vec<(String, String)> = Vec::new();
+    let (status, _) = client::post_sse(&addr, "/run?trace=1", &body, |ev, data| {
+        events.push((ev.to_string(), data.to_string()));
+    })
+    .unwrap();
+    assert_eq!(status, 200);
+    let kinds: Vec<&str> = events.iter().map(|(e, _)| e.as_str()).collect();
+    assert!(kinds.contains(&"span"), "{kinds:?}");
+    assert_eq!(kinds.last(), Some(&"done"));
+    // Span frames carry well-formed Chrome trace events.
+    for (_, data) in events.iter().filter(|(e, _)| e == "span") {
+        let v = Value::parse(data).unwrap();
+        let evs = v.get("events").unwrap().as_arr().unwrap();
+        assert!(!evs.is_empty());
+        for e in evs {
+            let ph = e.get("ph").unwrap().as_str().unwrap();
+            assert!(matches!(ph, "X" | "i" | "M"), "{ph}");
+            if ph == "X" {
+                assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+            }
+        }
+    }
+    // Tracing is passive: the streamed figure equals the untraced run
+    // (table-level — Figure::from_json rebuilds min = max = mean).
+    let fig_data = &events.iter().find(|(e, _)| e == "figure").unwrap().1;
+    let streamed = Figure::from_json(
+        Value::parse(fig_data).unwrap().get("output").unwrap().get("figure").unwrap(),
+    )
+    .unwrap();
+    let local = SweepRunner::serial().run(&experiments::spec_by_name("fig4").unwrap());
+    assert_eq!(streamed.to_table(), local.to_table());
+    // Traced runs bypass the memo on both ends: nothing was cached, and
+    // an untraced resubmission computes fresh (a miss, not a hit).
+    assert_eq!(metric(&addr, "memo_entries"), 0);
+    assert_eq!(metric(&addr, "memo_hits"), 0);
+    let raw = client::raw_request(&addr, "POST", "/run", Some(&body)).unwrap();
+    assert!(String::from_utf8_lossy(&raw).contains("event: done"));
+    assert_eq!(metric(&addr, "memo_misses"), 1);
+    assert_eq!(metric(&addr, "runs_submitted"), 2);
     handle.shutdown();
     handle.join();
 }
