@@ -38,14 +38,12 @@ fn main() {
         let mut note = "";
         if job == 15 {
             let t = session.engine.now;
-            session.engine.nodes[1] =
-                session.engine.nodes[1].clone().with_interference(vec![(t, 0.5)]);
+            session.engine.set_node_interference(1, vec![(t, 0.5)]);
             note = "<- interference x0.5 lands on node 1";
         }
         if job == 32 {
             let t = session.engine.now;
-            session.engine.nodes[1] =
-                session.engine.nodes[1].clone().with_interference(vec![(t, 0.25)]);
+            session.engine.set_node_interference(1, vec![(t, 0.25)]);
             note = "<- interference deepens to x0.25";
         }
         let file = session.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut session.rng);

@@ -91,9 +91,6 @@ fn main() {
             }
             "figure" => {
                 if let Some(fv) = v.get("output").and_then(|o| o.get("figure")) {
-                    // from_json is lossy on sample extremes (the wire
-                    // form has mean/std/n only, so min = max = mean);
-                    // to_table renders mean ± σ, which round-trips.
                     match Figure::from_json(fv) {
                         Ok(fig) => println!("\n{}", fig.to_table()),
                         Err(e) => eprintln!("bad figure frame: {e}"),

@@ -1,0 +1,87 @@
+//! Engine event throughput on the datacenter-scale ladder: the PR 9
+//! refactor's headline number. Drains an identical volume of chained
+//! CPU-job events (plus mid-run capacity bursts) through clusters of
+//! 100, 1k and 10k nodes — before the sharded heaps / arena / volatile
+//! partition, cost per event grew with cluster size; now the three
+//! rungs should sit within a small factor of each other.
+//!
+//! Writes `BENCH_cluster_scale_n{100,1k,10k}.json` into
+//! `$HEMT_BENCH_DIR` (default `bench_results/`) for the CI
+//! bench-trajectory gate. Run via `cargo bench --bench cluster_scale`.
+
+use hemt::bench_harness::time_and_report as timed;
+use hemt::netsim::NetSim;
+use hemt::nodes::Node;
+use hemt::sim::{Engine, Event};
+
+/// Node speeds (cores), cycled across the cluster.
+const SPEEDS: [f64; 4] = [1.0, 0.8, 0.6, 0.4];
+/// Total chained tasks per drain — constant across rungs, so the three
+/// timings isolate the cost of cluster size, not workload size.
+const TASKS: usize = 100_000;
+/// Capacity-burst timers per drain: each throttles or restores every
+/// 16th node in one batch, the dynamics-playback access pattern.
+const BURSTS: usize = 4;
+
+const BURST_TAG_BASE: u64 = 1 << 40;
+
+/// Drain `TASKS` chained unit jobs through an `n`-node engine; returns
+/// the number of events delivered.
+fn drain(n: usize) -> usize {
+    let jobs_per_node = TASKS / n;
+    let nodes: Vec<Node> = (0..n)
+        .map(|i| Node::fixed(&format!("n{i}"), SPEEDS[i % 4]))
+        .collect();
+    let mut e = Engine::new(nodes, NetSim::new());
+    let mut left = vec![jobs_per_node - 1; n];
+    for node in 0..n {
+        e.add_cpu_job(node, SPEEDS[node % 4], 1.0, node as u64);
+    }
+    // Slowest rung finishes at jobs_per_node / 0.4; spread the bursts
+    // over the first half so throttled nodes still drain in-window.
+    let horizon = jobs_per_node as f64 * 2.5;
+    for k in 0..BURSTS {
+        let at = horizon * 0.5 * (k + 1) as f64 / BURSTS as f64;
+        e.set_timer(at, BURST_TAG_BASE + k as u64);
+    }
+    let mut events = 0usize;
+    while let Some(ev) = e.step() {
+        events += 1;
+        match ev {
+            Event::Timer { tag } => {
+                let mult = if (tag - BURST_TAG_BASE) % 2 == 0 { 0.5 } else { 1.0 };
+                for node in (0..n).step_by(16) {
+                    e.set_node_capacity(node, mult);
+                }
+            }
+            Event::JobDone { tag, .. } => {
+                let node = tag as usize;
+                if left[node] > 0 {
+                    left[node] -= 1;
+                    e.add_cpu_job(node, SPEEDS[node % 4], 1.0, tag);
+                }
+            }
+            Event::FlowDone { .. } => unreachable!("no flows in this bench"),
+        }
+    }
+    events
+}
+
+fn bench_rung(name: &str, n: usize) {
+    let expected = TASKS / n * n + BURSTS;
+    let s = timed(name, 1, 5, || {
+        assert_eq!(drain(n), expected);
+    });
+    println!(
+        "{name}: {:>12.0} events/s  ({} s per {expected}-event drain)",
+        expected as f64 / s.mean,
+        s.pm(4)
+    );
+}
+
+fn main() {
+    println!("== cluster_scale (engine throughput vs cluster size) ==");
+    bench_rung("cluster_scale_n100", 100);
+    bench_rung("cluster_scale_n1k", 1_000);
+    bench_rung("cluster_scale_n10k", 10_000);
+}

@@ -89,9 +89,10 @@ impl RunRequest {
     }
 
     /// Parse a request. `product_sweep` accepts either a full `"spec"`
-    /// or the `"preset"` shorthand (`tiny_tasks` | `dynamics`), which is
-    /// resolved to the full spec at parse time — so a preset request and
-    /// its expanded equivalent serialize (and memo-hash) identically.
+    /// or the `"preset"` shorthand (`tiny_tasks` | `dynamics` |
+    /// `cluster_scale`), which is resolved to the full spec at parse
+    /// time — so a preset request and its expanded equivalent serialize
+    /// (and memo-hash) identically.
     pub fn from_json(v: &Value) -> Result<RunRequest, String> {
         let ty = v
             .get("type")
@@ -123,9 +124,11 @@ impl RunRequest {
                 let spec = match v.get("preset").and_then(Value::as_str) {
                     Some("tiny_tasks") => ProductSweepSpec::tiny_tasks_regimes(),
                     Some("dynamics") => ProductSweepSpec::dynamic_regimes(),
+                    Some("cluster_scale") => ProductSweepSpec::cluster_scale_regimes(),
                     Some(other) => {
                         return Err(format!(
-                            "unknown preset '{other}' (expected tiny_tasks or dynamics)"
+                            "unknown preset '{other}' (expected tiny_tasks, dynamics, or \
+                             cluster_scale)"
                         ))
                     }
                     None => ProductSweepSpec::from_json(
@@ -189,22 +192,7 @@ impl RunRequest {
                 if spec.trials == 0 {
                     return Err("product sweep needs trials >= 1".into());
                 }
-                for (axis, len) in [
-                    ("dynamics", spec.dynamics.len()),
-                    ("clusters", spec.clusters.len()),
-                    ("workloads", spec.workloads.len()),
-                    ("policies", spec.policies.len()),
-                    ("granularities", spec.granularities.len()),
-                ] {
-                    if len == 0 {
-                        return Err(format!("product axis '{axis}' must be non-empty"));
-                    }
-                    if len > 100 {
-                        return Err(format!(
-                            "product axis '{axis}' exceeds 100 values ({len})"
-                        ));
-                    }
-                }
+                spec.validate()?;
             }
             RunRequest::Dynamics { rounds, .. } | RunRequest::Steal { rounds, .. } => {
                 if *rounds == 0 {
@@ -669,6 +657,15 @@ mod tests {
         match dyn_preset {
             RunRequest::ProductSweep { spec } => {
                 assert_eq!(spec, ProductSweepSpec::dynamic_regimes())
+            }
+            other => panic!("expected product sweep, got {other:?}"),
+        }
+        let scale_preset =
+            RunRequest::from_str(r#"{"type": "product_sweep", "preset": "cluster_scale"}"#)
+                .unwrap();
+        match scale_preset {
+            RunRequest::ProductSweep { spec } => {
+                assert_eq!(spec, ProductSweepSpec::cluster_scale_regimes())
             }
             other => panic!("expected product sweep, got {other:?}"),
         }

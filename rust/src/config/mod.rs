@@ -157,6 +157,28 @@ impl ClusterConfig {
         }
     }
 
+    /// A datacenter-scale heterogeneous cluster of `n` static nodes,
+    /// speeds cycling over four hardware generations (1.0 / 0.8 / 0.6 /
+    /// 0.4 cores) — the regime the sharded engine and the pruned HeMT
+    /// policy exist for. HDFS fans out with the cluster (one datanode
+    /// per four nodes, clamped to [4, 64]).
+    pub fn heterogeneous_scale(n: usize) -> ClusterConfig {
+        assert!(n > 0, "need at least one node");
+        const SPEEDS: [f64; 4] = [1.0, 0.8, 0.6, 0.4];
+        let cores: Vec<f64> = (0..n).map(|i| SPEEDS[i % SPEEDS.len()]).collect();
+        ClusterConfig {
+            nodes: cores.iter().map(|&c| NodeConfig::Static { cores: c }).collect(),
+            exec_cpus: cores,
+            interference: vec![vec![]; n],
+            node_uplink_mbps: 600.0,
+            node_downlink_mbps: 600.0,
+            hdfs_datanodes: (n / 4).clamp(4, 64),
+            hdfs_replication: 2,
+            hdfs_uplink_mbps: 600.0,
+            hdfs_serving_eta: crate::coordinator::driver::DEFAULT_HDFS_SERVING_ETA,
+        }
+    }
+
     pub fn build_session(&self, params: SimParams, seed: u64) -> crate::coordinator::driver::Session {
         let nodes: Vec<Node> = self
             .nodes
@@ -387,6 +409,13 @@ pub enum PolicyConfig {
     /// executors per the [`StealPolicy`]
     /// ([`crate::coordinator::stealing`]).
     HemtSteal(StealPolicy),
+    /// Datacenter-scale HeMT: capacity-hint weights pruned and quantized
+    /// by [`crate::partition::prune_weights`] (after arXiv 2306.00274) —
+    /// executors slower than `floor` of the fastest get no task at all,
+    /// survivors collapse onto at most `classes` geometric speed
+    /// classes, so planning cost tracks the class count rather than the
+    /// node count.
+    HemtPruned { classes: usize, floor: f64 },
 }
 
 impl PolicyConfig {
@@ -409,6 +438,11 @@ impl PolicyConfig {
             PolicyConfig::HemtSteal(pol) => json::obj(vec![
                 ("kind", json::s("hemt_steal")),
                 ("steal", pol.to_json()),
+            ]),
+            PolicyConfig::HemtPruned { classes, floor } => json::obj(vec![
+                ("kind", json::s("hemt_pruned")),
+                ("classes", json::num(*classes as f64)),
+                ("floor", json::num(*floor)),
             ]),
         }
     }
@@ -435,6 +469,10 @@ impl PolicyConfig {
                 Some(s) => StealPolicy::from_json(s)?,
                 None => StealPolicy::default(),
             })),
+            "hemt_pruned" => Ok(PolicyConfig::HemtPruned {
+                classes: v.get("classes").and_then(Value::as_usize).unwrap_or(4),
+                floor: v.get("floor").and_then(Value::as_f64).unwrap_or(0.05),
+            }),
             other => Err(format!("unknown policy kind '{other}'")),
         }
     }
@@ -540,6 +578,42 @@ mod tests {
             PolicyConfig::from_json(&bare).unwrap(),
             PolicyConfig::HemtSteal(StealPolicy::default())
         );
+    }
+
+    #[test]
+    fn pruned_policy_config_roundtrips() {
+        let mut c = sample();
+        c.policy = PolicyConfig::HemtPruned { classes: 6, floor: 0.1 };
+        let back = ExperimentConfig::from_str(&c.to_json().pretty()).unwrap();
+        assert_eq!(c, back);
+        // A bare kind takes the documented defaults.
+        let bare = json::obj(vec![("kind", json::s("hemt_pruned"))]);
+        assert_eq!(
+            PolicyConfig::from_json(&bare).unwrap(),
+            PolicyConfig::HemtPruned { classes: 4, floor: 0.05 }
+        );
+    }
+
+    #[test]
+    fn heterogeneous_scale_cycles_speeds_and_scales_hdfs() {
+        let c = ClusterConfig::heterogeneous_scale(10);
+        assert_eq!(c.nodes.len(), 10);
+        assert_eq!(c.exec_cpus[0], 1.0);
+        assert_eq!(c.exec_cpus[4], 1.0, "speeds cycle with period 4");
+        assert_eq!(c.exec_cpus[3], 0.4);
+        assert_eq!(c.hdfs_datanodes, 4, "small clusters keep the 4-datanode floor");
+        assert_eq!(ClusterConfig::heterogeneous_scale(400).hdfs_datanodes, 64, "capped at 64");
+        assert_eq!(ClusterConfig::heterogeneous_scale(100).hdfs_datanodes, 25);
+        let back = ExperimentConfig::from_str(
+            &ExperimentConfig {
+                cluster: ClusterConfig::heterogeneous_scale(16),
+                ..sample()
+            }
+            .to_json()
+            .pretty(),
+        )
+        .unwrap();
+        assert_eq!(back.cluster, ClusterConfig::heterogeneous_scale(16));
     }
 
     #[test]

@@ -416,23 +416,35 @@ impl Session {
         self.dynamics = Some(DynamicsRuntime { events, next: 0 });
     }
 
-    /// Fire capacity event `idx`: apply its multiplier and chain the
-    /// timer for the next event. Stale timer indices (already applied)
-    /// are ignored.
+    /// Fire capacity event `idx`: apply its multiplier — together with
+    /// every later event sharing its timestamp (correlated fan-out can
+    /// throttle a whole rack at one instant) — and chain one timer for
+    /// the next distinct event time. Batching the burst costs one timer
+    /// fire and at most one re-level per touched node instead of a
+    /// chained timer per event; multipliers take effect at the next
+    /// step's re-level either way, and per-node application order is
+    /// preserved, so the post-tick rates are bit-identical. Stale timer
+    /// indices (already applied) are ignored.
     fn apply_capacity_event(&mut self, idx: usize) {
         let Some(rt) = self.dynamics.as_mut() else { return };
         if idx != rt.next {
             return;
         }
-        let (_, node, mult) = rt.events[idx];
-        rt.next += 1;
-        let next_idx = rt.next;
-        let next_at = rt.events.get(next_idx).map(|&(t, _, _)| t);
+        let t0 = rt.events[idx].0;
+        let mut end = idx + 1;
+        while end < rt.events.len() && rt.events[end].0 == t0 {
+            end += 1;
+        }
+        rt.next = end;
+        let batch: Vec<(f64, usize, f64)> = rt.events[idx..end].to_vec();
+        let next_at = rt.events.get(end).map(|&(t, _, _)| t);
         let t = self.engine.now;
-        crate::obs::record(|r| r.push(crate::obs::ObsEvent::Capacity { t, node, mult }));
-        self.engine.set_node_capacity(node, mult);
-        if let Some(t) = next_at {
-            self.engine.set_timer(t, tag_of(KIND_CAPACITY, 0, next_idx));
+        for (_, node, mult) in batch {
+            crate::obs::record(|r| r.push(crate::obs::ObsEvent::Capacity { t, node, mult }));
+            self.engine.set_node_capacity(node, mult);
+        }
+        if let Some(at) = next_at {
+            self.engine.set_timer(at, tag_of(KIND_CAPACITY, 0, end));
         }
     }
 
@@ -470,23 +482,34 @@ impl Session {
     }
 
     /// Fire link event `idx`: apply its multiplier to the link's nominal
-    /// capacity and chain the timer for the next event. Stale timer
-    /// indices (already applied) are ignored.
+    /// capacity — together with every later event sharing its timestamp
+    /// (a degrading ToR hits all its links at one instant) — and chain
+    /// one timer for the next distinct event time, mirroring
+    /// [`Session::apply_capacity_event`]'s batching. Stale timer indices
+    /// (already applied) are ignored.
     fn apply_link_capacity_event(&mut self, idx: usize) {
         let Some(rt) = self.link_dynamics.as_mut() else { return };
         if idx != rt.next {
             return;
         }
-        let (_, link, mult) = rt.events[idx];
-        rt.next += 1;
-        let next_idx = rt.next;
-        let next_at = rt.events.get(next_idx).map(|&(t, _, _)| t);
-        let capacity = rt.nominal[link] * mult;
+        let t0 = rt.events[idx].0;
+        let mut end = idx + 1;
+        while end < rt.events.len() && rt.events[end].0 == t0 {
+            end += 1;
+        }
+        rt.next = end;
+        let batch: Vec<(f64, usize, f64)> = rt.events[idx..end]
+            .iter()
+            .map(|&(_, link, mult)| (rt.nominal[link] * mult, link, mult))
+            .collect();
+        let next_at = rt.events.get(end).map(|&(t, _, _)| t);
         let t = self.engine.now;
-        crate::obs::record(|r| r.push(crate::obs::ObsEvent::LinkCapacity { t, link, mult }));
-        self.engine.set_link_capacity(link, capacity);
-        if let Some(t) = next_at {
-            self.engine.set_timer(t, tag_of(KIND_LINK_CAPACITY, 0, next_idx));
+        for (capacity, link, mult) in batch {
+            crate::obs::record(|r| r.push(crate::obs::ObsEvent::LinkCapacity { t, link, mult }));
+            self.engine.set_link_capacity(link, capacity);
+        }
+        if let Some(at) = next_at {
+            self.engine.set_timer(at, tag_of(KIND_LINK_CAPACITY, 0, end));
         }
     }
 

@@ -50,6 +50,12 @@ pub enum PartitionPolicy {
     /// HeMT: one task per executor, sized by these weights; task `i` is
     /// bound to executor `i`.
     Hemt(Vec<f64>),
+    /// Datacenter-scale HeMT over pruned, class-quantized weights (see
+    /// [`crate::partition::prune_weights`]): zero-weight executors get no
+    /// task at all, survivors get one task each sized by their class
+    /// representative. The weight vector is still full length — one
+    /// entry per executor — so bindings keep their executor indices.
+    HemtPruned(Vec<f64>),
 }
 
 /// One computation stage.
@@ -85,6 +91,17 @@ pub struct StageTasks {
     pub bucket_fractions: Option<Vec<f64>>,
 }
 
+/// Split a full-length pruned weight vector into the surviving executor
+/// indices and their (positive) weights, validating the invariants the
+/// `HemtPruned` arms rely on.
+fn pruned_survivors(weights: &[f64], num_executors: usize) -> (Vec<usize>, Vec<f64>) {
+    assert_eq!(weights.len(), num_executors, "one weight per executor");
+    let survivors: Vec<usize> = (0..weights.len()).filter(|&i| weights[i] > 0.0).collect();
+    assert!(!survivors.is_empty(), "pruning must keep at least one executor");
+    let sw: Vec<f64> = survivors.iter().map(|&i| weights[i]).collect();
+    (survivors, sw)
+}
+
 /// Materialize a stage's tasks given the executor count and (for shuffle
 /// stages) the total bytes emitted by the previous stage.
 pub fn plan_tasks(
@@ -95,6 +112,30 @@ pub fn plan_tasks(
     match &stage.input {
         StageInput::Hdfs { file } => {
             let total = file.size_bytes;
+            if let PartitionPolicy::HemtPruned(w) = &stage.policy {
+                let (survivors, sw) = pruned_survivors(w, num_executors);
+                let part = Partitioning::hemt(total, &sw);
+                let ranges = part.ranges();
+                // A tiny stage can apportion zero bytes to a slow class;
+                // drop those tasks — dispatching a zero-byte read buys
+                // nothing and the engine rejects zero-work jobs.
+                let mut bytes = Vec::new();
+                let mut bound_to = Vec::new();
+                let mut kept_ranges = Vec::new();
+                for (i, &b) in part.task_bytes.iter().enumerate() {
+                    if b > 0 {
+                        bytes.push(b);
+                        bound_to.push(Some(survivors[i]));
+                        kept_ranges.push(ranges[i]);
+                    }
+                }
+                return StageTasks {
+                    bytes,
+                    bound_to,
+                    ranges: Some(kept_ranges),
+                    bucket_fractions: None,
+                };
+            }
             let (part, bound) = match &stage.policy {
                 PartitionPolicy::EvenTasks(m) => (Partitioning::even(total, *m), false),
                 PartitionPolicy::PerBlock => {
@@ -106,6 +147,7 @@ pub fn plan_tasks(
                     assert_eq!(w.len(), num_executors, "one weight per executor");
                     (Partitioning::hemt(total, w), true)
                 }
+                PartitionPolicy::HemtPruned(_) => unreachable!("returned above"),
             };
             let ranges = part.ranges();
             let bound_to = (0..part.num_tasks())
@@ -119,6 +161,30 @@ pub fn plan_tasks(
             }
         }
         StageInput::Shuffle => {
+            if let PartitionPolicy::HemtPruned(w) = &stage.policy {
+                let (survivors, sw) = pruned_survivors(w, num_executors);
+                let fractions = SkewedHashPartitioner::new(&sw, 1 << 20).bucket_fractions();
+                // Same zero-byte guard as the HDFS arm: a bucket whose
+                // share of the shuffle rounds to nothing is dropped (the
+                // lost sliver is under half a byte per mapper).
+                let mut bytes = Vec::new();
+                let mut bound_to = Vec::new();
+                let mut kept_fractions = Vec::new();
+                for (i, &f) in fractions.iter().enumerate() {
+                    let b = (prev_output_bytes as f64 * f).round() as u64;
+                    if b > 0 {
+                        bytes.push(b);
+                        bound_to.push(Some(survivors[i]));
+                        kept_fractions.push(f);
+                    }
+                }
+                return StageTasks {
+                    bytes,
+                    bound_to,
+                    ranges: None,
+                    bucket_fractions: Some(kept_fractions),
+                };
+            }
             let (fractions, bound): (Vec<f64>, bool) = match &stage.policy {
                 PartitionPolicy::EvenTasks(m) => {
                     (SkewedHashPartitioner::even(*m).bucket_fractions(), false)
@@ -131,6 +197,7 @@ pub fn plan_tasks(
                     assert_eq!(w.len(), num_executors, "one weight per executor");
                     (SkewedHashPartitioner::new(w, 1 << 20).bucket_fractions(), true)
                 }
+                PartitionPolicy::HemtPruned(_) => unreachable!("returned above"),
             };
             let bytes: Vec<u64> = fractions
                 .iter()
@@ -211,6 +278,61 @@ mod tests {
     #[should_panic(expected = "one weight per executor")]
     fn hemt_weight_arity_checked() {
         plan_tasks(&hdfs_stage(PartitionPolicy::Hemt(vec![1.0])), 2, 0);
+    }
+
+    #[test]
+    fn pruned_hdfs_tasks_skip_zero_weight_executors() {
+        let t = plan_tasks(
+            &hdfs_stage(PartitionPolicy::HemtPruned(vec![1.0, 0.0, 0.5, 0.0])),
+            4,
+            0,
+        );
+        assert_eq!(t.bound_to, vec![Some(0), Some(2)], "only survivors get tasks");
+        assert_eq!(t.bytes.iter().sum::<u64>(), 1000, "no bytes lost to pruning");
+        assert!((t.bytes[0] as f64 / t.bytes[1] as f64 - 2.0).abs() < 0.01);
+        let ranges = t.ranges.as_ref().unwrap();
+        assert_eq!(ranges.len(), 2);
+        assert_eq!(ranges[0].0, 0);
+        assert_eq!(ranges[1].0, ranges[0].1, "surviving ranges stay contiguous");
+    }
+
+    #[test]
+    fn pruned_hdfs_drops_zero_byte_tasks() {
+        // 3-byte file over survivors weighted 1.0 / 1.0 / 1e-9: the
+        // near-zero class gets 0 bytes and must not yield a task.
+        let stage = StagePlan {
+            input: StageInput::Hdfs { file: hdfs_file(3, 300) },
+            policy: PartitionPolicy::HemtPruned(vec![1.0, 1.0, 1e-9]),
+            cpu_secs_per_byte: 1e-6,
+            output_ratio: 0.1,
+        };
+        let t = plan_tasks(&stage, 3, 0);
+        assert!(t.bytes.iter().all(|&b| b > 0), "zero-byte tasks dropped: {:?}", t.bytes);
+        assert_eq!(t.bytes.iter().sum::<u64>(), 3);
+        assert_eq!(t.bytes.len(), t.bound_to.len());
+        assert_eq!(t.bytes.len(), t.ranges.as_ref().unwrap().len());
+    }
+
+    #[test]
+    fn pruned_shuffle_buckets_bind_to_survivors() {
+        let stage = StagePlan {
+            input: StageInput::Shuffle,
+            policy: PartitionPolicy::HemtPruned(vec![3.0, 0.0, 1.0]),
+            cpu_secs_per_byte: 0.0,
+            output_ratio: 0.0,
+        };
+        let t = plan_tasks(&stage, 3, 4000);
+        assert_eq!(t.bound_to, vec![Some(0), Some(2)]);
+        assert_eq!(t.bytes.iter().sum::<u64>(), 4000);
+        assert!((t.bytes[0] as f64 / 4000.0 - 0.75).abs() < 0.01);
+        let fr = t.bucket_fractions.as_ref().unwrap();
+        assert!((fr.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one executor")]
+    fn pruned_rejects_all_zero_weights() {
+        plan_tasks(&hdfs_stage(PartitionPolicy::HemtPruned(vec![0.0, 0.0])), 2, 0);
     }
 
     #[test]

@@ -78,8 +78,7 @@ pub fn alpha_spec() -> SweepSpec {
             for job_idx in 0..70usize {
                 if job_idx == 15 {
                     let t = s.engine.now;
-                    s.engine.nodes[1] =
-                        s.engine.nodes[1].clone().with_interference(vec![(t, 0.5)]);
+                    s.engine.set_node_interference(1, vec![(t, 0.5)]);
                 }
                 let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
                 let policy = resolve_policy(

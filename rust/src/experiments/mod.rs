@@ -175,13 +175,11 @@ pub fn fig7_spec() -> SweepSpec {
             // before job 15 (halving it) and intensifies before job 32.
             if job_idx == 15 {
                 let t = s.engine.now;
-                s.engine.nodes[1] =
-                    s.engine.nodes[1].clone().with_interference(vec![(t, 0.5)]);
+                s.engine.set_node_interference(1, vec![(t, 0.5)]);
             }
             if job_idx == 32 {
                 let t = s.engine.now;
-                s.engine.nodes[1] =
-                    s.engine.nodes[1].clone().with_interference(vec![(t, 0.25)]);
+                s.engine.set_node_interference(1, vec![(t, 0.25)]);
             }
             let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
             let policy = resolve_policy(
@@ -557,6 +555,15 @@ pub fn product_sweep_spec() -> SweepSpec {
     ProductSweepSpec::tiny_tasks_regimes().to_spec()
 }
 
+/// `hemt figure pruned_scale` / `hemt sweep --preset cluster_scale`:
+/// heterogeneous clusters of growing size × HomT granularity ladder vs
+/// hint-HeMT vs pruned HeMT ([`crate::partition::prune_weights`]) — the
+/// datacenter-scale regime the sharded engine exists for, at CI-sized
+/// node counts.
+pub fn pruned_scale_spec() -> SweepSpec {
+    ProductSweepSpec::cluster_scale_regimes().to_spec()
+}
+
 // ------------------------------------------------------------- dynamics
 
 /// `hemt dynamics` / `hemt figure dyn_compare`: Adaptive-HeMT vs static
@@ -647,6 +654,7 @@ pub fn spec_by_name(name: &str) -> Option<SweepSpec> {
         "net_steal" => Some(net_steal_spec()),
         "rack_steal" => Some(rack_steal_spec()),
         "link_degrade" => Some(link_degrade_spec()),
+        "pruned_scale" | "cluster_scale" => Some(pruned_scale_spec()),
         _ => None,
     }
 }
@@ -660,7 +668,7 @@ pub fn by_name(name: &str) -> Option<Figure> {
 pub const ALL_FIGURES: &[&str] = &[
     "fig4", "fig5", "fig7", "fig8", "fig9", "fig10_12", "fig13", "fig14", "fig15",
     "fig17", "fig18", "headline", "extension", "dyn_compare", "dyn_markov", "dyn_spot",
-    "dyn_steal", "net_steal", "rack_steal", "link_degrade",
+    "dyn_steal", "net_steal", "rack_steal", "link_degrade", "pruned_scale",
 ];
 
 /// One figure-registry entry: the canonical name plus a one-line
@@ -755,6 +763,10 @@ pub const FIGURES: &[FigureInfo] = &[
     FigureInfo {
         name: "link_degrade",
         description: "HeMT vs HomT with time-varying HDFS uplink capacities",
+    },
+    FigureInfo {
+        name: "pruned_scale",
+        description: "Cluster-scale ladder: HomT vs hint-HeMT vs pruned-class HeMT",
     },
 ];
 

@@ -45,7 +45,7 @@ fn usage() -> &'static str {
                                     design-choice ablations (alpha, speculation, rack, stale_credits)
   hemt run --config <file> [--json] [--threads N]
                                     run an experiment config
-  hemt sweep [--config <file>] [--preset <tiny_tasks|dynamics>] [--json] [--threads N]
+  hemt sweep [--config <file>] [--preset <tiny_tasks|dynamics|cluster_scale>] [--json] [--threads N]
                                     whole-grid product sweep (dynamics x clusters x
                                     workloads x policies x granularities); default:
                                     the built-in tiny-tasks regime product
@@ -261,9 +261,10 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
             Some(i) => match args.get(i + 1).map(String::as_str) {
                 Some("tiny_tasks") => hemt::sweep::ProductSweepSpec::tiny_tasks_regimes(),
                 Some("dynamics") => hemt::sweep::ProductSweepSpec::dynamic_regimes(),
+                Some("cluster_scale") => hemt::sweep::ProductSweepSpec::cluster_scale_regimes(),
                 Some(other) => {
                     return Err(format!(
-                        "unknown preset '{other}' (expected tiny_tasks or dynamics)"
+                        "unknown preset '{other}' (expected tiny_tasks, dynamics, or cluster_scale)"
                     ))
                 }
                 None => return Err("--preset needs a value".into()),

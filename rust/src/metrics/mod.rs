@@ -205,6 +205,8 @@ impl Figure {
                                                     ("label", json::s(&p.label)),
                                                     ("mean", json::num(p.stats.mean)),
                                                     ("std", json::num(p.stats.std)),
+                                                    ("min", json::num(p.stats.min)),
+                                                    ("max", json::num(p.stats.max)),
                                                     ("n", json::num(p.stats.n as f64)),
                                                 ])
                                             })
@@ -220,10 +222,10 @@ impl Figure {
     }
 
     /// Reconstruct a figure from its [`Figure::to_json`] form — what the
-    /// serve client does with streamed `figure` events. The JSON carries
-    /// per-point `mean`/`std`/`n` but not the sample extremes, so the
-    /// rebuilt [`Summary`] sets `min = max = mean`; everything
-    /// `to_table` renders (mean ± σ, n) round-trips exactly.
+    /// serve client does with streamed `figure` events. Every [`Summary`]
+    /// field (`mean`/`std`/`min`/`max`/`n`) round-trips exactly; payloads
+    /// written before `min`/`max` were serialized are still accepted, with
+    /// the missing extremes falling back to `mean`.
     pub fn from_json(v: &Value) -> Result<Figure, String> {
         let field = |v: &Value, k: &str| -> Result<String, String> {
             Ok(v.get(k)
@@ -246,6 +248,8 @@ impl Figure {
                         .ok_or_else(|| format!("point.{k} missing"))
                 };
                 let mean = num("mean")?;
+                // Pre-PR-9 payloads omit the extremes: degrade to `mean`.
+                let opt = |k: &str| pv.get(k).and_then(Value::as_f64);
                 series.points.push(Point {
                     x: num("x")?,
                     label: field(pv, "label")?,
@@ -253,8 +257,8 @@ impl Figure {
                         n: pv.get("n").and_then(Value::as_usize).ok_or("point.n missing")?,
                         mean,
                         std: num("std")?,
-                        min: mean,
-                        max: mean,
+                        min: opt("min").unwrap_or(mean),
+                        max: opt("max").unwrap_or(mean),
                     },
                 });
             }
@@ -356,6 +360,31 @@ mod tests {
         assert_eq!(back.to_table(), f.to_table());
         assert_eq!(back.to_json().pretty(), f.to_json().pretty());
         assert_eq!(back.series[0].points[0].stats.n, 2);
+        // The full Summary survives — extremes included, to the bit.
+        let (orig, got) = (&f.series[0].points[0].stats, &back.series[0].points[0].stats);
+        assert_eq!(got.min.to_bits(), orig.min.to_bits());
+        assert_eq!(got.max.to_bits(), orig.max.to_bits());
+        assert_eq!(got.min, 100.0);
+        assert_eq!(got.max, 110.0);
+    }
+
+    #[test]
+    fn figure_from_json_accepts_pre_extremes_payloads() {
+        // Payloads written before min/max were serialized (PR <= 8) carry
+        // only mean/std/n; parsing degrades the extremes to the mean.
+        let v = crate::util::json::Value::parse(
+            r#"{"title": "t", "x_label": "x", "y_label": "y", "series": [
+                {"name": "s", "points": [
+                    {"x": 2, "label": "", "mean": 105, "std": 5, "n": 2}
+                ]}
+            ]}"#,
+        )
+        .unwrap();
+        let fig = Figure::from_json(&v).unwrap();
+        let st = &fig.series[0].points[0].stats;
+        assert_eq!(st.mean, 105.0);
+        assert_eq!(st.min, 105.0);
+        assert_eq!(st.max, 105.0);
     }
 
     #[test]

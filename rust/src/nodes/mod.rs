@@ -128,6 +128,17 @@ impl Node {
         self
     }
 
+    /// Whether this node's available capacity can change *on its own*
+    /// as sim time passes — burstable credit dynamics or an
+    /// interference schedule. A `false` node's capacity moves only
+    /// through [`Node::set_dynamic_mult`] (an explicit, externally
+    /// driven event): its [`Node::advance`] is a no-op and its
+    /// [`Node::next_state_change`] is always `None`. The sim engine's
+    /// idle/active node partition is keyed on this.
+    pub fn is_time_varying(&self) -> bool {
+        matches!(self.capacity, Capacity::Burstable(_)) || !self.interference.is_empty()
+    }
+
     fn interference_mult(&self, now: f64) -> f64 {
         self.interference
             .iter()

@@ -9,6 +9,9 @@
 //! * [`SkewedHashPartitioner`] — the paper's Algorithm 1: a shuffle
 //!   partitioner that skews reduce buckets by capacity weights so HeMT
 //!   survives multi-stage jobs (Sec. 7).
+//! * [`prune_weights`] — sparse capacity classes for datacenter-scale
+//!   clusters (the pruned assignment of arXiv 2306.00274): straggler
+//!   executors dropped, survivors quantized onto a few speed classes.
 
 /// How a stage's input of `total` bytes is split into tasks.
 #[derive(Debug, Clone, PartialEq)]
@@ -141,6 +144,43 @@ impl SkewedHashPartitioner {
             })
             .collect()
     }
+}
+
+/// Sparse capacity classes for datacenter-scale HeMT (the pruned
+/// task-to-node assignment idea of arXiv 2306.00274): weights below
+/// `floor * max` are zeroed — those executors receive no task at all —
+/// and survivors are quantized onto at most `classes` geometric speed
+/// classes, so the planner reasons about a handful of distinct weights
+/// instead of tens of thousands.
+///
+/// Returns a vector the same length as `weights`; pruned entries are
+/// exactly `0.0`, surviving entries carry their class representative
+/// (the geometric midpoint of the class interval, `max * e^{-(k+½)·s}`
+/// with `s = ln(1/floor)/classes`). Only ratios matter downstream —
+/// [`Partitioning::hemt`] normalises by the sum.
+pub fn prune_weights(weights: &[f64], classes: usize, floor: f64) -> Vec<f64> {
+    assert!(!weights.is_empty(), "need at least one executor");
+    assert!(classes > 0, "need at least one capacity class");
+    assert!(floor > 0.0 && floor < 1.0, "floor must be in (0, 1): {floor}");
+    assert!(
+        weights.iter().all(|&w| w > 0.0 && w.is_finite()),
+        "weights must be positive and finite: {weights:?}"
+    );
+    let max = weights.iter().fold(f64::NEG_INFINITY, |a, &w| a.max(w));
+    let step = (1.0 / floor).ln() / classes as f64;
+    weights
+        .iter()
+        .map(|&w| {
+            if w < floor * max {
+                0.0
+            } else {
+                let k = ((max / w).ln() / step)
+                    .floor()
+                    .clamp(0.0, classes as f64 - 1.0);
+                max * (-(k + 0.5) * step).exp()
+            }
+        })
+        .collect()
 }
 
 /// FNV-1a — the record-hash stand-in for JVM `hashCode` in Algorithm 1.
@@ -281,6 +321,48 @@ mod tests {
                 seen[part.bucket_of(h)] = true;
             }
             assert!(seen.iter().all(|&s| s), "unreachable bucket: {seen:?}");
+        });
+    }
+
+    #[test]
+    fn prune_zeroes_stragglers_and_keeps_the_fast() {
+        let w = prune_weights(&[1.0, 0.9, 0.05], 4, 0.1);
+        assert_eq!(w[2], 0.0, "below-floor executor is pruned");
+        assert!(w[0] > 0.0 && w[1] > 0.0);
+    }
+
+    #[test]
+    fn prune_collapses_near_equal_weights_into_one_class() {
+        let w = prune_weights(&[1.0, 0.98, 0.3], 2, 0.25);
+        assert_eq!(w[0].to_bits(), w[1].to_bits(), "same class, same representative");
+        assert!(w[2] > 0.0 && w[2] < w[0], "slower class keeps a smaller representative");
+    }
+
+    #[test]
+    fn prune_caps_distinct_classes_and_preserves_order() {
+        prop::check("prune-classes", 0x9024, 300, |rng: &mut Rng| {
+            let n = rng.range(1, 40);
+            let classes = rng.range(1, 8);
+            let floor = rng.range_f64(0.05, 0.8);
+            let weights: Vec<f64> = (0..n).map(|_| rng.range_f64(0.01, 4.0)).collect();
+            let pruned = prune_weights(&weights, classes, floor);
+            assert_eq!(pruned.len(), n);
+            let max = weights.iter().fold(f64::NEG_INFINITY, |a, &w| a.max(w));
+            let mut reps: Vec<u64> =
+                pruned.iter().filter(|&&w| w > 0.0).map(|w| w.to_bits()).collect();
+            reps.sort_unstable();
+            reps.dedup();
+            assert!(!reps.is_empty(), "the fastest executor always survives");
+            assert!(reps.len() <= classes, "{} distinct reps from {classes} classes", reps.len());
+            for i in 0..n {
+                // Survivors are exactly the weights at or above the floor.
+                assert_eq!(pruned[i] > 0.0, weights[i] >= floor * max);
+                for j in 0..n {
+                    if weights[i] >= weights[j] {
+                        assert!(pruned[i] >= pruned[j], "pruning must preserve speed order");
+                    }
+                }
+            }
         });
     }
 

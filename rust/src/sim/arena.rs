@@ -1,0 +1,218 @@
+//! Flat slot arena for live CPU jobs.
+//!
+//! Replaces the engine's former `BTreeMap<JobId, CpuJob>`. Job ids stay
+//! `u64`, monotonic and never reused — completion ties break on id and
+//! water-fill order is ascending-id, so recycling ids would reorder
+//! simultaneous events — but an id now resolves through a dense
+//! `id_to_slot` table into a reusable slot of a flat `Vec<CpuJob>`.
+//! Lookups are two array indexes instead of a B-tree descent, and the
+//! per-step advance loop walks `live` (an unordered dense slot list)
+//! with no pointer chasing. Per-job advance arithmetic is independent
+//! across jobs, so the unordered iteration cannot change any float
+//! result.
+
+use super::{CpuJob, JobId};
+
+const GONE: u32 = u32::MAX;
+
+#[derive(Clone)]
+pub(crate) struct JobArena {
+    /// Slot storage; a freed slot keeps its last value until reuse.
+    slots: Vec<CpuJob>,
+    free: Vec<u32>,
+    /// `id_to_slot[id]` for every id ever issued; `GONE` once removed.
+    id_to_slot: Vec<u32>,
+    /// Unordered dense list of live slots — the advance iteration set.
+    live: Vec<u32>,
+    /// `slot_pos[slot]` = position of `slot` in `live` (O(1) removal).
+    slot_pos: Vec<u32>,
+}
+
+impl JobArena {
+    pub fn new() -> JobArena {
+        JobArena {
+            slots: Vec::new(),
+            free: Vec::new(),
+            id_to_slot: Vec::new(),
+            live: Vec::new(),
+            slot_pos: Vec::new(),
+        }
+    }
+
+    /// Number of live jobs.
+    pub fn len(&self) -> usize {
+        self.live.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live.is_empty()
+    }
+
+    /// The id the next [`JobArena::insert`] will use (ids are issued
+    /// dense and ascending; the arena is the allocator).
+    pub fn next_id(&self) -> JobId {
+        self.id_to_slot.len() as JobId
+    }
+
+    pub fn insert(&mut self, job: CpuJob) -> JobId {
+        let id = self.next_id();
+        debug_assert_eq!(job.id, id, "jobs must carry the arena-issued id");
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slots[s as usize] = job;
+                s
+            }
+            None => {
+                assert!(self.slots.len() < GONE as usize, "job arena slot space exhausted");
+                self.slots.push(job);
+                (self.slots.len() - 1) as u32
+            }
+        };
+        self.id_to_slot.push(slot);
+        if self.slot_pos.len() <= slot as usize {
+            self.slot_pos.resize(slot as usize + 1, GONE);
+        }
+        self.slot_pos[slot as usize] = self.live.len() as u32;
+        self.live.push(slot);
+        id
+    }
+
+    fn slot_of(&self, id: JobId) -> Option<usize> {
+        match self.id_to_slot.get(id as usize) {
+            Some(&s) if s != GONE => Some(s as usize),
+            _ => None,
+        }
+    }
+
+    pub fn get(&self, id: JobId) -> Option<&CpuJob> {
+        self.slot_of(id).map(|s| &self.slots[s])
+    }
+
+    pub fn get_mut(&mut self, id: JobId) -> Option<&mut CpuJob> {
+        self.slot_of(id).map(move |s| &mut self.slots[s])
+    }
+
+    /// The job's current rate generation (`None` when gone) — the stale
+    /// candidate check, kept allocation- and branch-light for the heap
+    /// skim and compaction filters.
+    pub fn gen_of(&self, id: JobId) -> Option<u64> {
+        self.slot_of(id).map(|s| self.slots[s].gen)
+    }
+
+    pub fn remove(&mut self, id: JobId) -> Option<CpuJob> {
+        let slot = self.slot_of(id)?;
+        self.id_to_slot[id as usize] = GONE;
+        let pos = self.slot_pos[slot] as usize;
+        self.slot_pos[slot] = GONE;
+        let last = self.live.pop().expect("live list tracks slot_pos");
+        if pos < self.live.len() {
+            self.live[pos] = last;
+            self.slot_pos[last as usize] = pos as u32;
+        } else {
+            debug_assert_eq!(last as usize, slot);
+        }
+        self.free.push(slot as u32);
+        Some(self.slots[slot].clone())
+    }
+
+    /// Run `f` over every live job, unordered. Used by the advance loop;
+    /// per-job arithmetic must not depend on other jobs.
+    pub fn for_each_live_mut(&mut self, mut f: impl FnMut(&mut CpuJob)) {
+        for &slot in &self.live {
+            f(&mut self.slots[slot as usize]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: JobId) -> CpuJob {
+        CpuJob {
+            id,
+            node: (id % 3) as usize,
+            cap: 1.0,
+            remaining: 10.0 + id as f64,
+            tag: id * 7,
+            rate: 0.0,
+            gen: 0,
+        }
+    }
+
+    #[test]
+    fn insert_get_remove_round_trip() {
+        let mut a = JobArena::new();
+        let id0 = a.insert(job(0));
+        let id1 = a.insert(job(1));
+        assert_eq!((id0, id1), (0, 1));
+        assert_eq!(a.get(0).unwrap().tag, 0);
+        assert_eq!(a.get(1).unwrap().tag, 7);
+        let gone = a.remove(0).unwrap();
+        assert_eq!(gone.id, 0);
+        assert!(a.get(0).is_none());
+        assert!(a.remove(0).is_none(), "double remove is None");
+        assert_eq!(a.len(), 1);
+        // Freed slot is reused, id is not.
+        let id2 = a.insert(job(2));
+        assert_eq!(id2, 2);
+        assert_eq!(a.get(2).unwrap().remaining, 12.0);
+    }
+
+    /// Arena-vs-BTreeMap equivalence fuzz: a deterministic op stream of
+    /// inserts/removes/mutations kept in lockstep with the map the
+    /// engine used to hold. (The engine-level churn fuzz lives in
+    /// `sim::tests::arena_matches_btreemap_under_engine_churn`.)
+    #[test]
+    fn random_churn_matches_a_btreemap() {
+        use std::collections::BTreeMap;
+        let mut a = JobArena::new();
+        let mut m: BTreeMap<JobId, CpuJob> = BTreeMap::new();
+        let mut state = 0xdeadbeefu64;
+        let mut rng = || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for _ in 0..20_000 {
+            match rng() % 10 {
+                0..=4 => {
+                    let id = a.next_id();
+                    a.insert(job(id));
+                    m.insert(id, job(id));
+                }
+                5..=7 => {
+                    if !m.is_empty() {
+                        let keys: Vec<JobId> = m.keys().copied().collect();
+                        let id = keys[(rng() % keys.len() as u64) as usize];
+                        let x = a.remove(id);
+                        let y = m.remove(&id);
+                        assert_eq!(x.as_ref().map(|j| j.tag), y.as_ref().map(|j| j.tag));
+                    }
+                }
+                _ => {
+                    if !m.is_empty() {
+                        let keys: Vec<JobId> = m.keys().copied().collect();
+                        let id = keys[(rng() % keys.len() as u64) as usize];
+                        let d = (rng() % 5) as f64;
+                        a.get_mut(id).unwrap().remaining -= d;
+                        m.get_mut(&id).unwrap().remaining -= d;
+                        a.get_mut(id).unwrap().gen += 1;
+                        m.get_mut(&id).unwrap().gen += 1;
+                    }
+                }
+            }
+            assert_eq!(a.len(), m.len());
+        }
+        for (id, j) in &m {
+            let aj = a.get(*id).expect("live in map implies live in arena");
+            assert_eq!(aj.remaining.to_bits(), j.remaining.to_bits());
+            assert_eq!(a.gen_of(*id), Some(j.gen));
+        }
+        // Every id ever issued that is not in the map reads as gone.
+        for id in 0..a.next_id() {
+            assert_eq!(a.get(id).is_some(), m.contains_key(&id));
+        }
+    }
+}

@@ -18,14 +18,25 @@
 //! identical schedules, which is what makes the paper's figure sweeps
 //! replayable.
 
-use std::cmp::Reverse;
-use std::collections::{BTreeMap, BinaryHeap};
+mod arena;
+mod sharded;
 
 use crate::netsim::{FlowId, LinkId, NetSim};
 use crate::nodes::{water_fill, Node};
+use arena::JobArena;
+use sharded::ShardedHeap;
 
 pub type NodeId = usize;
 pub type JobId = u64;
+
+/// Nodes per CPU-candidate heap group — the "rack" granularity of the
+/// sharded completion heap: a re-level's candidate churn sifts only
+/// against its own group's backlog, never the whole cluster's.
+const CPU_GROUP_NODES: usize = 64;
+/// Timer-heap stripe count. Timers are striped by sequence number
+/// purely to bound per-heap sift depth; ordering stays global (the
+/// sharded heap's pop order equals a single heap's).
+const TIMER_GROUPS: usize = 8;
 
 /// A CPU job: `remaining` core-seconds of work on `node`, rate-capped at
 /// `cap` cores (the executor's CFS limit).
@@ -164,10 +175,15 @@ pub enum Event {
 pub struct Engine {
     pub now: f64,
     pub net: NetSim,
+    /// Node models. Public for read access; replacing a node's
+    /// interference schedule mid-run must go through
+    /// [`Engine::set_node_interference`] so the volatile-node
+    /// classification stays correct.
     pub nodes: Vec<Node>,
-    jobs: BTreeMap<JobId, CpuJob>,
-    timers: BinaryHeap<Reverse<Timer>>,
-    next_job: JobId,
+    /// Live jobs in a flat slot arena (ids stay monotonic, never
+    /// reused — see [`arena::JobArena`]).
+    jobs: JobArena,
+    timers: ShardedHeap<Timer>,
     next_seq: u64,
     /// Active job ids per node, ascending (the canonical water-fill
     /// order, same as the old whole-engine rebuild used).
@@ -178,9 +194,21 @@ pub struct Engine {
     node_dirty: Vec<bool>,
     dirty_nodes: Vec<NodeId>,
     capacity_cache: Vec<f64>,
-    /// Min-heap of absolute job-completion candidates; stale entries
-    /// (gone job or outdated generation) are dropped lazily at the head.
-    cpu_heap: BinaryHeap<Reverse<CpuCandidate>>,
+    /// Sharded min-heap of absolute job-completion candidates, grouped
+    /// by node group (`node / CPU_GROUP_NODES`); stale entries (gone
+    /// job or outdated generation) are dropped lazily at the head.
+    cpu_heap: ShardedHeap<CpuCandidate>,
+    /// The idle/active partition: nodes whose available capacity can
+    /// move *on its own* with sim time (burstable credit dynamics or an
+    /// interference schedule). Only these are scanned for capacity
+    /// movement, consulted for `next_state_change`, and advanced each
+    /// step — a static node's capacity only moves through
+    /// `set_node_capacity`, which marks it dirty explicitly. Debug
+    /// builds assert the classification covers every time-varying node.
+    volatile_nodes: Vec<NodeId>,
+    /// Low-water mark of `cpu_heap.len()` since the last compaction —
+    /// the compaction hysteresis state (see `recompute_cpu_rates`).
+    heap_low: usize,
     /// Per-node CPU usage (cores) at current rates, maintained per dirty
     /// node instead of re-summed from every job on every change.
     usage_cache: Vec<f64>,
@@ -199,19 +227,27 @@ pub struct Engine {
 impl Engine {
     pub fn new(nodes: Vec<Node>, net: NetSim) -> Engine {
         let num_nodes = nodes.len();
+        let cpu_groups = num_nodes.div_ceil(CPU_GROUP_NODES).max(1);
+        let volatile_nodes = nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.is_time_varying())
+            .map(|(i, _)| i)
+            .collect();
         Engine {
             now: 0.0,
             net,
             nodes,
-            jobs: BTreeMap::new(),
-            timers: BinaryHeap::new(),
-            next_job: 0,
+            jobs: JobArena::new(),
+            timers: ShardedHeap::new(TIMER_GROUPS),
             next_seq: 0,
             jobs_by_node: vec![Vec::new(); num_nodes],
             node_dirty: vec![false; num_nodes],
             dirty_nodes: Vec::new(),
             capacity_cache: Vec::new(),
-            cpu_heap: BinaryHeap::new(),
+            cpu_heap: ShardedHeap::new(cpu_groups),
+            volatile_nodes,
+            heap_low: 0,
             usage_cache: vec![0.0; num_nodes],
             caps_scratch: Vec::new(),
             capacity_tap: None,
@@ -232,7 +268,8 @@ impl Engine {
         let seq = self.next_seq;
         self.next_seq += 1;
         self.profile.timers_set += 1;
-        self.timers.push(Reverse(Timer { time: at.max(self.now), seq, tag }));
+        let group = (seq % TIMER_GROUPS as u64) as usize;
+        self.timers.push(group, Timer { time: at.max(self.now), seq, tag });
     }
 
     /// Start a CPU job of `work` core-seconds on `node`, capped at `cap`
@@ -241,10 +278,8 @@ impl Engine {
         assert!(node < self.nodes.len(), "unknown node {node}");
         assert!(work > 0.0, "job work must be positive");
         assert!(cap > 0.0, "job cap must be positive");
-        let id = self.next_job;
-        self.next_job += 1;
-        self.jobs
-            .insert(id, CpuJob { id, node, cap, remaining: work, tag, rate: 0.0, gen: 0 });
+        let id = self.jobs.next_id();
+        self.jobs.insert(CpuJob { id, node, cap, remaining: work, tag, rate: 0.0, gen: 0 });
         // Ids are handed out ascending, so pushing keeps the index sorted.
         self.jobs_by_node[node].push(id);
         self.mark_node_dirty(node);
@@ -269,12 +304,12 @@ impl Engine {
     }
 
     pub fn cpu_job(&self, id: JobId) -> Option<&CpuJob> {
-        self.jobs.get(&id)
+        self.jobs.get(id)
     }
 
     /// Cancel a running CPU job (speculative-execution loser kill).
     pub fn cancel_cpu_job(&mut self, id: JobId) -> Option<CpuJob> {
-        let j = self.jobs.remove(&id)?;
+        let j = self.jobs.remove(id)?;
         self.unindex_job(id, j.node);
         Some(j)
     }
@@ -302,6 +337,23 @@ impl Engine {
                 tap.push((self.now, node, mult));
             }
         }
+    }
+
+    /// Replace a node's interference schedule mid-run — the supported
+    /// way to inject interference after construction (the fig-7-style
+    /// adaptive scenarios). Re-classifies the node into the volatile
+    /// set (the idle/active partition scanned for on-its-own capacity
+    /// movement) and marks it dirty so the change takes effect at the
+    /// next re-level; assigning into `nodes` directly would bypass the
+    /// classification and a formerly-static node's schedule boundaries
+    /// would be missed by the fast path.
+    pub fn set_node_interference(&mut self, node: NodeId, schedule: Vec<(f64, f64)>) {
+        assert!(node < self.nodes.len(), "unknown node {node}");
+        self.nodes[node] = self.nodes[node].clone().with_interference(schedule);
+        if self.nodes[node].is_time_varying() && !self.volatile_nodes.contains(&node) {
+            self.volatile_nodes.push(node);
+        }
+        self.mark_node_dirty(node);
     }
 
     /// Apply an external capacity change to a network link (the
@@ -361,7 +413,7 @@ impl Engine {
     /// deterministic function of the post-split state. `None` when the
     /// job is unknown (already completed or cancelled).
     pub fn split_cpu_job(&mut self, id: JobId, keep: f64) -> Option<f64> {
-        let j = self.jobs.get_mut(&id)?;
+        let j = self.jobs.get_mut(id)?;
         assert!(
             keep > 0.0 && keep < j.remaining,
             "split must keep work in (0, remaining): keep {keep} of {}",
@@ -415,16 +467,22 @@ impl Engine {
     /// and like it is cross-checked against the from-scratch rebuild in
     /// debug builds.
     fn recompute_cpu_rates(&mut self) {
-        // O(nodes) capacity scan — the steady-state fast path (no marks,
-        // no capacity movement) ends here without touching any job.
+        // Capacity scan over the *volatile* partition only — nodes whose
+        // capacity can move on its own (burstable credits, interference
+        // schedules). Static nodes' capacity only changes through
+        // `set_node_capacity`, which marks them dirty explicitly, so the
+        // steady-state fast path (no marks, no movement) is O(volatile),
+        // not O(nodes) — on an all-static 10k-node cluster it is free.
         if self.capacity_cache.len() != self.nodes.len() {
-            // First call: NaN never compares equal, so every node below
-            // is marked and levelled.
+            // First call: NaN never compares equal, so every node is
+            // levelled on first dirtying (the re-level below reads the
+            // node's capacity fresh, never the cache).
             self.capacity_cache.clear();
             self.capacity_cache.resize(self.nodes.len(), f64::NAN);
             self.usage_cache.resize(self.nodes.len(), 0.0);
         }
-        for i in 0..self.nodes.len() {
+        for idx in 0..self.volatile_nodes.len() {
+            let i = self.volatile_nodes[idx];
             let cap = self.nodes[i].available_cores(self.now);
             if cap != self.capacity_cache[i] {
                 self.capacity_cache[i] = cap;
@@ -440,17 +498,23 @@ impl Engine {
         self.profile.node_relevels += dirty.len() as u64;
         for &node in &dirty {
             self.node_dirty[node] = false;
-            let capacity = self.capacity_cache[node];
+            // Fresh capacity, not the cache: a static node dirtied by job
+            // churn or `set_node_capacity` is never visited by the
+            // volatile scan above, so its cache entry may be stale (or
+            // still the first-call NaN).
+            let capacity = self.nodes[node].available_cores(self.now);
+            self.capacity_cache[node] = capacity;
             self.caps_scratch.clear();
-            for id in &self.jobs_by_node[node] {
-                self.caps_scratch.push(self.jobs[id].cap);
+            for &id in &self.jobs_by_node[node] {
+                self.caps_scratch.push(self.jobs.get(id).unwrap().cap);
             }
             let rates = water_fill(capacity, &self.caps_scratch);
+            let group = node / CPU_GROUP_NODES;
             let mut usage = 0.0;
             for slot in 0..rates.len() {
                 let id = self.jobs_by_node[node][slot];
                 let (remaining, rate, gen) = {
-                    let j = self.jobs.get_mut(&id).unwrap();
+                    let j = self.jobs.get_mut(id).unwrap();
                     j.rate = rates[slot];
                     j.gen = j.gen.wrapping_add(1);
                     (j.remaining, j.rate, j.gen)
@@ -459,14 +523,13 @@ impl Engine {
                 if remaining <= 1e-9 {
                     // Born-finished (sub-epsilon work): completes now.
                     self.profile.heap_pushes += 1;
-                    self.cpu_heap.push(Reverse(CpuCandidate { time: self.now, id, gen }));
+                    self.cpu_heap.push(group, CpuCandidate { time: self.now, id, gen });
                 } else if rate > 0.0 {
                     self.profile.heap_pushes += 1;
-                    self.cpu_heap.push(Reverse(CpuCandidate {
-                        time: self.now + remaining / rate,
-                        id,
-                        gen,
-                    }));
+                    self.cpu_heap.push(
+                        group,
+                        CpuCandidate { time: self.now + remaining / rate, id, gen },
+                    );
                 }
                 // rate == 0 with work left: no candidate — the job cannot
                 // finish until a rate change re-levels its node.
@@ -476,20 +539,25 @@ impl Engine {
         dirty.clear();
         self.dirty_nodes = dirty;
 
-        // Stale candidates shed only lazily at the head; compact when the
-        // backlog clearly dominates the live set. Pop order is a total
-        // order over (time, id, gen), so rebuilding from the retained
-        // multiset cannot change event order.
-        if self.cpu_heap.len() > 64 + 4 * self.jobs.len() {
+        // Stale candidates shed only lazily at the head; compact when
+        // the backlog clearly dominates the live set AND the heap has
+        // re-grown past its post-compaction low-water mark by at least
+        // the live set (min 64). The growth requirement is the
+        // hysteresis: without it, a live set shrinking right after a
+        // compaction lowers the backlog threshold and sustained
+        // capacity churn re-triggers whole-heap rebuilds every few
+        // events. Pop order is a total order over (time, id, gen), so
+        // rebuilding from the retained multiset cannot change event
+        // order.
+        self.heap_low = self.heap_low.min(self.cpu_heap.len());
+        let live = self.jobs.len();
+        if self.cpu_heap.len() > 64 + 4 * live
+            && self.cpu_heap.len() >= self.heap_low + live.max(64)
+        {
             self.profile.heap_compactions += 1;
-            let live: Vec<Reverse<CpuCandidate>> = self
-                .cpu_heap
-                .drain()
-                .filter(|Reverse(c)| {
-                    self.jobs.get(&c.id).map(|j| j.gen) == Some(c.gen)
-                })
-                .collect();
-            self.cpu_heap = BinaryHeap::from(live);
+            let jobs = &self.jobs;
+            self.cpu_heap.retain(|c| jobs.gen_of(c.id) == Some(c.gen));
+            self.heap_low = self.cpu_heap.len();
         }
 
         #[cfg(debug_assertions)]
@@ -504,13 +572,21 @@ impl Engine {
         let indexed: usize = self.jobs_by_node.iter().map(Vec::len).sum();
         assert_eq!(indexed, self.jobs.len(), "job index out of sync");
         for node in 0..self.nodes.len() {
+            // The idle/active partition must cover every node that can
+            // move on its own — a time-varying node missing from the
+            // volatile set would have its capacity movement and state
+            // boundaries silently skipped by the fast path.
+            assert!(
+                !self.nodes[node].is_time_varying() || self.volatile_nodes.contains(&node),
+                "time-varying node {node} missing from the volatile partition"
+            );
             let capacity = self.nodes[node].available_cores(self.now);
             let ids = &self.jobs_by_node[node];
-            let caps: Vec<f64> = ids.iter().map(|i| self.jobs[i].cap).collect();
+            let caps: Vec<f64> = ids.iter().map(|&i| self.jobs.get(i).unwrap().cap).collect();
             let rates = water_fill(capacity, &caps);
             let mut usage = 0.0;
-            for (slot, id) in ids.iter().enumerate() {
-                let stored = self.jobs[id].rate;
+            for (slot, &id) in ids.iter().enumerate() {
+                let stored = self.jobs.get(id).unwrap().rate;
                 assert!(
                     stored.to_bits() == rates[slot].to_bits(),
                     "incremental water-fill diverged on node {node} job {id}: \
@@ -585,8 +661,9 @@ impl Engine {
 
             // 2. Candidate times for the next state change.
             let mut dt = f64::INFINITY;
-            if let Some(Reverse(t)) = self.timers.peek() {
-                dt = dt.min(t.time - self.now);
+            let now = self.now;
+            if let Some(t) = self.timers.peek() {
+                dt = dt.min(t.time - now);
             }
             if let Some((d, _)) = self.net.next_completion() {
                 dt = dt.min(d);
@@ -597,18 +674,21 @@ impl Engine {
             // generation).
             loop {
                 let head = match self.cpu_heap.peek() {
-                    Some(Reverse(c)) => (c.time, c.id, c.gen),
+                    Some(c) => *c,
                     None => break,
                 };
-                if self.jobs.get(&head.1).map(|j| j.gen) == Some(head.2) {
-                    dt = dt.min(head.0 - self.now);
+                if self.jobs.gen_of(head.id) == Some(head.gen) {
+                    dt = dt.min(head.time - self.now);
                     break;
                 }
                 self.profile.heap_pops += 1;
                 self.cpu_heap.pop();
             }
-            for (i, n) in self.nodes.iter().enumerate() {
-                if let Some(t) = n.next_state_change(self.now, self.usage_cache[i]) {
+            // Node state boundaries exist only on the volatile partition
+            // (static nodes return `None` by construction).
+            for &i in &self.volatile_nodes {
+                if let Some(t) = self.nodes[i].next_state_change(self.now, self.usage_cache[i])
+                {
                     dt = dt.min(t - self.now);
                 }
             }
@@ -624,15 +704,20 @@ impl Engine {
                 stalled_iters = 0; // real progress — not a livelock
             }
 
-            // 3. Advance the world by dt.
+            // 3. Advance the world by dt. The per-step float accumulation
+            // is load-bearing for bit-identity (`remaining` is advanced
+            // step by step, never materialized lazily); the arena makes
+            // the walk a flat unordered slice scan.
             self.net.advance(dt);
             if dt > 0.0 {
-                for j in self.jobs.values_mut() {
-                    j.remaining = (j.remaining - j.rate * dt).max(0.0);
-                }
+                self.jobs
+                    .for_each_live_mut(|j| j.remaining = (j.remaining - j.rate * dt).max(0.0));
             }
-            for (i, n) in self.nodes.iter_mut().enumerate() {
-                n.advance(self.now, dt, self.usage_cache[i]);
+            // Only volatile nodes carry advanceable state (burstable
+            // credits); `Node::advance` is a no-op for everything else.
+            for &i in &self.volatile_nodes {
+                let usage = self.usage_cache[i];
+                self.nodes[i].advance(self.now, dt, usage);
             }
             self.now += dt;
             // Loop: pop_ready will deliver whatever completed; if only a
@@ -644,11 +729,10 @@ impl Engine {
     /// Pop one due event in deterministic order: timers, then flows (by
     /// id), then CPU jobs (by id).
     fn pop_ready(&mut self) -> Option<Event> {
-        if let Some(Reverse(t)) = self.timers.peek() {
-            if t.time <= self.now + 1e-9 {
-                let t = self.timers.pop().unwrap().0;
-                return Some(Event::Timer { tag: t.tag });
-            }
+        let now = self.now;
+        if self.timers.peek().is_some_and(|t| t.time <= now + 1e-9) {
+            let t = self.timers.pop().unwrap();
+            return Some(Event::Timer { tag: t.tag });
         }
         if let Some(id) = self.net.first_finished_flow() {
             let f = self.net.remove_flow(id).unwrap();
@@ -661,10 +745,10 @@ impl Engine {
         // the current `remaining` values).
         loop {
             let (head_id, head_gen) = match self.cpu_heap.peek() {
-                Some(Reverse(c)) => (c.id, c.gen),
+                Some(c) => (c.id, c.gen),
                 None => break,
             };
-            let finished = match self.jobs.get(&head_id) {
+            let finished = match self.jobs.get(head_id) {
                 None => None, // cancelled — drop the stale entry below
                 Some(j) if j.gen != head_gen => None, // superseded rate
                 Some(j) => Some(j.remaining <= 1e-9),
@@ -677,7 +761,7 @@ impl Engine {
                 Some(true) => {
                     self.profile.heap_pops += 1;
                     self.cpu_heap.pop();
-                    let j = self.jobs.remove(&head_id).unwrap();
+                    let j = self.jobs.remove(head_id).unwrap();
                     self.unindex_job(head_id, j.node);
                     return Some(Event::JobDone { id: head_id, tag: j.tag });
                 }
@@ -1236,6 +1320,128 @@ mod tests {
         e.set_capacity_tap(false);
         e.set_node_capacity(0, 0.75);
         assert!(e.take_capacity_events().is_empty());
+    }
+
+    #[test]
+    fn arena_matches_btreemap_under_engine_churn() {
+        // The arena is the engine's only job store; shadow every public
+        // mutation with the `BTreeMap` the engine used to hold and check
+        // the two agree on liveness, identity, and binding after each op
+        // — including ids that completed, were cancelled, or were never
+        // issued.
+        use crate::util::{prop, Rng};
+        use std::collections::BTreeMap;
+        prop::check("arena-churn", 0xA12E4A, 40, |rng: &mut Rng| {
+            let n_nodes = rng.range(1, 4);
+            let nodes: Vec<Node> = (0..n_nodes)
+                .map(|i| Node::fixed(&format!("n{i}"), rng.range_f64(0.3, 1.5)))
+                .collect();
+            let mut e = Engine::new(nodes, NetSim::new());
+            let mut shadow: BTreeMap<JobId, (usize, u64)> = BTreeMap::new();
+            let mut issued: JobId = 0;
+            for op in 0..60u64 {
+                match rng.below(5) {
+                    0 | 1 => {
+                        let node = rng.below(n_nodes);
+                        let id = e.add_cpu_job(
+                            node,
+                            rng.range_f64(0.2, 1.2),
+                            rng.range_f64(0.5, 15.0),
+                            op,
+                        );
+                        shadow.insert(id, (node, op));
+                        issued = issued.max(id + 1);
+                    }
+                    2 if !shadow.is_empty() => {
+                        let keys: Vec<JobId> = shadow.keys().copied().collect();
+                        let id = *rng.choose(&keys);
+                        let gone = e.cancel_cpu_job(id).expect("shadow says live");
+                        assert_eq!(gone.id, id);
+                        shadow.remove(&id);
+                        assert!(e.cancel_cpu_job(id).is_none(), "double cancel yields None");
+                    }
+                    3 if !shadow.is_empty() => {
+                        let keys: Vec<JobId> = shadow.keys().copied().collect();
+                        let id = *rng.choose(&keys);
+                        let remaining = e.cpu_job(id).unwrap().remaining;
+                        if remaining > 0.2 {
+                            let stolen = e.split_cpu_job(id, remaining * 0.5).unwrap();
+                            let node = rng.below(n_nodes);
+                            let nid = e.add_cpu_job(node, 1.0, stolen, 900 + op);
+                            shadow.insert(nid, (node, 900 + op));
+                            issued = issued.max(nid + 1);
+                        }
+                    }
+                    _ => {
+                        e.set_node_capacity(rng.below(n_nodes), rng.range_f64(0.1, 1.0));
+                        let stop = e.now + rng.range_f64(0.05, 2.0);
+                        e.set_timer(stop, 5_000_000 + op);
+                        while let Some(ev) = e.step() {
+                            match ev {
+                                Event::Timer { tag } if tag == 5_000_000 + op => break,
+                                Event::JobDone { id, tag } => {
+                                    let (_, want) = shadow
+                                        .remove(&id)
+                                        .expect("completion of a job the shadow lost");
+                                    assert_eq!(tag, want, "completion carries the job's tag");
+                                }
+                                _ => {}
+                            }
+                        }
+                    }
+                }
+                // Full agreement sweep over every id ever issued.
+                assert_eq!(e.num_cpu_jobs(), shadow.len());
+                for id in 0..issued {
+                    match shadow.get(&id) {
+                        Some(&(node, tag)) => {
+                            let j = e.cpu_job(id).expect("shadow-live id must resolve");
+                            assert_eq!(j.id, id);
+                            assert_eq!(j.node, node);
+                            assert_eq!(j.tag, tag);
+                            assert!(j.remaining > 0.0);
+                        }
+                        None => assert!(e.cpu_job(id).is_none(), "id {id} should read as gone"),
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn heap_compaction_hysteresis_bounds_churn() {
+        // Repeated capacity flips on a loaded node strand one stale
+        // candidate per job per re-level. Compaction must fire (the heap
+        // cannot grow without bound) but only after real growth since
+        // the last sweep: the low-water gate keeps it from firing on
+        // every re-level once the heap first crosses the size floor.
+        let run = || {
+            let mut e = Engine::new(one_node(), NetSim::new());
+            for i in 0..8u64 {
+                e.add_cpu_job(0, 1.0, 1e9, i); // never finishes here
+            }
+            for k in 0..400u64 {
+                e.set_node_capacity(0, if k % 2 == 0 { 0.5 } else { 1.0 });
+                e.set_timer(e.now + 1e-3, 10_000 + k);
+                while let Some(ev) = e.step() {
+                    if matches!(ev, Event::Timer { .. }) {
+                        break;
+                    }
+                }
+            }
+            e.profile.heap_compactions
+        };
+        let compactions = run();
+        assert!(compactions > 0, "compaction never fired; the heap grew unboundedly");
+        // 400 re-levels each strand 8 candidates; a compaction is
+        // admitted only after the heap regrows by max(live, 64) entries
+        // past its post-sweep low-water mark, so the sweep count stays
+        // an order of magnitude below the re-level count.
+        assert!(
+            compactions <= 60,
+            "hysteresis failed: {compactions} compactions in 400 re-levels"
+        );
+        assert_eq!(run(), compactions, "compaction schedule must be deterministic");
     }
 
     #[test]

@@ -1,0 +1,261 @@
+//! A sharded min-heap: per-group binary heaps merged lazily at the top.
+//!
+//! The engine's event heaps (CPU completion candidates, timers) used to
+//! be single global `BinaryHeap`s, so at datacenter scale every push on
+//! one rack sifts against every other rack's entries and a capacity
+//! burst's candidate churn is paid against the whole cluster's backlog.
+//! [`ShardedHeap`] keeps one `BinaryHeap` per group (node group for
+//! candidates, sequence stripe for timers): pushes and pops sift only
+//! within their group, and a small `top` heap of *head snapshots* —
+//! `(head value, group)` pairs — merges the groups lazily at peek/pop.
+//!
+//! Invariant: every non-empty group's current minimum is present in
+//! `top` by value. A push that lowers a group's head registers the new
+//! head; the superseded head's snapshot stays behind and is skimmed at
+//! peek time (it no longer equals its group's head). A pop removes the
+//! matching snapshot and registers the group's next head. Because item
+//! order is total and equal values are interchangeable, the pop
+//! sequence is exactly that of one global heap over the same items —
+//! asserted in debug builds against an embedded single-heap shadow
+//! popped in lockstep (the same oracle pattern as the engine's
+//! full-rebuild water-fill check).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+#[derive(Clone)]
+pub(crate) struct ShardedHeap<T: Ord + Clone> {
+    groups: Vec<BinaryHeap<Reverse<T>>>,
+    /// Lazy merge front: `(head value, group)` snapshots; stale ones are
+    /// skimmed at peek.
+    top: BinaryHeap<Reverse<(T, u32)>>,
+    len: usize,
+    /// Debug-only single-heap clone popped in lockstep with `pop`.
+    #[cfg(debug_assertions)]
+    shadow: BinaryHeap<Reverse<T>>,
+}
+
+impl<T: Ord + Clone> ShardedHeap<T> {
+    pub fn new(num_groups: usize) -> Self {
+        ShardedHeap {
+            groups: (0..num_groups.max(1)).map(|_| BinaryHeap::new()).collect(),
+            top: BinaryHeap::new(),
+            len: 0,
+            #[cfg(debug_assertions)]
+            shadow: BinaryHeap::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Push `item` into `group` (clamped into range, so a grouping
+    /// function keyed on ids never panics at the margins).
+    pub fn push(&mut self, group: usize, item: T) {
+        let g = group.min(self.groups.len() - 1);
+        let becomes_head = match self.groups[g].peek() {
+            None => true,
+            Some(Reverse(head)) => item < *head,
+        };
+        if becomes_head {
+            self.top.push(Reverse((item.clone(), g as u32)));
+        }
+        #[cfg(debug_assertions)]
+        self.shadow.push(Reverse(item.clone()));
+        self.groups[g].push(Reverse(item));
+        self.len += 1;
+    }
+
+    /// Current minimum across all groups. Takes `&mut` because stale
+    /// head snapshots are skimmed off `top` on the way.
+    pub fn peek(&mut self) -> Option<&T> {
+        loop {
+            let stale = match self.top.peek() {
+                None => return None,
+                Some(Reverse((snap, g))) => match self.groups[*g as usize].peek() {
+                    Some(Reverse(head)) => head != snap,
+                    None => true,
+                },
+            };
+            if !stale {
+                break;
+            }
+            self.top.pop();
+        }
+        self.top.peek().map(|Reverse((snap, _))| snap)
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        self.peek()?;
+        let Reverse((_, g)) = self.top.pop().expect("peek found a valid head");
+        let g = g as usize;
+        let Reverse(item) =
+            self.groups[g].pop().expect("a valid snapshot matches its group's head");
+        if let Some(Reverse(next)) = self.groups[g].peek() {
+            let next = next.clone();
+            self.top.push(Reverse((next, g as u32)));
+        }
+        self.len -= 1;
+        #[cfg(debug_assertions)]
+        {
+            let Reverse(expect) = self.shadow.pop().expect("shadow tracks len");
+            assert!(
+                expect == item,
+                "sharded heap pop diverged from the single-heap shadow"
+            );
+        }
+        Some(item)
+    }
+
+    /// Drop every item failing `keep` and rebuild the merge front — the
+    /// compaction primitive (the caller decides *when*; see the engine's
+    /// compaction hysteresis).
+    pub fn retain(&mut self, mut keep: impl FnMut(&T) -> bool) {
+        self.len = 0;
+        self.top.clear();
+        for (g, heap) in self.groups.iter_mut().enumerate() {
+            let kept: Vec<Reverse<T>> = std::mem::take(heap)
+                .into_vec()
+                .into_iter()
+                .filter(|Reverse(t)| keep(t))
+                .collect();
+            *heap = BinaryHeap::from(kept);
+            if let Some(Reverse(head)) = heap.peek() {
+                self.top.push(Reverse((head.clone(), g as u32)));
+            }
+            self.len += heap.len();
+        }
+        #[cfg(debug_assertions)]
+        {
+            let kept: Vec<Reverse<T>> = std::mem::take(&mut self.shadow)
+                .into_vec()
+                .into_iter()
+                .filter(|Reverse(t)| keep(t))
+                .collect();
+            self.shadow = BinaryHeap::from(kept);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic xorshift for the property tests (no external rng).
+    struct XorShift(u64);
+    impl XorShift {
+        fn next(&mut self) -> u64 {
+            let mut x = self.0;
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            self.0 = x;
+            x
+        }
+    }
+
+    #[test]
+    fn pops_in_global_order_across_groups() {
+        let mut h = ShardedHeap::new(4);
+        for (g, v) in [(0usize, 30u64), (1, 10), (2, 20), (3, 40), (0, 15), (2, 5)] {
+            h.push(g, v);
+        }
+        let mut out = Vec::new();
+        while let Some(v) = h.pop() {
+            out.push(v);
+        }
+        assert_eq!(out, vec![5, 10, 15, 20, 30, 40]);
+    }
+
+    #[test]
+    fn duplicate_values_in_one_group_all_come_back() {
+        let mut h = ShardedHeap::new(2);
+        for _ in 0..5 {
+            h.push(1, 7u64);
+        }
+        h.push(0, 3);
+        let mut out = Vec::new();
+        while let Some(v) = h.pop() {
+            out.push(v);
+        }
+        assert_eq!(out, vec![3, 7, 7, 7, 7, 7]);
+    }
+
+    #[test]
+    fn retain_rebuilds_the_merge_front() {
+        let mut h = ShardedHeap::new(3);
+        for v in 0u64..30 {
+            h.push((v % 3) as usize, v);
+        }
+        h.retain(|&v| v % 2 == 0);
+        assert_eq!(h.len(), 15);
+        let mut out = Vec::new();
+        while let Some(v) = h.pop() {
+            out.push(v);
+        }
+        assert_eq!(out, (0..30).filter(|v| v % 2 == 0).collect::<Vec<_>>());
+    }
+
+    /// The sharded-vs-single-heap shadow oracle as a property test:
+    /// random interleavings of push/pop/peek/retain against a plain
+    /// `BinaryHeap` mirror must pop the identical value sequence. (Debug
+    /// builds additionally run the embedded lockstep shadow on every
+    /// pop.)
+    #[test]
+    fn random_ops_match_a_single_binary_heap() {
+        for seed in 1..8u64 {
+            let mut rng = XorShift(seed * 0x9e3779b97f4a7c15);
+            let groups = 1 + (rng.next() % 7) as usize;
+            let mut sharded = ShardedHeap::new(groups);
+            let mut mirror: BinaryHeap<Reverse<(u64, u64)>> = BinaryHeap::new();
+            for op in 0..4000u64 {
+                match rng.next() % 100 {
+                    0..=54 => {
+                        // (value, unique tiebreak) keeps item order total so
+                        // the two pop sequences are comparable element-wise.
+                        let item = (rng.next() % 64, op);
+                        sharded.push((rng.next() % 16) as usize, item);
+                        mirror.push(Reverse(item));
+                    }
+                    55..=94 => {
+                        let a = sharded.pop();
+                        let b = mirror.pop().map(|Reverse(v)| v);
+                        assert_eq!(a, b, "seed {seed} op {op}");
+                    }
+                    95..=97 => {
+                        assert_eq!(
+                            sharded.peek().copied(),
+                            mirror.peek().map(|Reverse(v)| *v),
+                            "seed {seed} op {op}"
+                        );
+                    }
+                    _ => {
+                        let cut = rng.next() % 64;
+                        sharded.retain(|&(v, _)| v >= cut);
+                        let kept: Vec<Reverse<(u64, u64)>> = std::mem::take(&mut mirror)
+                            .into_vec()
+                            .into_iter()
+                            .filter(|Reverse((v, _))| *v >= cut)
+                            .collect();
+                        mirror = BinaryHeap::from(kept);
+                    }
+                }
+                assert_eq!(sharded.len(), mirror.len());
+            }
+            let mut rest = Vec::new();
+            while let Some(v) = sharded.pop() {
+                rest.push(v);
+            }
+            let mut mrest = Vec::new();
+            while let Some(Reverse(v)) = mirror.pop() {
+                mrest.push(v);
+            }
+            assert_eq!(rest, mrest);
+        }
+    }
+}

@@ -422,6 +422,12 @@ pub fn resolve_policy(
         // Steal-HeMT partitions like hint-driven HeMT; the stealing
         // itself happens mid-stage (see [`steal_policy_of`]).
         PolicyConfig::HemtSteal(_) => PartitionPolicy::Hemt(session.capacity_hints()),
+        // Pruned HeMT: capacity hints sparsified into a few speed
+        // classes before planning (arXiv 2306.00274) — the variant that
+        // keeps planning cheap at datacenter node counts.
+        PolicyConfig::HemtPruned { classes, floor } => PartitionPolicy::HemtPruned(
+            crate::partition::prune_weights(&session.capacity_hints(), *classes, *floor),
+        ),
     }
 }
 

@@ -32,8 +32,14 @@ use super::{Metric, Scenario, SweepSpec};
 /// `1000 * trials` keeps cells' seed ranges disjoint.
 pub const CELL_SEED_STRIDE: u64 = 1_000_000;
 /// Seed strides for the outer axes: each axis gets 100 slots of the next
-/// inner stride, so cells' seed ranges stay disjoint for up to 100 values
-/// per axis (asserted by [`ProductSweepSpec::to_spec`]).
+/// inner stride. **Stride contract:** an axis index of 100 would
+/// contribute exactly one slot of the *next* axis, so two distinct cells
+/// would derive identical seeds (their trials silently sharing RNG
+/// streams) the moment any axis reaches 100 entries. Axes are therefore
+/// capped at **99 entries** — checked by [`ProductSweepSpec::validate`],
+/// which [`ProductSweepSpec::to_spec`] and
+/// [`ProductSweepSpec::from_json`] both enforce. Capping (rather than
+/// widening the strides) keeps every historic cell seed intact.
 pub const POLICY_SEED_STRIDE: u64 = 100 * CELL_SEED_STRIDE;
 pub const WORKLOAD_SEED_STRIDE: u64 = 100 * POLICY_SEED_STRIDE;
 pub const CLUSTER_SEED_STRIDE: u64 = 100 * WORKLOAD_SEED_STRIDE;
@@ -119,15 +125,11 @@ impl ProductSweepSpec {
     /// `dynamics/cluster/workload/policy`, or the historic
     /// `cluster/workload/policy` when the dynamics axis is the steady
     /// singleton), one point per granularity, `trials` units per point.
-    pub fn to_spec(&self) -> SweepSpec {
-        assert!(!self.dynamics.is_empty(), "product needs at least one dynamics value");
-        assert!(!self.clusters.is_empty(), "product needs at least one cluster");
-        assert!(!self.workloads.is_empty(), "product needs at least one workload");
-        assert!(!self.policies.is_empty(), "product needs at least one policy");
-        assert!(
-            !self.granularities.is_empty(),
-            "product needs at least one granularity"
-        );
+    /// Check the axis-size contract the structural seeds rely on (see
+    /// the stride constants above): every axis non-empty and at most 99
+    /// entries. At 100 entries an axis index would alias into the next
+    /// axis's seed slot and distinct cells would share trial seeds.
+    pub fn validate(&self) -> Result<(), String> {
         for (axis, len) in [
             ("dynamics", self.dynamics.len()),
             ("clusters", self.clusters.len()),
@@ -135,7 +137,24 @@ impl ProductSweepSpec {
             ("policies", self.policies.len()),
             ("granularities", self.granularities.len()),
         ] {
-            assert!(len <= 100, "product axis '{axis}' exceeds 100 values ({len})");
+            if len == 0 {
+                return Err(format!("product axis '{axis}' must be non-empty"));
+            }
+            if len >= 100 {
+                return Err(format!(
+                    "product axis '{axis}' has {len} entries; seed strides give each \
+                     axis 100 slots of the next inner stride, so an index of 100 \
+                     would alias cell seeds across axes — keep axes at 99 entries \
+                     or fewer"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_spec(&self) -> SweepSpec {
+        if let Err(e) = self.validate() {
+            panic!("{e}");
         }
         let trivial_dynamics = self.dynamics_axis_is_trivial();
         let mut spec = SweepSpec::new(&self.title, "granularity (tasks)", "time (s)");
@@ -269,6 +288,37 @@ impl ProductSweepSpec {
         }
     }
 
+    /// The datacenter-scale preset: heterogeneous clusters of 16 and 64
+    /// nodes × WordCount × HomT (granularity ladder) / hint-HeMT /
+    /// pruned HeMT — what `hemt sweep --preset cluster_scale` runs and
+    /// what the `pruned_scale` figure plots. Node counts stay CI-sized
+    /// (shuffle traffic grows with mappers × reducers); the
+    /// `cluster_scale` bench and the release-mode acceptance tests push
+    /// the same cluster shapes to 10k nodes.
+    pub fn cluster_scale_regimes() -> ProductSweepSpec {
+        ProductSweepSpec {
+            title: "Product sweep: cluster scale x policy x granularity".to_string(),
+            dynamics: Self::steady_axis(),
+            clusters: vec![
+                Named::new("n16", ClusterConfig::heterogeneous_scale(16)),
+                Named::new("n64", ClusterConfig::heterogeneous_scale(64)),
+            ],
+            workloads: vec![Named::new("wordcount", WorkloadConfig::wordcount_2gb())],
+            policies: vec![
+                Named::new("homt", PolicyConfig::Homt(2)),
+                Named::new("hemt", PolicyConfig::HemtFromHints),
+                Named::new(
+                    "hemt_pruned",
+                    PolicyConfig::HemtPruned { classes: 4, floor: 0.05 },
+                ),
+            ],
+            granularities: vec![16, 64, 256],
+            metric: Metric::MapStageTime,
+            trials: 2,
+            base_seed: 40_000,
+        }
+    }
+
     pub fn to_json(&self) -> Value {
         json::obj(vec![
             ("title", json::s(&self.title)),
@@ -360,12 +410,6 @@ impl ProductSweepSpec {
             if arr.is_empty() {
                 return Err(format!("product.{key} must be non-empty"));
             }
-            if arr.len() > 100 {
-                return Err(format!(
-                    "product.{key} exceeds 100 values ({}) — seed strides would collide",
-                    arr.len()
-                ));
-            }
             arr.iter()
                 .map(|e| {
                     Ok(Named {
@@ -392,12 +436,6 @@ impl ProductSweepSpec {
         if granularities.is_empty() {
             return Err("product.granularities must be non-empty".into());
         }
-        if granularities.len() > 100 {
-            return Err(format!(
-                "product.granularities exceeds 100 values ({}) — seed strides would collide",
-                granularities.len()
-            ));
-        }
         let metric = match v.get("metric").and_then(Value::as_str).unwrap_or("map_stage_time")
         {
             "map_stage_time" => Metric::MapStageTime,
@@ -411,7 +449,7 @@ impl ProductSweepSpec {
         } else {
             Self::steady_axis()
         };
-        Ok(ProductSweepSpec {
+        let spec = ProductSweepSpec {
             title: v
                 .get("title")
                 .and_then(Value::as_str)
@@ -425,7 +463,9 @@ impl ProductSweepSpec {
             metric,
             trials: v.get("trials").and_then(Value::as_usize).unwrap_or(3),
             base_seed: v.get("base_seed").and_then(Value::as_u64).unwrap_or(20_000),
-        })
+        };
+        spec.validate()?;
+        Ok(spec)
     }
 
     /// Inherent by design, mirroring `ExperimentConfig::from_str` (the
@@ -462,6 +502,68 @@ mod tests {
             trials: 2,
             base_seed: 555,
         }
+    }
+
+    #[test]
+    fn validate_rejects_axes_at_the_stride_limit() {
+        let mut p = small_product();
+        p.granularities = (2..101).collect(); // 99 entries: the documented max
+        assert!(p.validate().is_ok());
+        p.granularities = (2..102).collect(); // 100 entries: would alias
+        let err = p.validate().unwrap_err();
+        assert!(err.contains("granularities"), "{err}");
+        assert!(err.contains("alias"), "{err}");
+        // The same contract holds on the outer axes.
+        let mut p = small_product();
+        p.policies = (0..100)
+            .map(|i| Named::new(&format!("homt{i}"), PolicyConfig::Homt(i + 2)))
+            .collect();
+        assert!(p.validate().unwrap_err().contains("policies"));
+    }
+
+    #[test]
+    fn from_json_rejects_oversized_axes() {
+        let mut p = small_product();
+        p.granularities = (2..102).collect();
+        let err = ProductSweepSpec::from_json(&p.to_json()).unwrap_err();
+        assert!(err.contains("granularities") && err.contains("99"), "{err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "alias")]
+    fn to_spec_panics_on_oversized_axis() {
+        let mut p = small_product();
+        p.granularities = (2..102).collect();
+        p.to_spec();
+    }
+
+    #[test]
+    fn seed_strides_are_frozen() {
+        // Historic cells derive their seeds from these exact strides; any
+        // change would reshuffle every published figure. The fix for the
+        // 100-entry aliasing bug caps axis sizes instead of widening the
+        // strides precisely so these stay frozen.
+        assert_eq!(CELL_SEED_STRIDE, 1_000_000);
+        assert_eq!(POLICY_SEED_STRIDE, 100_000_000);
+        assert_eq!(WORKLOAD_SEED_STRIDE, 10_000_000_000);
+        assert_eq!(CLUSTER_SEED_STRIDE, 1_000_000_000_000);
+        assert_eq!(DYNAMICS_SEED_STRIDE, 100_000_000_000_000);
+    }
+
+    #[test]
+    fn cluster_scale_preset_is_valid_and_carries_pruned_policy() {
+        let p = ProductSweepSpec::cluster_scale_regimes();
+        assert!(p.validate().is_ok());
+        // homt sweeps the 3-step granularity ladder; the two HeMT
+        // variants run once per cluster: (3 + 1 + 1) cells per cluster.
+        assert_eq!(p.num_cells(), 2 * 5);
+        assert_eq!(p.base_seed, 40_000);
+        assert!(p
+            .policies
+            .iter()
+            .any(|pl| matches!(pl.value, PolicyConfig::HemtPruned { .. })));
+        let back = ProductSweepSpec::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
     }
 
     #[test]
@@ -544,6 +646,7 @@ mod tests {
             PolicyConfig::HemtStatic(vec![1.0, 0.4]),
             PolicyConfig::HemtAdaptive { alpha: 0.5 },
             PolicyConfig::HemtSteal(crate::coordinator::stealing::StealPolicy::default()),
+            PolicyConfig::HemtPruned { classes: 4, floor: 0.05 },
         ] {
             assert_eq!(p.with_granularity(16), p);
             assert!(!p.granularity_sensitive());

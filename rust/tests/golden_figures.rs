@@ -316,6 +316,78 @@ fn dynamic_regimes_preset_carries_the_steal_policy_columns() {
 }
 
 #[test]
+fn cluster_scale_is_bit_identical_across_thread_counts() {
+    // PR 9's scale ladder (the `pruned_scale` figure / `cluster_scale`
+    // preset): the sharded-heap + arena engine and the pruned-class HeMT
+    // policy inherit the thread-count invariance contract unchanged.
+    let fig = assert_thread_count_invariant(experiments::pruned_scale_spec, "cluster_scale");
+
+    let names: Vec<&str> = fig.series.iter().map(|s| s.name.as_str()).collect();
+    assert_eq!(
+        names,
+        vec![
+            "n16/wordcount/homt",
+            "n16/wordcount/hemt",
+            "n16/wordcount/hemt_pruned",
+            "n64/wordcount/homt",
+            "n64/wordcount/hemt",
+            "n64/wordcount/hemt_pruned",
+        ]
+    );
+    for s in &fig.series {
+        let expect = if s.name.ends_with("/homt") { 3 } else { 1 };
+        assert_eq!(s.points.len(), expect, "{}", s.name);
+        assert!(s.points.iter().all(|p| p.stats.n == 2), "{}", s.name);
+        for p in &s.points {
+            assert!(
+                p.stats.mean > 1.0 && p.stats.mean < 1000.0,
+                "{}@{}: {}",
+                s.name,
+                p.x,
+                p.stats.mean
+            );
+        }
+    }
+    let homt_at = |cluster: &str, g: f64| {
+        fig.series
+            .iter()
+            .find(|s| s.name == format!("{cluster}/wordcount/homt"))
+            .unwrap()
+            .points
+            .iter()
+            .find(|p| p.x == g)
+            .unwrap()
+            .stats
+            .mean
+    };
+    let fixed = |cluster: &str, policy: &str| {
+        let s = fig
+            .series
+            .iter()
+            .find(|s| s.name == format!("{cluster}/wordcount/{policy}"))
+            .unwrap();
+        assert_eq!(s.points[0].label, format!("fixed ({policy})"));
+        s.points[0].stats.mean
+    };
+    // The paper's claim survives both rungs of the ladder: at equal
+    // granularity (one task per executor) hint-HeMT beats the even
+    // split, and the pruned-class variant keeps most of that win —
+    // quantized to 4 capacity classes it may trail exact hints, but
+    // never collapses back to HomT.
+    for (cluster, n) in [("n16", 16.0), ("n64", 64.0)] {
+        let homt_eq = homt_at(cluster, n);
+        let hemt = fixed(cluster, "hemt");
+        let pruned = fixed(cluster, "hemt_pruned");
+        assert!(hemt < homt_eq, "{cluster}: HeMT {hemt:.1} vs even {homt_eq:.1}");
+        assert!(pruned < homt_eq, "{cluster}: pruned {pruned:.1} vs even {homt_eq:.1}");
+        assert!(
+            pruned < hemt * 1.6,
+            "{cluster}: pruned {pruned:.1} strays too far from exact hints {hemt:.1}"
+        );
+    }
+}
+
+#[test]
 fn repeated_runs_are_bit_identical() {
     // Same runner, run twice: the sweep derives all randomness from the
     // spec's seeds, so repetition is exact.

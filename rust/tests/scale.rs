@@ -1,0 +1,133 @@
+//! Datacenter-scale acceptance tests for the PR 9 engine refactor
+//! (sharded event heaps, arena job state, pruned assignment).
+//!
+//! These run only in release builds: a million-task stage through a
+//! debug binary (with the sharded heap's embedded shadow oracle and the
+//! arena's integrity asserts switched on) would dominate tier-1 runtime
+//! for no extra coverage — the debug-mode invariants are exercised by
+//! the property tests in `src/sim`. CI's "Test (release)" leg runs them
+//! as part of the full suite.
+#![cfg(not(debug_assertions))]
+
+use hemt::netsim::NetSim;
+use hemt::nodes::Node;
+use hemt::partition::{prune_weights, Partitioning};
+use hemt::sim::{Engine, Event};
+
+/// Node speed ladder (cores), cycled across the cluster.
+const SPEEDS: [f64; 4] = [1.0, 0.8, 0.6, 0.4];
+
+fn cluster(n: usize, speeds: &[f64]) -> Vec<Node> {
+    (0..n).map(|i| Node::fixed(&format!("n{i}"), speeds[i % speeds.len()])).collect()
+}
+
+/// 10k nodes, 100 chained unit jobs per node — a million-task stage
+/// driven entirely through the sharded completion heap and the job
+/// arena, with a 2.5k-node capacity burst landing mid-run. The fluid
+/// model makes the makespan exact, so the end state is checkable in
+/// closed form.
+#[test]
+fn ten_thousand_nodes_run_a_million_tasks_to_completion() {
+    const N: usize = 10_000;
+    const JOBS_PER_NODE: usize = 100;
+    const BURST_TAG: u64 = u64::MAX;
+
+    let mut e = Engine::new(cluster(N, &SPEEDS), NetSim::new());
+    let mut left = vec![JOBS_PER_NODE - 1; N];
+    for node in 0..N {
+        e.add_cpu_job(node, SPEEDS[node % 4], 1.0, node as u64);
+    }
+    // Mid-run dynamics burst: at t=50 every full-speed node is throttled
+    // to half capacity in one go — the re-level storm the batched
+    // playback path produces, hitting a quarter of the cluster at once.
+    e.set_timer(50.0, BURST_TAG);
+
+    let mut done = 0usize;
+    while let Some(ev) = e.step() {
+        match ev {
+            Event::Timer { tag } => {
+                assert_eq!(tag, BURST_TAG);
+                for node in (0..N).step_by(4) {
+                    e.set_node_capacity(node, 0.5);
+                }
+            }
+            Event::JobDone { tag, .. } => {
+                done += 1;
+                let node = tag as usize;
+                if left[node] > 0 {
+                    left[node] -= 1;
+                    e.add_cpu_job(node, SPEEDS[node % 4], 1.0, tag);
+                }
+            }
+            Event::FlowDone { .. } => unreachable!("no flows in this stage"),
+        }
+    }
+
+    assert_eq!(done, N * JOBS_PER_NODE, "every task must complete");
+    assert_eq!(e.num_cpu_jobs(), 0);
+    // The 0.4-core nodes set the makespan: 100 unit jobs at 0.4 cores.
+    // (The throttled 1.0-core nodes finish their remaining 50 at 0.5
+    // cores by t=150, well inside that.)
+    assert!(
+        (e.now - 250.0).abs() < 1e-6,
+        "makespan must be exactly 100/0.4 = 250 s, got {}",
+        e.now
+    );
+    // The arena + sharded heap actually carried the traffic.
+    assert!(e.profile.heap_pushes as usize >= N * JOBS_PER_NODE);
+    assert!(e.profile.steps as usize > N * JOBS_PER_NODE);
+}
+
+/// The HeMT acceptance claim at datacenter scale: on 10k nodes whose
+/// speed ladder includes sub-floor stragglers, capacity-weighted
+/// assignment (exact hints, and the pruned-class variant that drops the
+/// stragglers and quantizes the rest) beats the even split by a wide
+/// margin, and pruning gives up only a bounded slice of the exact win.
+#[test]
+fn hemt_pruned_still_wins_at_ten_thousand_nodes() {
+    const N: usize = 10_000;
+    const TOTAL: u64 = 10_000_000_000; // 1 MB/node average
+    const CPU_SECS_PER_BYTE: f64 = 1e-6;
+    // Every fourth node is a nearly-dead straggler: 2% speed, below the
+    // 5% pruning floor.
+    let speeds: Vec<f64> = (0..N).map(|i| [1.0, 0.8, 0.6, 0.02][i % 4]).collect();
+
+    // Makespan of a one-task-per-node map stage with the given per-node
+    // byte assignment, run through the full 10k-node engine.
+    let makespan = |bytes: &[u64]| -> f64 {
+        let mut e = Engine::new(cluster(N, &speeds), NetSim::new());
+        for (node, &b) in bytes.iter().enumerate() {
+            if b == 0 {
+                continue; // pruned executor: no task planned
+            }
+            e.add_cpu_job(node, speeds[node], b as f64 * CPU_SECS_PER_BYTE, node as u64);
+        }
+        while e.step().is_some() {}
+        e.now
+    };
+
+    let even = makespan(&Partitioning::even(TOTAL, N).task_bytes);
+    let exact = makespan(&Partitioning::hemt(TOTAL, &speeds).task_bytes);
+
+    // Pruned-class assignment: zero-weight stragglers get no bytes at
+    // all; survivors are partitioned by their quantized class weights.
+    let pruned_w = prune_weights(&speeds, 4, 0.05);
+    let survivors: Vec<usize> = (0..N).filter(|&i| pruned_w[i] > 0.0).collect();
+    let sw: Vec<f64> = survivors.iter().map(|&i| pruned_w[i]).collect();
+    let mut pruned_bytes = vec![0u64; N];
+    for (k, b) in Partitioning::hemt(TOTAL, &sw).task_bytes.into_iter().enumerate() {
+        pruned_bytes[survivors[k]] = b;
+    }
+    assert_eq!(survivors.len(), 3 * N / 4, "the 2% stragglers must all be pruned");
+    let pruned = makespan(&pruned_bytes);
+
+    // Even split strands 250 kB on 0.02-core nodes: ~12.5 s. Exact
+    // hints finish everywhere simultaneously at ~0.41 s.
+    assert!(exact < even / 5.0, "exact hints must rout the even split: {exact} vs {even}");
+    assert!(pruned < even / 5.0, "pruned classes must rout the even split: {pruned} vs {even}");
+    assert!(
+        pruned < exact * 1.5,
+        "4-class quantization keeps most of the exact-hint win: {pruned} vs {exact}"
+    );
+    assert!(exact <= pruned, "quantization cannot beat exact hints: {pruned} vs {exact}");
+}

@@ -94,17 +94,16 @@ fn sse_stream_carries_trials_figure_and_done() {
     assert!(kinds.contains(&"trial"), "{kinds:?}");
     assert!(kinds.contains(&"figure"), "{kinds:?}");
     // The streamed figure parses back into exactly the figure a local
-    // runner produces for the same request. Compare via to_table, not
-    // the stats structs: Figure::from_json has no sample extremes to
-    // rebuild from (the wire form carries mean/std/n only) and sets
-    // min = max = mean, so a struct-level comparison would fail on
-    // fields the stream never carried.
+    // runner produces for the same request — the wire form carries the
+    // full per-point Summary (mean/std/min/max/n), so the round trip is
+    // lossless to the serialized bit.
     let fig_data = &events.iter().find(|(e, _)| e == "figure").unwrap().1;
     let v = Value::parse(fig_data).unwrap();
     assert_eq!(v.get("output").unwrap().get("name").unwrap().as_str(), Some("fig4"));
     let streamed = Figure::from_json(v.get("output").unwrap().get("figure").unwrap()).unwrap();
     let local = SweepRunner::serial().run(&experiments::spec_by_name("fig4").unwrap());
     assert_eq!(streamed.to_table(), local.to_table());
+    assert_eq!(streamed.to_json().pretty(), local.to_json().pretty());
     // Every trial frame is a flat sample record.
     let trial = &events.iter().find(|(e, _)| e == "trial").unwrap().1;
     let t = Value::parse(trial).unwrap();
@@ -551,15 +550,15 @@ fn traced_runs_stream_span_frames_and_leave_results_unchanged() {
             }
         }
     }
-    // Tracing is passive: the streamed figure equals the untraced run
-    // (table-level — Figure::from_json rebuilds min = max = mean).
+    // Tracing is passive: the streamed figure equals the untraced run,
+    // bit-for-bit through the (lossless) wire round trip.
     let fig_data = &events.iter().find(|(e, _)| e == "figure").unwrap().1;
     let streamed = Figure::from_json(
         Value::parse(fig_data).unwrap().get("output").unwrap().get("figure").unwrap(),
     )
     .unwrap();
     let local = SweepRunner::serial().run(&experiments::spec_by_name("fig4").unwrap());
-    assert_eq!(streamed.to_table(), local.to_table());
+    assert_eq!(streamed.to_json().pretty(), local.to_json().pretty());
     // Traced runs bypass the memo on both ends: nothing was cached, and
     // an untraced resubmission computes fresh (a miss, not a hit).
     assert_eq!(metric(&addr, "memo_entries"), 0);
