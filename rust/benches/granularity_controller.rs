@@ -1,0 +1,47 @@
+//! Granularity-controller bench: the headline `controller_grid` figure
+//! (the online auto-granularity controller vs every fixed policy arm
+//! across all compute-bound dynamics families) timed through the sweep
+//! runner, serial baseline vs the machine's full pool.
+//!
+//! Writes `BENCH_granularity_controller.json` (pooled) and
+//! `BENCH_granularity_controller_serial.json` for the CI trajectory
+//! gate. Beyond the fixed arms' closed loops, the units exercise the
+//! controller's per-round decision path — posterior assembly from the
+//! estimator's dispersion tracking, overhead EWMAs, and the arm switch
+//! between plain/stealing/microtask execution — so this bench is the
+//! end-to-end trajectory of the whole decision layer.
+
+use hemt::bench_harness::time_and_report;
+use hemt::dynamics::{controller_grid_spec, CONTROLLER_GRID_BASE_SEED, GRID_FAMILIES};
+use hemt::sweep::{session_cache_stats, SweepRunner};
+
+const ROUNDS: usize = 8;
+
+fn main() {
+    println!(
+        "== granularity_controller: {} families x 5 policies x {ROUNDS} rounds ==",
+        GRID_FAMILIES.len()
+    );
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let serial = time_and_report("granularity_controller_serial", 0, 3, || {
+        std::hint::black_box(
+            SweepRunner::new(1).run(&controller_grid_spec(ROUNDS, CONTROLLER_GRID_BASE_SEED)),
+        );
+    });
+    let mut last = None;
+    let pooled = time_and_report("granularity_controller", 0, 3, || {
+        last = Some(
+            SweepRunner::new(threads).run(&controller_grid_spec(ROUNDS, CONTROLLER_GRID_BASE_SEED)),
+        );
+    });
+    let (hits, misses) = session_cache_stats();
+    println!(
+        "granularity_controller_serial:    {} s\ngranularity_controller_pool({threads}): {} s  ({:.2}x)",
+        serial.pm(3),
+        pooled.pm(3),
+        serial.mean / pooled.mean
+    );
+    println!("session cache: {hits} hits / {misses} misses");
+    println!();
+    println!("{}", last.expect("pooled run happened").to_table());
+}

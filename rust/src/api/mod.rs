@@ -18,6 +18,20 @@
 //! the pre-redesign subcommands did. Figures produced through this path
 //! are bit-identical to the historic per-subcommand plumbing for any
 //! thread count — the specs, seeds, and runner are the same objects.
+//!
+//! ```
+//! use hemt::api::RunRequest;
+//!
+//! // Any CLI invocation has a serialized form; absent optional fields
+//! // take their defaults, and `validate` runs the same checks `execute`
+//! // would fail on.
+//! let req = RunRequest::from_str(r#"{"type": "dynamics", "rounds": 3}"#).unwrap();
+//! req.validate().unwrap();
+//! assert!(matches!(
+//!     req,
+//!     RunRequest::Dynamics { correlated: false, auto: false, rounds: 3 }
+//! ));
+//! ```
 
 use crate::config::ExperimentConfig;
 use crate::dynamics;
@@ -49,8 +63,9 @@ pub enum RunRequest {
     ProductSweep { spec: ProductSweepSpec },
     /// The closed-loop policy comparison across capacity-program
     /// families; `correlated` runs the rack_steal + link_degrade pair
-    /// instead.
-    Dynamics { correlated: bool, rounds: usize },
+    /// instead; `auto` runs the granularity-controller pair
+    /// (auto_granularity + controller_grid) instead.
+    Dynamics { correlated: bool, auto: bool, rounds: usize },
     /// The mid-stage work-stealing comparison; `streams` runs the
     /// network-bound stream-splitting head-to-head instead.
     Steal { streams: bool, rounds: usize },
@@ -75,11 +90,19 @@ impl RunRequest {
                 ("type", json::s("product_sweep")),
                 ("spec", spec.to_json()),
             ]),
-            RunRequest::Dynamics { correlated, rounds } => json::obj(vec![
-                ("type", json::s("dynamics")),
-                ("correlated", json::boolean(*correlated)),
-                ("rounds", json::num(*rounds as f64)),
-            ]),
+            RunRequest::Dynamics { correlated, auto, rounds } => {
+                // `auto` is emitted only when set: pre-controller
+                // serializations stay byte-identical (spec-hash stable).
+                let mut fields = vec![
+                    ("type", json::s("dynamics")),
+                    ("correlated", json::boolean(*correlated)),
+                ];
+                if *auto {
+                    fields.push(("auto", json::boolean(true)));
+                }
+                fields.push(("rounds", json::num(*rounds as f64)));
+                json::obj(fields)
+            }
             RunRequest::Steal { streams, rounds } => json::obj(vec![
                 ("type", json::s("steal")),
                 ("streams", json::boolean(*streams)),
@@ -140,6 +163,7 @@ impl RunRequest {
             }
             "dynamics" => RunRequest::Dynamics {
                 correlated: v.get("correlated").and_then(Value::as_bool).unwrap_or(false),
+                auto: v.get("auto").and_then(Value::as_bool).unwrap_or(false),
                 rounds: rounds_field(v)?,
             },
             "steal" => RunRequest::Steal {
@@ -194,7 +218,19 @@ impl RunRequest {
                 }
                 spec.validate()?;
             }
-            RunRequest::Dynamics { rounds, .. } | RunRequest::Steal { rounds, .. } => {
+            RunRequest::Dynamics { correlated, auto, rounds } => {
+                if *rounds == 0 {
+                    return Err("rounds must be >= 1".into());
+                }
+                if *correlated && *auto {
+                    return Err(
+                        "dynamics request can run either the correlated pair or the \
+                         auto-granularity pair, not both"
+                            .into(),
+                    );
+                }
+            }
+            RunRequest::Steal { rounds, .. } => {
                 if *rounds == 0 {
                     return Err("rounds must be >= 1".into());
                 }
@@ -426,7 +462,31 @@ where
                 0,
             );
         }
-        RunRequest::Dynamics { correlated: false, rounds } => {
+        RunRequest::Dynamics { auto: true, rounds, .. } => {
+            family_comparison(
+                runner,
+                &on_event,
+                &mut outputs,
+                "auto_granularity",
+                "auto-granularity comparison",
+                5,
+                dynamics::COMPARISON_FAMILIES,
+                *rounds,
+                dynamics::auto_granularity_spec(*rounds, dynamics::COMPARISON_BASE_SEED),
+            );
+            family_comparison(
+                runner,
+                &on_event,
+                &mut outputs,
+                "controller_grid",
+                "controller grid",
+                5,
+                dynamics::GRID_FAMILIES,
+                *rounds,
+                dynamics::controller_grid_spec(*rounds, dynamics::CONTROLLER_GRID_BASE_SEED),
+            );
+        }
+        RunRequest::Dynamics { correlated: false, auto: false, rounds } => {
             family_comparison(
                 runner,
                 &on_event,
@@ -439,7 +499,7 @@ where
                 dynamics::comparison_spec(*rounds, dynamics::COMPARISON_BASE_SEED),
             );
         }
-        RunRequest::Dynamics { correlated: true, rounds } => {
+        RunRequest::Dynamics { correlated: true, auto: false, rounds } => {
             family_comparison(
                 runner,
                 &on_event,
@@ -625,7 +685,8 @@ mod tests {
                 },
             },
             RunRequest::ProductSweep { spec: ProductSweepSpec::tiny_tasks_regimes() },
-            RunRequest::Dynamics { correlated: true, rounds: 7 },
+            RunRequest::Dynamics { correlated: true, auto: false, rounds: 7 },
+            RunRequest::Dynamics { correlated: false, auto: true, rounds: 5 },
             RunRequest::Steal { streams: true, rounds: 3 },
         ];
         for req in &reqs {
@@ -678,6 +739,10 @@ mod tests {
             (r#"{"type": "ablation", "name": "nope"}"#, "unknown ablation"),
             (r#"{"type": "warp"}"#, "unknown request type"),
             (r#"{"type": "dynamics", "rounds": 0}"#, "rounds"),
+            (
+                r#"{"type": "dynamics", "correlated": true, "auto": true}"#,
+                "not both",
+            ),
             (r#"{"type": "product_sweep", "preset": "everything"}"#, "unknown preset"),
             (r#"{"type": "product_sweep"}"#, "spec"),
             (r#"{"type": "sweep"}"#, "config"),

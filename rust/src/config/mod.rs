@@ -8,6 +8,7 @@
 //! (seeds). `ExperimentConfig::from_json` round-trips with `to_json`.
 
 use crate::coordinator::driver::{SessionBuilder, SimParams};
+use crate::coordinator::granularity::GranularityKnobs;
 use crate::coordinator::stealing::StealPolicy;
 use crate::nodes::{Burstable, Node};
 use crate::util::json::{self, Value};
@@ -416,6 +417,13 @@ pub enum PolicyConfig {
     /// classes, so planning cost tracks the class count rather than the
     /// node count.
     HemtPruned { classes: usize, floor: f64 },
+    /// Auto-granularity: the online controller
+    /// ([`crate::coordinator::granularity`]) picks the arm (HomT /
+    /// HeMT / Steal-HeMT) and task granularity per stage from the
+    /// capacity posterior and observed overhead. In one-shot scenario
+    /// trials (no round history) it resolves to the hedged arm:
+    /// HeMT-by-hints plus stealing under `knobs.steal`.
+    AutoGranularity(GranularityKnobs),
 }
 
 impl PolicyConfig {
@@ -443,6 +451,10 @@ impl PolicyConfig {
                 ("kind", json::s("hemt_pruned")),
                 ("classes", json::num(*classes as f64)),
                 ("floor", json::num(*floor)),
+            ]),
+            PolicyConfig::AutoGranularity(knobs) => json::obj(vec![
+                ("kind", json::s("auto")),
+                ("knobs", knobs.to_json()),
             ]),
         }
     }
@@ -473,6 +485,10 @@ impl PolicyConfig {
                 classes: v.get("classes").and_then(Value::as_usize).unwrap_or(4),
                 floor: v.get("floor").and_then(Value::as_f64).unwrap_or(0.05),
             }),
+            "auto" => Ok(PolicyConfig::AutoGranularity(match v.get("knobs") {
+                Some(k) => GranularityKnobs::from_json(k)?,
+                None => GranularityKnobs::default(),
+            })),
             other => Err(format!("unknown policy kind '{other}'")),
         }
     }
@@ -591,6 +607,37 @@ mod tests {
         assert_eq!(
             PolicyConfig::from_json(&bare).unwrap(),
             PolicyConfig::HemtPruned { classes: 4, floor: 0.05 }
+        );
+    }
+
+    #[test]
+    fn auto_granularity_config_roundtrips() {
+        let mut c = sample();
+        c.policy = PolicyConfig::AutoGranularity(GranularityKnobs {
+            confident_cv: 0.1,
+            max_tasks_per_exec: 32,
+            ..Default::default()
+        });
+        let back = ExperimentConfig::from_str(&c.to_json().pretty()).unwrap();
+        assert_eq!(c, back);
+        // A bare kind takes the default knobs.
+        let bare = json::obj(vec![("kind", json::s("auto"))]);
+        assert_eq!(
+            PolicyConfig::from_json(&bare).unwrap(),
+            PolicyConfig::AutoGranularity(GranularityKnobs::default())
+        );
+        // Partial knobs fill from the defaults.
+        let partial = json::obj(vec![
+            ("kind", json::s("auto")),
+            ("knobs", json::obj(vec![("panic_cv", json::num(2.5))])),
+        ]);
+        let got = PolicyConfig::from_json(&partial).unwrap();
+        assert_eq!(
+            got,
+            PolicyConfig::AutoGranularity(GranularityKnobs {
+                panic_cv: 2.5,
+                ..Default::default()
+            })
         );
     }
 

@@ -1,0 +1,561 @@
+//! Online granularity control: pick task granularity *and* policy arm
+//! (HomT / static HeMT / Steal-HeMT) per stage from the estimator's
+//! capacity posterior and observed per-task overhead.
+//!
+//! The HeMT paper shows macrotasking beats microtasking only when the
+//! capacity estimates it partitions by are accurate; the Tiny-Tasks
+//! line quantifies the overhead cost of going fine-grained; HeSP
+//! co-solves partitioning with scheduling offline. None of them closes
+//! the loop *online*. [`GranularityController`] does: before each
+//! round it inspects
+//!
+//! * the capacity [`Posterior`] — the [`SpeedEstimator`]'s per-executor
+//!   speed means plus their relative dispersion
+//!   ([`SpeedEstimator::rel_std`]), and
+//! * the [`OverheadObs`] — smoothed per-task dispatch→launch overhead
+//!   and stage time from its own finished rounds (the same quantity
+//!   `obs::global()`'s `task_overhead` histogram ingests, but sampled
+//!   from the controller's session so decisions stay deterministic),
+//!
+//! and the pure function [`decide`] maps them to a [`Decision`]:
+//!
+//! * **confident** (worst relative std ≤ `confident_cv`) — coarsen all
+//!   the way to HeMT: one macrotask per executor, sized by the
+//!   posterior means;
+//! * **uncertain** (≤ `panic_cv`) — hedge: HeMT-partition by the means
+//!   but enable mid-stage work stealing so a wrong estimate is repaired
+//!   at runtime rather than paid at the barrier;
+//! * **no information / chaos** (flat posterior, or worse than
+//!   `panic_cv`) — fall back to HomT microtasks, with the task count
+//!   chosen so total dispatch overhead stays within
+//!   `overhead_budget` of the observed stage time.
+//!
+//! Purity contract: [`decide`] reads nothing but its arguments — no
+//! globals, no clocks, no thread state — so the same (posterior,
+//! overhead, executor count, knobs) yields the same decision on any
+//! thread of any sweep pool. The bit-identity tests pin this.
+//!
+//! ```
+//! use hemt::coordinator::granularity::{
+//!     decide, ControllerArm, GranularityKnobs, OverheadObs, Posterior,
+//! };
+//!
+//! let knobs = GranularityKnobs::default();
+//! // Confident 1 : 0.4 posterior: coarsen to one macrotask per executor.
+//! let post = Posterior::certain(vec![1.0, 0.4]);
+//! let d = decide(&post, &OverheadObs::default(), 2, &knobs);
+//! assert_eq!(d.arm, ControllerArm::Hemt);
+//! assert_eq!(d.tasks, 2);
+//! // No information at all: fall back to HomT microtasks.
+//! let d = decide(&Posterior::flat(), &OverheadObs::default(), 2, &knobs);
+//! assert_eq!(d.arm, ControllerArm::Homt);
+//! assert_eq!(d.tasks, 2 * knobs.cold_tasks_per_exec);
+//! ```
+
+use crate::coordinator::adaptive::observe_map_stage;
+use crate::coordinator::driver::Session;
+use crate::coordinator::stealing::StealPolicy;
+use crate::coordinator::{JobPlan, PartitionPolicy};
+use crate::estimator::SpeedEstimator;
+use crate::metrics::JobRecord;
+use crate::util::json::{self, Value};
+
+/// Declarative knobs of the granularity controller. All thresholds are
+/// *relative standard deviations* (dispersion / mean) of the speed
+/// posterior; times are seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GranularityKnobs {
+    /// Coarsen to plain HeMT when every executor's posterior relative
+    /// std is at or below this (estimates keep confirming themselves).
+    pub confident_cv: f64,
+    /// Above `confident_cv` but at or below this: HeMT partition with
+    /// mid-stage stealing as insurance. Above it: the posterior is too
+    /// noisy to bind macrotasks at all — microtask instead.
+    pub panic_cv: f64,
+    /// Relative std assumed for executors with no measured dispersion
+    /// yet (manager hints, or a mean seen only once). The default sits
+    /// between `confident_cv` and `panic_cv`, so unproven estimates are
+    /// hedged with stealing rather than trusted or discarded.
+    pub prior_cv: f64,
+    /// In the HomT arm, choose the task count so total per-task
+    /// dispatch overhead stays within this fraction of the observed
+    /// stage time (the Tiny-Tasks sweet spot knob).
+    pub overhead_budget: f64,
+    /// HomT tasks per executor before any overhead has been observed.
+    pub cold_tasks_per_exec: usize,
+    /// Ceiling on HomT tasks per executor regardless of how cheap
+    /// overhead looks.
+    pub max_tasks_per_exec: usize,
+    /// Steal policy used by the hedged (uncertain) arm.
+    pub steal: StealPolicy,
+}
+
+impl Default for GranularityKnobs {
+    fn default() -> GranularityKnobs {
+        GranularityKnobs {
+            confident_cv: 0.2,
+            panic_cv: 1.5,
+            prior_cv: 0.5,
+            overhead_budget: 0.05,
+            cold_tasks_per_exec: 4,
+            max_tasks_per_exec: 16,
+            steal: StealPolicy::default(),
+        }
+    }
+}
+
+impl GranularityKnobs {
+    /// Panic on meaningless knob values (checked when a controller is
+    /// built and on every [`decide`], so a bad JSON config fails loudly).
+    pub fn assert_valid(&self) {
+        assert!(
+            self.confident_cv > 0.0 && self.confident_cv.is_finite(),
+            "confident_cv must be positive: {}",
+            self.confident_cv
+        );
+        assert!(
+            self.panic_cv > self.confident_cv && self.panic_cv.is_finite(),
+            "panic_cv must exceed confident_cv: {} vs {}",
+            self.panic_cv,
+            self.confident_cv
+        );
+        assert!(
+            self.prior_cv > 0.0 && self.prior_cv.is_finite(),
+            "prior_cv must be positive: {}",
+            self.prior_cv
+        );
+        assert!(
+            self.overhead_budget > 0.0 && self.overhead_budget < 1.0,
+            "overhead_budget must be in (0,1): {}",
+            self.overhead_budget
+        );
+        assert!(self.cold_tasks_per_exec >= 1, "cold_tasks_per_exec must be >= 1");
+        assert!(
+            self.max_tasks_per_exec >= self.cold_tasks_per_exec,
+            "max_tasks_per_exec must be >= cold_tasks_per_exec"
+        );
+        self.steal.assert_valid();
+    }
+
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("confident_cv", json::num(self.confident_cv)),
+            ("panic_cv", json::num(self.panic_cv)),
+            ("prior_cv", json::num(self.prior_cv)),
+            ("overhead_budget", json::num(self.overhead_budget)),
+            ("cold_tasks_per_exec", json::num(self.cold_tasks_per_exec as f64)),
+            ("max_tasks_per_exec", json::num(self.max_tasks_per_exec as f64)),
+            ("steal", self.steal.to_json()),
+        ])
+    }
+
+    /// Parse from JSON; absent fields take the default knobs' values, so
+    /// configs only name what they tune (mirrors
+    /// [`StealPolicy::from_json`]).
+    pub fn from_json(v: &Value) -> Result<GranularityKnobs, String> {
+        let d = GranularityKnobs::default();
+        let f = |k: &str, dflt: f64| -> Result<f64, String> {
+            match v.get(k) {
+                None => Ok(dflt),
+                Some(x) => x.as_f64().ok_or_else(|| format!("auto.{k} must be a number")),
+            }
+        };
+        let u = |k: &str, dflt: usize| -> Result<usize, String> {
+            match v.get(k) {
+                None => Ok(dflt),
+                Some(x) => {
+                    x.as_usize().ok_or_else(|| format!("auto.{k} must be a non-negative integer"))
+                }
+            }
+        };
+        let steal = match v.get("steal") {
+            None => d.steal,
+            Some(x) => StealPolicy::from_json(x)?,
+        };
+        Ok(GranularityKnobs {
+            confident_cv: f("confident_cv", d.confident_cv)?,
+            panic_cv: f("panic_cv", d.panic_cv)?,
+            prior_cv: f("prior_cv", d.prior_cv)?,
+            overhead_budget: f("overhead_budget", d.overhead_budget)?,
+            cold_tasks_per_exec: u("cold_tasks_per_exec", d.cold_tasks_per_exec)?,
+            max_tasks_per_exec: u("max_tasks_per_exec", d.max_tasks_per_exec)?,
+            steal,
+        })
+    }
+}
+
+/// The estimator's capacity posterior over one session's executors:
+/// speed means plus each mean's relative dispersion (`None` = no
+/// dispersion information yet). An empty `means` is the flat,
+/// no-information posterior.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Posterior {
+    pub means: Vec<f64>,
+    pub rel_stds: Vec<Option<f64>>,
+}
+
+impl Posterior {
+    /// The no-information posterior (nothing observed, no hints).
+    pub fn flat() -> Posterior {
+        Posterior { means: Vec::new(), rel_stds: Vec::new() }
+    }
+
+    /// A zero-variance posterior: every mean fully trusted.
+    pub fn certain(means: Vec<f64>) -> Posterior {
+        let n = means.len();
+        Posterior { means, rel_stds: vec![Some(0.0); n] }
+    }
+
+    /// A prior from externally supplied means (cluster-manager capacity
+    /// hints) at a uniform assumed relative std.
+    pub fn from_prior(means: Vec<f64>, rel_std: f64) -> Posterior {
+        let n = means.len();
+        Posterior { means, rel_stds: vec![Some(rel_std); n] }
+    }
+
+    /// The posterior a warm estimator holds over executors `0..n`
+    /// (flat if the estimator is cold).
+    pub fn from_estimator(est: &SpeedEstimator, n: usize) -> Posterior {
+        if est.is_cold() {
+            return Posterior::flat();
+        }
+        Posterior {
+            means: est.weights(&(0..n).collect::<Vec<_>>()),
+            rel_stds: (0..n).map(|e| est.rel_std(e)).collect(),
+        }
+    }
+
+    /// The decision statistic: the worst (largest) per-executor relative
+    /// std, with executors lacking dispersion information assumed at
+    /// `prior_cv`. Load balance is only as good as the *least* trusted
+    /// estimate — one wrong macrotask strands the whole barrier.
+    pub fn worst_rel_std(&self, prior_cv: f64) -> f64 {
+        assert_eq!(self.means.len(), self.rel_stds.len());
+        self.rel_stds.iter().map(|s| s.unwrap_or(prior_cv)).fold(0.0, f64::max)
+    }
+}
+
+/// Smoothed overhead observations from finished rounds. Both fields are
+/// EWMAs (factor 0.5) over the controller's own [`JobRecord`]s; `None`
+/// until the first round completes.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OverheadObs {
+    /// Mean per-task dispatch→launch overhead (`started - dispatched`)
+    /// of the map stage — the same observable `obs::global()`'s
+    /// `task_overhead` histogram ingests.
+    pub task_overhead_secs: Option<f64>,
+    /// Map-stage completion time.
+    pub stage_secs: Option<f64>,
+}
+
+impl OverheadObs {
+    /// Fold one finished job in (EWMA, factor 0.5; first sample seeds).
+    pub fn absorb(&mut self, rec: &JobRecord) {
+        let stage = match rec.stages.first() {
+            Some(s) if !s.tasks.is_empty() => s,
+            _ => return,
+        };
+        let per_task = stage
+            .tasks
+            .iter()
+            .map(|t| (t.started - t.dispatched).max(0.0))
+            .sum::<f64>()
+            / stage.tasks.len() as f64;
+        let blend = |old: Option<f64>, sample: f64| match old {
+            Some(o) => Some(0.5 * sample + 0.5 * o),
+            None => Some(sample),
+        };
+        self.task_overhead_secs = blend(self.task_overhead_secs, per_task);
+        self.stage_secs = blend(self.stage_secs, rec.map_stage_time());
+    }
+}
+
+/// Which structural arm a decision lands on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControllerArm {
+    /// Pull-based equal microtasks.
+    Homt,
+    /// One macrotask per executor, no mid-stage repair.
+    Hemt,
+    /// Macrotasks plus mid-stage stealing insurance.
+    Steal,
+}
+
+/// What the controller chose for the next stage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Decision {
+    pub arm: ControllerArm,
+    /// Total tasks in the map stage under this decision.
+    pub tasks: usize,
+    pub policy: PartitionPolicy,
+}
+
+/// HomT task count from the overhead observations: the largest total
+/// count whose summed dispatch overhead stays within the budgeted
+/// fraction of the observed stage time, clamped to
+/// `[num_executors, num_executors * max_tasks_per_exec]`; the cold
+/// default when nothing has been observed.
+fn homt_tasks(overhead: &OverheadObs, num_executors: usize, knobs: &GranularityKnobs) -> usize {
+    let per_exec = match (overhead.stage_secs, overhead.task_overhead_secs) {
+        (Some(stage), Some(per_task)) if stage > 0.0 && per_task > 0.0 => {
+            ((knobs.overhead_budget * stage) / (per_task * num_executors as f64)).floor() as usize
+        }
+        _ => knobs.cold_tasks_per_exec,
+    };
+    num_executors * per_exec.clamp(1, knobs.max_tasks_per_exec)
+}
+
+/// The controller's brain: a *pure* function of (posterior, overhead,
+/// executor count, knobs). Reads no globals, no clocks, no thread
+/// state — same inputs, same [`Decision`], on any thread.
+pub fn decide(
+    post: &Posterior,
+    overhead: &OverheadObs,
+    num_executors: usize,
+    knobs: &GranularityKnobs,
+) -> Decision {
+    knobs.assert_valid();
+    assert!(num_executors > 0, "need at least one executor");
+    if post.means.is_empty() {
+        // Flat posterior: nothing to size macrotasks by. HomT's
+        // pull-based microtasks need no estimates at all.
+        let tasks = homt_tasks(overhead, num_executors, knobs);
+        return Decision { arm: ControllerArm::Homt, tasks, policy: PartitionPolicy::EvenTasks(tasks) };
+    }
+    assert_eq!(post.means.len(), num_executors, "one posterior mean per executor");
+    let cv = post.worst_rel_std(knobs.prior_cv);
+    if cv <= knobs.confident_cv {
+        Decision {
+            arm: ControllerArm::Hemt,
+            tasks: num_executors,
+            policy: PartitionPolicy::Hemt(post.means.clone()),
+        }
+    } else if cv <= knobs.panic_cv {
+        Decision {
+            arm: ControllerArm::Steal,
+            tasks: num_executors,
+            policy: PartitionPolicy::Hemt(post.means.clone()),
+        }
+    } else {
+        // Posterior noisier than the panic threshold: estimates swing
+        // by more than their own magnitude round to round — binding
+        // macrotasks to them is worse than paying microtask overhead.
+        let tasks = homt_tasks(overhead, num_executors, knobs);
+        Decision { arm: ControllerArm::Homt, tasks, policy: PartitionPolicy::EvenTasks(tasks) }
+    }
+}
+
+/// The closed-loop auto-granularity driver: the OA-HeMT estimator loop
+/// of [`AdaptiveDriver`](crate::coordinator::adaptive::AdaptiveDriver),
+/// plus per-round arm/granularity selection via [`decide`] — what
+/// `hemt dynamics --auto` runs as the `auto` arm.
+#[derive(Debug, Clone)]
+pub struct GranularityController {
+    pub estimator: SpeedEstimator,
+    pub knobs: GranularityKnobs,
+    /// Seed round 1's posterior from the cluster manager's capacity
+    /// hints (at `prior_cv`) instead of starting flat.
+    pub bootstrap_from_hints: bool,
+    overhead: OverheadObs,
+}
+
+impl GranularityController {
+    /// A controller with estimator forgetting factor `alpha` and default
+    /// knobs.
+    pub fn new(alpha: f64) -> GranularityController {
+        GranularityController::with_knobs(alpha, GranularityKnobs::default())
+    }
+
+    pub fn with_knobs(alpha: f64, knobs: GranularityKnobs) -> GranularityController {
+        knobs.assert_valid();
+        GranularityController {
+            estimator: SpeedEstimator::new(alpha),
+            knobs,
+            bootstrap_from_hints: false,
+            overhead: OverheadObs::default(),
+        }
+    }
+
+    pub fn with_hint_bootstrap(mut self) -> GranularityController {
+        self.bootstrap_from_hints = true;
+        self
+    }
+
+    /// The current overhead observations.
+    pub fn overhead(&self) -> OverheadObs {
+        self.overhead
+    }
+
+    /// The posterior the next decision will be made from.
+    pub fn posterior(&self, session: &Session) -> Posterior {
+        if self.estimator.is_cold() {
+            if self.bootstrap_from_hints {
+                return Posterior::from_prior(session.capacity_hints(), self.knobs.prior_cv);
+            }
+            return Posterior::flat();
+        }
+        Posterior::from_estimator(&self.estimator, session.executors.len())
+    }
+
+    /// The decision for the next round on `session`'s executors.
+    pub fn decision(&self, session: &Session) -> Decision {
+        decide(&self.posterior(session), &self.overhead, session.executors.len(), &self.knobs)
+    }
+
+    /// Run one closed-loop round: decide arm + granularity from the
+    /// current posterior and overhead, execute (with stealing when the
+    /// decision hedges), fold the finished map stage back into the
+    /// estimator and the overhead EWMAs, and return the record.
+    pub fn run_round(
+        &mut self,
+        session: &mut Session,
+        plan_of: impl FnOnce(PartitionPolicy) -> JobPlan,
+    ) -> JobRecord {
+        let t = session.engine.now;
+        crate::obs::record(|r| {
+            let round = r
+                .events
+                .iter()
+                .filter(|e| matches!(e, crate::obs::ObsEvent::OaRound { driver: "auto", .. }))
+                .count();
+            r.push(crate::obs::ObsEvent::OaRound { t, driver: "auto", round });
+        });
+        let d = self.decision(session);
+        let plan = plan_of(d.policy.clone());
+        let rec = match d.arm {
+            ControllerArm::Steal => session.run_job_stealing(&plan, Some(&self.knobs.steal)),
+            ControllerArm::Homt | ControllerArm::Hemt => session.run_job(&plan),
+        };
+        observe_map_stage(&mut self.estimator, &rec, session.executors.len());
+        self.overhead.absorb(&rec);
+        rec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_variance_posterior_coarsens_to_hemt() {
+        let knobs = GranularityKnobs::default();
+        let d = decide(&Posterior::certain(vec![1.0, 0.4]), &OverheadObs::default(), 2, &knobs);
+        assert_eq!(d.arm, ControllerArm::Hemt);
+        assert_eq!(d.tasks, 2);
+        assert_eq!(d.policy, PartitionPolicy::Hemt(vec![1.0, 0.4]));
+    }
+
+    #[test]
+    fn flat_posterior_falls_back_to_homt_granularity() {
+        let knobs = GranularityKnobs::default();
+        let d = decide(&Posterior::flat(), &OverheadObs::default(), 2, &knobs);
+        assert_eq!(d.arm, ControllerArm::Homt);
+        assert_eq!(d.tasks, 2 * knobs.cold_tasks_per_exec);
+        assert_eq!(d.policy, PartitionPolicy::EvenTasks(2 * knobs.cold_tasks_per_exec));
+    }
+
+    #[test]
+    fn moderate_uncertainty_hedges_with_stealing() {
+        let knobs = GranularityKnobs::default();
+        let post = Posterior::from_prior(vec![1.0, 0.4], knobs.prior_cv);
+        let d = decide(&post, &OverheadObs::default(), 2, &knobs);
+        assert_eq!(d.arm, ControllerArm::Steal);
+        assert_eq!(d.policy, PartitionPolicy::Hemt(vec![1.0, 0.4]));
+    }
+
+    #[test]
+    fn chaos_posterior_microtasks() {
+        let knobs = GranularityKnobs::default();
+        let post = Posterior::from_prior(vec![1.0, 0.4], knobs.panic_cv * 2.0);
+        let d = decide(&post, &OverheadObs::default(), 2, &knobs);
+        assert_eq!(d.arm, ControllerArm::Homt);
+    }
+
+    #[test]
+    fn one_untrusted_executor_blocks_coarsening() {
+        // Three executors confidently measured, one with no dispersion
+        // info: the worst-case statistic keeps the hedge on.
+        let knobs = GranularityKnobs::default();
+        let post = Posterior {
+            means: vec![1.0, 1.0, 1.0, 0.4],
+            rel_stds: vec![Some(0.01), Some(0.0), Some(0.05), None],
+        };
+        let d = decide(&post, &OverheadObs::default(), 4, &knobs);
+        assert_eq!(d.arm, ControllerArm::Steal);
+    }
+
+    #[test]
+    fn homt_granularity_respects_overhead_budget() {
+        let knobs = GranularityKnobs::default();
+        // 100 s stage, 0.5 s per-task overhead, 2 executors: the budget
+        // (5 s) buys 10 dispatches -> 5 tasks per executor.
+        let ov = OverheadObs { task_overhead_secs: Some(0.5), stage_secs: Some(100.0) };
+        let d = decide(&Posterior::flat(), &ov, 2, &knobs);
+        assert_eq!(d.tasks, 10);
+        // Vanishing overhead: clamped at the per-executor ceiling.
+        let ov = OverheadObs { task_overhead_secs: Some(1e-9), stage_secs: Some(100.0) };
+        let d = decide(&Posterior::flat(), &ov, 2, &knobs);
+        assert_eq!(d.tasks, 2 * knobs.max_tasks_per_exec);
+        // Crushing overhead: never below one task per executor.
+        let ov = OverheadObs { task_overhead_secs: Some(1e6), stage_secs: Some(100.0) };
+        let d = decide(&Posterior::flat(), &ov, 2, &knobs);
+        assert_eq!(d.tasks, 2);
+    }
+
+    #[test]
+    fn knobs_json_round_trips_and_defaults_fill_gaps() {
+        let knobs = GranularityKnobs {
+            confident_cv: 0.1,
+            panic_cv: 2.0,
+            prior_cv: 0.3,
+            overhead_budget: 0.1,
+            cold_tasks_per_exec: 2,
+            max_tasks_per_exec: 8,
+            steal: StealPolicy { io_penalty: 0.0, ..Default::default() },
+        };
+        let back = GranularityKnobs::from_json(&knobs.to_json()).unwrap();
+        assert_eq!(knobs, back);
+        // Partial JSON: unnamed knobs take the defaults.
+        let partial = json::obj(vec![("confident_cv", json::num(0.05))]);
+        let got = GranularityKnobs::from_json(&partial).unwrap();
+        assert_eq!(got.confident_cv, 0.05);
+        assert_eq!(got.panic_cv, GranularityKnobs::default().panic_cv);
+        assert_eq!(got.steal, StealPolicy::default());
+        let bad = json::obj(vec![("cold_tasks_per_exec", json::s("four"))]);
+        assert!(GranularityKnobs::from_json(&bad).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "panic_cv must exceed confident_cv")]
+    fn inverted_thresholds_rejected() {
+        GranularityKnobs { confident_cv: 1.0, panic_cv: 0.5, ..Default::default() }.assert_valid();
+    }
+
+    #[test]
+    fn overhead_absorb_seeds_then_blends() {
+        use crate::metrics::{StageRecord, TaskRecord};
+        let rec = |overhead: f64, stage: f64| JobRecord {
+            stages: vec![StageRecord {
+                tasks: vec![TaskRecord {
+                    task: 0,
+                    executor: 0,
+                    bytes: 1,
+                    dispatched: 0.0,
+                    started: overhead,
+                    finished: stage,
+                }],
+                start: 0.0,
+                end: stage,
+            }],
+            start: 0.0,
+            end: stage,
+        };
+        let mut ov = OverheadObs::default();
+        ov.absorb(&rec(0.4, 100.0));
+        assert_eq!(ov.task_overhead_secs, Some(0.4));
+        assert_eq!(ov.stage_secs, Some(100.0));
+        ov.absorb(&rec(0.8, 50.0));
+        assert!((ov.task_overhead_secs.unwrap() - 0.6).abs() < 1e-12);
+        assert!((ov.stage_secs.unwrap() - 75.0).abs() < 1e-12);
+    }
+}

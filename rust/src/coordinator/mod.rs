@@ -17,9 +17,33 @@
 //! engine, modeling the three overheads the paper attributes to
 //! microtasking: serialized driver dispatch, executor-side task launch,
 //! and per-task I/O setup (lost pipelining on small reads).
+//!
+//! ```
+//! use hemt::config::{ClusterConfig, WorkloadConfig};
+//! use hemt::coordinator::driver::SimParams;
+//! use hemt::coordinator::PartitionPolicy;
+//! use hemt::workloads;
+//!
+//! // The paper's 1.0 + 0.4 core container testbed, a small WordCount,
+//! // HeMT partitioned by the cluster manager's capacity hints.
+//! let cluster = ClusterConfig::containers_1_and_04();
+//! let wl = WorkloadConfig::wordcount_2gb();
+//! let mut session = cluster.build_session(SimParams::default(), 1);
+//! let file = session.hdfs.upload(64 << 20, 16 << 20, &mut session.rng);
+//! let hints = session.capacity_hints();
+//! let job = workloads::wordcount_job(
+//!     file,
+//!     PartitionPolicy::Hemt(hints.clone()),
+//!     PartitionPolicy::Hemt(hints),
+//!     wl.cpu_secs_per_mb,
+//! );
+//! let record = session.run_job(&job);
+//! assert!(record.map_stage_time() > 0.0);
+//! ```
 
 pub mod adaptive;
 pub mod driver;
+pub mod granularity;
 pub mod stealing;
 
 use crate::hdfs::HdfsFile;
@@ -41,7 +65,7 @@ pub enum StageInput {
 }
 
 /// How a stage's input is split into tasks.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum PartitionPolicy {
     /// `m` equal tasks, pull-based (HomT for large `m`).
     EvenTasks(usize),

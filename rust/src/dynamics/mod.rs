@@ -25,9 +25,24 @@
 //! *inside* running stages through `Engine::set_node_capacity`, which
 //! re-levels only the touched node's CPU water-fill (the per-node
 //! dirty-mark path in [`crate::sim`]).
+//!
+//! ```
+//! use hemt::dynamics::DynamicsConfig;
+//!
+//! // Configs JSON-round-trip byte-for-byte, and schedule compilation
+//! // is seeded: the same (config, node count, seed) always yields the
+//! // same `(time, node, multiplier)` event list.
+//! let cfg = DynamicsConfig::markov_throttle();
+//! let back = DynamicsConfig::from_json(&cfg.to_json()).unwrap();
+//! assert_eq!(back.to_json().compact(), cfg.to_json().compact());
+//! let events = cfg.compile_events(2, 42);
+//! assert_eq!(events, cfg.compile_events(2, 42));
+//! assert!(!events.is_empty());
+//! ```
 
 use crate::config::{ClusterConfig, WorkloadConfig, WorkloadKind};
 use crate::coordinator::adaptive::AdaptiveDriver;
+use crate::coordinator::granularity::GranularityController;
 use crate::coordinator::stealing::{StealPolicy, StealingDriver};
 use crate::coordinator::PartitionPolicy;
 use crate::estimator::credits::CreditCurve;
@@ -963,6 +978,11 @@ enum Arm {
     /// stealable ([`StealPolicy::steal_streams`] — the unread byte range
     /// re-issued from a different replica).
     StreamSteal,
+    /// Auto-granularity: the online controller
+    /// ([`crate::coordinator::granularity`]) re-picks the arm (HomT /
+    /// HeMT / Steal-HeMT) and task granularity every round from the
+    /// estimator's capacity posterior and observed overhead.
+    Auto,
 }
 
 const ARMS: [(Arm, &str); 3] = [
@@ -986,6 +1006,19 @@ const STEAL_ARMS: [(Arm, &str); 4] = [
 const NET_STEAL_ARMS: [(Arm, &str); 4] = [
     (Arm::StreamSteal, "Stream-Steal-HeMT (streams + CPU)"),
     (Arm::Steal, "Steal-HeMT (CPU only)"),
+    (Arm::StaticHints, "static HeMT (launch hints)"),
+    (Arm::Homt, "HomT (8 even tasks)"),
+];
+
+/// The `hemt dynamics --auto` arm set: the online granularity
+/// controller against every fixed policy it chooses between. The four
+/// fixed arms keep their historic labels (and, on the historic seeds,
+/// their historic values — each (family, arm) cell is an independent
+/// sequence unit).
+const AUTO_ARMS: [(Arm, &str); 5] = [
+    (Arm::Auto, "Auto (granularity controller)"),
+    (Arm::Steal, "Steal-HeMT (split + steal)"),
+    (Arm::Adaptive, "Adaptive-HeMT (OA loop)"),
     (Arm::StaticHints, "static HeMT (launch hints)"),
     (Arm::Homt, "HomT (8 even tasks)"),
 ];
@@ -1056,6 +1089,7 @@ fn run_family_arm_in(
     let mut steal_drv = StealingDriver::new(0.25, StealPolicy::default()).with_hint_bootstrap();
     let mut stream_drv =
         StealingDriver::new(0.25, StealPolicy::default().with_streams()).with_hint_bootstrap();
+    let mut auto_drv = GranularityController::new(0.25).with_hint_bootstrap();
     let mut out = Vec::with_capacity(rounds);
     for _ in 0..rounds {
         let file = s.hdfs.upload(wl.data_mb * MB, wl.block_mb * MB, &mut s.rng);
@@ -1068,6 +1102,9 @@ fn run_family_arm_in(
                 workloads::wordcount_job(file, pol.clone(), pol, cpb)
             }),
             Arm::StreamSteal => stream_drv.run_round(&mut s, |pol| {
+                workloads::wordcount_job(file, pol.clone(), pol, cpb)
+            }),
+            Arm::Auto => auto_drv.run_round(&mut s, |pol| {
                 workloads::wordcount_job(file, pol.clone(), pol, cpb)
             }),
             Arm::StaticHints => {
@@ -1255,6 +1292,58 @@ pub fn link_degrade_comparison_spec(rounds: usize, base_seed: u64) -> SweepSpec 
         base_seed,
         net_comparison_cluster,
         net_comparison_workload,
+    )
+}
+
+/// The controller-grid families: every dynamics family that runs on the
+/// compute-bound comparison testbed — the four independent programs plus
+/// the two rack-correlated ones. The link families are excluded: they
+/// need the throttled-uplink testbed, whose figure
+/// ([`link_degrade_comparison_spec`]) keeps its own ladder.
+pub const GRID_FAMILIES: &[&str] =
+    &["markov", "spot", "diurnal", "credit_cliff", "rack_markov", "rack_spot"];
+
+/// Base seed of the `controller_grid` figure (its own ladder, disjoint
+/// from every existing comparison's).
+pub const CONTROLLER_GRID_BASE_SEED: u64 = 168_000;
+
+/// The `hemt dynamics --auto` figure (`auto_granularity`): the online
+/// granularity controller ([`crate::coordinator::granularity`]) against
+/// all four fixed arms on the historic comparison families. Run at
+/// [`COMPARISON_BASE_SEED`], the fixed arms reproduce their historic
+/// per-round values bit for bit — each (family, arm) cell is an
+/// independent sequence unit sharing the family's seed, trace and
+/// pristine session — so the only new computation is the `Auto` series.
+pub fn auto_granularity_spec(rounds: usize, base_seed: u64) -> SweepSpec {
+    family_arms_spec(
+        "Auto granularity: online controller vs fixed policy arms \
+         under time-varying capacity",
+        &AUTO_ARMS,
+        COMPARISON_FAMILIES,
+        rounds,
+        base_seed,
+        comparison_cluster,
+        comparison_workload,
+    )
+}
+
+/// The headline controller-vs-fixed-policy grid (`controller_grid`):
+/// the [`AUTO_ARMS`] set across *every* compute-bound dynamics family,
+/// independent and rack-correlated alike ([`GRID_FAMILIES`]). The
+/// acceptance test pins that the controller's per-family mean matches
+/// or beats the best fixed arm within tolerance on every family —
+/// the controller should never need to be out-picked by a policy it
+/// could have picked itself.
+pub fn controller_grid_spec(rounds: usize, base_seed: u64) -> SweepSpec {
+    family_arms_spec(
+        "Controller grid: auto granularity vs every fixed policy \
+         across all dynamics families",
+        &AUTO_ARMS,
+        GRID_FAMILIES,
+        rounds,
+        base_seed,
+        comparison_cluster,
+        comparison_workload,
     )
 }
 

@@ -18,18 +18,31 @@ use std::collections::BTreeMap;
 /// OA-HeMT first-order autoregressive executor-speed estimator. One
 /// instance per job type (the paper: "each application framework will
 /// need to maintain its own estimates").
+///
+/// Beyond the paper's point estimates, the estimator tracks a *posterior
+/// dispersion* per executor: the same AR(1) filter applied to squared
+/// relative innovations (`((sample - old) / old)^2`). [`rel_std`]
+/// surfaces it as a relative standard deviation — the confidence signal
+/// the granularity controller
+/// ([`crate::coordinator::granularity`]) coarsens or hedges on.
+///
+/// [`rel_std`]: SpeedEstimator::rel_std
 #[derive(Debug, Clone)]
 pub struct SpeedEstimator {
     /// Forgetting factor in [0, 1): weight on the *old* estimate. 0 means
     /// "latest observation only" (the paper's Fig. 7 setting).
     pub alpha: f64,
     speeds: BTreeMap<usize, f64>,
+    /// Smoothed squared relative innovation per executor. Absent until
+    /// an executor's *second* observation — one sample carries no
+    /// dispersion information.
+    rel_vars: BTreeMap<usize, f64>,
 }
 
 impl SpeedEstimator {
     pub fn new(alpha: f64) -> SpeedEstimator {
         assert!((0.0..1.0).contains(&alpha), "alpha must be in [0,1)");
-        SpeedEstimator { alpha, speeds: BTreeMap::new() }
+        SpeedEstimator { alpha, speeds: BTreeMap::new(), rel_vars: BTreeMap::new() }
     }
 
     /// Record an observed task: executor `id` processed `d` bytes in `t`
@@ -38,10 +51,29 @@ impl SpeedEstimator {
         assert!(d > 0.0 && t > 0.0, "need positive work and time");
         let sample = d / t;
         let v = match self.speeds.get(&id) {
-            Some(&old) => (1.0 - self.alpha) * sample + self.alpha * old,
+            Some(&old) => {
+                // Innovation relative to the standing estimate (old > 0
+                // because every sample is a positive rate), smoothed with
+                // the same forgetting factor as the mean.
+                let e = (sample - old) / old;
+                let var = match self.rel_vars.get(&id) {
+                    Some(&w) => (1.0 - self.alpha) * e * e + self.alpha * w,
+                    None => e * e,
+                };
+                self.rel_vars.insert(id, var);
+                (1.0 - self.alpha) * sample + self.alpha * old
+            }
             None => sample,
         };
         self.speeds.insert(id, v);
+    }
+
+    /// Relative posterior standard deviation of one executor's speed
+    /// estimate (`None` until two observations). ~0 means the executor's
+    /// samples keep confirming the estimate; ~1 means samples swing by
+    /// the estimate's own magnitude.
+    pub fn rel_std(&self, id: usize) -> Option<f64> {
+        self.rel_vars.get(&id).map(|v| v.sqrt())
     }
 
     /// Current estimate for one executor, if any.

@@ -618,6 +618,28 @@ pub fn link_degrade_spec() -> SweepSpec {
     )
 }
 
+/// `hemt dynamics --auto` / `hemt figure auto_granularity`: the online
+/// granularity controller ([`crate::coordinator::granularity`]) vs all
+/// four fixed arms on the historic comparison families and seeds — the
+/// fixed arms reproduce their historic values bit for bit.
+pub fn auto_granularity_spec() -> SweepSpec {
+    crate::dynamics::auto_granularity_spec(
+        crate::dynamics::DEFAULT_ROUNDS,
+        crate::dynamics::COMPARISON_BASE_SEED,
+    )
+}
+
+/// `hemt dynamics --auto` / `hemt figure controller_grid`: the headline
+/// controller-vs-fixed-policy grid across every compute-bound dynamics
+/// family (independent and rack-correlated). Acceptance: the controller
+/// matches or beats the best fixed arm on every family.
+pub fn controller_grid_spec() -> SweepSpec {
+    crate::dynamics::controller_grid_spec(
+        crate::dynamics::DEFAULT_ROUNDS,
+        crate::dynamics::CONTROLLER_GRID_BASE_SEED,
+    )
+}
+
 /// Round-by-round adaptation trajectory under Markov-modulated
 /// throttling (the dynamics analogue of Fig. 7).
 pub fn dynamics_markov_spec() -> SweepSpec {
@@ -655,6 +677,8 @@ pub fn spec_by_name(name: &str) -> Option<SweepSpec> {
         "rack_steal" => Some(rack_steal_spec()),
         "link_degrade" => Some(link_degrade_spec()),
         "pruned_scale" | "cluster_scale" => Some(pruned_scale_spec()),
+        "auto" | "auto_granularity" => Some(auto_granularity_spec()),
+        "controller_grid" => Some(controller_grid_spec()),
         _ => None,
     }
 }
@@ -669,6 +693,7 @@ pub const ALL_FIGURES: &[&str] = &[
     "fig4", "fig5", "fig7", "fig8", "fig9", "fig10_12", "fig13", "fig14", "fig15",
     "fig17", "fig18", "headline", "extension", "dyn_compare", "dyn_markov", "dyn_spot",
     "dyn_steal", "net_steal", "rack_steal", "link_degrade", "pruned_scale",
+    "auto_granularity", "controller_grid",
 ];
 
 /// One figure-registry entry: the canonical name plus a one-line
@@ -767,6 +792,14 @@ pub const FIGURES: &[FigureInfo] = &[
     FigureInfo {
         name: "pruned_scale",
         description: "Cluster-scale ladder: HomT vs hint-HeMT vs pruned-class HeMT",
+    },
+    FigureInfo {
+        name: "auto_granularity",
+        description: "Online granularity controller vs fixed arms on the historic families",
+    },
+    FigureInfo {
+        name: "controller_grid",
+        description: "Headline grid: auto controller vs every fixed policy, all dynamics families",
     },
 ];
 

@@ -49,14 +49,19 @@ fn usage() -> &'static str {
                                     whole-grid product sweep (dynamics x clusters x
                                     workloads x policies x granularities); default:
                                     the built-in tiny-tasks regime product
-  hemt dynamics [--correlated] [--rounds N] [--json] [--threads N]
+  hemt dynamics [--correlated|--auto] [--rounds N] [--json] [--threads N]
                                     closed-loop Adaptive-HeMT vs static-HeMT vs HomT
                                     under time-varying capacity (Markov throttling,
                                     spot outage, diurnal, credit cliff).
                                     --correlated runs the correlated figures instead:
                                     rack_steal (shared-event rack degradation, thieves
                                     degrade with victims) and link_degrade (time-varying
-                                    HDFS uplink capacity on the 200 Mbps testbed)
+                                    HDFS uplink capacity on the 200 Mbps testbed).
+                                    --auto runs the granularity-controller figures:
+                                    auto_granularity (the online controller picking
+                                    arm + task granularity per round vs every fixed
+                                    policy) and the headline controller_grid (same
+                                    arms across all compute-bound dynamics families)
   hemt steal [--streams] [--rounds N] [--json] [--threads N]
                                     mid-stage work stealing: Steal-HeMT (running
                                     tasks split, remainder re-homed on idle nodes)
@@ -97,7 +102,9 @@ fn usage() -> &'static str {
   Sweeps fan trials out over a worker pool: --threads (or the
   HEMT_SWEEP_THREADS env var) sets the pool size, defaulting to the
   machine's available parallelism. Results are bit-identical for any
-  thread count."
+  thread count.
+
+  Full command reference with copy-pasteable examples: docs/CLI.md"
 }
 
 /// Parse `--threads N` into a sweep runner (default: env/auto).
@@ -287,9 +294,17 @@ fn cmd_sweep(args: &[String]) -> Result<(), String> {
 /// the `link_degrade` comparison (HeMT vs HomT on the 200 Mbps
 /// read-heavy testbed with the datanode uplinks themselves
 /// time-varying).
+///
+/// With `--auto`, the granularity-controller figures instead: the
+/// `auto_granularity` comparison (the online controller
+/// [`hemt::coordinator::granularity`] vs all four fixed arms on the
+/// historic families and seeds) then the headline `controller_grid`
+/// (the same arms across every compute-bound dynamics family,
+/// rack-correlated included).
 fn cmd_dynamics(args: &[String]) -> Result<(), String> {
     let req = RunRequest::Dynamics {
         correlated: args.iter().any(|a| a == "--correlated"),
+        auto: args.iter().any(|a| a == "--auto"),
         rounds: rounds_arg(args)?,
     };
     run_request(&req, args)

@@ -428,6 +428,20 @@ pub fn resolve_policy(
         PolicyConfig::HemtPruned { classes, floor } => PartitionPolicy::HemtPruned(
             crate::partition::prune_weights(&session.capacity_hints(), *classes, *floor),
         ),
+        // Auto-granularity in a one-shot trial: no round history, so the
+        // posterior is the estimator's state (when given) or the manager
+        // hints at the knobs' prior confidence; the controller's pure
+        // `decide` picks the partitioning. With the default knobs the
+        // prior lands in the hedged band — HeMT-by-hints plus stealing
+        // (see [`steal_policy_of`]).
+        PolicyConfig::AutoGranularity(knobs) => {
+            use crate::coordinator::granularity::{decide, OverheadObs, Posterior};
+            let post = match estimator {
+                Some(e) if !e.is_cold() => Posterior::from_estimator(e, n),
+                _ => Posterior::from_prior(session.capacity_hints(), knobs.prior_cv),
+            };
+            decide(&post, &OverheadObs::default(), n, knobs).policy
+        }
     }
 }
 
@@ -437,6 +451,9 @@ pub fn resolve_policy(
 pub fn steal_policy_of(policy: &PolicyConfig) -> Option<&StealPolicy> {
     match policy {
         PolicyConfig::HemtSteal(p) => Some(p),
+        // One-shot auto-granularity always keeps the stealing insurance
+        // on: the hint prior is unproven, so the hedge is the decision.
+        PolicyConfig::AutoGranularity(k) => Some(&k.steal),
         _ => None,
     }
 }

@@ -280,6 +280,16 @@ impl ProductSweepSpec {
                         crate::coordinator::stealing::StealPolicy::default().with_streams(),
                     ),
                 ),
+                // Appended after `stream_steal` for the same reason: the
+                // online granularity controller — in a one-shot product
+                // cell it resolves to the hedged arm (HeMT-by-hints plus
+                // stealing under the default knobs).
+                Named::new(
+                    "auto",
+                    PolicyConfig::AutoGranularity(
+                        crate::coordinator::granularity::GranularityKnobs::default(),
+                    ),
+                ),
             ],
             granularities: vec![2, 8, 32],
             metric: Metric::MapStageTime,
@@ -647,6 +657,9 @@ mod tests {
             PolicyConfig::HemtAdaptive { alpha: 0.5 },
             PolicyConfig::HemtSteal(crate::coordinator::stealing::StealPolicy::default()),
             PolicyConfig::HemtPruned { classes: 4, floor: 0.05 },
+            PolicyConfig::AutoGranularity(
+                crate::coordinator::granularity::GranularityKnobs::default(),
+            ),
         ] {
             assert_eq!(p.with_granularity(16), p);
             assert!(!p.granularity_sensitive());

@@ -129,7 +129,7 @@ fn product_sweep_request_matches_direct_run_at_any_thread_count() {
 fn dynamics_request_matches_direct_comparison() {
     let runner = SweepRunner::new(2);
     let via_api = execute_with(
-        &RunRequest::Dynamics { correlated: false, rounds: 2 },
+        &RunRequest::Dynamics { correlated: false, auto: false, rounds: 2 },
         &runner,
         |_| {},
     )
@@ -222,7 +222,7 @@ fn correlated_dynamics_yields_the_output_pair() {
     // must produce rack_steal then link_degrade, like the historic
     // two-figure subcommand.
     let result = execute_with(
-        &RunRequest::Dynamics { correlated: true, rounds: 1 },
+        &RunRequest::Dynamics { correlated: true, auto: false, rounds: 1 },
         &SweepRunner::new(4),
         |_| {},
     )

@@ -293,6 +293,11 @@ fn dynamic_regimes_preset_carries_the_steal_policy_columns() {
         }
         _ => unreachable!(),
     }
+    // The granularity-controller column rides at the tail of the axis,
+    // appended after stream_steal so every historic cell keeps its seed.
+    assert_eq!(p.policies[4].name, "auto");
+    assert!(matches!(p.policies[4].value, PolicyConfig::AutoGranularity(_)));
+    assert!(!p.policies[4].value.granularity_sensitive());
     let dyn_names: Vec<&str> = p.dynamics.iter().map(|d| d.name.as_str()).collect();
     assert!(
         dyn_names.starts_with(&["steady", "markov", "spot", "diurnal", "credit_cliff"]),
